@@ -1,0 +1,43 @@
+//! Regenerate the paper's full evaluation (Tables 2, 3, 4 + the §5.2
+//! headline summaries) in one run.
+//!
+//! ```bash
+//! cargo run --release --example benchmark_suite                 # small+medium
+//! ARROW_PROFILES=small,medium,large \
+//!   cargo run --release --example benchmark_suite               # everything
+//! ```
+//!
+//! Large-profile rows use the analytic cycle-count extrapolation
+//! (DESIGN.md §6) exactly as the harness's `cargo bench` targets do.
+
+use arrow_rvv::bench::Profile;
+use arrow_rvv::energy::EnergyModel;
+use arrow_rvv::report;
+use arrow_rvv::vector::ArrowConfig;
+
+fn main() {
+    let spec = std::env::var("ARROW_PROFILES")
+        .unwrap_or_else(|_| "small,medium".to_string());
+    let profiles: Vec<Profile> = spec
+        .split(',')
+        .map(|p| {
+            Profile::by_name(p.trim())
+                .unwrap_or_else(|| panic!("unknown profile `{p}`"))
+        })
+        .collect();
+
+    let config = ArrowConfig::default();
+    let model = EnergyModel::default();
+
+    print!("{}", report::render_table2());
+    println!();
+
+    let rows = report::table3(config, &profiles).expect("table 3");
+    print!("{}", report::render_table3(&rows));
+    println!("\n§5.2 speedup summary:\n{}", report::speedup_summary(&rows));
+
+    print!("{}", report::render_table4(&rows, &model));
+    println!("\n§5.2 energy summary:\n{}", report::energy_summary(&rows, &model));
+
+    println!("benchmark_suite OK ({} profiles)", profiles.len());
+}

@@ -1,0 +1,81 @@
+//! Design-space exploration — Arrow's "configurable at design time" claim.
+//!
+//! Sweeps lane count and VLEN over representative benchmarks and reports
+//! cycles, speedup over the scalar baseline, and the estimated FPGA
+//! resource/power point (anchored to Table 2 at the paper's 2-lane /
+//! VLEN=256 build).
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use arrow_rvv::bench::runner::{run_benchmark, Mode};
+use arrow_rvv::bench::suite::Benchmark;
+use arrow_rvv::bench::Profile;
+use arrow_rvv::energy::resources;
+use arrow_rvv::vector::ArrowConfig;
+
+fn main() {
+    let profile = Profile::by_name("small").unwrap();
+    let benchmarks = [
+        Benchmark::VAdd,
+        Benchmark::VDot,
+        Benchmark::MatMul,
+        Benchmark::MaxPool,
+    ];
+
+    // Scalar baselines are design-point independent.
+    let mut scalar = Vec::new();
+    for b in benchmarks {
+        let r = run_benchmark(
+            b,
+            b.size(&profile),
+            Mode::Scalar,
+            ArrowConfig::default(),
+            7,
+        )
+        .unwrap();
+        assert!(r.verified);
+        scalar.push(r.cycles);
+    }
+
+    println!("design-space sweep, small profile (speedup over scalar)\n");
+    print!("{:<22}", "configuration");
+    for b in benchmarks {
+        print!("{:>12}", b.name().trim_start_matches("vector_").trim_start_matches("matrix_"));
+    }
+    println!("{:>10}{:>9}{:>10}", "LUTs", "power", "fmax");
+
+    for lanes in [1usize, 2, 4] {
+        for vlen in [128u32, 256, 512] {
+            let config = ArrowConfig {
+                lanes,
+                vlen_bits: vlen,
+                ..Default::default()
+            };
+            if config.validate().is_err() {
+                continue;
+            }
+            print!("{:<22}", format!("lanes={lanes} vlen={vlen}"));
+            for (i, b) in benchmarks.iter().enumerate() {
+                let r = run_benchmark(*b, b.size(&profile), Mode::Vector, config, 7)
+                    .unwrap();
+                assert!(r.verified, "{} misbehaves at lanes={lanes} vlen={vlen}", b.name());
+                print!("{:>11.1}x", scalar[i] as f64 / r.cycles as f64);
+            }
+            let est = resources::estimate(&config);
+            println!(
+                "{:>10}{:>8.3}W{:>7.0}MHz",
+                est.luts, est.power_w, est.fmax_mhz
+            );
+        }
+    }
+
+    println!(
+        "\nthe paper's build is lanes=2 vlen=256 (Table 2: {} LUTs, {:.3} W, {:.0} MHz)",
+        resources::ARROW_SYSTEM.luts,
+        resources::ARROW_SYSTEM.power_w,
+        resources::ARROW_SYSTEM.fmax_mhz
+    );
+    println!("design_space OK");
+}

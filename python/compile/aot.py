@@ -1,0 +1,119 @@
+"""AOT driver: lower every oracle computation to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Emits one `<name>.hlo.txt` per artifact plus `manifest.json` describing
+input/output shapes and dtypes, which `rust/src/runtime/` reads to drive
+PJRT execution.  Python runs exactly once, at build time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple so the Rust
+    side can uniformly unwrap a 1-tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return jnp.dtype(dt).name  # e.g. "int32"
+
+
+def _spec_json(specs):
+    return [
+        {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)} for s in specs
+    ]
+
+
+def build_artifact_list():
+    """(name, fn, arg_specs) for everything the Rust oracle can load.
+
+    Benchmark ops are emitted at the sizes the Rust simulator validates
+    functionally (small profile, plus medium for the 1-D vector ops and a
+    scaled 64x64 conv — see DESIGN.md §6 on why large profiles are
+    analytic-only).
+    """
+    dtype = jnp.int32
+    arts = []
+
+    vector_sizes = {"n64": 64, "n512": 512}
+    for name in ("vadd", "vmul", "dot", "max_reduce", "relu"):
+        fn, shapes = M.BENCH_OPS[name]
+        for tag, n in vector_sizes.items():
+            arts.append((f"{name}_{tag}", fn, shapes(n, dtype)))
+
+    for name in ("matadd", "matmul", "maxpool"):
+        fn, shapes = M.BENCH_OPS[name]
+        arts.append((f"{name}_m64", fn, shapes(64, dtype)))
+
+    fn, shapes = M.BENCH_OPS["conv2d"]
+    # Scaled conv validation workloads: 64x64 image, k in {3,4,5} like the
+    # small/medium/large profiles, batch = k (Table 1's pairing).
+    for k in (3, 4, 5):
+        arts.append(
+            (f"conv2d_i64_k{k}", fn, shapes(64, dtype, k=k, batch=k))
+        )
+
+    arts.append(("cnn", M.cnn_forward, M.cnn_params_spec(dtype)))
+    return arts
+
+
+def lower_artifact(fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--only", default=None, help="comma-separated artifact names"
+    )
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {}
+    for name, fn, specs in build_artifact_list():
+        if only and name not in only:
+            continue
+        text = lower_artifact(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        if not isinstance(out_specs, (list, tuple)):
+            out_specs = (out_specs,)
+        manifest[name] = {
+            "file": fname,
+            "inputs": _spec_json(specs),
+            "outputs": _spec_json(out_specs),
+        }
+        print(f"  lowered {name:<16} -> {fname} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts + {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the Arrow benchmark suite + their jnp oracles.
+
+Public surface: one function per benchmark op, each an interpret-mode
+Pallas kernel tiled the way the Arrow datapath executes it, plus `ref` with
+the pure-jnp semantics they are tested against.
+"""
+
+from . import ref  # noqa: F401
+from .config import ArrowTiling, ELEN_BITS, LANES, SEW_DTYPES, VLEN_BITS, strip_elems  # noqa: F401
+from .conv import conv2d  # noqa: F401
+from .matrix_ops import matadd, matmul, maxpool2x2  # noqa: F401
+from .vector_ops import dot, max_reduce, relu, vadd, vmul  # noqa: F401

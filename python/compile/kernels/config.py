@@ -1,0 +1,64 @@
+"""Arrow design-time parameters mirrored on the Python (build-time) side.
+
+The Pallas kernels tile their computation the way the Arrow datapath
+executes it: VLEN-bit vector registers strip-mined over the data
+(`vsetvli` loops), ELEN-bit SIMD words inside each strip, and SEW-bit
+elements packed into those words.  Keeping the constants here identical to
+`rust/src/vector/config.rs` makes the kernel block shapes a faithful
+software rendering of the hardware schedule.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+#: Vector register length in bits (paper: dual-lane Arrow, VLEN=256).
+VLEN_BITS = 256
+#: Maximum element width in bits (paper: ELEN=64).
+ELEN_BITS = 64
+#: Number of vector lanes (paper: dual-lane).
+LANES = 2
+
+#: SEW (standard element width, bits) -> jnp integer dtype.  Arrow's ALU is
+#: integer-only (add/sub/mul/div, logic, shift, compare, min/max), so the
+#: golden models are integer models as well.
+SEW_DTYPES = {
+    8: jnp.int8,
+    16: jnp.int16,
+    32: jnp.int32,
+    64: jnp.int64,
+}
+
+
+def strip_elems(sew_bits: int, vlen_bits: int = VLEN_BITS) -> int:
+    """Elements held by one vector register: the strip-mine width.
+
+    For the default configuration and SEW=32 this is 8 — one `vsetvli`
+    iteration of the paper's benchmarks processes 8 elements.
+    """
+    if sew_bits not in SEW_DTYPES:
+        raise ValueError(f"unsupported SEW: {sew_bits}")
+    return vlen_bits // sew_bits
+
+
+@dataclass(frozen=True)
+class ArrowTiling:
+    """Block-shape helper used by the Pallas kernels."""
+
+    sew_bits: int = 32
+    vlen_bits: int = VLEN_BITS
+
+    @property
+    def dtype(self):
+        return SEW_DTYPES[self.sew_bits]
+
+    @property
+    def strip(self) -> int:
+        return strip_elems(self.sew_bits, self.vlen_bits)
+
+    def check_divisible(self, n: int, what: str = "length") -> None:
+        if n % self.strip != 0:
+            raise ValueError(
+                f"{what} {n} not divisible by strip {self.strip} "
+                f"(VLEN={self.vlen_bits}, SEW={self.sew_bits}); pad first"
+            )

@@ -1,0 +1,104 @@
+"""Pallas kernels for the matrix benchmarks (Table 3 rows 6-8).
+
+Tiling follows the Arrow execution schedule (DESIGN.md
+§Hardware-Adaptation): the minor (column) dimension is strip-mined into
+VLEN/SEW-element vector registers; rows play the role of the scalar host's
+outer loop.  Matmul accumulates over K in an output-stationary block, the
+analogue of the benchmark suite's dot-product inner function that keeps a
+running vector accumulator in a register while streaming rows.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .config import ArrowTiling
+
+
+def _tiling_for(dtype) -> ArrowTiling:
+    return ArrowTiling(sew_bits=jnp.dtype(dtype).itemsize * 8)
+
+
+def _matadd_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def matadd(a, b):
+    """Element-wise matrix addition, one row-strip block per grid step."""
+    assert a.shape == b.shape and a.dtype == b.dtype
+    n, m = a.shape
+    t = _tiling_for(a.dtype)
+    t.check_divisible(m, "matrix columns")
+    strip = t.strip
+    spec = pl.BlockSpec((1, strip), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _matadd_kernel,
+        grid=(n, m // strip),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # K-innermost accumulation into an output-stationary tile: the Arrow
+    # benchmark keeps the C strip in a vector register across the K loop
+    # and only stores it once (one vse per output strip).
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul(a, b, tile_m: int = 8):
+    """Tiled integer matmul, accumulation at SEW width (wrapping)."""
+    assert a.dtype == b.dtype
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    t = _tiling_for(a.dtype)
+    t.check_divisible(n, "matmul N")
+    t.check_divisible(k, "matmul K")
+    tn = t.strip                       # one output vector register strip
+    tk = t.strip
+    tm = min(tile_m, m)
+    if m % tm != 0:
+        raise ValueError(f"matmul M={m} not divisible by tile_m={tm}")
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // tm, n // tn, k // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    two, m = x_ref.shape
+    # vmax.vv of the two rows, then a strided in-register fold of the
+    # adjacent-column pairs — the vectorized schedule the suite uses.
+    o_ref[...] = jnp.max(
+        x_ref[...].reshape(2, m // 2, 2), axis=(0, 2)
+    ).reshape(o_ref.shape)
+
+
+def maxpool2x2(a):
+    """2x2 stride-2 max pooling; one 2-row band per grid step."""
+    n, m = a.shape
+    assert n % 2 == 0 and m % 2 == 0, "maxpool2x2 needs even dims"
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(n // 2,),
+        in_specs=[pl.BlockSpec((2, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, m // 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n // 2, m // 2), a.dtype),
+        interpret=True,
+    )(a)

@@ -1,0 +1,91 @@
+"""Pure-jnp correctness oracles for every Arrow benchmark operation.
+
+These are the trusted semantics the Pallas kernels (and, transitively, the
+Rust Arrow simulator through the AOT artifacts) are validated against.
+All operations are integer ops with two's-complement wraparound, matching
+the RVV v0.9 single-width integer semantics Arrow implements: results are
+truncated to SEW bits at every step (numpy/jnp integer arithmetic already
+wraps, so the expressions below are exact models).
+"""
+
+import jax.numpy as jnp
+
+
+# --- vector benchmarks (paper §4.3, Table 3 rows 1-5) ----------------------
+
+def vadd(x, y):
+    """Element-wise vector addition (RVV `vadd.vv`)."""
+    return x + y
+
+
+def vmul(x, y):
+    """Element-wise vector multiplication, low SEW bits (RVV `vmul.vv`)."""
+    return x * y
+
+
+def dot(x, y):
+    """Dot product: `vmul.vv` + sum reduction, accumulated at SEW width."""
+    return jnp.sum(x * y, dtype=x.dtype).reshape((1,))
+
+
+def max_reduce(x):
+    """Max reduction (RVV `vredmax.vs`)."""
+    return jnp.max(x).reshape((1,))
+
+
+def relu(x):
+    """Rectified linear unit (RVV `vmax.vx` against zero)."""
+    return jnp.maximum(x, jnp.zeros_like(x))
+
+
+# --- matrix benchmarks (Table 3 rows 6-9) ----------------------------------
+
+def matadd(a, b):
+    """Element-wise matrix addition."""
+    return a + b
+
+
+def matmul(a, b):
+    """Matrix multiplication accumulated at SEW width (wrapping)."""
+    return jnp.matmul(a, b, preferred_element_type=a.dtype)
+
+
+def maxpool2x2(a):
+    """2x2, stride-2 max pooling over a 2-D matrix."""
+    n, m = a.shape
+    return a.reshape(n // 2, 2, m // 2, 2).max(axis=(1, 3))
+
+
+def conv2d(x, w):
+    """'Valid' 2-D convolution (really cross-correlation, as in the
+    benchmark suite) of a batch of single-channel images.
+
+    x: (B, H, W) int, w: (KH, KW) int -> (B, H-KH+1, W-KW+1)
+    """
+    b, h, wd = x.shape
+    kh, kw = w.shape
+    ho, wo = h - kh + 1, wd - kw + 1
+    acc = jnp.zeros((b, ho, wo), dtype=x.dtype)
+    for i in range(kh):
+        for j in range(kw):
+            acc = acc + w[i, j] * x[:, i : i + ho, j : j + wo]
+    return acc
+
+
+# --- end-to-end model (L2 oracle) -------------------------------------------
+
+def cnn_forward(x, params):
+    """Reference forward pass of the tiny edge-inference CNN.
+
+    x: (1, H, W) int32 image; params: dict with conv_w (KH,KW),
+    fc1_w (D1, D2), fc2_w (D2, D3).  conv -> relu -> maxpool -> flatten ->
+    dense -> relu -> dense, all integer arithmetic.
+    """
+    y = conv2d(x, params["conv_w"])            # (1, H-2, W-2)
+    y = relu(y)
+    y = maxpool2x2(y[0])                        # (H', W')
+    y = y.reshape(1, -1)                        # (1, D1)
+    y = matmul(y, params["fc1_w"])              # (1, D2)
+    y = relu(y)
+    y = matmul(y, params["fc2_w"])              # (1, D3)
+    return y

@@ -1,0 +1,129 @@
+"""Pallas kernels for the five *vector* benchmarks (Table 3 rows 1-5).
+
+Each kernel is written the way Arrow executes the op in hardware: the grid
+strip-mines the array into VLEN-bit vector registers (`vsetvli` loops) and
+each grid step processes one strip — `strip = VLEN / SEW` elements.  The
+BlockSpec is therefore the software rendering of Arrow's HBM<->VRF burst
+schedule: one unit-stride AXI burst per strip.
+
+Reductions (dot, max) accumulate sequentially across the grid into a
+single-element output block, mirroring the benchmark suite's
+vector-register accumulator that is only folded (`vredsum`/`vredmax`) once
+at the end of the strip loop.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .config import ArrowTiling
+
+
+def _tiling_for(dtype) -> ArrowTiling:
+    return ArrowTiling(sew_bits=jnp.dtype(dtype).itemsize * 8)
+
+
+def _elementwise_call(kernel, n, dtype, n_in):
+    t = ArrowTiling(sew_bits=jnp.dtype(dtype).itemsize * 8)
+    t.check_divisible(n, "vector length")
+    strip = t.strip
+    spec = pl.BlockSpec((strip,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // strip,),
+        in_specs=[spec] * n_in,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        interpret=True,
+    )
+
+
+def _vadd_kernel(x_ref, y_ref, o_ref):
+    # One strip: vle32.v v1; vle32.v v2; vadd.vv v3, v1, v2; vse32.v v3
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _vmul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] * y_ref[...]
+
+
+def _relu_kernel(x_ref, o_ref):
+    # vmax.vx vd, vs, x0 — max against the zero scalar.
+    o_ref[...] = jnp.maximum(x_ref[...], jnp.zeros_like(x_ref[...]))
+
+
+def vadd(x, y):
+    """Element-wise addition, strip-mined at VLEN/SEW elements per step."""
+    assert x.shape == y.shape and x.dtype == y.dtype
+    return _elementwise_call(_vadd_kernel, x.shape[0], x.dtype, 2)(x, y)
+
+
+def vmul(x, y):
+    """Element-wise multiplication (low SEW bits, wrapping)."""
+    assert x.shape == y.shape and x.dtype == y.dtype
+    return _elementwise_call(_vmul_kernel, x.shape[0], x.dtype, 2)(x, y)
+
+
+def relu(x):
+    """ReLU over a flat vector."""
+    return _elementwise_call(_relu_kernel, x.shape[0], x.dtype, 1)(x)
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    # Strip i: vmul.vv then accumulate into the scalar output register.
+    # The grid is sequential in interpret mode, so the read-modify-write
+    # accumulation is well-defined (Arrow likewise has no chaining: one
+    # vector instruction is in flight at a time).
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = x_ref[...] * y_ref[...]
+    o_ref[...] += jnp.sum(prod, dtype=o_ref.dtype).reshape(o_ref.shape)
+
+
+def dot(x, y):
+    """Dot product accumulated at SEW width; returns shape (1,)."""
+    assert x.shape == y.shape and x.dtype == y.dtype
+    t = _tiling_for(x.dtype)
+    t.check_divisible(x.shape[0], "vector length")
+    strip = t.strip
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=(x.shape[0] // strip,),
+        in_specs=[pl.BlockSpec((strip,), lambda i: (i,))] * 2,
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def _max_reduce_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        info = jnp.iinfo(o_ref.dtype)
+        o_ref[...] = jnp.full(o_ref.shape, info.min, o_ref.dtype)
+
+    o_ref[...] = jnp.maximum(
+        o_ref[...], jnp.max(x_ref[...]).reshape(o_ref.shape)
+    )
+
+
+def max_reduce(x):
+    """Max reduction (vredmax); returns shape (1,)."""
+    t = _tiling_for(x.dtype)
+    t.check_divisible(x.shape[0], "vector length")
+    strip = t.strip
+    return pl.pallas_call(
+        _max_reduce_kernel,
+        grid=(x.shape[0] // strip,),
+        in_specs=[pl.BlockSpec((strip,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,114 @@
+"""L2: the edge-inference model and per-benchmark compute graphs.
+
+This is the JAX layer the paper's motivation lives in: the nine benchmark
+ops are the primitives of edge ML inference, and `cnn_forward` composes
+them into a small integer CNN classifier (conv -> relu -> maxpool ->
+dense -> relu -> dense) built *entirely* from the L1 Pallas kernels.
+
+Everything here is build-time Python: `aot.py` lowers these functions to
+HLO text once, and the Rust coordinator executes the artifacts via PJRT as
+its functional oracle.  Python never runs at simulation time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    conv2d,
+    dot,
+    matadd,
+    matmul,
+    max_reduce,
+    maxpool2x2,
+    relu,
+    vadd,
+    vmul,
+)
+
+# CNN geometry: chosen so every dense/strip dimension is divisible by the
+# SEW=32 strip width (8 elements).  18x18 -conv3x3-> 16x16 -pool-> 8x8
+# -flatten-> 64 -fc-> 32 -relu-> -fc-> 16 logits.
+CNN_IMAGE = 18
+CNN_KERNEL = 3
+CNN_POOLED = (CNN_IMAGE - CNN_KERNEL + 1) // 2
+CNN_FLAT = CNN_POOLED * CNN_POOLED          # 64
+CNN_HIDDEN = 32
+CNN_CLASSES = 16
+
+
+def cnn_forward(x, conv_w, fc1_w, fc2_w):
+    """Tiny integer CNN forward pass, composed of the L1 Pallas kernels.
+
+    x: (1, 18, 18) int32; conv_w: (3, 3); fc1_w: (64, 32); fc2_w: (32, 16).
+    Returns (1, 16) int32 logits.
+    """
+    y = conv2d(x, conv_w)                       # (1, 16, 16)
+    y = relu(y.reshape(-1)).reshape(y.shape)    # vectorized ReLU strip loop
+    y = maxpool2x2(y[0])                        # (8, 8)
+    y = y.reshape(1, CNN_FLAT)                  # (1, 64)
+    y = matmul(y, fc1_w, tile_m=1)              # (1, 32)
+    y = relu(y.reshape(-1)).reshape(y.shape)
+    y = matmul(y, fc2_w, tile_m=1)              # (1, 16)
+    return y
+
+
+def cnn_params_spec(dtype=jnp.int32):
+    """ShapeDtypeStructs for (x, conv_w, fc1_w, fc2_w)."""
+    import jax
+
+    sd = jax.ShapeDtypeStruct
+    return (
+        sd((1, CNN_IMAGE, CNN_IMAGE), dtype),
+        sd((CNN_KERNEL, CNN_KERNEL), dtype),
+        sd((CNN_FLAT, CNN_HIDDEN), dtype),
+        sd((CNN_HIDDEN, CNN_CLASSES), dtype),
+    )
+
+
+#: name -> (fn, shape-builder) for every benchmark op the Rust side can
+#: request as an oracle artifact.  Shapes are parameterized by the profile
+#: size n (vector length / matrix dim / image dim).
+def _vec2(n, dtype):
+    import jax
+
+    sd = jax.ShapeDtypeStruct
+    return (sd((n,), dtype), sd((n,), dtype))
+
+
+def _vec1(n, dtype):
+    import jax
+
+    sd = jax.ShapeDtypeStruct
+    return (jax.ShapeDtypeStruct((n,), dtype),)
+
+
+def _mat2(n, dtype):
+    import jax
+
+    sd = jax.ShapeDtypeStruct
+    return (sd((n, n), dtype), sd((n, n), dtype))
+
+
+def _mat1(n, dtype):
+    import jax
+
+    return (jax.ShapeDtypeStruct((n, n), dtype),)
+
+
+def _conv_args(n, dtype, k=3, batch=1):
+    import jax
+
+    sd = jax.ShapeDtypeStruct
+    return (sd((batch, n, n), dtype), sd((k, k), dtype))
+
+
+BENCH_OPS = {
+    "vadd": (vadd, _vec2),
+    "vmul": (vmul, _vec2),
+    "dot": (dot, _vec2),
+    "max_reduce": (max_reduce, _vec1),
+    "relu": (relu, _vec1),
+    "matadd": (matadd, _mat2),
+    "matmul": (matmul, _mat2),
+    "maxpool": (maxpool2x2, _mat1),
+    "conv2d": (conv2d, _conv_args),
+}

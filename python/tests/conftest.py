@@ -1,0 +1,5 @@
+"""Shared test config: enable x64 so SEW=64 (int64) kernels are testable."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

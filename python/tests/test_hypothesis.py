@@ -1,0 +1,124 @@
+"""Hypothesis sweeps: kernel == oracle across shapes, dtypes (SEW), values.
+
+This is the property-based layer of the L1 validation: any strip-multiple
+length and any supported SEW must round-trip bit-exactly through the
+Pallas kernels.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from compile.kernels.config import SEW_DTYPES, strip_elems
+
+SEWS = sorted(SEW_DTYPES)
+
+
+def _np_dtype(sew):
+    return {8: np.int8, 16: np.int16, 32: np.int32, 64: np.int64}[sew]
+
+
+@st.composite
+def vec_pair(draw):
+    sew = draw(st.sampled_from(SEWS))
+    strip = strip_elems(sew)
+    n = draw(st.integers(1, 16)) * strip
+    dt = _np_dtype(sew)
+    info = np.iinfo(dt)
+    elems = st.integers(int(info.min), int(info.max))
+    x = np.asarray(draw(st.lists(elems, min_size=n, max_size=n)), dtype=dt)
+    y = np.asarray(draw(st.lists(elems, min_size=n, max_size=n)), dtype=dt)
+    return x, y
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_pair())
+def test_vadd_any_sew(pair):
+    x, y = pair
+    np.testing.assert_array_equal(K.vadd(x, y), ref.vadd(x, y))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_pair())
+def test_vmul_any_sew(pair):
+    x, y = pair
+    np.testing.assert_array_equal(K.vmul(x, y), ref.vmul(x, y))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_pair())
+def test_dot_any_sew(pair):
+    x, y = pair
+    np.testing.assert_array_equal(K.dot(x, y), ref.dot(x, y))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_pair())
+def test_max_reduce_any_sew(pair):
+    x, _ = pair
+    np.testing.assert_array_equal(K.max_reduce(x), ref.max_reduce(x))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_pair())
+def test_relu_any_sew(pair):
+    x, _ = pair
+    np.testing.assert_array_equal(K.relu(x), ref.relu(x))
+
+
+@st.composite
+def square_mat_pair(draw):
+    # Matrices are drawn via a seeded numpy RNG (a list strategy of n*n
+    # elements trips hypothesis' large-base-example health check).
+    sew = draw(st.sampled_from([8, 16, 32]))
+    strip = strip_elems(sew)
+    n = draw(st.integers(1, 3)) * max(strip, 8)
+    dt = _np_dtype(sew)
+    info = np.iinfo(dt)
+    seed = draw(st.integers(0, 2**32 - 1))
+    rng = np.random.default_rng(seed)
+    a = rng.integers(
+        int(info.min), int(info.max), size=(n, n), endpoint=True
+    ).astype(dt)
+    b = rng.integers(
+        int(info.min), int(info.max), size=(n, n), endpoint=True
+    ).astype(dt)
+    return a, b
+
+
+@settings(max_examples=20, deadline=None)
+@given(square_mat_pair())
+def test_matadd_any_sew(pair):
+    a, b = pair
+    np.testing.assert_array_equal(K.matadd(a, b), ref.matadd(a, b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(square_mat_pair())
+def test_matmul_any_sew(pair):
+    a, b = pair
+    tm = min(8, a.shape[0])
+    np.testing.assert_array_equal(
+        K.matmul(a, b, tile_m=tm), ref.matmul(a, b)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(square_mat_pair())
+def test_maxpool_any_sew(pair):
+    a, _ = pair
+    np.testing.assert_array_equal(K.maxpool2x2(a), ref.maxpool2x2(a))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 3),
+    st.sampled_from([3, 4, 5]),
+    st.integers(0, 2**32 - 1),
+)
+def test_conv2d_shapes(batch, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-64, 64, size=(batch, 16, 16)).astype(np.int32)
+    w = rng.integers(-8, 8, size=(k, k)).astype(np.int32)
+    np.testing.assert_array_equal(K.conv2d(x, w), ref.conv2d(x, w))

@@ -1,0 +1,139 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Every Pallas kernel must agree bit-exactly with the pure-jnp oracle in
+ref.py (integer ops: allclose == array_equal).
+"""
+
+import numpy as np
+import pytest
+
+from compile import kernels as K
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xA770)
+
+
+def rnd(shape, dtype=np.int32, lo=-100, hi=100):
+    return np.asarray(RNG.integers(lo, hi, size=shape), dtype=dtype)
+
+
+VECTOR_SIZES = [8, 64, 512]
+
+
+@pytest.mark.parametrize("n", VECTOR_SIZES)
+def test_vadd(n):
+    x, y = rnd(n), rnd(n)
+    np.testing.assert_array_equal(K.vadd(x, y), ref.vadd(x, y))
+
+
+@pytest.mark.parametrize("n", VECTOR_SIZES)
+def test_vmul(n):
+    x, y = rnd(n), rnd(n)
+    np.testing.assert_array_equal(K.vmul(x, y), ref.vmul(x, y))
+
+
+@pytest.mark.parametrize("n", VECTOR_SIZES)
+def test_dot(n):
+    x, y = rnd(n), rnd(n)
+    np.testing.assert_array_equal(K.dot(x, y), ref.dot(x, y))
+
+
+@pytest.mark.parametrize("n", VECTOR_SIZES)
+def test_max_reduce(n):
+    x = rnd(n)
+    np.testing.assert_array_equal(K.max_reduce(x), ref.max_reduce(x))
+
+
+@pytest.mark.parametrize("n", VECTOR_SIZES)
+def test_relu(n):
+    x = rnd(n)
+    np.testing.assert_array_equal(K.relu(x), ref.relu(x))
+
+
+def test_vadd_wraps_like_hardware():
+    """SEW-width two's-complement wraparound, as in the Arrow ALU."""
+    x = np.asarray([np.iinfo(np.int32).max], dtype=np.int32).repeat(8)
+    y = np.ones(8, dtype=np.int32)
+    out = np.asarray(K.vadd(x, y))
+    assert (out == np.iinfo(np.int32).min).all()
+
+
+def test_vmul_low_bits():
+    x = np.full(8, 1 << 20, dtype=np.int32)
+    y = np.full(8, 1 << 15, dtype=np.int32)
+    out = np.asarray(K.vmul(x, y))
+    # (1<<35) mod 2^32, interpreted signed = 8 << 32 -> 0
+    np.testing.assert_array_equal(out, np.zeros(8, dtype=np.int32))
+
+
+def test_max_reduce_all_negative():
+    x = rnd(64, lo=-500, hi=-1)
+    np.testing.assert_array_equal(K.max_reduce(x), ref.max_reduce(x))
+
+
+def test_relu_all_negative_is_zero():
+    x = rnd(64, lo=-500, hi=-1)
+    assert (np.asarray(K.relu(x)) == 0).all()
+
+
+MAT_SIZES = [8, 16, 64]
+
+
+@pytest.mark.parametrize("n", MAT_SIZES)
+def test_matadd(n):
+    a, b = rnd((n, n)), rnd((n, n))
+    np.testing.assert_array_equal(K.matadd(a, b), ref.matadd(a, b))
+
+
+@pytest.mark.parametrize("n", MAT_SIZES)
+def test_matmul(n):
+    a, b = rnd((n, n)), rnd((n, n))
+    np.testing.assert_array_equal(K.matmul(a, b), ref.matmul(a, b))
+
+
+def test_matmul_rect():
+    a, b = rnd((1, 64)), rnd((64, 32))
+    np.testing.assert_array_equal(
+        K.matmul(a, b, tile_m=1), ref.matmul(a, b)
+    )
+
+
+def test_matmul_wrapping_accumulation():
+    a = np.full((8, 8), 1 << 16, dtype=np.int32)
+    b = np.full((8, 8), 1 << 16, dtype=np.int32)
+    np.testing.assert_array_equal(K.matmul(a, b), ref.matmul(a, b))
+
+
+@pytest.mark.parametrize("n", MAT_SIZES)
+def test_maxpool(n):
+    a = rnd((n, n))
+    np.testing.assert_array_equal(K.maxpool2x2(a), ref.maxpool2x2(a))
+
+
+@pytest.mark.parametrize("k,batch", [(3, 1), (3, 3), (4, 4), (5, 5)])
+def test_conv2d(k, batch):
+    x = rnd((batch, 32, 32))
+    w = rnd((k, k), lo=-8, hi=8)
+    np.testing.assert_array_equal(K.conv2d(x, w), ref.conv2d(x, w))
+
+
+def test_conv2d_identity_kernel():
+    x = rnd((2, 16, 16))
+    w = np.zeros((3, 3), dtype=np.int32)
+    w[0, 0] = 1
+    out = np.asarray(K.conv2d(x, w))
+    np.testing.assert_array_equal(out, x[:, :14, :14])
+
+
+def test_dot_matches_manual():
+    x, y = rnd(64), rnd(64)
+    manual = np.sum(
+        x.astype(np.int64) * y.astype(np.int64)
+    ) % (1 << 32)
+    got = int(np.asarray(K.dot(x, y))[0]) % (1 << 32)
+    assert got == manual
+
+
+def test_strip_divisibility_enforced():
+    with pytest.raises(ValueError):
+        K.vadd(rnd(7), rnd(7))

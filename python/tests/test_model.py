@@ -1,0 +1,60 @@
+"""L2 model tests: the composed CNN agrees with the reference pipeline."""
+
+import numpy as np
+
+from compile import model as M
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xC44)
+
+
+def _params():
+    x = RNG.integers(0, 16, size=(1, M.CNN_IMAGE, M.CNN_IMAGE)).astype(
+        np.int32
+    )
+    conv_w = RNG.integers(-4, 4, size=(3, 3)).astype(np.int32)
+    fc1_w = RNG.integers(-4, 4, size=(M.CNN_FLAT, M.CNN_HIDDEN)).astype(
+        np.int32
+    )
+    fc2_w = RNG.integers(-4, 4, size=(M.CNN_HIDDEN, M.CNN_CLASSES)).astype(
+        np.int32
+    )
+    return x, conv_w, fc1_w, fc2_w
+
+
+def test_cnn_shape():
+    x, cw, f1, f2 = _params()
+    out = np.asarray(M.cnn_forward(x, cw, f1, f2))
+    assert out.shape == (1, M.CNN_CLASSES)
+    assert out.dtype == np.int32
+
+
+def test_cnn_matches_reference():
+    x, cw, f1, f2 = _params()
+    got = np.asarray(M.cnn_forward(x, cw, f1, f2))
+    want = np.asarray(
+        ref.cnn_forward(x, {"conv_w": cw, "fc1_w": f1, "fc2_w": f2})
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cnn_deterministic():
+    x, cw, f1, f2 = _params()
+    a = np.asarray(M.cnn_forward(x, cw, f1, f2))
+    b = np.asarray(M.cnn_forward(x, cw, f1, f2))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_bench_ops_registry_complete():
+    # all nine paper benchmarks must be exposed to the AOT driver
+    assert set(M.BENCH_OPS) == {
+        "vadd",
+        "vmul",
+        "dot",
+        "max_reduce",
+        "relu",
+        "matadd",
+        "matmul",
+        "maxpool",
+        "conv2d",
+    }

@@ -1,0 +1,133 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * lane count (1 / 2 / 4) — the dual-lane bank-dispatch scheme;
+//! * VLEN (128 / 256 / 512) — strip width vs. overhead amortisation;
+//! * MIG speed (1x vs 4x core clock) — §3.7's burst streaming;
+//! * strided cost — max-pool's reliance on strided loads;
+//! * dispatch overhead — the "vector overhead instructions" effect.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use arrow_rvv::bench::runner::{run_benchmark, Mode};
+use arrow_rvv::bench::suite::{BenchSize, Benchmark};
+use arrow_rvv::mem::MemTiming;
+use arrow_rvv::util::bencher::Bencher;
+use arrow_rvv::vector::{ArrowConfig, VectorTiming};
+
+fn vector_cycles(b: Benchmark, size: BenchSize, config: ArrowConfig) -> u64 {
+    let r = run_benchmark(b, size, Mode::Vector, config, 9).unwrap();
+    assert!(r.verified, "{} wrong under ablation", b.name());
+    r.cycles
+}
+
+fn main() {
+    let mut bench = Bencher::default();
+    let mm = BenchSize { n: 64, k: 0, batch: 0 };
+    let va = BenchSize { n: 512, k: 0, batch: 0 };
+    let mp = BenchSize { n: 128, k: 0, batch: 0 };
+
+    println!("== lane-count ablation (cycles, lower is better) ==");
+    for lanes in [1usize, 2, 4] {
+        let c = ArrowConfig { lanes, ..Default::default() };
+        bench.record_value(
+            &format!("lanes={lanes}/matmul64"),
+            vector_cycles(Benchmark::MatMul, mm, c) as f64,
+            "cycles",
+        );
+        bench.record_value(
+            &format!("lanes={lanes}/vadd512"),
+            vector_cycles(Benchmark::VAdd, va, c) as f64,
+            "cycles",
+        );
+    }
+
+    println!("\n== VLEN ablation ==");
+    for vlen in [128u32, 256, 512] {
+        let c = ArrowConfig { vlen_bits: vlen, ..Default::default() };
+        bench.record_value(
+            &format!("vlen={vlen}/vadd512"),
+            vector_cycles(Benchmark::VAdd, va, c) as f64,
+            "cycles",
+        );
+        bench.record_value(
+            &format!("vlen={vlen}/matmul64"),
+            vector_cycles(Benchmark::MatMul, mm, c) as f64,
+            "cycles",
+        );
+    }
+
+    println!("\n== matmul formulation ablation (axpy vs suite-style dot) ==");
+    {
+        use arrow_rvv::asm::assemble;
+        use arrow_rvv::scalar::ScalarTiming;
+        use arrow_rvv::system::Machine;
+        let size = BenchSize { n: 64, k: 0, batch: 0 };
+        let axpy = vector_cycles(Benchmark::MatMul, size, ArrowConfig::default());
+        bench.record_value("matmul64/axpy_unit_stride", axpy as f64, "cycles");
+        let w = Benchmark::MatMul.workload(size, 9);
+        let p = assemble(&arrow_rvv::bench::suite::matmul_vector_dot_asm(64)).unwrap();
+        let mut m = Machine::new(p, ArrowConfig::default(), ScalarTiming::default());
+        for (label, data) in &w.inputs {
+            let addr = m.addr_of(label);
+            m.dram.write_i32_slice(addr, data);
+        }
+        let sum = m.run(100_000_000).unwrap();
+        let out = m.dram.read_i32_slice(m.addr_of("out"), w.expected.len());
+        assert_eq!(out, w.expected);
+        bench.record_value("matmul64/dot_strided_column", sum.cycles as f64, "cycles");
+        println!("  (the dot form reproduces the paper's lower matmul speedups)");
+    }
+
+    println!("\n== memory-clock ratio ablation (paper: 4 beats/core cycle) ==");
+    for beats in [1u64, 2, 4] {
+        let c = ArrowConfig {
+            mem_timing: MemTiming {
+                beats_per_cycle: beats,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        bench.record_value(
+            &format!("beats_per_cycle={beats}/vadd512"),
+            vector_cycles(Benchmark::VAdd, va, c) as f64,
+            "cycles",
+        );
+    }
+
+    println!("\n== strided-access cost ablation (max-pool is strided-bound) ==");
+    for strided in [1u64, 2, 4] {
+        let c = ArrowConfig {
+            mem_timing: MemTiming {
+                strided_cycles_per_beat: strided,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        bench.record_value(
+            &format!("strided_cpb={strided}/maxpool128"),
+            vector_cycles(Benchmark::MaxPool, mp, c) as f64,
+            "cycles",
+        );
+    }
+
+    println!("\n== dispatch-overhead ablation (vsetvli/issue cost, small strips) ==");
+    for dispatch in [1u64, 4, 8] {
+        let c = ArrowConfig {
+            timing: VectorTiming { dispatch, ..Default::default() },
+            ..Default::default()
+        };
+        bench.record_value(
+            &format!("dispatch={dispatch}/vadd64"),
+            vector_cycles(
+                Benchmark::VAdd,
+                BenchSize { n: 64, k: 0, batch: 0 },
+                c,
+            ) as f64,
+            "cycles",
+        );
+    }
+
+    bench.finish();
+}

@@ -1,0 +1,94 @@
+//! Simulator hot-path throughput — the §Perf (L3) measurement target.
+//!
+//! Reports simulated instructions/second and simulated cycles/second for
+//! the workloads that dominate Table-3 generation: the scalar matmul
+//! inner loop, the vectorized matmul dispatch loop, and the element-wise
+//! strip loop.  EXPERIMENTS.md §Perf records before/after for each
+//! optimization iteration against these numbers.
+//!
+//! ```bash
+//! cargo bench --bench simulator_hotpath
+//! ```
+
+use arrow_rvv::asm::assemble;
+use arrow_rvv::bench::runner::{run_benchmark, Mode};
+use arrow_rvv::bench::suite::{BenchSize, Benchmark};
+use arrow_rvv::scalar::ScalarTiming;
+use arrow_rvv::system::Machine;
+use arrow_rvv::util::bencher::Bencher;
+use arrow_rvv::vector::ArrowConfig;
+
+fn main() {
+    let config = ArrowConfig::default();
+    let mut bench = Bencher::default();
+
+    // Raw scalar-core stepping rate: a pure register spin loop.
+    let spin = assemble(
+        ".text\n    li a0, 2000000\nloop:\n    addi a0, a0, -1\n    bnez a0, loop\n    halt\n",
+    )
+    .unwrap();
+    bench.bench("scalar_core/spin_loop (instr/s)", || {
+        let mut m = Machine::new(
+            spin.clone(),
+            config,
+            ScalarTiming::default(),
+        );
+        let s = m.run(u64::MAX).unwrap();
+        Some(s.scalar_instructions as f64)
+    });
+
+    // Scalar matmul: memory-heavy host path (instr/s).
+    bench.bench("scalar_matmul64 (instr/s)", || {
+        let r = run_benchmark(
+            Benchmark::MatMul,
+            BenchSize { n: 64, k: 0, batch: 0 },
+            Mode::Scalar,
+            config,
+            1,
+        )
+        .unwrap();
+        Some(r.summary.scalar_instructions as f64)
+    });
+
+    // Vector matmul: dispatch + VRF + ALU + burst scheduling (vector instr/s).
+    bench.bench("vector_matmul64 (vec instr/s)", || {
+        let r = run_benchmark(
+            Benchmark::MatMul,
+            BenchSize { n: 64, k: 0, batch: 0 },
+            Mode::Vector,
+            config,
+            1,
+        )
+        .unwrap();
+        Some(r.summary.vector_instructions as f64)
+    });
+
+    // Element-wise strip loop at large n: VRF copy bandwidth dominates.
+    bench.bench("vector_vadd4096 (elements/s)", || {
+        let _r = run_benchmark(
+            Benchmark::VAdd,
+            BenchSize { n: 4096, k: 0, batch: 0 },
+            Mode::Vector,
+            config,
+            1,
+        )
+        .unwrap();
+        Some(4096.0)
+    });
+
+    // Whole-table generation rate: simulated cycles per wall-second on
+    // the medium-profile matmul (analytic fit points are the cost).
+    bench.bench("analytic_matmul512_scalar (sim cycles/s)", || {
+        let (c, method) = arrow_rvv::bench::analytic::cycles_auto(
+            Benchmark::MatMul,
+            BenchSize { n: 512, k: 0, batch: 0 },
+            Mode::Scalar,
+            config,
+        )
+        .unwrap();
+        assert_eq!(method, "analytic");
+        Some(c as f64)
+    });
+
+    bench.finish();
+}

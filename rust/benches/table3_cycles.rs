@@ -1,0 +1,53 @@
+//! Bench target regenerating **Table 3** (cycle-count performance
+//! analysis): every benchmark x every profile, scalar and vectorized,
+//! printing the paper-format table plus wall-clock cost of producing
+//! each cell (simulation or analytic extrapolation).
+//!
+//! ```bash
+//! cargo bench --bench table3_cycles                       # small+medium
+//! ARROW_PROFILES=small,medium,large cargo bench --bench table3_cycles
+//! ```
+
+use arrow_rvv::bench::analytic::cycles_auto;
+use arrow_rvv::bench::runner::Mode;
+use arrow_rvv::bench::suite::BENCHMARKS;
+use arrow_rvv::bench::Profile;
+use arrow_rvv::report;
+use arrow_rvv::util::bencher::Bencher;
+use arrow_rvv::vector::ArrowConfig;
+
+fn main() {
+    let spec = std::env::var("ARROW_PROFILES")
+        .unwrap_or_else(|_| "small,medium".to_string());
+    let profiles: Vec<Profile> = spec
+        .split(',')
+        .map(|p| Profile::by_name(p.trim()).expect("profile"))
+        .collect();
+    let config = ArrowConfig::default();
+    let mut bencher = Bencher::default();
+
+    println!("== Table 3 cell generation (simulated / analytic) ==\n");
+    for b in BENCHMARKS {
+        for p in &profiles {
+            for mode in [Mode::Scalar, Mode::Vector] {
+                let size = b.size(p);
+                let mut cycles = 0u64;
+                bencher.bench(
+                    &format!("{}/{}/{}", b.name(), p.name, mode.name()),
+                    || {
+                        let (c, _) =
+                            cycles_auto(b, size, mode, config).unwrap();
+                        cycles = c;
+                        Some(c as f64) // simulated cycles per wall-second
+                    },
+                );
+            }
+        }
+    }
+
+    println!("\n== Table 3 ==\n");
+    let rows = report::table3(config, &profiles).unwrap();
+    print!("{}", report::render_table3(&rows));
+    println!("\n{}", report::speedup_summary(&rows));
+    bencher.finish();
+}

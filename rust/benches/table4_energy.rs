@@ -1,0 +1,58 @@
+//! Bench target regenerating **Table 4** (energy consumption analysis)
+//! and **Table 2** (FPGA utilisation + power, its inputs).
+//!
+//! ```bash
+//! cargo bench --bench table4_energy
+//! ARROW_PROFILES=small,medium,large cargo bench --bench table4_energy
+//! ```
+
+use arrow_rvv::bench::Profile;
+use arrow_rvv::energy::EnergyModel;
+use arrow_rvv::report;
+use arrow_rvv::util::bencher::Bencher;
+use arrow_rvv::vector::ArrowConfig;
+
+fn main() {
+    let spec = std::env::var("ARROW_PROFILES")
+        .unwrap_or_else(|_| "small,medium".to_string());
+    let profiles: Vec<Profile> = spec
+        .split(',')
+        .map(|p| Profile::by_name(p.trim()).expect("profile"))
+        .collect();
+    let config = ArrowConfig::default();
+    let model = EnergyModel::default();
+    let mut bencher = Bencher::default();
+
+    print!("{}", report::render_table2());
+    println!();
+
+    let rows = report::table3(config, &profiles).unwrap();
+    print!("{}", report::render_table4(&rows, &model));
+    println!("\n{}", report::energy_summary(&rows, &model));
+
+    // Record the headline scalar/vector energies as values, and measure
+    // the energy-model evaluation cost (it sits on the report path).
+    for row in &rows {
+        for (p, c) in &row.cells {
+            bencher.record_value(
+                &format!("{}/{}/scalar_energy", row.benchmark.name(), p.name),
+                model.scalar_energy_j(c.scalar),
+                "J",
+            );
+            bencher.record_value(
+                &format!("{}/{}/vector_energy", row.benchmark.name(), p.name),
+                model.vector_energy_j(c.vector),
+                "J",
+            );
+        }
+    }
+    bencher.bench("energy_model/evaluate_1k_cells", || {
+        let mut acc = 0.0;
+        for i in 0..1000u64 {
+            acc += model.energy_ratio(i * 1000 + 1, i + 1);
+        }
+        std::hint::black_box(acc);
+        Some(1000.0)
+    });
+    bencher.finish();
+}

@@ -1,0 +1,265 @@
+//! Two-pass assembly driver: sections, directives, symbol resolution.
+
+use std::collections::HashMap;
+
+use crate::isa::rv32::{AluOp, ScalarInstr};
+use crate::isa::{encode, Instr};
+
+use super::lexer::tokenize;
+use super::parser::{parse_imm, parse_instr, PInstr};
+use super::program::{AsmError, Program, DATA_BASE, TEXT_BASE};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Section {
+    Text,
+    Data,
+}
+
+/// Assemble a full program (labels, `.text`/`.data`, directives).
+pub fn assemble(source: &str) -> Result<Program, AsmError> {
+    let mut text_items: Vec<(usize, PInstr)> = Vec::new();
+    let mut data: Vec<u8> = Vec::new();
+    let mut symbols: HashMap<String, u32> = HashMap::new();
+    let mut section = Section::Text;
+
+    // Pass 1: parse, expand pseudos, lay out sections, define symbols.
+    for (idx, raw) in source.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = tokenize(raw);
+
+        for label in &line.labels {
+            let addr = match section {
+                Section::Text => TEXT_BASE + 4 * text_items.len() as u32,
+                Section::Data => DATA_BASE + data.len() as u32,
+            };
+            if symbols.insert(label.clone(), addr).is_some() {
+                return Err(AsmError::new(
+                    line_no,
+                    format!("duplicate label `{label}`"),
+                ));
+            }
+        }
+
+        let Some(mn) = line.mnemonic.as_deref() else { continue };
+
+        if let Some(directive) = mn.strip_prefix('.') {
+            match directive {
+                "text" => section = Section::Text,
+                "data" => section = Section::Data,
+                "word" | "half" | "byte" => {
+                    if section != Section::Data {
+                        return Err(AsmError::new(
+                            line_no,
+                            format!(".{directive} outside .data"),
+                        ));
+                    }
+                    let width = match directive {
+                        "word" => 4,
+                        "half" => 2,
+                        _ => 1,
+                    };
+                    for op in &line.operands {
+                        let v = parse_imm(line_no, op)?;
+                        data.extend_from_slice(&v.to_le_bytes()[..width]);
+                    }
+                }
+                "space" | "zero" => {
+                    if section != Section::Data {
+                        return Err(AsmError::new(
+                            line_no,
+                            format!(".{directive} outside .data"),
+                        ));
+                    }
+                    let n = parse_imm(
+                        line_no,
+                        line.operands.first().map(String::as_str).unwrap_or("0"),
+                    )? as usize;
+                    data.resize(data.len() + n, 0);
+                }
+                "align" => {
+                    let n = parse_imm(
+                        line_no,
+                        line.operands.first().map(String::as_str).unwrap_or("2"),
+                    )? as u32;
+                    let align = 1usize << n;
+                    if section == Section::Data {
+                        while data.len() % align != 0 {
+                            data.push(0);
+                        }
+                    }
+                }
+                "globl" | "global" | "section" | "type" | "size" => {}
+                _ => {
+                    return Err(AsmError::new(
+                        line_no,
+                        format!("unknown directive `.{directive}`"),
+                    ))
+                }
+            }
+            continue;
+        }
+
+        if section != Section::Text {
+            return Err(AsmError::new(line_no, "instruction outside .text"));
+        }
+        for item in parse_instr(line_no, mn, &line.operands)? {
+            text_items.push((line_no, item));
+        }
+    }
+
+    // Pass 2: resolve labels, encode.
+    let mut text = Vec::with_capacity(text_items.len());
+    for (i, (line_no, item)) in text_items.iter().enumerate() {
+        let pc = TEXT_BASE + 4 * i as u32;
+        let lookup = |sym: &str| -> Result<u32, AsmError> {
+            symbols.get(sym).copied().ok_or_else(|| {
+                AsmError::new(*line_no, format!("undefined label `{sym}`"))
+            })
+        };
+        let instr: Instr = match item {
+            PInstr::Ready(i) => *i,
+            PInstr::Branch { op, rs1, rs2, target } => {
+                let offset = lookup(target)? as i64 - pc as i64;
+                if !(-4096..4096).contains(&offset) {
+                    return Err(AsmError::new(
+                        *line_no,
+                        format!("branch to `{target}` out of range ({offset})"),
+                    ));
+                }
+                Instr::Scalar(ScalarInstr::Branch {
+                    op: *op,
+                    rs1: *rs1,
+                    rs2: *rs2,
+                    offset: offset as i32,
+                })
+            }
+            PInstr::Jal { rd, target } => {
+                let offset = lookup(target)? as i64 - pc as i64;
+                Instr::Scalar(ScalarInstr::Jal { rd: *rd, offset: offset as i32 })
+            }
+            PInstr::LaHi { rd, symbol } => {
+                let addr = lookup(symbol)?;
+                let hi = (addr.wrapping_add(0x800) & 0xFFFF_F000) as i32;
+                Instr::Scalar(ScalarInstr::Lui { rd: *rd, imm: hi })
+            }
+            PInstr::LaLo { rd, symbol } => {
+                let addr = lookup(symbol)?;
+                let hi = addr.wrapping_add(0x800) & 0xFFFF_F000;
+                let lo = addr.wrapping_sub(hi) as i32;
+                Instr::Scalar(ScalarInstr::OpImm {
+                    op: AluOp::Add,
+                    rd: *rd,
+                    rs1: *rd,
+                    imm: lo,
+                })
+            }
+        };
+        text.push(encode(instr));
+    }
+
+    Ok(Program { text, data, symbols })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{decode, disasm};
+
+    #[test]
+    fn simple_loop_assembles() {
+        let src = r#"
+            .text
+            start:
+                li a0, 10
+                li a1, 0
+            loop:
+                add a1, a1, a0
+                addi a0, a0, -1
+                bnez a0, loop
+                halt
+        "#;
+        let p = assemble(src).unwrap();
+        assert_eq!(p.symbol("start"), Some(TEXT_BASE));
+        assert_eq!(p.len(), 6);
+        // last instruction is ecall
+        let last = decode(*p.text.last().unwrap()).unwrap();
+        assert_eq!(disasm(last), "ecall");
+    }
+
+    #[test]
+    fn data_section_and_la() {
+        let src = r#"
+            .data
+            xs: .word 1, 2, 3, 4
+            ys: .space 16
+            .text
+                la a0, xs
+                la a1, ys
+                lw t0, 0(a0)
+                halt
+        "#;
+        let p = assemble(src).unwrap();
+        assert_eq!(p.symbol("xs"), Some(DATA_BASE));
+        assert_eq!(p.symbol("ys"), Some(DATA_BASE + 16));
+        assert_eq!(p.data.len(), 32);
+        assert_eq!(&p.data[..4], &1i32.to_le_bytes());
+    }
+
+    #[test]
+    fn vector_program_assembles() {
+        let src = r#"
+            .text
+                vsetvli t0, a2, e32,m8
+                vle32.v v0, (a0)
+                vle32.v v8, (a1)
+                vadd.vv v16, v0, v8
+                vse32.v v16, (a3)
+                halt
+        "#;
+        let p = assemble(src).unwrap();
+        assert_eq!(p.len(), 6);
+        let add = decode(p.text[3]).unwrap();
+        assert_eq!(disasm(add), "vadd.vv v16, v0, v8");
+    }
+
+    #[test]
+    fn branch_backwards_and_forwards() {
+        let src = r#"
+            .text
+                j end
+            mid:
+                addi a0, a0, 1
+                j mid
+            end:
+                halt
+        "#;
+        let p = assemble(src).unwrap();
+        assert_eq!(p.len(), 4);
+    }
+
+    #[test]
+    fn undefined_label_errors() {
+        let err = assemble(".text\n  j nowhere\n").unwrap_err();
+        assert!(err.message.contains("nowhere"), "{err}");
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn duplicate_label_errors() {
+        let err = assemble(".text\na:\na:\n  halt\n").unwrap_err();
+        assert!(err.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn li_large_immediate() {
+        let p = assemble(".text\n li a0, 0x12345678\n halt\n").unwrap();
+        assert_eq!(p.len(), 3); // lui + addi + ecall
+    }
+
+    #[test]
+    fn strided_load() {
+        let p = assemble(".text\n vlse32.v v1, (a0), t1\n halt\n").unwrap();
+        let i = decode(p.text[0]).unwrap();
+        assert_eq!(disasm(i), "vlse32.v v1, (a0), t1");
+    }
+}

@@ -1,0 +1,116 @@
+//! Line-level tokenizer: comments, labels, mnemonics, operands.
+
+/// One source line reduced to its syntactic parts.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Line {
+    /// Labels defined on this line (`name:` prefixes).
+    pub labels: Vec<String>,
+    /// Mnemonic or directive (directives keep their leading dot).
+    pub mnemonic: Option<String>,
+    /// Comma-separated operands, trimmed. Memory operands like `8(a0)`
+    /// are kept as single tokens; `(a0)` likewise.
+    pub operands: Vec<String>,
+}
+
+/// Strip comments (`#`, `//`, `;`) outside of any string context.
+fn strip_comment(s: &str) -> &str {
+    let mut end = s.len();
+    for (i, c) in s.char_indices() {
+        if c == '#' || c == ';' {
+            end = i;
+            break;
+        }
+        if c == '/' && s[i + 1..].starts_with('/') {
+            end = i;
+            break;
+        }
+    }
+    &s[..end]
+}
+
+/// Tokenize one line. Returns an empty `Line` for blank/comment lines.
+pub fn tokenize(raw: &str) -> Line {
+    let mut line = Line::default();
+    let mut rest = strip_comment(raw).trim();
+
+    // Pull off any number of leading `label:` definitions.
+    while let Some(colon) = rest.find(':') {
+        let head = &rest[..colon];
+        if head
+            .chars()
+            .all(|c| c.is_alphanumeric() || c == '_' || c == '.')
+            && !head.is_empty()
+        {
+            line.labels.push(head.to_string());
+            rest = rest[colon + 1..].trim_start();
+        } else {
+            break;
+        }
+    }
+
+    if rest.is_empty() {
+        return line;
+    }
+
+    let (mn, ops) = match rest.find(char::is_whitespace) {
+        Some(i) => (&rest[..i], rest[i..].trim_start()),
+        None => (rest, ""),
+    };
+    line.mnemonic = Some(mn.to_string());
+    if !ops.is_empty() {
+        line.operands = ops
+            .split(',')
+            .map(|o| o.trim().to_string())
+            .filter(|o| !o.is_empty())
+            .collect();
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blank_and_comment_lines() {
+        assert_eq!(tokenize(""), Line::default());
+        assert_eq!(tokenize("  # just a comment"), Line::default());
+        assert_eq!(tokenize("// c++ style"), Line::default());
+    }
+
+    #[test]
+    fn label_only() {
+        let l = tokenize("loop:");
+        assert_eq!(l.labels, vec!["loop"]);
+        assert_eq!(l.mnemonic, None);
+    }
+
+    #[test]
+    fn label_and_instr() {
+        let l = tokenize("loop: addi a0, a0, -1 # dec");
+        assert_eq!(l.labels, vec!["loop"]);
+        assert_eq!(l.mnemonic.as_deref(), Some("addi"));
+        assert_eq!(l.operands, vec!["a0", "a0", "-1"]);
+    }
+
+    #[test]
+    fn memory_operand_kept_whole() {
+        let l = tokenize("lw t0, 8(a1)");
+        assert_eq!(l.operands, vec!["t0", "8(a1)"]);
+        let v = tokenize("vle32.v v1, (a0)");
+        assert_eq!(v.operands, vec!["v1", "(a0)"]);
+    }
+
+    #[test]
+    fn vsetvli_operands() {
+        let l = tokenize("vsetvli t0, a2, e32,m8");
+        assert_eq!(l.operands, vec!["t0", "a2", "e32", "m8"]);
+    }
+
+    #[test]
+    fn directive() {
+        let l = tokenize(".word 1, 2, 3");
+        assert_eq!(l.mnemonic.as_deref(), Some(".word"));
+        assert_eq!(l.operands, vec!["1", "2", "3"]);
+    }
+}

@@ -1,0 +1,22 @@
+//! Two-pass RISC-V assembler for the benchmark programs.
+//!
+//! The paper's benchmarks are C functions with inlined RVV v0.9 assembly;
+//! ours are written directly in assembly against this module, which
+//! supports exactly the subset the Arrow system executes:
+//!
+//! * RV32IM mnemonics + the usual pseudo-instructions (`li`, `la`, `mv`,
+//!   `j`, `beqz`, `bnez`, `ble`, `bgt`, `nop`, `ret`, `halt`/`ecall`);
+//! * Arrow's RVV v0.9 subset (`vsetvli`, `vle/vse/vlse/vsse`, `.vv/.vx/.vi`
+//!   arithmetic, reductions, `vmv`, `vmerge`);
+//! * `.text` / `.data` sections with `.word`, `.half`, `.byte`, `.space`,
+//!   `.zero`, `.align` directives, labels and branch/label resolution.
+//!
+//! Errors carry source line numbers ([`AsmError`]).
+
+mod assembler;
+mod lexer;
+mod parser;
+mod program;
+
+pub use assembler::assemble;
+pub use program::{AsmError, Program, DATA_BASE, TEXT_BASE};

@@ -1,0 +1,618 @@
+//! Mnemonic + operand parsing and pseudo-instruction expansion.
+//!
+//! Every parsed item is exactly one 32-bit instruction (pseudo-expansions
+//! produce a fixed number of items regardless of symbol values), so the
+//! two-pass assembler can size the text section before symbols resolve.
+
+use crate::isa::csr::Vtype;
+use crate::isa::reg::{VReg, XReg};
+use crate::isa::rv32::{AluOp, BranchOp, LoadOp, MulDivOp, ScalarInstr, StoreOp};
+use crate::isa::rvv::{AddrMode, MaskMode, VAluOp, VSrc2, VecInstr, VmemWidth};
+use crate::isa::Instr;
+
+use super::program::AsmError;
+
+/// One instruction-sized item; label references are resolved in pass 2.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PInstr {
+    /// Fully resolved.
+    Ready(Instr),
+    /// Branch to a label (B-type, pc-relative).
+    Branch { op: BranchOp, rs1: XReg, rs2: XReg, target: String },
+    /// Jump to a label (J-type, pc-relative).
+    Jal { rd: XReg, target: String },
+    /// `lui rd, %hi(symbol)` half of `la`.
+    LaHi { rd: XReg, symbol: String },
+    /// `addi rd, rd, %lo(symbol)` half of `la`.
+    LaLo { rd: XReg, symbol: String },
+}
+
+fn e(line: usize, msg: impl Into<String>) -> AsmError {
+    AsmError::new(line, msg)
+}
+
+fn parse_xreg(line: usize, s: &str) -> Result<XReg, AsmError> {
+    XReg::parse(s).ok_or_else(|| e(line, format!("bad x register `{s}`")))
+}
+
+fn parse_vreg(line: usize, s: &str) -> Result<VReg, AsmError> {
+    VReg::parse(s).ok_or_else(|| e(line, format!("bad v register `{s}`")))
+}
+
+/// Parse a decimal / hex / negative immediate.
+pub fn parse_imm(line: usize, s: &str) -> Result<i64, AsmError> {
+    let s = s.trim();
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x").or_else(|| body.strip_prefix("0X")) {
+        i64::from_str_radix(hex, 16)
+    } else {
+        body.parse::<i64>()
+    }
+    .map_err(|_| e(line, format!("bad immediate `{s}`")))?;
+    Ok(if neg { -v } else { v })
+}
+
+/// Parse `offset(reg)` or `(reg)`.
+fn parse_mem_operand(line: usize, s: &str) -> Result<(i32, XReg), AsmError> {
+    let open = s
+        .find('(')
+        .ok_or_else(|| e(line, format!("expected `off(reg)`, got `{s}`")))?;
+    let close = s
+        .rfind(')')
+        .ok_or_else(|| e(line, format!("missing `)` in `{s}`")))?;
+    let off_str = s[..open].trim();
+    let off = if off_str.is_empty() {
+        0
+    } else {
+        parse_imm(line, off_str)? as i32
+    };
+    let reg = parse_xreg(line, s[open + 1..close].trim())?;
+    Ok((off, reg))
+}
+
+fn need(line: usize, ops: &[String], n: usize, mn: &str) -> Result<(), AsmError> {
+    if ops.len() != n {
+        return Err(e(
+            line,
+            format!("`{mn}` expects {n} operands, got {}", ops.len()),
+        ));
+    }
+    Ok(())
+}
+
+fn scalar_alu(name: &str) -> Option<AluOp> {
+    Some(match name {
+        "add" => AluOp::Add,
+        "sub" => AluOp::Sub,
+        "sll" => AluOp::Sll,
+        "slt" => AluOp::Slt,
+        "sltu" => AluOp::Sltu,
+        "xor" => AluOp::Xor,
+        "srl" => AluOp::Srl,
+        "sra" => AluOp::Sra,
+        "or" => AluOp::Or,
+        "and" => AluOp::And,
+        _ => return None,
+    })
+}
+
+fn scalar_muldiv(name: &str) -> Option<MulDivOp> {
+    Some(match name {
+        "mul" => MulDivOp::Mul,
+        "mulh" => MulDivOp::Mulh,
+        "mulhsu" => MulDivOp::Mulhsu,
+        "mulhu" => MulDivOp::Mulhu,
+        "div" => MulDivOp::Div,
+        "divu" => MulDivOp::Divu,
+        "rem" => MulDivOp::Rem,
+        "remu" => MulDivOp::Remu,
+        _ => return None,
+    })
+}
+
+fn branch_op(name: &str) -> Option<BranchOp> {
+    Some(match name {
+        "beq" => BranchOp::Beq,
+        "bne" => BranchOp::Bne,
+        "blt" => BranchOp::Blt,
+        "bge" => BranchOp::Bge,
+        "bltu" => BranchOp::Bltu,
+        "bgeu" => BranchOp::Bgeu,
+        _ => return None,
+    })
+}
+
+fn vector_alu(name: &str) -> Option<VAluOp> {
+    Some(match name {
+        "vadd" => VAluOp::Add,
+        "vsub" => VAluOp::Sub,
+        "vrsub" => VAluOp::Rsub,
+        "vminu" => VAluOp::Minu,
+        "vmin" => VAluOp::Min,
+        "vmaxu" => VAluOp::Maxu,
+        "vmax" => VAluOp::Max,
+        "vand" => VAluOp::And,
+        "vor" => VAluOp::Or,
+        "vxor" => VAluOp::Xor,
+        "vmseq" => VAluOp::Mseq,
+        "vmsne" => VAluOp::Msne,
+        "vmsltu" => VAluOp::Msltu,
+        "vmslt" => VAluOp::Mslt,
+        "vmsleu" => VAluOp::Msleu,
+        "vmsle" => VAluOp::Msle,
+        "vmsgtu" => VAluOp::Msgtu,
+        "vmsgt" => VAluOp::Msgt,
+        "vsll" => VAluOp::Sll,
+        "vsrl" => VAluOp::Srl,
+        "vsra" => VAluOp::Sra,
+        "vmul" => VAluOp::Mul,
+        "vmulh" => VAluOp::Mulh,
+        "vmulhu" => VAluOp::Mulhu,
+        "vdivu" => VAluOp::Divu,
+        "vdiv" => VAluOp::Div,
+        "vremu" => VAluOp::Remu,
+        "vrem" => VAluOp::Rem,
+        "vredsum" => VAluOp::RedSum,
+        "vredmax" => VAluOp::RedMax,
+        "vredmaxu" => VAluOp::RedMaxu,
+        "vredmin" => VAluOp::RedMin,
+        "vredminu" => VAluOp::RedMinu,
+        "vredand" => VAluOp::RedAnd,
+        "vredor" => VAluOp::RedOr,
+        "vredxor" => VAluOp::RedXor,
+        _ => return None,
+    })
+}
+
+/// Parse the trailing mask operand (`v0.t`), returning remaining operands.
+fn split_mask<'a>(ops: &'a [String]) -> (&'a [String], MaskMode) {
+    match ops.last() {
+        Some(last) if last == "v0.t" => {
+            (&ops[..ops.len() - 1], MaskMode::Masked)
+        }
+        _ => (ops, MaskMode::Unmasked),
+    }
+}
+
+fn ready(i: Instr) -> Vec<PInstr> {
+    vec![PInstr::Ready(i)]
+}
+
+fn sc(i: ScalarInstr) -> Vec<PInstr> {
+    ready(Instr::Scalar(i))
+}
+
+fn vc(i: VecInstr) -> Vec<PInstr> {
+    ready(Instr::Vector(i))
+}
+
+/// Expand `li rd, imm` into one or two instructions.
+pub fn expand_li(rd: XReg, imm: i64) -> Vec<PInstr> {
+    let imm = imm as i32;
+    if (-2048..=2047).contains(&imm) {
+        sc(ScalarInstr::OpImm { op: AluOp::Add, rd, rs1: XReg::ZERO, imm })
+    } else {
+        // %hi/%lo with the +0x800 rounding for the sign-extended addi.
+        let hi = ((imm as u32).wrapping_add(0x800) & 0xFFFF_F000) as i32;
+        let lo = imm.wrapping_sub(hi);
+        vec![
+            PInstr::Ready(Instr::Scalar(ScalarInstr::Lui { rd, imm: hi })),
+            PInstr::Ready(Instr::Scalar(ScalarInstr::OpImm {
+                op: AluOp::Add,
+                rd,
+                rs1: rd,
+                imm: lo,
+            })),
+        ]
+    }
+}
+
+fn parse_vmem(
+    line: usize,
+    mn: &str,
+    ops: &[String],
+    is_store: bool,
+    strided: bool,
+) -> Result<Vec<PInstr>, AsmError> {
+    // mnemonic shapes: vle32.v / vse32.v / vlse32.v / vsse32.v
+    let stem = mn.strip_suffix(".v").ok_or_else(|| {
+        e(line, format!("vector memory op `{mn}` must end in .v"))
+    })?;
+    let digits: String =
+        stem.chars().filter(|c| c.is_ascii_digit()).collect();
+    let bits: u32 = digits
+        .parse()
+        .map_err(|_| e(line, format!("bad width in `{mn}`")))?;
+    let width = VmemWidth::from_bits(bits)
+        .ok_or_else(|| e(line, format!("unsupported width {bits} in `{mn}`")))?;
+    let (ops, mask) = split_mask(ops);
+    let want = if strided { 3 } else { 2 };
+    need(line, ops, want, mn)?;
+    let vreg = parse_vreg(line, &ops[0])?;
+    let (off, rs1) = parse_mem_operand(line, &ops[1])?;
+    if off != 0 {
+        return Err(e(line, "vector memory ops take no offset"));
+    }
+    let mode = if strided {
+        AddrMode::Strided { rs2: parse_xreg(line, &ops[2])? }
+    } else {
+        AddrMode::UnitStride
+    };
+    Ok(vc(if is_store {
+        VecInstr::Store { vs3: vreg, rs1, width, mode, mask }
+    } else {
+        VecInstr::Load { vd: vreg, rs1, width, mode, mask }
+    }))
+}
+
+fn parse_vmem_indexed(
+    line: usize,
+    mn: &str,
+    ops: &[String],
+    is_store: bool,
+) -> Result<Vec<PInstr>, AsmError> {
+    let stem = mn.strip_suffix(".v").ok_or_else(|| {
+        e(line, format!("vector memory op `{mn}` must end in .v"))
+    })?;
+    let digits: String = stem.chars().filter(|c| c.is_ascii_digit()).collect();
+    let bits: u32 = digits
+        .parse()
+        .map_err(|_| e(line, format!("bad width in `{mn}`")))?;
+    let width = VmemWidth::from_bits(bits)
+        .ok_or_else(|| e(line, format!("unsupported width {bits} in `{mn}`")))?;
+    let (ops, mask) = split_mask(ops);
+    need(line, ops, 3, mn)?;
+    let vreg = parse_vreg(line, &ops[0])?;
+    let (off, rs1) = parse_mem_operand(line, &ops[1])?;
+    if off != 0 {
+        return Err(e(line, "vector memory ops take no offset"));
+    }
+    let mode = AddrMode::Indexed { vs2: parse_vreg(line, &ops[2])? };
+    Ok(vc(if is_store {
+        VecInstr::Store { vs3: vreg, rs1, width, mode, mask }
+    } else {
+        VecInstr::Load { vd: vreg, rs1, width, mode, mask }
+    }))
+}
+
+/// Parse one mnemonic + operands into instruction items.
+pub fn parse_instr(
+    line: usize,
+    mn: &str,
+    ops: &[String],
+) -> Result<Vec<PInstr>, AsmError> {
+    // --- vector ---------------------------------------------------------
+    if let Some(dot) = mn.find('.') {
+        let (base, suffix) = (&mn[..dot], &mn[dot + 1..]);
+
+        if base.starts_with("vle") || base.starts_with("vse") {
+            return parse_vmem(line, mn, ops, base.starts_with("vse"), false);
+        }
+        if base.starts_with("vlse") || base.starts_with("vsse") {
+            return parse_vmem(line, mn, ops, base.starts_with("vsse"), true);
+        }
+        if base.starts_with("vlxei") || base.starts_with("vsxei") {
+            // Indexed (gather/scatter): assembles and decodes; execution
+            // is gated behind ArrowConfig::indexed_mem ("in development").
+            return parse_vmem_indexed(line, mn, ops, base.starts_with("vsxei"));
+        }
+
+        if base == "vmv" {
+            return match suffix {
+                "v.v" => {
+                    need(line, ops, 2, mn)?;
+                    Ok(vc(VecInstr::Alu {
+                        op: VAluOp::Merge,
+                        vd: parse_vreg(line, &ops[0])?,
+                        vs2: VReg(0),
+                        src2: VSrc2::V(parse_vreg(line, &ops[1])?),
+                        mask: MaskMode::Unmasked,
+                    }))
+                }
+                "v.x" => {
+                    need(line, ops, 2, mn)?;
+                    Ok(vc(VecInstr::Alu {
+                        op: VAluOp::Merge,
+                        vd: parse_vreg(line, &ops[0])?,
+                        vs2: VReg(0),
+                        src2: VSrc2::X(parse_xreg(line, &ops[1])?),
+                        mask: MaskMode::Unmasked,
+                    }))
+                }
+                "v.i" => {
+                    need(line, ops, 2, mn)?;
+                    Ok(vc(VecInstr::Alu {
+                        op: VAluOp::Merge,
+                        vd: parse_vreg(line, &ops[0])?,
+                        vs2: VReg(0),
+                        src2: VSrc2::I(parse_imm(line, &ops[1])? as i32),
+                        mask: MaskMode::Unmasked,
+                    }))
+                }
+                "x.s" => {
+                    need(line, ops, 2, mn)?;
+                    Ok(vc(VecInstr::MvXs {
+                        rd: parse_xreg(line, &ops[0])?,
+                        vs2: parse_vreg(line, &ops[1])?,
+                    }))
+                }
+                "s.x" => {
+                    need(line, ops, 2, mn)?;
+                    Ok(vc(VecInstr::MvSx {
+                        vd: parse_vreg(line, &ops[0])?,
+                        rs1: parse_xreg(line, &ops[1])?,
+                    }))
+                }
+                _ => Err(e(line, format!("unknown vmv form `{mn}`"))),
+            };
+        }
+
+        if base == "vmerge" {
+            // vmerge.vvm/vxm/vim vd, vs2, rhs, v0
+            if ops.len() != 4 || ops[3] != "v0" {
+                return Err(e(line, "vmerge expects `vd, vs2, rhs, v0`"));
+            }
+            let vd = parse_vreg(line, &ops[0])?;
+            let vs2 = parse_vreg(line, &ops[1])?;
+            let src2 = match suffix {
+                "vvm" => VSrc2::V(parse_vreg(line, &ops[2])?),
+                "vxm" => VSrc2::X(parse_xreg(line, &ops[2])?),
+                "vim" => VSrc2::I(parse_imm(line, &ops[2])? as i32),
+                _ => return Err(e(line, format!("unknown vmerge form `{mn}`"))),
+            };
+            return Ok(vc(VecInstr::Alu {
+                op: VAluOp::Merge,
+                vd,
+                vs2,
+                src2,
+                mask: MaskMode::Masked,
+            }));
+        }
+
+        if let Some(op) = vector_alu(base) {
+            let (ops, mask) = split_mask(ops);
+            need(line, ops, 3, mn)?;
+            let vd = parse_vreg(line, &ops[0])?;
+            let vs2 = parse_vreg(line, &ops[1])?;
+            let src2 = match suffix {
+                "vv" | "vs" => VSrc2::V(parse_vreg(line, &ops[2])?),
+                "vx" => VSrc2::X(parse_xreg(line, &ops[2])?),
+                "vi" => VSrc2::I(parse_imm(line, &ops[2])? as i32),
+                _ => {
+                    return Err(e(
+                        line,
+                        format!("unknown operand suffix `.{suffix}` on `{mn}`"),
+                    ))
+                }
+            };
+            if op.is_reduction() && suffix != "vs" {
+                return Err(e(line, format!("`{base}` requires .vs form")));
+            }
+            return Ok(vc(VecInstr::Alu { op, vd, vs2, src2, mask }));
+        }
+
+        return Err(e(line, format!("unknown vector mnemonic `{mn}`")));
+    }
+
+    if mn == "vsetvli" {
+        // vsetvli rd, rs1, e<sew>[, m<lmul>]
+        if !(3..=4).contains(&ops.len()) {
+            return Err(e(line, "vsetvli expects `rd, rs1, eSEW[, mLMUL]`"));
+        }
+        let rd = parse_xreg(line, &ops[0])?;
+        let rs1 = parse_xreg(line, &ops[1])?;
+        let sew: u32 = ops[2]
+            .strip_prefix('e')
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| e(line, format!("bad SEW `{}`", ops[2])))?;
+        let lmul: u32 = if ops.len() == 4 {
+            ops[3]
+                .strip_prefix('m')
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| e(line, format!("bad LMUL `{}`", ops[3])))?
+        } else {
+            1
+        };
+        if !matches!(sew, 8 | 16 | 32 | 64) || !matches!(lmul, 1 | 2 | 4 | 8) {
+            return Err(e(line, format!("unsupported e{sew},m{lmul}")));
+        }
+        return Ok(vc(VecInstr::VsetVli {
+            rd,
+            rs1,
+            vtypei: Vtype::new(sew, lmul).encode(),
+        }));
+    }
+
+    // --- scalar ----------------------------------------------------------
+    if let Some(op) = branch_op(mn) {
+        need(line, ops, 3, mn)?;
+        return Ok(vec![PInstr::Branch {
+            op,
+            rs1: parse_xreg(line, &ops[0])?,
+            rs2: parse_xreg(line, &ops[1])?,
+            target: ops[2].clone(),
+        }]);
+    }
+
+    if let Some(op) = scalar_muldiv(mn) {
+        need(line, ops, 3, mn)?;
+        return Ok(sc(ScalarInstr::MulDiv {
+            op,
+            rd: parse_xreg(line, &ops[0])?,
+            rs1: parse_xreg(line, &ops[1])?,
+            rs2: parse_xreg(line, &ops[2])?,
+        }));
+    }
+
+    if let Some(op) = scalar_alu(mn) {
+        need(line, ops, 3, mn)?;
+        return Ok(sc(ScalarInstr::Op {
+            op,
+            rd: parse_xreg(line, &ops[0])?,
+            rs1: parse_xreg(line, &ops[1])?,
+            rs2: parse_xreg(line, &ops[2])?,
+        }));
+    }
+
+    if mn == "sltiu" {
+        need(line, ops, 3, mn)?;
+        return Ok(sc(ScalarInstr::OpImm {
+            op: AluOp::Sltu,
+            rd: parse_xreg(line, &ops[0])?,
+            rs1: parse_xreg(line, &ops[1])?,
+            imm: parse_imm(line, &ops[2])? as i32,
+        }));
+    }
+
+    if let Some(base) = mn.strip_suffix('i') {
+        if let Some(op) = scalar_alu(base) {
+            if op != AluOp::Sub {
+                need(line, ops, 3, mn)?;
+                return Ok(sc(ScalarInstr::OpImm {
+                    op,
+                    rd: parse_xreg(line, &ops[0])?,
+                    rs1: parse_xreg(line, &ops[1])?,
+                    imm: parse_imm(line, &ops[2])? as i32,
+                }));
+            }
+        }
+    }
+
+    let load = match mn {
+        "lb" => Some(LoadOp::Lb),
+        "lh" => Some(LoadOp::Lh),
+        "lw" => Some(LoadOp::Lw),
+        "lbu" => Some(LoadOp::Lbu),
+        "lhu" => Some(LoadOp::Lhu),
+        _ => None,
+    };
+    if let Some(op) = load {
+        need(line, ops, 2, mn)?;
+        let rd = parse_xreg(line, &ops[0])?;
+        let (offset, rs1) = parse_mem_operand(line, &ops[1])?;
+        return Ok(sc(ScalarInstr::Load { op, rd, rs1, offset }));
+    }
+
+    let store = match mn {
+        "sb" => Some(StoreOp::Sb),
+        "sh" => Some(StoreOp::Sh),
+        "sw" => Some(StoreOp::Sw),
+        _ => None,
+    };
+    if let Some(op) = store {
+        need(line, ops, 2, mn)?;
+        let rs2 = parse_xreg(line, &ops[0])?;
+        let (offset, rs1) = parse_mem_operand(line, &ops[1])?;
+        return Ok(sc(ScalarInstr::Store { op, rs1, rs2, offset }));
+    }
+
+    match mn {
+        "lui" => {
+            need(line, ops, 2, mn)?;
+            let rd = parse_xreg(line, &ops[0])?;
+            let imm = (parse_imm(line, &ops[1])? as i32) << 12;
+            Ok(sc(ScalarInstr::Lui { rd, imm }))
+        }
+        "auipc" => {
+            need(line, ops, 2, mn)?;
+            let rd = parse_xreg(line, &ops[0])?;
+            let imm = (parse_imm(line, &ops[1])? as i32) << 12;
+            Ok(sc(ScalarInstr::Auipc { rd, imm }))
+        }
+        "jal" => match ops.len() {
+            1 => Ok(vec![PInstr::Jal { rd: XReg(1), target: ops[0].clone() }]),
+            2 => Ok(vec![PInstr::Jal {
+                rd: parse_xreg(line, &ops[0])?,
+                target: ops[1].clone(),
+            }]),
+            _ => Err(e(line, "jal expects `label` or `rd, label`")),
+        },
+        "jalr" => match ops.len() {
+            1 => {
+                let rs1 = parse_xreg(line, &ops[0])?;
+                Ok(sc(ScalarInstr::Jalr { rd: XReg(1), rs1, offset: 0 }))
+            }
+            2 => {
+                let rd = parse_xreg(line, &ops[0])?;
+                let (offset, rs1) = parse_mem_operand(line, &ops[1])?;
+                Ok(sc(ScalarInstr::Jalr { rd, rs1, offset }))
+            }
+            _ => Err(e(line, "jalr expects `rs1` or `rd, off(rs1)`")),
+        },
+        "ecall" | "halt" => Ok(sc(ScalarInstr::Ecall)),
+        "fence" => Ok(sc(ScalarInstr::Fence)),
+        // --- pseudo-instructions ----------------------------------------
+        "nop" => Ok(sc(ScalarInstr::OpImm {
+            op: AluOp::Add,
+            rd: XReg::ZERO,
+            rs1: XReg::ZERO,
+            imm: 0,
+        })),
+        "mv" => {
+            need(line, ops, 2, mn)?;
+            Ok(sc(ScalarInstr::OpImm {
+                op: AluOp::Add,
+                rd: parse_xreg(line, &ops[0])?,
+                rs1: parse_xreg(line, &ops[1])?,
+                imm: 0,
+            }))
+        }
+        "neg" => {
+            need(line, ops, 2, mn)?;
+            Ok(sc(ScalarInstr::Op {
+                op: AluOp::Sub,
+                rd: parse_xreg(line, &ops[0])?,
+                rs1: XReg::ZERO,
+                rs2: parse_xreg(line, &ops[1])?,
+            }))
+        }
+        "li" => {
+            need(line, ops, 2, mn)?;
+            Ok(expand_li(
+                parse_xreg(line, &ops[0])?,
+                parse_imm(line, &ops[1])?,
+            ))
+        }
+        "la" => {
+            need(line, ops, 2, mn)?;
+            let rd = parse_xreg(line, &ops[0])?;
+            Ok(vec![
+                PInstr::LaHi { rd, symbol: ops[1].clone() },
+                PInstr::LaLo { rd, symbol: ops[1].clone() },
+            ])
+        }
+        "j" => {
+            need(line, ops, 1, mn)?;
+            Ok(vec![PInstr::Jal { rd: XReg::ZERO, target: ops[0].clone() }])
+        }
+        "ret" => Ok(sc(ScalarInstr::Jalr {
+            rd: XReg::ZERO,
+            rs1: XReg(1),
+            offset: 0,
+        })),
+        "beqz" | "bnez" => {
+            need(line, ops, 2, mn)?;
+            let op = if mn == "beqz" { BranchOp::Beq } else { BranchOp::Bne };
+            Ok(vec![PInstr::Branch {
+                op,
+                rs1: parse_xreg(line, &ops[0])?,
+                rs2: XReg::ZERO,
+                target: ops[1].clone(),
+            }])
+        }
+        "ble" | "bgt" => {
+            need(line, ops, 3, mn)?;
+            let op = if mn == "ble" { BranchOp::Bge } else { BranchOp::Blt };
+            Ok(vec![PInstr::Branch {
+                op,
+                rs1: parse_xreg(line, &ops[1])?,
+                rs2: parse_xreg(line, &ops[0])?,
+                target: ops[2].clone(),
+            }])
+        }
+        _ => Err(e(line, format!("unknown mnemonic `{mn}`"))),
+    }
+}

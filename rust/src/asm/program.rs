@@ -1,0 +1,57 @@
+//! Assembled program representation and assembler errors.
+
+use std::collections::HashMap;
+
+/// Base address of the text section (host instruction store; the
+/// MicroBlaze in the paper fetches from local BRAM, not DDR3).
+pub const TEXT_BASE: u32 = 0x0000_0000;
+/// Base address of the data section in the shared DDR3 address space.
+pub const DATA_BASE: u32 = 0x1000_0000;
+
+/// An assembled program: encoded text, initialised data, and symbols.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    /// Encoded 32-bit instruction words, starting at [`TEXT_BASE`].
+    pub text: Vec<u32>,
+    /// Initialised data image, starting at [`DATA_BASE`].
+    pub data: Vec<u8>,
+    /// Symbol table: label -> absolute address.
+    pub symbols: HashMap<String, u32>,
+}
+
+impl Program {
+    /// Address of a label, if defined.
+    pub fn symbol(&self, name: &str) -> Option<u32> {
+        self.symbols.get(name).copied()
+    }
+
+    /// Number of instructions in the text section.
+    pub fn len(&self) -> usize {
+        self.text.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.text.is_empty()
+    }
+}
+
+/// Assembly error with source line context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AsmError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl AsmError {
+    pub fn new(line: usize, message: impl Into<String>) -> Self {
+        AsmError { line, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for AsmError {}

@@ -1,0 +1,499 @@
+//! End-to-end edge-inference workload: the tiny integer CNN
+//! (conv3x3 -> ReLU -> maxpool2x2 -> dense -> ReLU -> dense) that the L2
+//! JAX model (`python/compile/model.py`) defines, compiled to RVV v0.9
+//! assembly for the Arrow system.
+//!
+//! This is the paper's *motivating* workload — "edge machine learning
+//! inference" — run as one program on the simulated MicroBlaze+Arrow
+//! system and validated bit-exactly against the XLA-compiled `cnn`
+//! artifact (the L1/L2 golden model).  See examples/inference.rs.
+
+use std::fmt::Write as _;
+
+use crate::util::rng::Rng;
+
+/// Geometry, mirrored from python/compile/model.py.
+pub const IMAGE: usize = 18;
+pub const KERNEL: usize = 3;
+pub const CONV_OUT: usize = IMAGE - KERNEL + 1; // 16
+pub const POOLED: usize = CONV_OUT / 2; // 8
+pub const FLAT: usize = POOLED * POOLED; // 64
+pub const HIDDEN: usize = 32;
+pub const CLASSES: usize = 16;
+
+/// CNN parameters + input (all int32).
+#[derive(Debug, Clone)]
+pub struct CnnWorkload {
+    pub image: Vec<i32>,   // 1 x 18 x 18
+    pub conv_w: Vec<i32>,  // 3 x 3
+    pub fc1_w: Vec<i32>,   // 64 x 32 (row-major)
+    pub fc2_w: Vec<i32>,   // 32 x 16
+}
+
+impl CnnWorkload {
+    pub fn generate(seed: u64) -> CnnWorkload {
+        let mut rng = Rng::new(seed ^ 0xC4A77);
+        CnnWorkload {
+            image: rng.i32_vec(IMAGE * IMAGE, 0, 16),
+            conv_w: rng.i32_vec(KERNEL * KERNEL, -4, 4),
+            fc1_w: rng.i32_vec(FLAT * HIDDEN, -4, 4),
+            fc2_w: rng.i32_vec(HIDDEN * CLASSES, -4, 4),
+        }
+    }
+
+    /// Inputs in the order the XLA `cnn` artifact expects.
+    pub fn oracle_inputs(&self) -> Vec<Vec<i32>> {
+        vec![
+            self.image.clone(),
+            self.conv_w.clone(),
+            self.fc1_w.clone(),
+            self.fc2_w.clone(),
+        ]
+    }
+
+    /// Reference forward pass (wrapping i32, like the hardware).
+    pub fn expected_logits(&self) -> Vec<i32> {
+        // conv (valid) + relu
+        let mut conv = vec![0i32; CONV_OUT * CONV_OUT];
+        for i in 0..CONV_OUT {
+            for j in 0..CONV_OUT {
+                let mut acc = 0i32;
+                for r in 0..KERNEL {
+                    for c in 0..KERNEL {
+                        acc = acc.wrapping_add(
+                            self.conv_w[r * KERNEL + c].wrapping_mul(
+                                self.image[(i + r) * IMAGE + j + c],
+                            ),
+                        );
+                    }
+                }
+                conv[i * CONV_OUT + j] = acc.max(0);
+            }
+        }
+        // maxpool 2x2
+        let mut pool = vec![0i32; FLAT];
+        for i in 0..POOLED {
+            for j in 0..POOLED {
+                pool[i * POOLED + j] = conv[2 * i * CONV_OUT + 2 * j]
+                    .max(conv[2 * i * CONV_OUT + 2 * j + 1])
+                    .max(conv[(2 * i + 1) * CONV_OUT + 2 * j])
+                    .max(conv[(2 * i + 1) * CONV_OUT + 2 * j + 1]);
+            }
+        }
+        // dense1 + relu
+        let mut h = vec![0i32; HIDDEN];
+        for (k, &x) in pool.iter().enumerate() {
+            for j in 0..HIDDEN {
+                h[j] = h[j].wrapping_add(x.wrapping_mul(self.fc1_w[k * HIDDEN + j]));
+            }
+        }
+        for v in h.iter_mut() {
+            *v = (*v).max(0);
+        }
+        // dense2
+        let mut logits = vec![0i32; CLASSES];
+        for (k, &x) in h.iter().enumerate() {
+            for j in 0..CLASSES {
+                logits[j] = logits[j]
+                    .wrapping_add(x.wrapping_mul(self.fc2_w[k * CLASSES + j]));
+            }
+        }
+        logits
+    }
+}
+
+/// The full CNN as one vectorized Arrow program.
+///
+/// Stage buffers live in `.data`; each stage is the vectorized idiom of
+/// the corresponding benchmark kernel (conv: per-pixel vl=3 dot; relu:
+/// vmax.vx strips; maxpool: strided even/odd loads; dense: broadcast
+/// multiply-accumulate).
+pub fn cnn_vector_asm() -> String {
+    let mut s = String::from(".data\n");
+    for (label, words) in [
+        ("image", IMAGE * IMAGE),
+        ("conv_w", KERNEL * KERNEL),
+        ("fc1_w", FLAT * HIDDEN),
+        ("fc2_w", HIDDEN * CLASSES),
+        ("conv_out", CONV_OUT * CONV_OUT),
+        ("pool_out", FLAT),
+        ("hidden", HIDDEN),
+        ("logits", CLASSES),
+    ] {
+        let _ = writeln!(s, "{label}: .space {}", words * 4);
+    }
+    s.push_str(".text\n");
+    let row = 4 * IMAGE;
+    let crow = 4 * CONV_OUT;
+
+    // --- stage 1: conv3x3 + fused ReLU --------------------------------
+    let _ = write!(
+        s,
+        r#"    li s5, {row}
+    li t0, {k}
+    vsetvli t1, t0, e32,m1
+    la t1, conv_w
+    vle32.v v8, (t1)
+    addi t1, t1, {kb}
+    vle32.v v9, (t1)
+    addi t1, t1, {kb}
+    vle32.v v10, (t1)
+    vmv.s.x v5, zero
+    la s9, image
+    la s10, conv_out
+    li s6, {o}
+conv_row:
+    li s4, {o}
+    mv a0, s9
+conv_col:
+    mv s1, a0
+    vmv.v.i v4, 0
+    vle32.v v1, (s1)
+    vmul.vv v2, v1, v8
+    vadd.vv v4, v4, v2
+    add s1, s1, s5
+    vle32.v v1, (s1)
+    vmul.vv v2, v1, v9
+    vadd.vv v4, v4, v2
+    add s1, s1, s5
+    vle32.v v1, (s1)
+    vmul.vv v2, v1, v10
+    vadd.vv v4, v4, v2
+    vredsum.vs v6, v4, v5
+    vmv.x.s a1, v6
+    bge a1, zero, conv_pos
+    li a1, 0
+conv_pos:
+    sw a1, 0(s10)
+    addi s10, s10, 4
+    addi a0, a0, 4
+    addi s4, s4, -1
+    bnez s4, conv_col
+    add s9, s9, s5
+    addi s6, s6, -1
+    bnez s6, conv_row
+"#,
+        k = KERNEL,
+        kb = 4 * KERNEL,
+        o = CONV_OUT,
+    );
+
+    // --- stage 2: maxpool 2x2 (strided even/odd loads, vl = 8) --------
+    let _ = write!(
+        s,
+        r#"    li s5, {crow}
+    li s7, 8
+    la s1, conv_out
+    la s2, pool_out
+    li s0, {pooled}
+pool_row:
+    li t6, {pooled}
+    vsetvli t0, t6, e32,m1
+    mv t1, s1
+    add t3, s1, s5
+    vlse32.v v1, (t1), s7
+    addi t2, t1, 4
+    vlse32.v v2, (t2), s7
+    vlse32.v v3, (t3), s7
+    addi t4, t3, 4
+    vlse32.v v4, (t4), s7
+    vmax.vv v1, v1, v2
+    vmax.vv v3, v3, v4
+    vmax.vv v1, v1, v3
+    vse32.v v1, (s2)
+    addi s2, s2, {pooled_b}
+    add s1, s1, s5
+    add s1, s1, s5
+    addi s0, s0, -1
+    bnez s0, pool_row
+"#,
+        pooled = POOLED,
+        pooled_b = 4 * POOLED,
+    );
+
+    // --- stage 3: dense 64->32 + ReLU (axpy, vl = 32) ------------------
+    let _ = write!(
+        s,
+        r#"    li t6, {hidden}
+    vsetvli t0, t6, e32,m8
+    vmv.v.i v16, 0
+    la t1, pool_out
+    la t2, fc1_w
+    li t3, {flat}
+fc1_k:
+    lw t4, 0(t1)
+    vle32.v v0, (t2)
+    vmul.vx v8, v0, t4
+    vadd.vv v16, v16, v8
+    addi t1, t1, 4
+    addi t2, t2, {hidden_b}
+    addi t3, t3, -1
+    bnez t3, fc1_k
+    vmax.vx v16, v16, zero
+    la t5, hidden
+    vse32.v v16, (t5)
+"#,
+        hidden = HIDDEN,
+        flat = FLAT,
+        hidden_b = 4 * HIDDEN,
+    );
+
+    // --- stage 4: dense 32->16 (axpy, vl = 16) -------------------------
+    let _ = write!(
+        s,
+        r#"    li t6, {classes}
+    vsetvli t0, t6, e32,m8
+    vmv.v.i v16, 0
+    la t1, hidden
+    la t2, fc2_w
+    li t3, {hidden}
+fc2_k:
+    lw t4, 0(t1)
+    vle32.v v0, (t2)
+    vmul.vx v8, v0, t4
+    vadd.vv v16, v16, v8
+    addi t1, t1, 4
+    addi t2, t2, {classes_b}
+    addi t3, t3, -1
+    bnez t3, fc2_k
+    la t5, logits
+    vse32.v v16, (t5)
+    halt
+"#,
+        classes = CLASSES,
+        hidden = HIDDEN,
+        classes_b = 4 * CLASSES,
+    );
+    s
+}
+
+/// Scalar-only CNN baseline (for the speedup/energy comparison of the
+/// end-to-end workload).
+pub fn cnn_scalar_asm() -> String {
+    let mut s = String::from(".data\n");
+    for (label, words) in [
+        ("image", IMAGE * IMAGE),
+        ("conv_w", KERNEL * KERNEL),
+        ("fc1_w", FLAT * HIDDEN),
+        ("fc2_w", HIDDEN * CLASSES),
+        ("conv_out", CONV_OUT * CONV_OUT),
+        ("pool_out", FLAT),
+        ("hidden", HIDDEN),
+        ("logits", CLASSES),
+    ] {
+        let _ = writeln!(s, "{label}: .space {}", words * 4);
+    }
+    s.push_str(".text\n");
+    let row = 4 * IMAGE;
+    let crow = 4 * CONV_OUT;
+
+    // conv + relu (unrolled 3x3 taps)
+    let mut taps = String::new();
+    for r in 0..KERNEL {
+        for c in 0..KERNEL {
+            let off = (r * IMAGE + c) * 4;
+            let woff = (r * KERNEL + c) * 4;
+            let _ = write!(
+                taps,
+                "    lw t0, {off}(a0)\n    lw t1, {woff}(s0)\n    mul t2, t0, t1\n    add a1, a1, t2\n"
+            );
+        }
+    }
+    let _ = write!(
+        s,
+        r#"    la s0, conv_w
+    la s9, image
+    la s10, conv_out
+    li s6, {o}
+conv_row:
+    li s4, {o}
+    mv a0, s9
+conv_col:
+    li a1, 0
+{taps}    bge a1, zero, conv_pos
+    li a1, 0
+conv_pos:
+    sw a1, 0(s10)
+    addi s10, s10, 4
+    addi a0, a0, 4
+    addi s4, s4, -1
+    bnez s4, conv_col
+    li t0, {row}
+    add s9, s9, t0
+    addi s6, s6, -1
+    bnez s6, conv_row
+"#,
+        o = CONV_OUT,
+    );
+
+    // maxpool
+    let _ = write!(
+        s,
+        r#"    li s5, {crow}
+    la s1, conv_out
+    la s2, pool_out
+    li s0, {pooled}
+pool_row:
+    li s3, {pooled}
+    mv t0, s1
+    add t6, s1, s5
+pool_col:
+    lw t1, 0(t0)
+    lw t2, 4(t0)
+    lw t3, 0(t6)
+    lw t4, 4(t6)
+    ble t2, t1, p1
+    mv t1, t2
+p1:
+    ble t3, t1, p2
+    mv t1, t3
+p2:
+    ble t4, t1, p3
+    mv t1, t4
+p3:
+    sw t1, 0(s2)
+    addi t0, t0, 8
+    addi t6, t6, 8
+    addi s2, s2, 4
+    addi s3, s3, -1
+    bnez s3, pool_col
+    add s1, s1, s5
+    add s1, s1, s5
+    addi s0, s0, -1
+    bnez s0, pool_row
+"#,
+        pooled = POOLED,
+    );
+
+    // dense1 + relu: for j in 0..32: acc over k
+    let _ = write!(
+        s,
+        r#"    la s1, pool_out
+    la s2, hidden
+    la s3, fc1_w
+    li s0, {hidden}
+fc1_j:
+    li t3, {flat}
+    mv t0, s1
+    mv t1, s3
+    li t4, 0
+fc1_k:
+    lw t2, 0(t0)
+    lw t5, 0(t1)
+    mul t5, t2, t5
+    add t4, t4, t5
+    addi t0, t0, 4
+    addi t1, t1, {hidden_b}
+    addi t3, t3, -1
+    bnez t3, fc1_k
+    bge t4, zero, fc1_pos
+    li t4, 0
+fc1_pos:
+    sw t4, 0(s2)
+    addi s2, s2, 4
+    addi s3, s3, 4
+    addi s0, s0, -1
+    bnez s0, fc1_j
+"#,
+        hidden = HIDDEN,
+        flat = FLAT,
+        hidden_b = 4 * HIDDEN,
+    );
+
+    // dense2
+    let _ = write!(
+        s,
+        r#"    la s1, hidden
+    la s2, logits
+    la s3, fc2_w
+    li s0, {classes}
+fc2_j:
+    li t3, {hidden}
+    mv t0, s1
+    mv t1, s3
+    li t4, 0
+fc2_k:
+    lw t2, 0(t0)
+    lw t5, 0(t1)
+    mul t5, t2, t5
+    add t4, t4, t5
+    addi t0, t0, 4
+    addi t1, t1, {classes_b}
+    addi t3, t3, -1
+    bnez t3, fc2_k
+    sw t4, 0(s2)
+    addi s2, s2, 4
+    addi s3, s3, 4
+    addi s0, s0, -1
+    bnez s0, fc2_j
+    halt
+"#,
+        classes = CLASSES,
+        hidden = HIDDEN,
+        classes_b = 4 * CLASSES,
+    );
+    s
+}
+
+/// Run the CNN on the simulated Arrow system; returns (logits, cycles).
+pub fn run_cnn(
+    vectorized: bool,
+    w: &CnnWorkload,
+    config: crate::vector::ArrowConfig,
+) -> Result<(Vec<i32>, crate::system::machine::RunSummary), crate::system::machine::MachineError>
+{
+    use crate::asm::assemble;
+    use crate::scalar::ScalarTiming;
+    use crate::system::Machine;
+
+    let src = if vectorized { cnn_vector_asm() } else { cnn_scalar_asm() };
+    let program = assemble(&src).expect("cnn program assembles");
+    let mut m = Machine::new(program, config, ScalarTiming::default());
+    for (label, data) in [
+        ("image", &w.image),
+        ("conv_w", &w.conv_w),
+        ("fc1_w", &w.fc1_w),
+        ("fc2_w", &w.fc2_w),
+    ] {
+        let addr = m.addr_of(label);
+        m.dram.write_i32_slice(addr, data);
+    }
+    let summary = m.run(200_000_000)?;
+    let logits = m.dram.read_i32_slice(m.addr_of("logits"), CLASSES);
+    Ok((logits, summary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vector::ArrowConfig;
+
+    #[test]
+    fn cnn_vector_matches_reference() {
+        let w = CnnWorkload::generate(11);
+        let (logits, s) = run_cnn(true, &w, ArrowConfig::default()).unwrap();
+        assert_eq!(logits, w.expected_logits());
+        assert!(s.vector_instructions > 100);
+    }
+
+    #[test]
+    fn cnn_scalar_matches_reference() {
+        let w = CnnWorkload::generate(12);
+        let (logits, s) = run_cnn(false, &w, ArrowConfig::default()).unwrap();
+        assert_eq!(logits, w.expected_logits());
+        assert_eq!(s.vector_instructions, 0);
+    }
+
+    #[test]
+    fn cnn_vector_is_faster() {
+        let w = CnnWorkload::generate(13);
+        let (_, sv) = run_cnn(true, &w, ArrowConfig::default()).unwrap();
+        let (_, ss) = run_cnn(false, &w, ArrowConfig::default()).unwrap();
+        assert!(
+            sv.cycles * 2 < ss.cycles,
+            "vector {} vs scalar {}",
+            sv.cycles,
+            ss.cycles
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! The nine-benchmark ML-inference suite (paper §4.3, Table 1).
+//!
+//! Each benchmark exists in a *scalar* (RV32IM-only) and a *vectorized*
+//! (RVV) variant, written as assembly against [`crate::asm`] — the same
+//! shape as the University of Southampton suite's inlined-assembly
+//! functions the paper used.
+//!
+//! * [`profiles`] — Table 1's small/medium/large data profiles, plus
+//!   scaled-down profiles for fast functional testing.
+//! * [`suite`] — the assembly generators and expected-result oracles.
+//! * [`runner`] — assemble + load + simulate + verify one benchmark.
+//! * [`analytic`] — the cycle-count extrapolation for profiles too large
+//!   to step instruction-by-instruction (DESIGN.md §6): per-benchmark
+//!   polynomial fits through exactly-simulated smaller sizes.
+
+pub mod analytic;
+pub mod cnn;
+pub mod profiles;
+pub mod runner;
+pub mod suite;
+
+pub use profiles::{ConvShape, Profile, PROFILES};
+pub use runner::{run_benchmark, BenchResult, Mode};
+pub use suite::{Benchmark, BENCHMARKS};

@@ -1,0 +1,93 @@
+//! Table 1: benchmark data-size profiles.
+
+/// 2-D convolution workload shape (Table 1 bottom half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Square input image dimension (paper: 1024 for all profiles).
+    pub image: usize,
+    /// Square kernel dimension (3 / 4 / 5).
+    pub kernel: usize,
+    /// Batch size (3 / 4 / 5 — the paper pairs batch with kernel).
+    pub batch: usize,
+}
+
+/// One data-size profile (one column group of Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Profile {
+    pub name: &'static str,
+    /// 1-D vector benchmark length.
+    pub vector_len: usize,
+    /// Square matrix benchmark dimension.
+    pub matrix_dim: usize,
+    pub conv: ConvShape,
+}
+
+/// Table 1 as printed.
+pub const SMALL: Profile = Profile {
+    name: "small",
+    vector_len: 64,
+    matrix_dim: 64,
+    conv: ConvShape { image: 1024, kernel: 3, batch: 3 },
+};
+
+pub const MEDIUM: Profile = Profile {
+    name: "medium",
+    vector_len: 512,
+    matrix_dim: 512,
+    conv: ConvShape { image: 1024, kernel: 4, batch: 4 },
+};
+
+pub const LARGE: Profile = Profile {
+    name: "large",
+    vector_len: 4096,
+    matrix_dim: 4096,
+    conv: ConvShape { image: 1024, kernel: 5, batch: 5 },
+};
+
+pub const PROFILES: [Profile; 3] = [SMALL, MEDIUM, LARGE];
+
+/// Scaled-down profile for functional tests and oracle validation
+/// (vector sizes match the AOT artifacts: n=64/512, 64x64 matrices,
+/// 64x64 conv images).
+pub const TEST: Profile = Profile {
+    name: "test",
+    vector_len: 64,
+    matrix_dim: 64,
+    conv: ConvShape { image: 64, kernel: 3, batch: 3 },
+};
+
+impl Profile {
+    pub fn by_name(name: &str) -> Option<Profile> {
+        match name {
+            "small" => Some(SMALL),
+            "medium" => Some(MEDIUM),
+            "large" => Some(LARGE),
+            "test" => Some(TEST),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        assert_eq!(SMALL.vector_len, 64);
+        assert_eq!(MEDIUM.matrix_dim, 512);
+        assert_eq!(LARGE.vector_len, 4096);
+        assert_eq!(LARGE.conv.kernel, 5);
+        assert_eq!(LARGE.conv.batch, 5);
+        for p in PROFILES {
+            assert_eq!(p.conv.image, 1024);
+            assert_eq!(p.conv.kernel, p.conv.batch);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(Profile::by_name("medium"), Some(MEDIUM));
+        assert_eq!(Profile::by_name("huge"), None);
+    }
+}

@@ -1,0 +1,206 @@
+//! Assemble, load, simulate and verify one benchmark instance.
+
+use crate::asm::assemble;
+use crate::scalar::ScalarTiming;
+use crate::system::machine::{Machine, MachineError, RunSummary};
+use crate::vector::ArrowConfig;
+
+use super::suite::{BenchSize, Benchmark, Workload};
+
+/// Scalar baseline or vectorized variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Scalar,
+    Vector,
+}
+
+impl Mode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Scalar => "scalar",
+            Mode::Vector => "vector",
+        }
+    }
+}
+
+/// Outcome of one simulated benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub benchmark: Benchmark,
+    pub mode: Mode,
+    pub size: BenchSize,
+    pub cycles: u64,
+    pub summary: RunSummary,
+    /// Simulator output matched the Rust oracle exactly.
+    pub verified: bool,
+    /// Result words read back from simulated DDR3.
+    pub output: Vec<i32>,
+}
+
+/// Default per-run instruction budget (guards runaway programs).
+pub const DEFAULT_BUDGET: u64 = 2_000_000_000;
+
+/// Rough instruction-count estimate, used to pick simulation vs analytic
+/// extrapolation (DESIGN.md §6).
+pub fn estimated_instructions(b: Benchmark, s: BenchSize, mode: Mode) -> u64 {
+    let n = s.n as u64;
+    let (k, batch) = (s.k as u64, s.batch as u64);
+    let o = n - k.saturating_sub(1);
+    match (b, mode) {
+        (Benchmark::VAdd | Benchmark::VMul | Benchmark::VRelu, Mode::Scalar) => 9 * n,
+        (Benchmark::VDot | Benchmark::VMaxReduce, Mode::Scalar) => 8 * n,
+        (
+            Benchmark::VAdd
+            | Benchmark::VMul
+            | Benchmark::VRelu
+            | Benchmark::VDot
+            | Benchmark::VMaxReduce,
+            Mode::Vector,
+        ) => 12 * n.div_ceil(64) + 20,
+        (Benchmark::MatAdd, Mode::Scalar) => 9 * n * n,
+        (Benchmark::MatAdd, Mode::Vector) => 12 * (n * n).div_ceil(64) + 20,
+        (Benchmark::MatMul, Mode::Scalar) => 8 * n * n * n + 10 * n * n,
+        (Benchmark::MatMul, Mode::Vector) => {
+            n * n.div_ceil(64) * (8 * n + 12) + 10 * n
+        }
+        (Benchmark::MaxPool, Mode::Scalar) => 17 * (n / 2) * (n / 2),
+        (Benchmark::MaxPool, Mode::Vector) => {
+            (n / 2) * (15 * (n / 2).div_ceil(64) + 8)
+        }
+        (Benchmark::Conv2d, Mode::Scalar) => {
+            batch * o * o * (18 + k * (2 + 4 * k))
+        }
+        (Benchmark::Conv2d, Mode::Vector) => batch * o * o * (26 + 4 * k),
+    }
+}
+
+/// Assemble + simulate one benchmark; verifies the simulated memory image
+/// against the Rust oracle.
+pub fn run_benchmark(
+    benchmark: Benchmark,
+    size: BenchSize,
+    mode: Mode,
+    config: ArrowConfig,
+    seed: u64,
+) -> Result<BenchResult, MachineError> {
+    let workload = benchmark.workload(size, seed);
+    run_with_workload(benchmark, size, mode, config, &workload)
+}
+
+/// Like [`run_benchmark`] with a caller-provided workload (the XLA oracle
+/// path reuses the same inputs on both sides).
+pub fn run_with_workload(
+    benchmark: Benchmark,
+    size: BenchSize,
+    mode: Mode,
+    config: ArrowConfig,
+    workload: &Workload,
+) -> Result<BenchResult, MachineError> {
+    let source = match mode {
+        Mode::Scalar => benchmark.scalar_asm(size),
+        Mode::Vector => benchmark.vector_asm(size),
+    };
+    let program = assemble(&source)
+        .unwrap_or_else(|e| panic!("{} {}: {e}", benchmark.name(), mode.name()));
+    let mut machine = Machine::new(program, config, ScalarTiming::default());
+    for (label, data) in &workload.inputs {
+        let addr = machine.addr_of(label);
+        machine.dram.write_i32_slice(addr, data);
+    }
+    let summary = machine.run(DEFAULT_BUDGET)?;
+    let out_addr = machine.addr_of(workload.result_label);
+    let output =
+        machine.dram.read_i32_slice(out_addr, workload.expected.len());
+    let verified = output == workload.expected;
+    Ok(BenchResult {
+        benchmark,
+        mode,
+        size,
+        cycles: summary.cycles,
+        summary,
+        verified,
+        output,
+    })
+}
+
+/// Simulate at a *different* size than the workload-verified profile runs
+/// — used by the analytic fit, skipping verification for speed.
+pub fn cycles_at(
+    benchmark: Benchmark,
+    size: BenchSize,
+    mode: Mode,
+    config: ArrowConfig,
+) -> Result<u64, MachineError> {
+    Ok(run_benchmark(benchmark, size, mode, config, 1)?.cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::suite::BENCHMARKS;
+
+    fn sz(n: usize) -> BenchSize {
+        BenchSize { n, k: 0, batch: 0 }
+    }
+
+    #[test]
+    fn all_benchmarks_verify_small() {
+        for b in BENCHMARKS {
+            let size = if b == Benchmark::Conv2d {
+                BenchSize { n: 16, k: 3, batch: 2 }
+            } else {
+                sz(16)
+            };
+            for mode in [Mode::Scalar, Mode::Vector] {
+                let r = run_benchmark(
+                    b,
+                    size,
+                    mode,
+                    ArrowConfig::default(),
+                    42,
+                )
+                .unwrap();
+                assert!(
+                    r.verified,
+                    "{} {} mismatch:\n got {:?}\nwant {:?}",
+                    b.name(),
+                    mode.name(),
+                    &r.output[..r.output.len().min(16)],
+                    &b.workload(size, 42).expected[..16.min(r.output.len())],
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vector_faster_than_scalar_on_vector_ops() {
+        for b in [Benchmark::VAdd, Benchmark::VMul, Benchmark::VRelu] {
+            let s = run_benchmark(b, sz(512), Mode::Scalar, ArrowConfig::default(), 1)
+                .unwrap();
+            let v = run_benchmark(b, sz(512), Mode::Vector, ArrowConfig::default(), 1)
+                .unwrap();
+            assert!(s.verified && v.verified);
+            assert!(
+                v.cycles * 10 < s.cycles,
+                "{}: vector {} vs scalar {}",
+                b.name(),
+                v.cycles,
+                s.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_verifies_at_64() {
+        let r = run_benchmark(
+            Benchmark::MatMul,
+            sz(64),
+            Mode::Vector,
+            ArrowConfig::default(),
+            3,
+        )
+        .unwrap();
+        assert!(r.verified);
+        assert!(r.summary.vector_instructions > 1000);
+    }
+}

@@ -1,0 +1,14 @@
+//! FPGA resource and power/energy model (paper Tables 2 and 4).
+//!
+//! The paper derives benchmark energy as `power x execution time`, with
+//! power taken from Vivado post-implementation reports (Table 2) and
+//! execution time as `cycle count x clock period`.  We implement exactly
+//! that derivation, anchored to Table 2's measured constants, plus a
+//! linear component-activity model for design-space points the paper
+//! never synthesised (lane/VLEN sweeps) — clearly marked synthetic.
+
+pub mod model;
+pub mod resources;
+
+pub use model::EnergyModel;
+pub use resources::{ResourceReport, ARROW_SYSTEM, MICROBLAZE_ONLY};

@@ -1,0 +1,75 @@
+//! Energy accounting: `E = P x t`, `t = cycles x T_clk` (paper §4.3).
+
+use super::resources::{ARROW_SYSTEM, MICROBLAZE_ONLY};
+
+/// The paper's energy model, anchored to Table 2 power numbers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// Power of the scalar-only system, W (Table 2: 0.270).
+    pub scalar_power_w: f64,
+    /// Power of the MicroBlaze+Arrow system, W (Table 2: 0.297).
+    pub system_power_w: f64,
+    /// Core clock, Hz (both systems ran at 100 MHz).
+    pub clock_hz: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            scalar_power_w: MICROBLAZE_ONLY.power_w,
+            system_power_w: ARROW_SYSTEM.power_w,
+            clock_hz: 100e6,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Execution time in seconds for a cycle count.
+    pub fn time_s(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_hz
+    }
+
+    /// Energy of a *scalar* benchmark run (MicroBlaze-only system).
+    pub fn scalar_energy_j(&self, cycles: u64) -> f64 {
+        self.scalar_power_w * self.time_s(cycles)
+    }
+
+    /// Energy of a *vectorized* benchmark run (MicroBlaze+Arrow system).
+    pub fn vector_energy_j(&self, cycles: u64) -> f64 {
+        self.system_power_w * self.time_s(cycles)
+    }
+
+    /// Table 4's "Ratio" column: vector energy / scalar energy.
+    pub fn energy_ratio(&self, scalar_cycles: u64, vector_cycles: u64) -> f64 {
+        self.vector_energy_j(vector_cycles) / self.scalar_energy_j(scalar_cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_vector_addition_small() {
+        // Table 3/4 row 1 small: scalar 3.4e3 cycles -> 8.6e-6 J wants
+        // 0.270 W x 34 us = 9.2e-6 J; the paper's 8.6e-6 rounds the cycle
+        // count, so allow 15%.
+        let m = EnergyModel::default();
+        let e = m.scalar_energy_j(3_400);
+        assert!((e - 8.6e-6).abs() / 8.6e-6 < 0.15, "e = {e}");
+    }
+
+    #[test]
+    fn ratio_reflects_speedup_and_power_adder() {
+        let m = EnergyModel::default();
+        // 70x speedup -> ratio = (0.297/0.270)/70 = 1.57%
+        let r = m.energy_ratio(70_000, 1_000);
+        assert!((r - 0.0157).abs() < 0.001, "r = {r}");
+    }
+
+    #[test]
+    fn time_at_100mhz() {
+        let m = EnergyModel::default();
+        assert!((m.time_s(100) - 1e-6).abs() < 1e-12);
+    }
+}

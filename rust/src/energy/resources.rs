@@ -1,0 +1,103 @@
+//! Table 2: post-implementation FPGA resource utilisation and power on
+//! the Xilinx XC7A200T-1SBG484C (Nexys Video).
+
+use crate::vector::ArrowConfig;
+
+/// Device totals for the XC7A200T.
+pub const DEVICE_LUTS: u32 = 133_800;
+pub const DEVICE_FFS: u32 = 267_600;
+pub const DEVICE_BRAMS: u32 = 365;
+
+/// One row of Table 2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceReport {
+    pub name: &'static str,
+    pub luts: u32,
+    pub ffs: u32,
+    pub brams: u32,
+    pub power_w: f64,
+    /// Maximum achievable clock (paper §5.1: Arrow closes at 112 MHz).
+    pub fmax_mhz: f64,
+}
+
+/// MicroBlaze-only system (Table 2 row 1).
+pub const MICROBLAZE_ONLY: ResourceReport = ResourceReport {
+    name: "MicroBlaze",
+    luts: 2241,
+    ffs: 1495,
+    brams: 32,
+    power_w: 0.270,
+    fmax_mhz: 100.0,
+};
+
+/// MicroBlaze + dual-lane Arrow (Table 2 row 2).
+pub const ARROW_SYSTEM: ResourceReport = ResourceReport {
+    name: "MicroBlaze+Arrow",
+    luts: 2715,
+    ffs: 2268,
+    brams: 32,
+    power_w: 0.297,
+    fmax_mhz: 112.0,
+};
+
+impl ResourceReport {
+    pub fn lut_pct(&self) -> f64 {
+        100.0 * self.luts as f64 / DEVICE_LUTS as f64
+    }
+
+    pub fn ff_pct(&self) -> f64 {
+        100.0 * self.ffs as f64 / DEVICE_FFS as f64
+    }
+}
+
+/// Synthetic resource estimate for a non-paper design point, scaling the
+/// measured Arrow increment (Table 2 row2 - row1) linearly in lane count
+/// and VRF bits.  Used only by the design-space sweep; the two anchored
+/// points return the measured values exactly.
+pub fn estimate(config: &ArrowConfig) -> ResourceReport {
+    let base = MICROBLAZE_ONLY;
+    let paper = ArrowConfig::default();
+    let d_lut = (ARROW_SYSTEM.luts - base.luts) as f64;
+    let d_ff = (ARROW_SYSTEM.ffs - base.ffs) as f64;
+    let d_pow = ARROW_SYSTEM.power_w - base.power_w;
+    // Lanes scale the datapath; VLEN scales the register file flops.
+    let lane_scale = config.lanes as f64 / paper.lanes as f64;
+    let vrf_scale = config.vlen_bits as f64 / paper.vlen_bits as f64;
+    let s = 0.6 * lane_scale + 0.4 * vrf_scale;
+    ResourceReport {
+        name: "MicroBlaze+Arrow (estimated)",
+        luts: base.luts + (d_lut * s) as u32,
+        ffs: base.ffs + (d_ff * (0.3 * lane_scale + 0.7 * vrf_scale)) as u32,
+        brams: base.brams,
+        power_w: base.power_w + d_pow * s,
+        fmax_mhz: ARROW_SYSTEM.fmax_mhz / (1.0 + 0.08 * (lane_scale - 1.0)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_percentages() {
+        assert!((MICROBLAZE_ONLY.lut_pct() - 1.7).abs() < 0.05);
+        assert!((ARROW_SYSTEM.lut_pct() - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn estimate_anchors_at_paper_point() {
+        let e = estimate(&ArrowConfig::default());
+        assert_eq!(e.luts, ARROW_SYSTEM.luts);
+        assert_eq!(e.ffs, ARROW_SYSTEM.ffs);
+        assert!((e.power_w - ARROW_SYSTEM.power_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimate_monotone_in_lanes() {
+        let two = estimate(&ArrowConfig::default());
+        let four = estimate(&ArrowConfig { lanes: 4, ..Default::default() });
+        assert!(four.luts > two.luts);
+        assert!(four.power_w > two.power_w);
+        assert!(four.fmax_mhz < two.fmax_mhz);
+    }
+}

@@ -1,0 +1,125 @@
+//! Vector CSRs: `vtype` encoding, `vl` computation, CSR addresses.
+//!
+//! We use the field *layout* of the ratified spec (vlmul[2:0] at bits 2:0,
+//! vsew[2:0] at bits 5:3) with v0.9-era semantics (integer LMUL 1/2/4/8,
+//! no fractional LMUL, tail/mask-agnostic bits ignored).  Both our
+//! assembler and decoder share this table, so the encoding is internally
+//! consistent end-to-end.
+
+/// CSR addresses (RVV).
+pub const CSR_VSTART: u32 = 0x008;
+pub const CSR_VL: u32 = 0xC20;
+pub const CSR_VTYPE: u32 = 0xC21;
+pub const CSR_VLENB: u32 = 0xC22;
+
+/// Decoded `vtype`: standard element width + register group multiplier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Vtype {
+    /// SEW in bits: 8, 16, 32 or 64.
+    pub sew_bits: u32,
+    /// LMUL: 1, 2, 4 or 8 vector registers per group.
+    pub lmul: u32,
+}
+
+impl Default for Vtype {
+    fn default() -> Self {
+        Vtype { sew_bits: 8, lmul: 1 }
+    }
+}
+
+impl Vtype {
+    pub fn new(sew_bits: u32, lmul: u32) -> Self {
+        assert!(matches!(sew_bits, 8 | 16 | 32 | 64), "bad SEW {sew_bits}");
+        assert!(matches!(lmul, 1 | 2 | 4 | 8), "bad LMUL {lmul}");
+        Vtype { sew_bits, lmul }
+    }
+
+    /// Encode to the 11-bit `vtypei` immediate of `vsetvli`.
+    pub fn encode(self) -> u32 {
+        let vsew = match self.sew_bits {
+            8 => 0,
+            16 => 1,
+            32 => 2,
+            64 => 3,
+            _ => unreachable!(),
+        };
+        let vlmul = match self.lmul {
+            1 => 0,
+            2 => 1,
+            4 => 2,
+            8 => 3,
+            _ => unreachable!(),
+        };
+        (vsew << 3) | vlmul
+    }
+
+    /// Decode from a `vtypei` immediate.  Returns `None` for reserved
+    /// encodings (fractional LMUL, SEW > 64).
+    pub fn decode(vtypei: u32) -> Option<Self> {
+        let vsew = (vtypei >> 3) & 0b111;
+        let vlmul = vtypei & 0b111;
+        let sew_bits = match vsew {
+            0 => 8,
+            1 => 16,
+            2 => 32,
+            3 => 64,
+            _ => return None,
+        };
+        let lmul = match vlmul {
+            0 => 1,
+            1 => 2,
+            2 => 4,
+            3 => 8,
+            _ => return None,
+        };
+        Some(Vtype { sew_bits, lmul })
+    }
+
+    /// VLMAX for a given VLEN: `VLEN * LMUL / SEW`.
+    pub fn vlmax(self, vlen_bits: u32) -> u32 {
+        vlen_bits * self.lmul / self.sew_bits
+    }
+
+    /// `vsetvli` semantics: `vl = min(avl, VLMAX)`.
+    pub fn compute_vl(self, avl: u32, vlen_bits: u32) -> u32 {
+        avl.min(self.vlmax(vlen_bits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vtype_roundtrip() {
+        for sew in [8, 16, 32, 64] {
+            for lmul in [1, 2, 4, 8] {
+                let v = Vtype::new(sew, lmul);
+                assert_eq!(Vtype::decode(v.encode()), Some(v));
+            }
+        }
+    }
+
+    #[test]
+    fn vlmax_paper_config() {
+        // VLEN=256: e32,m1 -> 8 elements; e32,m8 -> 64 elements.
+        assert_eq!(Vtype::new(32, 1).vlmax(256), 8);
+        assert_eq!(Vtype::new(32, 8).vlmax(256), 64);
+        assert_eq!(Vtype::new(8, 8).vlmax(256), 256);
+        assert_eq!(Vtype::new(64, 1).vlmax(256), 4);
+    }
+
+    #[test]
+    fn vl_clamps_to_vlmax() {
+        let v = Vtype::new(32, 8);
+        assert_eq!(v.compute_vl(1000, 256), 64);
+        assert_eq!(v.compute_vl(10, 256), 10);
+        assert_eq!(v.compute_vl(0, 256), 0);
+    }
+
+    #[test]
+    fn reserved_encodings_rejected() {
+        assert_eq!(Vtype::decode(0b100_000), None); // vsew=4 reserved
+        assert_eq!(Vtype::decode(0b000_100), None); // fractional lmul
+    }
+}

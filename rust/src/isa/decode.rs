@@ -1,0 +1,453 @@
+//! 32-bit word -> instruction decoder, mirroring `encode.rs`.
+
+use super::encode::*;
+use super::reg::{VReg, XReg};
+use super::rv32::{AluOp, BranchOp, LoadOp, MulDivOp, ScalarInstr, StoreOp};
+use super::rvv::{AddrMode, MaskMode, VAluOp, VSrc2, VecInstr, VmemWidth};
+use super::Instr;
+
+/// Decode failure: the word is not a recognised RV32IM / Arrow-RVV
+/// instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeError {
+    pub word: u32,
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cannot decode {:#010x}: {}", self.word, self.reason)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+fn err(word: u32, reason: &'static str) -> DecodeError {
+    DecodeError { word, reason }
+}
+
+fn sign_extend(value: u32, bits: u32) -> i32 {
+    let shift = 32 - bits;
+    ((value << shift) as i32) >> shift
+}
+
+fn i_imm(w: u32) -> i32 {
+    sign_extend(w >> 20, 12)
+}
+
+fn s_imm(w: u32) -> i32 {
+    sign_extend((w >> 25 << 5) | (w >> 7 & 0x1F), 12)
+}
+
+fn b_imm(w: u32) -> i32 {
+    let imm = ((w >> 31 & 1) << 12)
+        | ((w >> 7 & 1) << 11)
+        | ((w >> 25 & 0x3F) << 5)
+        | ((w >> 8 & 0xF) << 1);
+    sign_extend(imm, 13)
+}
+
+fn j_imm(w: u32) -> i32 {
+    let imm = ((w >> 31 & 1) << 20)
+        | ((w >> 12 & 0xFF) << 12)
+        | ((w >> 20 & 1) << 11)
+        | ((w >> 21 & 0x3FF) << 1);
+    sign_extend(imm, 21)
+}
+
+fn rd(w: u32) -> XReg {
+    XReg((w >> 7 & 0x1F) as u8)
+}
+
+fn rs1(w: u32) -> XReg {
+    XReg((w >> 15 & 0x1F) as u8)
+}
+
+fn rs2(w: u32) -> XReg {
+    XReg((w >> 20 & 0x1F) as u8)
+}
+
+fn funct3(w: u32) -> u32 {
+    w >> 12 & 0b111
+}
+
+fn funct7(w: u32) -> u32 {
+    w >> 25
+}
+
+fn decode_scalar(w: u32) -> Result<ScalarInstr, DecodeError> {
+    let opc = w & 0x7F;
+    Ok(match opc {
+        OPC_LUI => ScalarInstr::Lui { rd: rd(w), imm: (w & 0xFFFFF000) as i32 },
+        OPC_AUIPC => {
+            ScalarInstr::Auipc { rd: rd(w), imm: (w & 0xFFFFF000) as i32 }
+        }
+        OPC_JAL => ScalarInstr::Jal { rd: rd(w), offset: j_imm(w) },
+        OPC_JALR => {
+            ScalarInstr::Jalr { rd: rd(w), rs1: rs1(w), offset: i_imm(w) }
+        }
+        OPC_BRANCH => {
+            let op = match funct3(w) {
+                0b000 => BranchOp::Beq,
+                0b001 => BranchOp::Bne,
+                0b100 => BranchOp::Blt,
+                0b101 => BranchOp::Bge,
+                0b110 => BranchOp::Bltu,
+                0b111 => BranchOp::Bgeu,
+                _ => return Err(err(w, "bad branch funct3")),
+            };
+            ScalarInstr::Branch { op, rs1: rs1(w), rs2: rs2(w), offset: b_imm(w) }
+        }
+        OPC_LOAD => {
+            let op = match funct3(w) {
+                0b000 => LoadOp::Lb,
+                0b001 => LoadOp::Lh,
+                0b010 => LoadOp::Lw,
+                0b100 => LoadOp::Lbu,
+                0b101 => LoadOp::Lhu,
+                _ => return Err(err(w, "bad load funct3")),
+            };
+            ScalarInstr::Load { op, rd: rd(w), rs1: rs1(w), offset: i_imm(w) }
+        }
+        OPC_STORE => {
+            let op = match funct3(w) {
+                0b000 => StoreOp::Sb,
+                0b001 => StoreOp::Sh,
+                0b010 => StoreOp::Sw,
+                _ => return Err(err(w, "bad store funct3")),
+            };
+            ScalarInstr::Store { op, rs1: rs1(w), rs2: rs2(w), offset: s_imm(w) }
+        }
+        OPC_OP_IMM => {
+            let op = match funct3(w) {
+                0b000 => AluOp::Add,
+                0b001 => AluOp::Sll,
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b101 => {
+                    if funct7(w) == 0b0100000 {
+                        AluOp::Sra
+                    } else {
+                        AluOp::Srl
+                    }
+                }
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                _ => unreachable!(),
+            };
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => (w >> 20 & 0x1F) as i32,
+                _ => i_imm(w),
+            };
+            ScalarInstr::OpImm { op, rd: rd(w), rs1: rs1(w), imm }
+        }
+        OPC_OP => {
+            if funct7(w) == 0b0000001 {
+                let op = match funct3(w) {
+                    0b000 => MulDivOp::Mul,
+                    0b001 => MulDivOp::Mulh,
+                    0b010 => MulDivOp::Mulhsu,
+                    0b011 => MulDivOp::Mulhu,
+                    0b100 => MulDivOp::Div,
+                    0b101 => MulDivOp::Divu,
+                    0b110 => MulDivOp::Rem,
+                    0b111 => MulDivOp::Remu,
+                    _ => unreachable!(),
+                };
+                ScalarInstr::MulDiv { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+            } else {
+                let op = match (funct3(w), funct7(w)) {
+                    (0b000, 0b0000000) => AluOp::Add,
+                    (0b000, 0b0100000) => AluOp::Sub,
+                    (0b001, _) => AluOp::Sll,
+                    (0b010, _) => AluOp::Slt,
+                    (0b011, _) => AluOp::Sltu,
+                    (0b100, _) => AluOp::Xor,
+                    (0b101, 0b0000000) => AluOp::Srl,
+                    (0b101, 0b0100000) => AluOp::Sra,
+                    (0b110, _) => AluOp::Or,
+                    (0b111, _) => AluOp::And,
+                    _ => return Err(err(w, "bad OP funct7/funct3")),
+                };
+                ScalarInstr::Op { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+            }
+        }
+        OPC_SYSTEM => ScalarInstr::Ecall,
+        OPC_MISC_MEM => ScalarInstr::Fence,
+        _ => return Err(err(w, "unknown scalar opcode")),
+    })
+}
+
+fn decode_vmem_width(field: u32) -> Option<VmemWidth> {
+    Some(match field {
+        0b000 => VmemWidth::E8,
+        0b101 => VmemWidth::E16,
+        0b110 => VmemWidth::E32,
+        0b111 => VmemWidth::E64,
+        _ => return None,
+    })
+}
+
+fn decode_vmem(w: u32, is_store: bool) -> Result<VecInstr, DecodeError> {
+    let width = decode_vmem_width(funct3(w))
+        .ok_or_else(|| err(w, "bad vector mem width (FP load/store?)"))?;
+    let mop = w >> 26 & 0b11;
+    let vm = w >> 25 & 1;
+    let mask = if vm == 1 { MaskMode::Unmasked } else { MaskMode::Masked };
+    let f20 = (w >> 20 & 0x1F) as u8;
+    let mode = match mop {
+        0b00 => AddrMode::UnitStride,
+        0b10 => AddrMode::Strided { rs2: XReg(f20) },
+        0b11 => AddrMode::Indexed { vs2: VReg(f20) },
+        _ => return Err(err(w, "reserved vector mem mop")),
+    };
+    let vreg = VReg((w >> 7 & 0x1F) as u8);
+    Ok(if is_store {
+        VecInstr::Store { vs3: vreg, rs1: rs1(w), width, mode, mask }
+    } else {
+        VecInstr::Load { vd: vreg, rs1: rs1(w), width, mode, mask }
+    })
+}
+
+fn opi_from_funct6(f6: u32) -> Option<VAluOp> {
+    use VAluOp::*;
+    Some(match f6 {
+        0b000000 => Add,
+        0b000010 => Sub,
+        0b000011 => Rsub,
+        0b000100 => Minu,
+        0b000101 => Min,
+        0b000110 => Maxu,
+        0b000111 => Max,
+        0b001001 => And,
+        0b001010 => Or,
+        0b001011 => Xor,
+        0b010111 => Merge,
+        0b011000 => Mseq,
+        0b011001 => Msne,
+        0b011010 => Msltu,
+        0b011011 => Mslt,
+        0b011100 => Msleu,
+        0b011101 => Msle,
+        0b011110 => Msgtu,
+        0b011111 => Msgt,
+        0b100101 => Sll,
+        0b101000 => Srl,
+        0b101001 => Sra,
+        _ => return None,
+    })
+}
+
+fn opm_from_funct6(f6: u32) -> Option<VAluOp> {
+    use VAluOp::*;
+    Some(match f6 {
+        0b000000 => RedSum,
+        0b000001 => RedAnd,
+        0b000010 => RedOr,
+        0b000011 => RedXor,
+        0b000100 => RedMinu,
+        0b000101 => RedMin,
+        0b000110 => RedMaxu,
+        0b000111 => RedMax,
+        0b100000 => Divu,
+        0b100001 => Div,
+        0b100010 => Remu,
+        0b100011 => Rem,
+        0b100100 => Mulhu,
+        0b100101 => Mul,
+        0b100111 => Mulh,
+        _ => return None,
+    })
+}
+
+fn decode_opv(w: u32) -> Result<VecInstr, DecodeError> {
+    let f3 = funct3(w);
+    if f3 == F3_VSETVLI {
+        if w >> 31 != 0 {
+            return Err(err(w, "vsetvl/vsetivli not in Arrow subset"));
+        }
+        return Ok(VecInstr::VsetVli {
+            rd: rd(w),
+            rs1: rs1(w),
+            vtypei: w >> 20 & 0x7FF,
+        });
+    }
+    let f6 = w >> 26;
+    let vm = w >> 25 & 1;
+    let mask = if vm == 1 { MaskMode::Unmasked } else { MaskMode::Masked };
+    let vs2 = VReg((w >> 20 & 0x1F) as u8);
+    let f15 = (w >> 15 & 0x1F) as u8;
+    let vd = VReg((w >> 7 & 0x1F) as u8);
+
+    if f6 == F6_VMUNARY0 {
+        return Ok(match f3 {
+            F3_OPMVV => VecInstr::MvXs { rd: rd(w), vs2 },
+            F3_OPMVX => VecInstr::MvSx { vd, rs1: rs1(w) },
+            _ => return Err(err(w, "bad VMUNARY0 funct3")),
+        });
+    }
+
+    let (op, src2) = match f3 {
+        F3_OPIVV => (
+            opi_from_funct6(f6).ok_or_else(|| err(w, "bad OPIVV funct6"))?,
+            VSrc2::V(VReg(f15)),
+        ),
+        F3_OPIVX => (
+            opi_from_funct6(f6).ok_or_else(|| err(w, "bad OPIVX funct6"))?,
+            VSrc2::X(XReg(f15)),
+        ),
+        F3_OPIVI => (
+            opi_from_funct6(f6).ok_or_else(|| err(w, "bad OPIVI funct6"))?,
+            VSrc2::I(sign_extend(f15 as u32, 5)),
+        ),
+        F3_OPMVV => (
+            opm_from_funct6(f6).ok_or_else(|| err(w, "bad OPMVV funct6"))?,
+            VSrc2::V(VReg(f15)),
+        ),
+        F3_OPMVX => {
+            let op = opm_from_funct6(f6)
+                .ok_or_else(|| err(w, "bad OPMVX funct6"))?;
+            if op.is_reduction() {
+                return Err(err(w, "reductions have no .vx form"));
+            }
+            (op, VSrc2::X(XReg(f15)))
+        }
+        _ => return Err(err(w, "FP vector ops not in Arrow subset")),
+    };
+    Ok(VecInstr::Alu { op, vd, vs2, src2, mask })
+}
+
+/// Decode a 32-bit instruction word.
+pub fn decode(w: u32) -> Result<Instr, DecodeError> {
+    match w & 0x7F {
+        OPC_VECTOR => decode_opv(w).map(Instr::Vector),
+        OPC_VLOAD => decode_vmem(w, false).map(Instr::Vector),
+        OPC_VSTORE => decode_vmem(w, true).map(Instr::Vector),
+        _ => decode_scalar(w).map(Instr::Scalar),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::encode;
+    use super::*;
+
+    fn roundtrip(i: Instr) {
+        let w = encode(i);
+        assert_eq!(decode(w), Ok(i), "word {w:#010x}");
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        use ScalarInstr::*;
+        for i in [
+            Lui { rd: XReg(5), imm: 0x12345000u32 as i32 },
+            Auipc { rd: XReg(1), imm: 0x1000 },
+            Jal { rd: XReg(1), offset: -2048 },
+            Jalr { rd: XReg(0), rs1: XReg(1), offset: 16 },
+            Branch {
+                op: BranchOp::Bne,
+                rs1: XReg(5),
+                rs2: XReg(6),
+                offset: -64,
+            },
+            Load { op: LoadOp::Lw, rd: XReg(7), rs1: XReg(2), offset: -4 },
+            Store { op: StoreOp::Sw, rs1: XReg(2), rs2: XReg(7), offset: 2047 },
+            OpImm { op: AluOp::Add, rd: XReg(3), rs1: XReg(3), imm: -1 },
+            OpImm { op: AluOp::Sra, rd: XReg(3), rs1: XReg(3), imm: 31 },
+            OpImm { op: AluOp::Sll, rd: XReg(3), rs1: XReg(3), imm: 5 },
+            Op { op: AluOp::Sub, rd: XReg(4), rs1: XReg(5), rs2: XReg(6) },
+            MulDiv {
+                op: MulDivOp::Div,
+                rd: XReg(4),
+                rs1: XReg(5),
+                rs2: XReg(6),
+            },
+            Ecall,
+        ] {
+            roundtrip(Instr::Scalar(i));
+        }
+    }
+
+    #[test]
+    fn vector_roundtrip() {
+        use VecInstr::*;
+        for i in [
+            VsetVli { rd: XReg(5), rs1: XReg(6), vtypei: 0b010_011 },
+            Load {
+                vd: VReg(1),
+                rs1: XReg(10),
+                width: VmemWidth::E32,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Unmasked,
+            },
+            Load {
+                vd: VReg(17),
+                rs1: XReg(10),
+                width: VmemWidth::E16,
+                mode: AddrMode::Strided { rs2: XReg(11) },
+                mask: MaskMode::Unmasked,
+            },
+            Store {
+                vs3: VReg(8),
+                rs1: XReg(12),
+                width: VmemWidth::E64,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Masked,
+            },
+            Alu {
+                op: VAluOp::Add,
+                vd: VReg(3),
+                vs2: VReg(1),
+                src2: VSrc2::V(VReg(2)),
+                mask: MaskMode::Unmasked,
+            },
+            Alu {
+                op: VAluOp::Mul,
+                vd: VReg(19),
+                vs2: VReg(17),
+                src2: VSrc2::V(VReg(18)),
+                mask: MaskMode::Unmasked,
+            },
+            Alu {
+                op: VAluOp::Max,
+                vd: VReg(3),
+                vs2: VReg(1),
+                src2: VSrc2::X(XReg(0)),
+                mask: MaskMode::Unmasked,
+            },
+            Alu {
+                op: VAluOp::Add,
+                vd: VReg(3),
+                vs2: VReg(1),
+                src2: VSrc2::I(-16),
+                mask: MaskMode::Unmasked,
+            },
+            Alu {
+                op: VAluOp::RedSum,
+                vd: VReg(4),
+                vs2: VReg(1),
+                src2: VSrc2::V(VReg(0)),
+                mask: MaskMode::Unmasked,
+            },
+            Alu {
+                op: VAluOp::Merge,
+                vd: VReg(5),
+                vs2: VReg(6),
+                src2: VSrc2::V(VReg(7)),
+                mask: MaskMode::Masked,
+            },
+            MvXs { rd: XReg(10), vs2: VReg(4) },
+            MvSx { vd: VReg(4), rs1: XReg(10) },
+        ] {
+            roundtrip(Instr::Vector(i));
+        }
+    }
+
+    #[test]
+    fn junk_rejected() {
+        assert!(decode(0xFFFF_FFFF).is_err());
+        assert!(decode(0x0000_0000).is_err()); // opcode 0 invalid
+    }
+}

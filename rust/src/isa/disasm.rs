@@ -1,0 +1,270 @@
+//! Instruction -> human-readable assembly text (for traces and errors).
+//!
+//! Output uses the same mnemonics the assembler accepts, so
+//! `assemble(disasm(i)) == i` for instructions without label operands.
+
+use super::csr::Vtype;
+use super::rv32::{AluOp, BranchOp, LoadOp, MulDivOp, ScalarInstr, StoreOp};
+use super::rvv::{AddrMode, MaskMode, VAluOp, VSrc2, VecInstr};
+use super::Instr;
+
+fn alu_name(op: AluOp) -> &'static str {
+    match op {
+        AluOp::Add => "add",
+        AluOp::Sub => "sub",
+        AluOp::Sll => "sll",
+        AluOp::Slt => "slt",
+        AluOp::Sltu => "sltu",
+        AluOp::Xor => "xor",
+        AluOp::Srl => "srl",
+        AluOp::Sra => "sra",
+        AluOp::Or => "or",
+        AluOp::And => "and",
+    }
+}
+
+fn muldiv_name(op: MulDivOp) -> &'static str {
+    match op {
+        MulDivOp::Mul => "mul",
+        MulDivOp::Mulh => "mulh",
+        MulDivOp::Mulhsu => "mulhsu",
+        MulDivOp::Mulhu => "mulhu",
+        MulDivOp::Div => "div",
+        MulDivOp::Divu => "divu",
+        MulDivOp::Rem => "rem",
+        MulDivOp::Remu => "remu",
+    }
+}
+
+fn branch_name(op: BranchOp) -> &'static str {
+    match op {
+        BranchOp::Beq => "beq",
+        BranchOp::Bne => "bne",
+        BranchOp::Blt => "blt",
+        BranchOp::Bge => "bge",
+        BranchOp::Bltu => "bltu",
+        BranchOp::Bgeu => "bgeu",
+    }
+}
+
+fn valu_name(op: VAluOp) -> &'static str {
+    use VAluOp::*;
+    match op {
+        Add => "vadd",
+        Sub => "vsub",
+        Rsub => "vrsub",
+        Minu => "vminu",
+        Min => "vmin",
+        Maxu => "vmaxu",
+        Max => "vmax",
+        And => "vand",
+        Or => "vor",
+        Xor => "vxor",
+        Merge => "vmerge",
+        Mseq => "vmseq",
+        Msne => "vmsne",
+        Msltu => "vmsltu",
+        Mslt => "vmslt",
+        Msleu => "vmsleu",
+        Msle => "vmsle",
+        Msgtu => "vmsgtu",
+        Msgt => "vmsgt",
+        Sll => "vsll",
+        Srl => "vsrl",
+        Sra => "vsra",
+        Mul => "vmul",
+        Mulh => "vmulh",
+        Mulhu => "vmulhu",
+        Divu => "vdivu",
+        Div => "vdiv",
+        Remu => "vremu",
+        Rem => "vrem",
+        RedSum => "vredsum",
+        RedMax => "vredmax",
+        RedMaxu => "vredmaxu",
+        RedMin => "vredmin",
+        RedMinu => "vredminu",
+        RedAnd => "vredand",
+        RedOr => "vredor",
+        RedXor => "vredxor",
+    }
+}
+
+fn scalar(i: ScalarInstr) -> String {
+    use ScalarInstr::*;
+    match i {
+        Lui { rd, imm } => format!("lui {rd}, {:#x}", (imm as u32) >> 12),
+        Auipc { rd, imm } => format!("auipc {rd}, {:#x}", (imm as u32) >> 12),
+        Jal { rd, offset } => format!("jal {rd}, {offset}"),
+        Jalr { rd, rs1, offset } => format!("jalr {rd}, {offset}({rs1})"),
+        Branch { op, rs1, rs2, offset } => {
+            format!("{} {rs1}, {rs2}, {offset}", branch_name(op))
+        }
+        Load { op, rd, rs1, offset } => {
+            let n = match op {
+                LoadOp::Lb => "lb",
+                LoadOp::Lh => "lh",
+                LoadOp::Lw => "lw",
+                LoadOp::Lbu => "lbu",
+                LoadOp::Lhu => "lhu",
+            };
+            format!("{n} {rd}, {offset}({rs1})")
+        }
+        Store { op, rs1, rs2, offset } => {
+            let n = match op {
+                StoreOp::Sb => "sb",
+                StoreOp::Sh => "sh",
+                StoreOp::Sw => "sw",
+            };
+            format!("{n} {rs2}, {offset}({rs1})")
+        }
+        OpImm { op, rd, rs1, imm } => {
+            format!("{}i {rd}, {rs1}, {imm}", alu_name(op))
+        }
+        Op { op, rd, rs1, rs2 } => {
+            format!("{} {rd}, {rs1}, {rs2}", alu_name(op))
+        }
+        MulDiv { op, rd, rs1, rs2 } => {
+            format!("{} {rd}, {rs1}, {rs2}", muldiv_name(op))
+        }
+        Ecall => "ecall".into(),
+        Fence => "fence".into(),
+    }
+}
+
+fn vmask(m: MaskMode) -> &'static str {
+    match m {
+        MaskMode::Unmasked => "",
+        MaskMode::Masked => ", v0.t",
+    }
+}
+
+fn vector(i: VecInstr) -> String {
+    use VecInstr::*;
+    match i {
+        VsetVli { rd, rs1, vtypei } => match Vtype::decode(vtypei) {
+            Some(v) => format!(
+                "vsetvli {rd}, {rs1}, e{},m{}",
+                v.sew_bits, v.lmul
+            ),
+            None => format!("vsetvli {rd}, {rs1}, {vtypei:#x}"),
+        },
+        Load { vd, rs1, width, mode, mask } => match mode {
+            AddrMode::UnitStride => {
+                format!("vle{}.v {vd}, ({rs1}){}", width.bits(), vmask(mask))
+            }
+            AddrMode::Strided { rs2 } => format!(
+                "vlse{}.v {vd}, ({rs1}), {rs2}{}",
+                width.bits(),
+                vmask(mask)
+            ),
+            AddrMode::Indexed { vs2 } => format!(
+                "vlxei{}.v {vd}, ({rs1}), {vs2}{}",
+                width.bits(),
+                vmask(mask)
+            ),
+        },
+        Store { vs3, rs1, width, mode, mask } => match mode {
+            AddrMode::UnitStride => {
+                format!("vse{}.v {vs3}, ({rs1}){}", width.bits(), vmask(mask))
+            }
+            AddrMode::Strided { rs2 } => format!(
+                "vsse{}.v {vs3}, ({rs1}), {rs2}{}",
+                width.bits(),
+                vmask(mask)
+            ),
+            AddrMode::Indexed { vs2 } => format!(
+                "vsxei{}.v {vs3}, ({rs1}), {vs2}{}",
+                width.bits(),
+                vmask(mask)
+            ),
+        },
+        Alu { op, vd, vs2, src2, mask } => {
+            let name = valu_name(op);
+            // vmerge with vm=1 is the canonical vmv.v.*
+            if op == VAluOp::Merge && mask == MaskMode::Unmasked {
+                return match src2 {
+                    VSrc2::V(v) => format!("vmv.v.v {vd}, {v}"),
+                    VSrc2::X(x) => format!("vmv.v.x {vd}, {x}"),
+                    VSrc2::I(i) => format!("vmv.v.i {vd}, {i}"),
+                };
+            }
+            if op == VAluOp::Merge {
+                // masked merge spells the mask in the suffix: vvm/vxm/vim
+                let (suffix, rhs) = match src2 {
+                    VSrc2::V(v) => ("vvm", v.to_string()),
+                    VSrc2::X(x) => ("vxm", x.to_string()),
+                    VSrc2::I(i) => ("vim", i.to_string()),
+                };
+                return format!("{name}.{suffix} {vd}, {vs2}, {rhs}, v0");
+            }
+            let (suffix, rhs) = match src2 {
+                VSrc2::V(v) => {
+                    let s = if op.is_reduction() { "vs" } else { "vv" };
+                    (s, v.to_string())
+                }
+                VSrc2::X(x) => ("vx", x.to_string()),
+                VSrc2::I(i) => ("vi", i.to_string()),
+            };
+            format!("{name}.{suffix} {vd}, {vs2}, {rhs}{}", vmask(mask))
+        }
+        MvXs { rd, vs2 } => format!("vmv.x.s {rd}, {vs2}"),
+        MvSx { vd, rs1 } => format!("vmv.s.x {vd}, {rs1}"),
+    }
+}
+
+/// Render an instruction as assembly text.
+pub fn disasm(i: Instr) -> String {
+    match i {
+        Instr::Scalar(s) => scalar(s),
+        Instr::Vector(v) => vector(v),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reg::{VReg, XReg};
+    use super::super::rvv::VmemWidth;
+    use super::*;
+
+    #[test]
+    fn scalar_text() {
+        let i = Instr::Scalar(ScalarInstr::Op {
+            op: AluOp::Add,
+            rd: XReg(10),
+            rs1: XReg(11),
+            rs2: XReg(12),
+        });
+        assert_eq!(disasm(i), "add a0, a1, a2");
+    }
+
+    #[test]
+    fn vector_text() {
+        let i = Instr::Vector(VecInstr::Load {
+            vd: VReg(1),
+            rs1: XReg(10),
+            width: VmemWidth::E32,
+            mode: AddrMode::UnitStride,
+            mask: MaskMode::Unmasked,
+        });
+        assert_eq!(disasm(i), "vle32.v v1, (a0)");
+        let r = Instr::Vector(VecInstr::Alu {
+            op: VAluOp::RedSum,
+            vd: VReg(4),
+            vs2: VReg(1),
+            src2: VSrc2::V(VReg(0)),
+            mask: MaskMode::Unmasked,
+        });
+        assert_eq!(disasm(r), "vredsum.vs v4, v1, v0");
+    }
+
+    #[test]
+    fn vsetvli_text() {
+        let i = Instr::Vector(VecInstr::VsetVli {
+            rd: XReg(5),
+            rs1: XReg(6),
+            vtypei: Vtype::new(32, 8).encode(),
+        });
+        assert_eq!(disasm(i), "vsetvli t0, t1, e32,m8");
+    }
+}

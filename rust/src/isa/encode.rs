@@ -1,0 +1,306 @@
+//! Instruction -> 32-bit word encoder (RV32IM + RVV v0.9 subset).
+//!
+//! Standard RISC-V formats (R/I/S/B/U/J) for the scalar side; OP-V
+//! (`0x57`) with the v0.9 funct6 tables plus LOAD-FP/STORE-FP (`0x07` /
+//! `0x27`) for the vector side.  `decode(encode(i)) == i` is enforced by
+//! unit and property tests.
+
+use super::reg::{VReg, XReg};
+use super::rv32::{AluOp, BranchOp, LoadOp, MulDivOp, ScalarInstr, StoreOp};
+use super::rvv::{AddrMode, MaskMode, VSrc2, VecInstr, VmemWidth};
+use super::Instr;
+
+pub const OPC_LOAD: u32 = 0x03;
+pub const OPC_MISC_MEM: u32 = 0x0F;
+pub const OPC_OP_IMM: u32 = 0x13;
+pub const OPC_AUIPC: u32 = 0x17;
+pub const OPC_STORE: u32 = 0x23;
+pub const OPC_OP: u32 = 0x33;
+pub const OPC_LUI: u32 = 0x37;
+pub const OPC_BRANCH: u32 = 0x63;
+pub const OPC_JALR: u32 = 0x67;
+pub const OPC_JAL: u32 = 0x6F;
+pub const OPC_SYSTEM: u32 = 0x73;
+pub const OPC_VECTOR: u32 = 0x57; // OP-V
+pub const OPC_VLOAD: u32 = 0x07; // LOAD-FP
+pub const OPC_VSTORE: u32 = 0x27; // STORE-FP
+
+// OP-V funct3 assignments.
+pub const F3_OPIVV: u32 = 0b000;
+pub const F3_OPMVV: u32 = 0b010;
+pub const F3_OPIVI: u32 = 0b011;
+pub const F3_OPIVX: u32 = 0b100;
+pub const F3_OPMVX: u32 = 0b110;
+pub const F3_VSETVLI: u32 = 0b111;
+
+/// funct6 of the VWXUNARY0/VRXUNARY0 group (`vmv.x.s` / `vmv.s.x`).
+pub const F6_VMUNARY0: u32 = 0b010000;
+
+fn r_type(funct7: u32, rs2: u32, rs1: u32, funct3: u32, rd: u32, opc: u32) -> u32 {
+    (funct7 << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opc
+}
+
+fn i_type(imm: i32, rs1: u32, funct3: u32, rd: u32, opc: u32) -> u32 {
+    let imm = (imm as u32) & 0xFFF;
+    (imm << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opc
+}
+
+fn s_type(imm: i32, rs2: u32, rs1: u32, funct3: u32, opc: u32) -> u32 {
+    let imm = imm as u32;
+    ((imm >> 5 & 0x7F) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (funct3 << 12)
+        | ((imm & 0x1F) << 7)
+        | opc
+}
+
+fn b_type(offset: i32, rs2: u32, rs1: u32, funct3: u32, opc: u32) -> u32 {
+    let imm = offset as u32;
+    ((imm >> 12 & 1) << 31)
+        | ((imm >> 5 & 0x3F) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (funct3 << 12)
+        | ((imm >> 1 & 0xF) << 8)
+        | ((imm >> 11 & 1) << 7)
+        | opc
+}
+
+fn u_type(imm: i32, rd: u32, opc: u32) -> u32 {
+    ((imm as u32) & 0xFFFFF000) | (rd << 7) | opc
+}
+
+fn j_type(offset: i32, rd: u32, opc: u32) -> u32 {
+    let imm = offset as u32;
+    ((imm >> 20 & 1) << 31)
+        | ((imm >> 1 & 0x3FF) << 21)
+        | ((imm >> 11 & 1) << 20)
+        | ((imm >> 12 & 0xFF) << 12)
+        | (rd << 7)
+        | opc
+}
+
+fn alu_funct3(op: AluOp) -> u32 {
+    match op {
+        AluOp::Add | AluOp::Sub => 0b000,
+        AluOp::Sll => 0b001,
+        AluOp::Slt => 0b010,
+        AluOp::Sltu => 0b011,
+        AluOp::Xor => 0b100,
+        AluOp::Srl | AluOp::Sra => 0b101,
+        AluOp::Or => 0b110,
+        AluOp::And => 0b111,
+    }
+}
+
+fn muldiv_funct3(op: MulDivOp) -> u32 {
+    match op {
+        MulDivOp::Mul => 0b000,
+        MulDivOp::Mulh => 0b001,
+        MulDivOp::Mulhsu => 0b010,
+        MulDivOp::Mulhu => 0b011,
+        MulDivOp::Div => 0b100,
+        MulDivOp::Divu => 0b101,
+        MulDivOp::Rem => 0b110,
+        MulDivOp::Remu => 0b111,
+    }
+}
+
+fn branch_funct3(op: BranchOp) -> u32 {
+    match op {
+        BranchOp::Beq => 0b000,
+        BranchOp::Bne => 0b001,
+        BranchOp::Blt => 0b100,
+        BranchOp::Bge => 0b101,
+        BranchOp::Bltu => 0b110,
+        BranchOp::Bgeu => 0b111,
+    }
+}
+
+fn load_funct3(op: LoadOp) -> u32 {
+    match op {
+        LoadOp::Lb => 0b000,
+        LoadOp::Lh => 0b001,
+        LoadOp::Lw => 0b010,
+        LoadOp::Lbu => 0b100,
+        LoadOp::Lhu => 0b101,
+    }
+}
+
+fn store_funct3(op: StoreOp) -> u32 {
+    match op {
+        StoreOp::Sb => 0b000,
+        StoreOp::Sh => 0b001,
+        StoreOp::Sw => 0b010,
+    }
+}
+
+/// v0.9 width field of vector loads/stores.
+fn vmem_width_field(w: VmemWidth) -> u32 {
+    match w {
+        VmemWidth::E8 => 0b000,
+        VmemWidth::E16 => 0b101,
+        VmemWidth::E32 => 0b110,
+        VmemWidth::E64 => 0b111,
+    }
+}
+
+fn encode_scalar(i: ScalarInstr) -> u32 {
+    use ScalarInstr::*;
+    match i {
+        Lui { rd, imm } => u_type(imm, rd.0 as u32, OPC_LUI),
+        Auipc { rd, imm } => u_type(imm, rd.0 as u32, OPC_AUIPC),
+        Jal { rd, offset } => j_type(offset, rd.0 as u32, OPC_JAL),
+        Jalr { rd, rs1, offset } => {
+            i_type(offset, rs1.0 as u32, 0b000, rd.0 as u32, OPC_JALR)
+        }
+        Branch { op, rs1, rs2, offset } => b_type(
+            offset,
+            rs2.0 as u32,
+            rs1.0 as u32,
+            branch_funct3(op),
+            OPC_BRANCH,
+        ),
+        Load { op, rd, rs1, offset } => i_type(
+            offset,
+            rs1.0 as u32,
+            load_funct3(op),
+            rd.0 as u32,
+            OPC_LOAD,
+        ),
+        Store { op, rs1, rs2, offset } => s_type(
+            offset,
+            rs2.0 as u32,
+            rs1.0 as u32,
+            store_funct3(op),
+            OPC_STORE,
+        ),
+        OpImm { op, rd, rs1, imm } => {
+            // shifts carry funct7-style high bits in the immediate
+            let imm = match op {
+                AluOp::Srl => imm & 0x1F,
+                AluOp::Sra => (imm & 0x1F) | (0b0100000 << 5),
+                AluOp::Sll => imm & 0x1F,
+                _ => imm,
+            };
+            i_type(imm, rs1.0 as u32, alu_funct3(op), rd.0 as u32, OPC_OP_IMM)
+        }
+        Op { op, rd, rs1, rs2 } => {
+            let funct7 = match op {
+                AluOp::Sub | AluOp::Sra => 0b0100000,
+                _ => 0b0000000,
+            };
+            r_type(
+                funct7,
+                rs2.0 as u32,
+                rs1.0 as u32,
+                alu_funct3(op),
+                rd.0 as u32,
+                OPC_OP,
+            )
+        }
+        MulDiv { op, rd, rs1, rs2 } => r_type(
+            0b0000001,
+            rs2.0 as u32,
+            rs1.0 as u32,
+            muldiv_funct3(op),
+            rd.0 as u32,
+            OPC_OP,
+        ),
+        Ecall => OPC_SYSTEM,
+        Fence => OPC_MISC_MEM,
+    }
+}
+
+fn encode_vmem(
+    opc: u32,
+    vreg: VReg,
+    rs1: XReg,
+    width: VmemWidth,
+    mode: AddrMode,
+    mask: MaskMode,
+) -> u32 {
+    let (mop, field20) = match mode {
+        AddrMode::UnitStride => (0b00u32, 0u32),
+        AddrMode::Strided { rs2 } => (0b10, rs2.0 as u32),
+        AddrMode::Indexed { vs2 } => (0b11, vs2.0 as u32),
+    };
+    (mop << 26)
+        | (mask.vm_bit() << 25)
+        | (field20 << 20)
+        | ((rs1.0 as u32) << 15)
+        | (vmem_width_field(width) << 12)
+        | ((vreg.0 as u32) << 7)
+        | opc
+}
+
+fn encode_vector(i: VecInstr) -> u32 {
+    use VecInstr::*;
+    match i {
+        VsetVli { rd, rs1, vtypei } => {
+            // bit31 = 0 for vsetvli; zimm[10:0] in bits 30:20.
+            ((vtypei & 0x7FF) << 20)
+                | ((rs1.0 as u32) << 15)
+                | (F3_VSETVLI << 12)
+                | ((rd.0 as u32) << 7)
+                | OPC_VECTOR
+        }
+        Load { vd, rs1, width, mode, mask } => {
+            encode_vmem(OPC_VLOAD, vd, rs1, width, mode, mask)
+        }
+        Store { vs3, rs1, width, mode, mask } => {
+            encode_vmem(OPC_VSTORE, vs3, rs1, width, mode, mask)
+        }
+        Alu { op, vd, vs2, src2, mask } => {
+            let funct3 = match (op.is_opm(), src2) {
+                (false, VSrc2::V(_)) => F3_OPIVV,
+                (false, VSrc2::X(_)) => F3_OPIVX,
+                (false, VSrc2::I(_)) => F3_OPIVI,
+                (true, VSrc2::V(_)) => F3_OPMVV,
+                (true, VSrc2::X(_)) => F3_OPMVX,
+                (true, VSrc2::I(_)) => {
+                    panic!("OPM ops have no .vi form: {op:?}")
+                }
+            };
+            let field15 = match src2 {
+                VSrc2::V(v) => v.0 as u32,
+                VSrc2::X(x) => x.0 as u32,
+                VSrc2::I(imm) => (imm as u32) & 0x1F,
+            };
+            (op.funct6() << 26)
+                | (mask.vm_bit() << 25)
+                | ((vs2.0 as u32) << 20)
+                | (field15 << 15)
+                | (funct3 << 12)
+                | ((vd.0 as u32) << 7)
+                | OPC_VECTOR
+        }
+        MvXs { rd, vs2 } => {
+            // OPMVV, funct6=010000, vs1=0
+            (F6_VMUNARY0 << 26)
+                | (1 << 25)
+                | ((vs2.0 as u32) << 20)
+                | (F3_OPMVV << 12)
+                | ((rd.0 as u32) << 7)
+                | OPC_VECTOR
+        }
+        MvSx { vd, rs1 } => {
+            // OPMVX, funct6=010000, vs2=0
+            (F6_VMUNARY0 << 26)
+                | (1 << 25)
+                | ((rs1.0 as u32) << 15)
+                | (F3_OPMVX << 12)
+                | ((vd.0 as u32) << 7)
+                | OPC_VECTOR
+        }
+    }
+}
+
+/// Encode any instruction to its 32-bit word.
+pub fn encode(i: Instr) -> u32 {
+    match i {
+        Instr::Scalar(s) => encode_scalar(s),
+        Instr::Vector(v) => encode_vector(v),
+    }
+}

@@ -1,0 +1,44 @@
+//! RISC-V instruction-set definitions: RV32IM base + the Arrow RVV v0.9
+//! subset (paper §3.1).
+//!
+//! The subset covers unit-stride and strided vector memory access;
+//! single-width integer add/sub/mul/div; bitwise logic and shifts; integer
+//! compare, min/max, merge and move; plus the single-width integer
+//! reductions (`vredsum`/`vredmax`/…) the benchmark suite's dot-product
+//! and max-reduction functions rely on.  Indexed (gather/scatter) access
+//! decodes but is gated behind [`vector::config::ArrowConfig::indexed_mem`]
+//! — the paper lists it as "still in development".
+//!
+//! Encodings follow the RVV v0.9 opcode maps (OP-V major opcode `0x57`,
+//! `funct6` per-instruction, LOAD-FP/STORE-FP for vector memory) so that
+//! encoded words are recognisable RISC-V, and `encode(decode(w)) == w`
+//! round-trips — a property test in `tests/` relies on it.
+
+pub mod csr;
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+pub mod reg;
+pub mod rv32;
+pub mod rvv;
+
+pub use decode::{decode, DecodeError};
+pub use disasm::disasm;
+pub use encode::encode;
+pub use reg::{VReg, XReg};
+pub use rv32::{AluOp, BranchOp, LoadOp, MulDivOp, ScalarInstr, StoreOp};
+pub use rvv::{MaskMode, OpCategory, VAluOp, VecInstr, VmemWidth};
+
+/// A decoded instruction: either host-scalar or Arrow-vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    Scalar(ScalarInstr),
+    Vector(VecInstr),
+}
+
+impl Instr {
+    /// True if this instruction is dispatched to the Arrow co-processor.
+    pub fn is_vector(&self) -> bool {
+        matches!(self, Instr::Vector(_))
+    }
+}

@@ -1,0 +1,117 @@
+//! Register newtypes and ABI names.
+
+use std::fmt;
+
+/// A scalar (x) register, `x0..x31`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct XReg(pub u8);
+
+/// A vector (v) register, `v0..v31`.  The high bit of the index selects
+/// the Arrow lane/bank: `v0..v15` -> lane 0, `v16..v31` -> lane 1
+/// (paper §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VReg(pub u8);
+
+pub const ABI_NAMES: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0",
+    "a1", "a2", "a3", "a4", "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6",
+    "s7", "s8", "s9", "s10", "s11", "t3", "t4", "t5", "t6",
+];
+
+impl XReg {
+    pub const ZERO: XReg = XReg(0);
+
+    pub fn new(i: u8) -> Self {
+        assert!(i < 32, "x register index out of range: {i}");
+        XReg(i)
+    }
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Parse `x7`, or an ABI name like `a0` / `t3` / `zero`.
+    pub fn parse(s: &str) -> Option<Self> {
+        if let Some(rest) = s.strip_prefix('x') {
+            let i: u8 = rest.parse().ok()?;
+            (i < 32).then_some(XReg(i))
+        } else {
+            ABI_NAMES
+                .iter()
+                .position(|&n| n == s)
+                .map(|i| XReg(i as u8))
+        }
+    }
+}
+
+impl VReg {
+    pub fn new(i: u8) -> Self {
+        assert!(i < 32, "v register index out of range: {i}");
+        VReg(i)
+    }
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Arrow lane this register's bank belongs to (bank 0 = v0..v15).
+    pub fn lane(self, lanes: usize) -> usize {
+        let regs_per_bank = 32 / lanes;
+        (self.0 as usize) / regs_per_bank
+    }
+
+    /// Parse `v0..v31`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let rest = s.strip_prefix('v')?;
+        let i: u8 = rest.parse().ok()?;
+        (i < 32).then_some(VReg(i))
+    }
+}
+
+impl fmt::Display for XReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", ABI_NAMES[self.0 as usize])
+    }
+}
+
+impl fmt::Display for VReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "v{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xreg_parse_abi_and_numeric() {
+        assert_eq!(XReg::parse("a0"), Some(XReg(10)));
+        assert_eq!(XReg::parse("x10"), Some(XReg(10)));
+        assert_eq!(XReg::parse("zero"), Some(XReg(0)));
+        assert_eq!(XReg::parse("t6"), Some(XReg(31)));
+        assert_eq!(XReg::parse("x32"), None);
+        assert_eq!(XReg::parse("q1"), None);
+    }
+
+    #[test]
+    fn vreg_parse_and_lane() {
+        assert_eq!(VReg::parse("v0"), Some(VReg(0)));
+        assert_eq!(VReg::parse("v31"), Some(VReg(31)));
+        assert_eq!(VReg::parse("v32"), None);
+        assert_eq!(VReg(0).lane(2), 0);
+        assert_eq!(VReg(15).lane(2), 0);
+        assert_eq!(VReg(16).lane(2), 1);
+        assert_eq!(VReg(31).lane(2), 1);
+        // 4-lane configuration: 8 registers per bank
+        assert_eq!(VReg(7).lane(4), 0);
+        assert_eq!(VReg(8).lane(4), 1);
+        assert_eq!(VReg(24).lane(4), 3);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(XReg(10).to_string(), "a0");
+        assert_eq!(VReg(16).to_string(), "v16");
+    }
+}

@@ -1,0 +1,135 @@
+//! RV32IM scalar instruction definitions (the host/baseline ISA).
+//!
+//! The scalar baseline in the paper is a MicroBlaze; we use RV32IM so one
+//! toolchain (our assembler + encoder) drives both the scalar and vector
+//! sides.  Cycle costs live in `scalar::timing`, not here.
+
+use super::reg::XReg;
+
+/// Integer register-register / register-immediate ALU operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+/// M-extension multiply/divide operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MulDivOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+/// A decoded RV32IM instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalarInstr {
+    Lui { rd: XReg, imm: i32 },
+    Auipc { rd: XReg, imm: i32 },
+    Jal { rd: XReg, offset: i32 },
+    Jalr { rd: XReg, rs1: XReg, offset: i32 },
+    Branch { op: BranchOp, rs1: XReg, rs2: XReg, offset: i32 },
+    Load { op: LoadOp, rd: XReg, rs1: XReg, offset: i32 },
+    Store { op: StoreOp, rs1: XReg, rs2: XReg, offset: i32 },
+    OpImm { op: AluOp, rd: XReg, rs1: XReg, imm: i32 },
+    Op { op: AluOp, rd: XReg, rs1: XReg, rs2: XReg },
+    MulDiv { op: MulDivOp, rd: XReg, rs1: XReg, rs2: XReg },
+    /// `ecall` — the simulator's stop/trap instruction.
+    Ecall,
+    Fence,
+}
+
+impl ScalarInstr {
+    /// Destination register written by this instruction, if any.
+    pub fn dest(&self) -> Option<XReg> {
+        match *self {
+            ScalarInstr::Lui { rd, .. }
+            | ScalarInstr::Auipc { rd, .. }
+            | ScalarInstr::Jal { rd, .. }
+            | ScalarInstr::Jalr { rd, .. }
+            | ScalarInstr::Load { rd, .. }
+            | ScalarInstr::OpImm { rd, .. }
+            | ScalarInstr::Op { rd, .. }
+            | ScalarInstr::MulDiv { rd, .. } => Some(rd),
+            _ => None,
+        }
+    }
+
+    /// True for control-flow instructions (branch/jump).
+    pub fn is_control(&self) -> bool {
+        matches!(
+            self,
+            ScalarInstr::Jal { .. }
+                | ScalarInstr::Jalr { .. }
+                | ScalarInstr::Branch { .. }
+        )
+    }
+
+    pub fn is_mem(&self) -> bool {
+        matches!(self, ScalarInstr::Load { .. } | ScalarInstr::Store { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dest_extraction() {
+        let i = ScalarInstr::Op {
+            op: AluOp::Add,
+            rd: XReg(5),
+            rs1: XReg(1),
+            rs2: XReg(2),
+        };
+        assert_eq!(i.dest(), Some(XReg(5)));
+        let s = ScalarInstr::Store {
+            op: StoreOp::Sw,
+            rs1: XReg(2),
+            rs2: XReg(3),
+            offset: 0,
+        };
+        assert_eq!(s.dest(), None);
+        assert!(s.is_mem());
+        assert!(!s.is_control());
+    }
+}

@@ -1,0 +1,304 @@
+//! Arrow's RVV v0.9 vector instruction subset (paper §3.1).
+
+use super::reg::{VReg, XReg};
+
+/// Element width selector of a vector memory instruction (the `width`
+/// field of LOAD-FP/STORE-FP in v0.9: 8/16/32/64-bit elements).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VmemWidth {
+    E8,
+    E16,
+    E32,
+    E64,
+}
+
+impl VmemWidth {
+    pub fn bits(self) -> u32 {
+        match self {
+            VmemWidth::E8 => 8,
+            VmemWidth::E16 => 16,
+            VmemWidth::E32 => 32,
+            VmemWidth::E64 => 64,
+        }
+    }
+
+    pub fn bytes(self) -> u32 {
+        self.bits() / 8
+    }
+
+    pub fn from_bits(bits: u32) -> Option<Self> {
+        Some(match bits {
+            8 => VmemWidth::E8,
+            16 => VmemWidth::E16,
+            32 => VmemWidth::E32,
+            64 => VmemWidth::E64,
+            _ => return None,
+        })
+    }
+}
+
+/// Vector memory addressing mode (`mop` field).  Indexed decodes but is a
+/// design-time option in the simulator (paper: "still in development").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrMode {
+    /// Consecutive elements (`vle<w>.v` / `vse<w>.v`).
+    UnitStride,
+    /// Constant byte stride from rs2 (`vlse<w>.v` / `vsse<w>.v`).
+    Strided { rs2: XReg },
+    /// Element offsets from vs2 (`vlxei<w>.v` / gather-scatter).
+    Indexed { vs2: VReg },
+}
+
+/// Whether the instruction is executed under the v0 mask (`vm` bit = 0).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MaskMode {
+    Unmasked,
+    Masked,
+}
+
+impl MaskMode {
+    pub fn vm_bit(self) -> u32 {
+        match self {
+            MaskMode::Unmasked => 1,
+            MaskMode::Masked => 0,
+        }
+    }
+}
+
+/// Second-operand source of a vector arithmetic instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VSrc2 {
+    /// `.vv` — vector register.
+    V(VReg),
+    /// `.vx` — scalar register.
+    X(XReg),
+    /// `.vi` — 5-bit sign-extended immediate.
+    I(i32),
+}
+
+/// Vector ALU / move / merge / reduction operation.
+///
+/// The `funct6` values used for encoding are the v0.9 OP-V assignments;
+/// OPIVV/OPIVX/OPIVI carry the "I" group, OPMVV/OPMVX the "M" group
+/// (multiplies, divides and reductions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VAluOp {
+    // OPI group ------------------------------------------------------
+    Add,    // vadd   funct6=000000
+    Sub,    // vsub   funct6=000010
+    Rsub,   // vrsub  funct6=000011 (vx/vi only)
+    Minu,   // vminu  funct6=000100
+    Min,    // vmin   funct6=000101
+    Maxu,   // vmaxu  funct6=000110
+    Max,    // vmax   funct6=000111
+    And,    // vand   funct6=001001
+    Or,     // vor    funct6=001010
+    Xor,    // vxor   funct6=001011
+    Merge,  // vmerge/vmv (vm=0 merge, vm=1 move) funct6=010111
+    Mseq,   // vmseq  funct6=011000
+    Msne,   // vmsne  funct6=011001
+    Msltu,  // vmsltu funct6=011010
+    Mslt,   // vmslt  funct6=011011
+    Msleu,  // vmsleu funct6=011100
+    Msle,   // vmsle  funct6=011101
+    Msgtu,  // vmsgtu funct6=011110 (vx/vi only)
+    Msgt,   // vmsgt  funct6=011111 (vx/vi only)
+    Sll,    // vsll   funct6=100101
+    Srl,    // vsrl   funct6=101000
+    Sra,    // vsra   funct6=101001
+    // OPM group ------------------------------------------------------
+    Mul,    // vmul   funct6=100101 (OPM)
+    Mulh,   // vmulh  funct6=100111 (OPM)
+    Mulhu,  // vmulhu funct6=100100 (OPM)
+    Divu,   // vdivu  funct6=100000 (OPM)
+    Div,    // vdiv   funct6=100001 (OPM)
+    Remu,   // vremu  funct6=100010 (OPM)
+    Rem,    // vrem   funct6=100011 (OPM)
+    // Reductions (OPMVV, vd = scalar element 0 of vd) ----------------
+    RedSum, // vredsum funct6=000000 (OPM)
+    RedMax, // vredmax funct6=000111 (OPM)
+    RedMaxu, // vredmaxu funct6=000110 (OPM)
+    RedMin, // vredmin funct6=000101 (OPM)
+    RedMinu, // vredminu funct6=000100 (OPM)
+    RedAnd, // vredand funct6=000001 (OPM)
+    RedOr,  // vredor  funct6=000010 (OPM)
+    RedXor, // vredxor funct6=000011 (OPM)
+}
+
+impl VAluOp {
+    /// True for the OPM (multiply/divide/reduction) opcode group.
+    pub fn is_opm(self) -> bool {
+        use VAluOp::*;
+        matches!(
+            self,
+            Mul | Mulh | Mulhu | Divu | Div | Remu | Rem | RedSum | RedMax
+                | RedMaxu | RedMin | RedMinu | RedAnd | RedOr | RedXor
+        )
+    }
+
+    /// True for reductions (`vd[0] = fold(vs1[0], vs2[*])`).
+    pub fn is_reduction(self) -> bool {
+        use VAluOp::*;
+        matches!(
+            self,
+            RedSum | RedMax | RedMaxu | RedMin | RedMinu | RedAnd | RedOr
+                | RedXor
+        )
+    }
+
+    /// True for mask-producing compares (`vmseq` etc.).
+    pub fn is_compare(self) -> bool {
+        use VAluOp::*;
+        matches!(self, Mseq | Msne | Msltu | Mslt | Msleu | Msle | Msgtu | Msgt)
+    }
+
+    pub fn funct6(self) -> u32 {
+        use VAluOp::*;
+        match self {
+            Add => 0b000000,
+            Sub => 0b000010,
+            Rsub => 0b000011,
+            Minu => 0b000100,
+            Min => 0b000101,
+            Maxu => 0b000110,
+            Max => 0b000111,
+            And => 0b001001,
+            Or => 0b001010,
+            Xor => 0b001011,
+            Merge => 0b010111,
+            Mseq => 0b011000,
+            Msne => 0b011001,
+            Msltu => 0b011010,
+            Mslt => 0b011011,
+            Msleu => 0b011100,
+            Msle => 0b011101,
+            Msgtu => 0b011110,
+            Msgt => 0b011111,
+            Sll => 0b100101,
+            Srl => 0b101000,
+            Sra => 0b101001,
+            Mul => 0b100101,
+            Mulh => 0b100111,
+            Mulhu => 0b100100,
+            Divu => 0b100000,
+            Div => 0b100001,
+            Remu => 0b100010,
+            Rem => 0b100011,
+            RedSum => 0b000000,
+            RedMax => 0b000111,
+            RedMaxu => 0b000110,
+            RedMin => 0b000101,
+            RedMinu => 0b000100,
+            RedAnd => 0b000001,
+            RedOr => 0b000010,
+            RedXor => 0b000011,
+        }
+    }
+}
+
+/// Instruction category, used by the controller and the cycle model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpCategory {
+    Config,
+    Load,
+    Store,
+    Arith,
+    Reduction,
+    MoveMerge,
+}
+
+/// A decoded Arrow vector instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VecInstr {
+    /// `vsetvli rd, rs1, e<sew>,m<lmul>` — configure vtype/vl.
+    VsetVli { rd: XReg, rs1: XReg, vtypei: u32 },
+    /// Vector load: `vd <- mem[rs1 ...]`.
+    Load {
+        vd: VReg,
+        rs1: XReg,
+        width: VmemWidth,
+        mode: AddrMode,
+        mask: MaskMode,
+    },
+    /// Vector store: `mem[rs1 ...] <- vs3`.
+    Store {
+        vs3: VReg,
+        rs1: XReg,
+        width: VmemWidth,
+        mode: AddrMode,
+        mask: MaskMode,
+    },
+    /// Vector arithmetic / logic / compare / min-max / mul-div /
+    /// reduction: `vd <- op(vs2, src2)`.
+    Alu {
+        op: VAluOp,
+        vd: VReg,
+        vs2: VReg,
+        src2: VSrc2,
+        mask: MaskMode,
+    },
+    /// `vmv.v.v / vmv.v.x / vmv.v.i` (vmerge with vm=1) handled via
+    /// `Alu { op: Merge, mask: Unmasked }`; this variant is `vmv.x.s` —
+    /// read element 0 back to a scalar register.
+    MvXs { rd: XReg, vs2: VReg },
+    /// `vmv.s.x` — write a scalar into element 0.
+    MvSx { vd: VReg, rs1: XReg },
+}
+
+impl VecInstr {
+    /// Destination vector register, if any (drives lane dispatch, §3.3).
+    pub fn dest_vreg(&self) -> Option<VReg> {
+        match *self {
+            VecInstr::Load { vd, .. } => Some(vd),
+            VecInstr::Alu { vd, .. } => Some(vd),
+            VecInstr::MvSx { vd, .. } => Some(vd),
+            VecInstr::Store { vs3, .. } => Some(vs3), // store reads vs3's bank
+            _ => None,
+        }
+    }
+
+    pub fn category(&self) -> OpCategory {
+        match self {
+            VecInstr::VsetVli { .. } => OpCategory::Config,
+            VecInstr::Load { .. } => OpCategory::Load,
+            VecInstr::Store { .. } => OpCategory::Store,
+            VecInstr::Alu { op, .. } if op.is_reduction() => OpCategory::Reduction,
+            VecInstr::Alu { op: VAluOp::Merge, .. } => OpCategory::MoveMerge,
+            VecInstr::Alu { .. } => OpCategory::Arith,
+            VecInstr::MvXs { .. } | VecInstr::MvSx { .. } => OpCategory::MoveMerge,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categories() {
+        let i = VecInstr::Alu {
+            op: VAluOp::RedSum,
+            vd: VReg(1),
+            vs2: VReg(2),
+            src2: VSrc2::V(VReg(3)),
+            mask: MaskMode::Unmasked,
+        };
+        assert_eq!(i.category(), OpCategory::Reduction);
+        assert!(VAluOp::RedSum.is_opm());
+        assert!(!VAluOp::Add.is_opm());
+        assert!(VAluOp::Mslt.is_compare());
+    }
+
+    #[test]
+    fn dest_vreg_lane_dispatch() {
+        let i = VecInstr::Load {
+            vd: VReg(16),
+            rs1: XReg(10),
+            width: VmemWidth::E32,
+            mode: AddrMode::UnitStride,
+            mask: MaskMode::Unmasked,
+        };
+        assert_eq!(i.dest_vreg(), Some(VReg(16)));
+        assert_eq!(i.dest_vreg().unwrap().lane(2), 1);
+    }
+}

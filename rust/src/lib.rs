@@ -1,0 +1,42 @@
+//! # arrow-rvv — full-system reproduction of the Arrow vector accelerator
+//!
+//! Arrow (Al Assir et al., CARRV 2021) is a configurable dual-lane vector
+//! co-processor implementing a subset of the RISC-V Vector (RVV) v0.9 ISA,
+//! attached to a scalar host over an AXI/MIG/DDR3 memory system.  This
+//! crate rebuilds the *entire* evaluation stack in software (DESIGN.md §2):
+//!
+//! * [`isa`] — RV32IM + RVV v0.9 subset: encoding, decoding, disassembly.
+//! * [`asm`] — a two-pass assembler so benchmarks are written exactly like
+//!   the paper's inline-assembly functions.
+//! * [`mem`] — the DDR3/MIG/AXI memory system model (64-bit port, 4x core
+//!   clock, single outstanding transaction — paper §3.7).
+//! * [`scalar`] — the MicroBlaze-stand-in RV32IM host core with an
+//!   in-order cycle model (the paper's scalar baseline).
+//! * [`vector`] — the Arrow co-processor itself: banked register file,
+//!   offset generator with write-enable byte masks, ELEN-bit SIMD ALU with
+//!   SEW carry segmentation, memory unit with burst generation, dual-lane
+//!   controller, no chaining (paper §3).
+//! * [`system`] — the coordinator: host run loop, AXI dispatch of vector
+//!   instructions to Arrow, cycle/energy ledgers, async job server.
+//! * [`energy`] — the Table-2 resource/power model and Table-4 energy
+//!   accounting.
+//! * [`bench`] — the nine-benchmark suite (scalar + vectorized assembly),
+//!   Table-1 data profiles, and the analytic large-profile extrapolation.
+//! * [`runtime`] — XLA/PJRT oracle: loads `artifacts/*.hlo.txt` lowered
+//!   from the JAX/Pallas golden models and validates simulator results.
+//! * [`report`] — renderers for the paper's Tables 2/3/4 and summaries.
+
+pub mod asm;
+pub mod bench;
+pub mod util;
+pub mod energy;
+pub mod isa;
+pub mod mem;
+pub mod report;
+pub mod runtime;
+pub mod scalar;
+pub mod system;
+pub mod vector;
+
+pub use system::machine::Machine;
+pub use vector::config::ArrowConfig;

@@ -1,0 +1,248 @@
+//! `arrow` — CLI for the Arrow full-system simulator.
+//!
+//! ```text
+//! arrow report table2|table3|table4 [--profiles small,medium,large] [--summary]
+//! arrow bench --benchmark vector_addition --profile small --mode vector
+//! arrow describe datapath|write-enable|simd-alu|system
+//! arrow validate                      # simulator vs XLA golden artifacts
+//! arrow serve [--addr 127.0.0.1:7676]
+//! arrow --lanes 4 --vlen 512 ...      # design-time overrides
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use arrow_rvv::bench::runner::{run_benchmark, run_with_workload, Mode};
+use arrow_rvv::bench::suite::{Benchmark, BENCHMARKS};
+use arrow_rvv::bench::{Profile, PROFILES};
+use arrow_rvv::energy::EnergyModel;
+use arrow_rvv::report;
+use arrow_rvv::runtime::Oracle;
+use arrow_rvv::system::{describe, server};
+use arrow_rvv::vector::ArrowConfig;
+
+const USAGE: &str = "\
+arrow — Arrow RISC-V vector accelerator, full-system simulator
+
+USAGE:
+  arrow [--lanes N] [--vlen BITS] <command> [options]
+
+COMMANDS:
+  report <table2|table3|table4> [--profiles LIST] [--summary]
+  bench --benchmark NAME [--profile NAME] [--mode scalar|vector]
+  describe <datapath|write-enable|simd-alu|system>
+  validate
+  serve [--addr HOST:PORT]
+  help
+";
+
+/// Tiny argument cursor (clap is unavailable offline).
+struct Args {
+    items: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Args {
+        Args { items: std::env::args().skip(1).collect() }
+    }
+
+    /// Remove `--flag value` anywhere; returns the value.
+    fn opt(&mut self, flag: &str) -> Option<String> {
+        let i = self.items.iter().position(|a| a == flag)?;
+        if i + 1 >= self.items.len() {
+            return None;
+        }
+        self.items.remove(i);
+        Some(self.items.remove(i))
+    }
+
+    /// Remove a boolean `--flag`.
+    fn has(&mut self, flag: &str) -> bool {
+        match self.items.iter().position(|a| a == flag) {
+            Some(i) => {
+                self.items.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Next positional argument.
+    fn next(&mut self) -> Option<String> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some(self.items.remove(0))
+        }
+    }
+}
+
+fn parse_profiles(s: &str) -> Result<Vec<Profile>> {
+    s.split(',')
+        .map(|p| {
+            Profile::by_name(p.trim())
+                .ok_or_else(|| anyhow!("unknown profile `{p}`"))
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let mut args = Args::new();
+    let lanes: usize = args
+        .opt("--lanes")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(2);
+    let vlen: u32 = args
+        .opt("--vlen")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(256);
+    let config =
+        ArrowConfig { lanes, vlen_bits: vlen, ..Default::default() };
+    config.validate().map_err(|e| anyhow!(e))?;
+
+    let Some(cmd) = args.next() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+
+    match cmd.as_str() {
+        "report" => {
+            let table =
+                args.next().ok_or_else(|| anyhow!("report: which table?"))?;
+            let profiles = parse_profiles(
+                &args
+                    .opt("--profiles")
+                    .unwrap_or_else(|| "small,medium,large".into()),
+            )?;
+            let summary = args.has("--summary");
+            match table.as_str() {
+                "table2" => print!("{}", report::render_table2()),
+                "table3" => {
+                    let rows = report::table3(config, &profiles)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    print!("{}", report::render_table3(&rows));
+                    if summary {
+                        println!(
+                            "\n§5.2 speedup summary:\n{}",
+                            report::speedup_summary(&rows)
+                        );
+                    }
+                }
+                "table4" => {
+                    let rows = report::table3(config, &profiles)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    let model = EnergyModel::default();
+                    print!("{}", report::render_table4(&rows, &model));
+                    if summary {
+                        println!(
+                            "\n§5.2 energy summary:\n{}",
+                            report::energy_summary(&rows, &model)
+                        );
+                    }
+                }
+                other => bail!("unknown table `{other}`"),
+            }
+        }
+        "bench" => {
+            let bname = args
+                .opt("--benchmark")
+                .ok_or_else(|| anyhow!("bench: --benchmark required"))?;
+            let b = Benchmark::by_name(&bname).ok_or_else(|| {
+                anyhow!(
+                    "unknown benchmark `{bname}`; one of: {}",
+                    BENCHMARKS.map(|b| b.name()).join(", ")
+                )
+            })?;
+            let pname =
+                args.opt("--profile").unwrap_or_else(|| "small".into());
+            let p = Profile::by_name(&pname)
+                .ok_or_else(|| anyhow!("unknown profile `{pname}`"))?;
+            let mode = match args
+                .opt("--mode")
+                .unwrap_or_else(|| "vector".into())
+                .as_str()
+            {
+                "scalar" => Mode::Scalar,
+                "vector" => Mode::Vector,
+                other => bail!("mode `{other}`?"),
+            };
+            let r = run_benchmark(b, b.size(&p), mode, config, 42)
+                .map_err(|e| anyhow!("{e}"))?;
+            println!("benchmark : {} ({})", b.paper_name(), mode.name());
+            println!("profile   : {}", p.name);
+            println!("cycles    : {}", r.cycles);
+            println!("verified  : {}", r.verified);
+            println!("scalar ins: {}", r.summary.scalar_instructions);
+            println!("vector ins: {}", r.summary.vector_instructions);
+            println!(
+                "lane busy : {:?}",
+                &r.summary.lane_busy[..r.summary.lanes]
+            );
+            println!("bus       : {:?}", r.summary.bus);
+            let e = EnergyModel::default();
+            let j = match mode {
+                Mode::Scalar => e.scalar_energy_j(r.cycles),
+                Mode::Vector => e.vector_energy_j(r.cycles),
+            };
+            println!("energy    : {j:.3e} J");
+        }
+        "describe" => {
+            let what = args
+                .next()
+                .ok_or_else(|| anyhow!("describe: which figure?"))?;
+            let text = match what.as_str() {
+                "datapath" => describe::datapath(&config),
+                "write-enable" => describe::write_enable(&config),
+                "simd-alu" => describe::simd_alu(&config),
+                "system" => describe::system(&config),
+                other => bail!("unknown figure `{other}`"),
+            };
+            print!("{text}");
+        }
+        "validate" => validate(config)?,
+        "serve" => {
+            let addr =
+                args.opt("--addr").unwrap_or_else(|| "127.0.0.1:7676".into());
+            server::serve(&addr)?;
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// Cross-validate the simulator against every applicable XLA artifact.
+fn validate(config: ArrowConfig) -> Result<()> {
+    let mut oracle = Oracle::open_default()?;
+    let mut checked = 0;
+    for b in BENCHMARKS {
+        for p in PROFILES.iter().chain([&arrow_rvv::bench::profiles::TEST]) {
+            let size = b.size(p);
+            let Some(artifact) = b.oracle_artifact(size) else { continue };
+            if arrow_rvv::bench::runner::estimated_instructions(
+                b,
+                size,
+                Mode::Vector,
+            ) > 5_000_000
+            {
+                continue;
+            }
+            let w = b.workload(size, 42);
+            let inputs: Vec<Vec<i32>> =
+                w.inputs.iter().map(|(_, v)| v.clone()).collect();
+            let golden = oracle.run_i32(&artifact, &inputs)?;
+            let sim = run_with_workload(b, size, Mode::Vector, config, &w)
+                .map_err(|e| anyhow!("{e}"))?;
+            let golden_flat: Vec<i32> =
+                golden.into_iter().flatten().collect();
+            if sim.output != golden_flat {
+                bail!("{} `{artifact}`: simulator != XLA oracle", b.name());
+            }
+            println!("OK {:<24} ({} elements)", artifact, golden_flat.len());
+            checked += 1;
+        }
+    }
+    println!("{checked} artifact validations passed");
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! AXI bus model: the single shared port into the MIG/DDR3 controller.
+//!
+//! The bus serialises all requesters (scalar host + Arrow memory unit —
+//! paper §3.7: the MIG "does not support concurrent or interleaved AXI
+//! memory transfers"), tracks when the port frees up, and accumulates
+//! transfer statistics used by the energy model and the reports.
+
+use super::timing::MemTiming;
+
+/// Kind of AXI transaction, for statistics and cost selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BurstKind {
+    /// Unit-stride multi-beat burst (vector `vle`/`vse`).
+    Unit,
+    /// Strided element-per-beat transaction stream (vector `vlse`/`vsse`).
+    Strided,
+    /// Single-beat scalar access (host `lw`/`sw`).
+    Scalar,
+}
+
+/// Cumulative bus statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BusStats {
+    pub transactions: u64,
+    pub beats: u64,
+    pub busy_cycles: u64,
+    /// Cycles a requester waited because the port was occupied.
+    pub contention_cycles: u64,
+}
+
+/// The shared AXI port with single-outstanding-transaction semantics.
+#[derive(Debug, Clone)]
+pub struct AxiBus {
+    timing: MemTiming,
+    /// Absolute core-cycle time at which the port becomes free.
+    free_at: u64,
+    stats: BusStats,
+}
+
+impl AxiBus {
+    pub fn new(timing: MemTiming) -> Self {
+        AxiBus { timing, free_at: 0, stats: BusStats::default() }
+    }
+
+    pub fn timing(&self) -> &MemTiming {
+        &self.timing
+    }
+
+    pub fn stats(&self) -> BusStats {
+        self.stats
+    }
+
+    /// Cost in cycles of a transaction of `beats` 64-bit words, without
+    /// scheduling it.
+    pub fn cost(&self, kind: BurstKind, beats: u64) -> u64 {
+        match kind {
+            BurstKind::Unit => self.timing.unit_burst(beats),
+            BurstKind::Strided => self.timing.strided_burst(beats),
+            BurstKind::Scalar => self.timing.scalar_access(),
+        }
+    }
+
+    /// Schedule a transaction requested at absolute time `now`; returns
+    /// the absolute completion time.  The port is exclusive: a request
+    /// issued while a previous transaction is in flight waits.
+    pub fn schedule(&mut self, now: u64, kind: BurstKind, beats: u64) -> u64 {
+        if beats == 0 && kind != BurstKind::Scalar {
+            return now;
+        }
+        let start = now.max(self.free_at);
+        let cost = self.cost(kind, beats);
+        let done = start + cost;
+        self.stats.transactions += 1;
+        self.stats.beats += match kind {
+            BurstKind::Scalar => 1,
+            _ => beats,
+        };
+        self.stats.busy_cycles += cost;
+        self.stats.contention_cycles += start - now;
+        self.free_at = done;
+        done
+    }
+
+    /// Absolute time the port frees up.
+    pub fn free_at(&self) -> u64 {
+        self.free_at
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at = 0;
+        self.stats = BusStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialises_requests() {
+        let mut bus = AxiBus::new(MemTiming::default());
+        let t1 = bus.schedule(0, BurstKind::Unit, 32); // 2 + 8 = 10
+        assert_eq!(t1, 10);
+        // second request at t=0 waits for the port
+        let t2 = bus.schedule(0, BurstKind::Unit, 32);
+        assert_eq!(t2, 20);
+        assert_eq!(bus.stats().contention_cycles, 10);
+        assert_eq!(bus.stats().transactions, 2);
+        assert_eq!(bus.stats().beats, 64);
+    }
+
+    #[test]
+    fn scalar_access_cost() {
+        let mut bus = AxiBus::new(MemTiming::default());
+        let t = bus.schedule(100, BurstKind::Scalar, 1);
+        assert_eq!(t, 113);
+        assert_eq!(bus.stats().beats, 1);
+    }
+
+    #[test]
+    fn idle_port_no_contention() {
+        let mut bus = AxiBus::new(MemTiming::default());
+        bus.schedule(0, BurstKind::Unit, 4);
+        bus.schedule(1000, BurstKind::Unit, 4);
+        assert_eq!(bus.stats().contention_cycles, 0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Functional DDR3 contents: a sparse, paged, byte-addressable store.
+//!
+//! Timing lives in [`super::timing`]; this type only holds bytes.  Paged
+//! storage keeps the large-profile workloads (a 4096x4096 i32 matrix is
+//! 64 MiB) cheap to address without allocating the whole address space.
+
+use std::collections::HashMap;
+
+const PAGE_BITS: u32 = 12;
+const PAGE_SIZE: usize = 1 << PAGE_BITS;
+
+/// Sparse byte-addressable memory covering the full 32-bit address space.
+#[derive(Debug, Default, Clone)]
+pub struct Dram {
+    pages: HashMap<u32, Box<[u8; PAGE_SIZE]>>,
+}
+
+impl Dram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn page(&self, addr: u32) -> Option<&[u8; PAGE_SIZE]> {
+        self.pages.get(&(addr >> PAGE_BITS)).map(|b| &**b)
+    }
+
+    fn page_mut(&mut self, addr: u32) -> &mut [u8; PAGE_SIZE] {
+        self.pages
+            .entry(addr >> PAGE_BITS)
+            .or_insert_with(|| Box::new([0u8; PAGE_SIZE]))
+    }
+
+    /// Read one byte (unbacked memory reads as zero).
+    pub fn read_u8(&self, addr: u32) -> u8 {
+        self.page(addr)
+            .map(|p| p[(addr as usize) & (PAGE_SIZE - 1)])
+            .unwrap_or(0)
+    }
+
+    pub fn write_u8(&mut self, addr: u32, value: u8) {
+        self.page_mut(addr)[(addr as usize) & (PAGE_SIZE - 1)] = value;
+    }
+
+    /// Read `buf.len()` bytes starting at `addr` (wrapping address space).
+    /// Copies page-by-page: one hash lookup per touched page, not per byte.
+    pub fn read_bytes(&self, addr: u32, buf: &mut [u8]) {
+        let mut done = 0usize;
+        while done < buf.len() {
+            let a = addr.wrapping_add(done as u32);
+            let in_page = (a as usize) & (PAGE_SIZE - 1);
+            let chunk = (PAGE_SIZE - in_page).min(buf.len() - done);
+            match self.page(a) {
+                Some(p) => buf[done..done + chunk]
+                    .copy_from_slice(&p[in_page..in_page + chunk]),
+                None => buf[done..done + chunk].fill(0),
+            }
+            done += chunk;
+        }
+    }
+
+    pub fn write_bytes(&mut self, addr: u32, bytes: &[u8]) {
+        let mut done = 0usize;
+        while done < bytes.len() {
+            let a = addr.wrapping_add(done as u32);
+            let in_page = (a as usize) & (PAGE_SIZE - 1);
+            let chunk = (PAGE_SIZE - in_page).min(bytes.len() - done);
+            self.page_mut(a)[in_page..in_page + chunk]
+                .copy_from_slice(&bytes[done..done + chunk]);
+            done += chunk;
+        }
+    }
+
+    pub fn read_u16(&self, addr: u32) -> u16 {
+        let mut b = [0u8; 2];
+        self.read_bytes(addr, &mut b);
+        u16::from_le_bytes(b)
+    }
+
+    pub fn read_u32(&self, addr: u32) -> u32 {
+        // Fast path for the scalar core's lw: aligned-within-page access.
+        let in_page = (addr as usize) & (PAGE_SIZE - 1);
+        if in_page <= PAGE_SIZE - 4 {
+            return match self.page(addr) {
+                Some(p) => u32::from_le_bytes(
+                    p[in_page..in_page + 4].try_into().unwrap(),
+                ),
+                None => 0,
+            };
+        }
+        let mut b = [0u8; 4];
+        self.read_bytes(addr, &mut b);
+        u32::from_le_bytes(b)
+    }
+
+    pub fn read_u64(&self, addr: u32) -> u64 {
+        let mut b = [0u8; 8];
+        self.read_bytes(addr, &mut b);
+        u64::from_le_bytes(b)
+    }
+
+    pub fn write_u16(&mut self, addr: u32, v: u16) {
+        self.write_bytes(addr, &v.to_le_bytes());
+    }
+
+    pub fn write_u32(&mut self, addr: u32, v: u32) {
+        self.write_bytes(addr, &v.to_le_bytes());
+    }
+
+    pub fn write_u64(&mut self, addr: u32, v: u64) {
+        self.write_bytes(addr, &v.to_le_bytes());
+    }
+
+    /// Convenience: write a slice of i32s (the benchmarks' element type).
+    pub fn write_i32_slice(&mut self, addr: u32, values: &[i32]) {
+        for (i, &v) in values.iter().enumerate() {
+            self.write_u32(addr + 4 * i as u32, v as u32);
+        }
+    }
+
+    /// Convenience: read `n` i32s.
+    pub fn read_i32_slice(&self, addr: u32, n: usize) -> Vec<i32> {
+        (0..n).map(|i| self.read_u32(addr + 4 * i as u32) as i32).collect()
+    }
+
+    /// Number of resident pages (for footprint reporting).
+    pub fn resident_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_initialised() {
+        let d = Dram::new();
+        assert_eq!(d.read_u32(0x1000_0000), 0);
+        assert_eq!(d.read_u8(u32::MAX), 0);
+    }
+
+    #[test]
+    fn rw_roundtrip_all_widths() {
+        let mut d = Dram::new();
+        d.write_u8(10, 0xAB);
+        d.write_u16(20, 0xBEEF);
+        d.write_u32(30, 0xDEAD_BEEF);
+        d.write_u64(40, 0x0123_4567_89AB_CDEF);
+        assert_eq!(d.read_u8(10), 0xAB);
+        assert_eq!(d.read_u16(20), 0xBEEF);
+        assert_eq!(d.read_u32(30), 0xDEAD_BEEF);
+        assert_eq!(d.read_u64(40), 0x0123_4567_89AB_CDEF);
+    }
+
+    #[test]
+    fn cross_page_access() {
+        let mut d = Dram::new();
+        let addr = PAGE_SIZE as u32 - 2;
+        d.write_u32(addr, 0x1122_3344);
+        assert_eq!(d.read_u32(addr), 0x1122_3344);
+        assert_eq!(d.resident_pages(), 2);
+    }
+
+    #[test]
+    fn i32_slice_roundtrip() {
+        let mut d = Dram::new();
+        let xs = [-1, 0, 1, i32::MAX, i32::MIN];
+        d.write_i32_slice(0x2000, &xs);
+        assert_eq!(d.read_i32_slice(0x2000, 5), xs);
+    }
+
+    #[test]
+    fn little_endian_layout() {
+        let mut d = Dram::new();
+        d.write_u32(0, 0x0A0B_0C0D);
+        assert_eq!(d.read_u8(0), 0x0D);
+        assert_eq!(d.read_u8(3), 0x0A);
+    }
+}

@@ -1,0 +1,23 @@
+//! The shared DDR3 memory system behind the AXI bus (paper §3.7, Fig 4).
+//!
+//! Both the scalar host and the Arrow memory unit access one DDR3 device
+//! through the Xilinx MIG controller.  The properties the paper calls out
+//! — and that dominate the cycle counts — are modeled explicitly:
+//!
+//! * the MIG data port is **64 bits** (= ELEN), so every transaction moves
+//!   whole ELEN words ("all memory accesses are ELEN=64 bits wide
+//!   regardless of whether the entire data are needed or not");
+//! * the 16-bit DDR3 interface runs at **400 MHz, ~4x the 100 MHz core
+//!   clock**, so a multi-beat burst streams one 64-bit beat per AXI bus
+//!   cycle = up to 4 beats per core cycle once started;
+//! * the MIG supports **no concurrent or interleaved transactions** — a
+//!   single outstanding request serialises the host and both Arrow lanes
+//!   on the memory port.
+
+pub mod axi;
+pub mod dram;
+pub mod timing;
+
+pub use axi::{AxiBus, BurstKind, BusStats};
+pub use dram::Dram;
+pub use timing::MemTiming;

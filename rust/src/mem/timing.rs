@@ -1,0 +1,90 @@
+//! Memory-system timing parameters (core-clock cycles).
+//!
+//! These are the calibration constants of DESIGN.md §6: chosen once so the
+//! small-profile scalar counts land near Table 3, then held fixed — the
+//! relative shape across benchmarks and profiles must emerge from the
+//! model, not per-row tuning.
+
+/// Timing of the AXI + MIG + DDR3 path, in 100 MHz core-clock cycles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemTiming {
+    /// Cycles from AXI request issue to the first data beat (address
+    /// phase + MIG arbitration + DDR3 activate/CAS, amortised).
+    pub burst_setup: u64,
+    /// 64-bit beats transferred per core cycle once a unit-stride burst is
+    /// streaming.  The 16-bit DDR3/MIG interface runs at ~4x the core
+    /// clock (paper §3.7), so 4 beats arrive per core cycle.
+    pub beats_per_cycle: u64,
+    /// Core cycles per beat for *strided* element accesses: each element
+    /// is its own DDR3 column access; the MIG does not interleave, so
+    /// strided streams cannot reach the unit-stride beat rate.
+    pub strided_cycles_per_beat: u64,
+    /// Core cycles for one scalar (MicroBlaze-side, single-beat) load or
+    /// store, end to end.  The paper's system has no cache ("does not
+    /// currently use any cache or scratchpad memories"), so every scalar
+    /// memory op pays the full DDR3 round trip.
+    pub scalar_access: u64,
+}
+
+impl Default for MemTiming {
+    fn default() -> Self {
+        MemTiming {
+            burst_setup: 2,
+            beats_per_cycle: 4,
+            strided_cycles_per_beat: 2,
+            scalar_access: 13,
+        }
+    }
+}
+
+impl MemTiming {
+    /// Cycles for a unit-stride burst of `beats` 64-bit words.
+    pub fn unit_burst(&self, beats: u64) -> u64 {
+        if beats == 0 {
+            return 0;
+        }
+        self.burst_setup + beats.div_ceil(self.beats_per_cycle)
+    }
+
+    /// Cycles for a strided access of `beats` separate 64-bit words.
+    pub fn strided_burst(&self, beats: u64) -> u64 {
+        if beats == 0 {
+            return 0;
+        }
+        self.burst_setup + beats * self.strided_cycles_per_beat
+    }
+
+    /// Cycles for one scalar load/store.
+    pub fn scalar_access(&self) -> u64 {
+        self.scalar_access
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_burst_amortises_setup() {
+        let t = MemTiming::default();
+        // 32 beats (one 64-elem e32 register group) in 2 + 8 cycles.
+        assert_eq!(t.unit_burst(32), 10);
+        // Longer bursts cost ~1/4 cycle per beat marginally.
+        assert_eq!(t.unit_burst(64) - t.unit_burst(32), 8);
+    }
+
+    #[test]
+    fn strided_slower_than_unit() {
+        let t = MemTiming::default();
+        for beats in [1u64, 8, 32, 256] {
+            assert!(t.strided_burst(beats) >= t.unit_burst(beats));
+        }
+    }
+
+    #[test]
+    fn zero_beats_free() {
+        let t = MemTiming::default();
+        assert_eq!(t.unit_burst(0), 0);
+        assert_eq!(t.strided_burst(0), 0);
+    }
+}

@@ -1,0 +1,259 @@
+//! Renderers for the paper's tables (2/3/4) and §5.2 summaries.
+
+use crate::bench::analytic::cycles_auto;
+use crate::bench::runner::Mode;
+use crate::bench::suite::{Benchmark, BENCHMARKS};
+use crate::bench::{Profile, PROFILES};
+use crate::energy::{EnergyModel, ARROW_SYSTEM, MICROBLAZE_ONLY};
+use crate::system::machine::MachineError;
+use crate::vector::ArrowConfig;
+
+/// One benchmark's cycles under one profile.
+#[derive(Debug, Clone, Copy)]
+pub struct CycleCell {
+    pub scalar: u64,
+    pub vector: u64,
+    /// "simulated" or "analytic" per side.
+    pub scalar_method: &'static str,
+    pub vector_method: &'static str,
+}
+
+impl CycleCell {
+    pub fn speedup(&self) -> f64 {
+        self.scalar as f64 / self.vector as f64
+    }
+}
+
+/// One row of Table 3 (all profiles).
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub benchmark: Benchmark,
+    pub cells: Vec<(Profile, CycleCell)>,
+}
+
+/// Compute Table 3 for the given profiles.
+pub fn table3(
+    config: ArrowConfig,
+    profiles: &[Profile],
+) -> Result<Vec<Table3Row>, MachineError> {
+    let mut rows = Vec::new();
+    for b in BENCHMARKS {
+        let mut cells = Vec::new();
+        for p in profiles {
+            let size = b.size(p);
+            let (scalar, sm) = cycles_auto(b, size, Mode::Scalar, config)?;
+            let (vector, vm) = cycles_auto(b, size, Mode::Vector, config)?;
+            cells.push((
+                *p,
+                CycleCell {
+                    scalar,
+                    vector,
+                    scalar_method: sm,
+                    vector_method: vm,
+                },
+            ));
+        }
+        rows.push(Table3Row { benchmark: b, cells });
+    }
+    Ok(rows)
+}
+
+fn sci(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let exp = v.abs().log10().floor() as i32;
+    let mant = v / 10f64.powi(exp);
+    format!("{mant:.1}e{exp}")
+}
+
+/// Render Table 3 as markdown.
+pub fn render_table3(rows: &[Table3Row]) -> String {
+    let mut s = String::new();
+    s.push_str("## Table 3: Cycle-Count Performance Analysis\n\n");
+    if let Some(r0) = rows.first() {
+        s.push_str("| Operation |");
+        for (p, _) in &r0.cells {
+            s.push_str(&format!(
+                " {} scalar | {} vector | speedup |",
+                p.name, p.name
+            ));
+        }
+        s.push('\n');
+        s.push_str("|---|");
+        for _ in 0..r0.cells.len() * 3 {
+            s.push_str("---|");
+        }
+        s.push('\n');
+    }
+    for row in rows {
+        s.push_str(&format!("| {} |", row.benchmark.paper_name()));
+        for (_, c) in &row.cells {
+            s.push_str(&format!(
+                " {} | {} | {:.1}x |",
+                sci(c.scalar as f64),
+                sci(c.vector as f64),
+                c.speedup()
+            ));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Render Table 4 (energy) from Table 3 cycles.
+pub fn render_table4(rows: &[Table3Row], model: &EnergyModel) -> String {
+    let mut s = String::new();
+    s.push_str("## Table 4: Energy Consumption Analysis\n\n");
+    if let Some(r0) = rows.first() {
+        s.push_str("| Operation |");
+        for (p, _) in &r0.cells {
+            s.push_str(&format!(
+                " {} scalar (J) | {} vector (J) | ratio |",
+                p.name, p.name
+            ));
+        }
+        s.push('\n');
+        s.push_str("|---|");
+        for _ in 0..r0.cells.len() * 3 {
+            s.push_str("---|");
+        }
+        s.push('\n');
+    }
+    for row in rows {
+        s.push_str(&format!("| {} |", row.benchmark.paper_name()));
+        for (_, c) in &row.cells {
+            s.push_str(&format!(
+                " {} | {} | {:.1}% |",
+                sci(model.scalar_energy_j(c.scalar)),
+                sci(model.vector_energy_j(c.vector)),
+                100.0 * model.energy_ratio(c.scalar, c.vector)
+            ));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Render Table 2 (FPGA utilisation + power).
+pub fn render_table2() -> String {
+    let mut s = String::new();
+    s.push_str("## Table 2: FPGA Implementation Results (XC7A200T)\n\n");
+    s.push_str("| System | LUT | FF | BRAM | Power (W) | Fmax (MHz) |\n");
+    s.push_str("|---|---|---|---|---|---|\n");
+    for r in [MICROBLAZE_ONLY, ARROW_SYSTEM] {
+        s.push_str(&format!(
+            "| {} | {} ({:.1}%) | {} | {} | {:.3} | {:.0} |\n",
+            r.name,
+            r.luts,
+            r.lut_pct(),
+            r.ffs,
+            r.brams,
+            r.power_w,
+            r.fmax_mhz
+        ));
+    }
+    s
+}
+
+/// §5.2 headline claims, computed from Table 3 rows.
+pub fn speedup_summary(rows: &[Table3Row]) -> String {
+    let group = |pred: &dyn Fn(Benchmark) -> bool| -> (f64, f64) {
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for row in rows.iter().filter(|r| pred(r.benchmark)) {
+            for (_, c) in &row.cells {
+                lo = lo.min(c.speedup());
+                hi = hi.max(c.speedup());
+            }
+        }
+        (lo, hi)
+    };
+    let vec_ops = group(&|b| {
+        matches!(
+            b,
+            Benchmark::VAdd
+                | Benchmark::VMul
+                | Benchmark::VDot
+                | Benchmark::VMaxReduce
+                | Benchmark::VRelu
+        )
+    });
+    let mat_ops = group(&|b| {
+        matches!(
+            b,
+            Benchmark::MatAdd | Benchmark::MatMul | Benchmark::MaxPool
+        )
+    });
+    let conv = group(&|b| b == Benchmark::Conv2d);
+    format!(
+        "vector benchmarks: {:.0}-{:.0}x (paper: 25-78x)\n\
+         matrix benchmarks: {:.1}-{:.0}x (paper: 5-78x)\n\
+         2D convolution:    {:.1}-{:.1}x (paper: 1.4-1.9x)\n",
+        vec_ops.0, vec_ops.1, mat_ops.0, mat_ops.1, conv.0, conv.1
+    )
+}
+
+/// §5.2 energy claims.
+pub fn energy_summary(rows: &[Table3Row], model: &EnergyModel) -> String {
+    let saving = |pred: &dyn Fn(Benchmark) -> bool| -> (f64, f64) {
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for row in rows.iter().filter(|r| pred(r.benchmark)) {
+            for (_, c) in &row.cells {
+                let pct = 100.0 * (1.0 - model.energy_ratio(c.scalar, c.vector));
+                lo = lo.min(pct);
+                hi = hi.max(pct);
+            }
+        }
+        (lo, hi)
+    };
+    let v = saving(&|b| {
+        matches!(
+            b,
+            Benchmark::VAdd
+                | Benchmark::VMul
+                | Benchmark::VDot
+                | Benchmark::VMaxReduce
+                | Benchmark::VRelu
+        )
+    });
+    let m = saving(&|b| {
+        matches!(
+            b,
+            Benchmark::MatAdd | Benchmark::MatMul | Benchmark::MaxPool
+        )
+    });
+    let c = saving(&|b| b == Benchmark::Conv2d);
+    format!(
+        "vector benchmarks save {:.0}-{:.0}% energy (paper: 96-99%)\n\
+         matrix benchmarks save {:.0}-{:.0}% (paper: 80-99%)\n\
+         2D convolution saves  {:.0}-{:.0}% (paper: 20-43%)\n",
+        v.0, v.1, m.0, m.1, c.0, c.1
+    )
+}
+
+/// All profiles of Table 1 (re-exported for the CLI).
+pub fn default_profiles() -> Vec<Profile> {
+    PROFILES.to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sci_formatting() {
+        assert_eq!(sci(3400.0), "3.4e3");
+        assert_eq!(sci(0.0000086), "8.6e-6");
+        assert_eq!(sci(0.0), "0");
+    }
+
+    #[test]
+    fn table2_contains_paper_numbers() {
+        let t = render_table2();
+        assert!(t.contains("2241"));
+        assert!(t.contains("2715"));
+        assert!(t.contains("0.297"));
+    }
+}

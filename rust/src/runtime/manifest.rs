@@ -1,0 +1,126 @@
+//! `artifacts/manifest.json` — shapes and dtypes of the AOT artifacts.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> std::io::Result<TensorSpec> {
+        let bad =
+            || std::io::Error::other("malformed tensor spec in manifest");
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(bad)?
+            .iter()
+            .map(|d| d.as_u64().map(|d| d as usize).ok_or_else(bad))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype =
+            j.get("dtype").and_then(Json::as_str).ok_or_else(bad)?;
+        Ok(TensorSpec { shape, dtype: dtype.to_string() })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The artifact registry written by `python -m compile.aot`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> std::io::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let doc = json::parse(&text).map_err(std::io::Error::other)?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| std::io::Error::other("manifest not an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, entry) in obj {
+            let bad = || {
+                std::io::Error::other(format!("malformed entry `{name}`"))
+            };
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(bad)?
+                .to_string();
+            let tensors = |key: &str| -> std::io::Result<Vec<TensorSpec>> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(bad)?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file,
+                    inputs: tensors("inputs")?,
+                    outputs: tensors("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.get(name)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Option<PathBuf> {
+        self.get(name).map(|a| self.dir.join(&a.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifacts_dir;
+
+    #[test]
+    fn manifest_loads_and_describes_vadd() {
+        let Some(dir) = find_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("vadd_n64").expect("vadd_n64 artifact");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![64]);
+        assert_eq!(a.inputs[0].dtype, "int32");
+        assert_eq!(a.outputs[0].elements(), 64);
+        assert!(m.hlo_path("vadd_n64").unwrap().exists());
+    }
+
+    #[test]
+    fn cnn_artifact_present() {
+        let Some(dir) = find_artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let cnn = m.get("cnn").expect("cnn artifact");
+        assert_eq!(cnn.inputs.len(), 4);
+        assert_eq!(cnn.outputs[0].shape, vec![1, 16]);
+    }
+}

@@ -1,0 +1,37 @@
+//! XLA/PJRT golden-model oracle.
+//!
+//! Loads the HLO-text artifacts AOT-lowered from the JAX/Pallas models
+//! (`make artifacts`), compiles them on the PJRT CPU client, and executes
+//! them as the *functional oracle* the Arrow simulator's outputs are
+//! validated against.  Python never runs here — the interchange is HLO
+//! text (see python/compile/aot.py for why text, not serialized protos).
+
+mod manifest;
+mod oracle;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use oracle::Oracle;
+
+/// Default artifacts directory, relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory from the current or ancestor dirs
+/// (works from `cargo test`, examples and installed binaries run in-repo).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(env) = std::env::var("ARROW_ARTIFACTS") {
+        let p = std::path::PathBuf::from(env);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let candidate = dir.join(ARTIFACTS_DIR);
+        if candidate.join("manifest.json").exists() {
+            return Some(candidate);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

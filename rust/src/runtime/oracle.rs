@@ -1,0 +1,167 @@
+//! PJRT execution of the AOT artifacts (adapted from
+//! /opt/xla-example/src/bin/load_hlo.rs).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow as eyre, Context, Result};
+
+use super::manifest::Manifest;
+
+/// The golden-model oracle: a PJRT CPU client plus compiled executables,
+/// lazily compiled from HLO text and cached per artifact.
+pub struct Oracle {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Oracle {
+    /// Open the oracle over an artifacts directory.
+    pub fn open(dir: &Path) -> Result<Oracle> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| eyre!("pjrt cpu: {e:?}"))?;
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        Ok(Oracle { client, manifest, compiled: HashMap::new() })
+    }
+
+    /// Open from the auto-discovered artifacts directory.
+    pub fn open_default() -> Result<Oracle> {
+        let dir = super::find_artifacts_dir()
+            .ok_or_else(|| eyre!("artifacts/ not found — run `make artifacts`"))?;
+        Self::open(&dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.entries.keys().cloned().collect()
+    }
+
+    fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let path = self
+                .manifest
+                .hlo_path(name)
+                .ok_or_else(|| eyre!("unknown artifact `{name}`"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
+            )
+            .map_err(|e| eyre!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| eyre!("compiling `{name}`: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute an artifact on i32 inputs (flattened row-major), returning
+    /// flattened i32 outputs.
+    pub fn run_i32(
+        &mut self,
+        name: &str,
+        inputs: &[Vec<i32>],
+    ) -> Result<Vec<Vec<i32>>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| eyre!("unknown artifact `{name}`"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(eyre!(
+                "`{name}` expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, tspec) in inputs.iter().zip(&spec.inputs) {
+            if data.len() != tspec.elements() {
+                return Err(eyre!(
+                    "`{name}` input shape {:?} wants {} elements, got {}",
+                    tspec.shape,
+                    tspec.elements(),
+                    data.len()
+                ));
+            }
+            if tspec.dtype != "int32" {
+                return Err(eyre!("only int32 artifacts supported"));
+            }
+            let dims: Vec<i64> =
+                tspec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| eyre!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.compile(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| eyre!("executing `{name}`: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("fetch: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let tuple =
+            result.to_tuple().map_err(|e| eyre!("untuple: {e:?}"))?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            outs.push(lit.to_vec::<i32>().map_err(|e| eyre!("to_vec: {e:?}"))?);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle() -> Option<Oracle> {
+        match Oracle::open_default() {
+            Ok(o) => Some(o),
+            Err(e) => {
+                eprintln!("skipping oracle test: {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn vadd_matches_rust() {
+        let Some(mut o) = oracle() else { return };
+        let a: Vec<i32> = (0..64).collect();
+        let b: Vec<i32> = (0..64).map(|i| 1000 - i).collect();
+        let out = o.run_i32("vadd_n64", &[a.clone(), b.clone()]).unwrap();
+        let want: Vec<i32> =
+            a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        assert_eq!(out, vec![want]);
+    }
+
+    #[test]
+    fn dot_matches_rust() {
+        let Some(mut o) = oracle() else { return };
+        let a: Vec<i32> = (0..64).map(|i| i - 32).collect();
+        let b: Vec<i32> = (0..64).map(|i| 2 * i + 1).collect();
+        let want: i32 = a
+            .iter()
+            .zip(&b)
+            .fold(0i32, |acc, (&x, &y)| acc.wrapping_add(x.wrapping_mul(y)));
+        let out = o.run_i32("dot_n64", &[a, b]).unwrap();
+        assert_eq!(out, vec![vec![want]]);
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        let Some(mut o) = oracle() else { return };
+        assert!(o.run_i32("vadd_n64", &[vec![1; 64]]).is_err());
+        assert!(o.run_i32("nope", &[]).is_err());
+        assert!(o
+            .run_i32("vadd_n64", &[vec![1; 63], vec![1; 64]])
+            .is_err());
+    }
+}

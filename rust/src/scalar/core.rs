@@ -1,0 +1,418 @@
+//! RV32IM functional + cycle-model execution.
+
+use crate::isa::reg::XReg;
+use crate::isa::rv32::{AluOp, BranchOp, LoadOp, MulDivOp, ScalarInstr, StoreOp};
+use crate::isa::rvv::VecInstr;
+use crate::isa::{decode, DecodeError, Instr};
+use crate::mem::{AxiBus, BurstKind, Dram};
+
+use super::timing::ScalarTiming;
+
+/// Outcome of stepping the host core one instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepEvent {
+    /// A scalar instruction retired.
+    Retired,
+    /// `ecall` — the program is done.
+    Halt,
+    /// A vector instruction was fetched; the coordinator must dispatch it
+    /// to Arrow.  Operand values are snapshot at dispatch (the scalar
+    /// processor sends them over the AXI request, paper §3.6 `rs1_data`).
+    Vector { instr: VecInstr, rs1_value: u32, rs2_value: u32 },
+}
+
+/// Runtime fault while executing (decode failure, PC out of range).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CpuFault {
+    Decode(DecodeError),
+    PcOutOfRange { pc: u32 },
+}
+
+impl std::fmt::Display for CpuFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CpuFault::Decode(e) => write!(f, "{e}"),
+            CpuFault::PcOutOfRange { pc } => {
+                write!(f, "pc {pc:#010x} outside text section")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CpuFault {}
+
+/// The scalar host CPU: registers, pc, cycle ledger.
+#[derive(Debug, Clone)]
+pub struct Cpu {
+    pub regs: [u32; 32],
+    pub pc: u32,
+    timing: ScalarTiming,
+    /// Cycles consumed by retired scalar instructions.
+    pub cycles: u64,
+    /// Retired scalar instruction count.
+    pub retired: u64,
+}
+
+impl Cpu {
+    pub fn new(timing: ScalarTiming) -> Self {
+        Cpu { regs: [0; 32], pc: 0, timing, cycles: 0, retired: 0 }
+    }
+
+    pub fn read_reg(&self, r: XReg) -> u32 {
+        self.regs[r.index()]
+    }
+
+    pub fn write_reg(&mut self, r: XReg, v: u32) {
+        if r.index() != 0 {
+            self.regs[r.index()] = v;
+        }
+    }
+
+    fn alu(&self, op: AluOp, a: u32, b: u32) -> u32 {
+        match op {
+            AluOp::Add => a.wrapping_add(b),
+            AluOp::Sub => a.wrapping_sub(b),
+            AluOp::Sll => a.wrapping_shl(b & 31),
+            AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+            AluOp::Sltu => (a < b) as u32,
+            AluOp::Xor => a ^ b,
+            AluOp::Srl => a.wrapping_shr(b & 31),
+            AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+            AluOp::Or => a | b,
+            AluOp::And => a & b,
+        }
+    }
+
+    fn muldiv(&self, op: MulDivOp, a: u32, b: u32) -> u32 {
+        let (sa, sb) = (a as i32, b as i32);
+        match op {
+            MulDivOp::Mul => a.wrapping_mul(b),
+            MulDivOp::Mulh => {
+                ((sa as i64).wrapping_mul(sb as i64) >> 32) as u32
+            }
+            MulDivOp::Mulhsu => {
+                ((sa as i64).wrapping_mul(b as u64 as i64) >> 32) as u32
+            }
+            MulDivOp::Mulhu => {
+                ((a as u64).wrapping_mul(b as u64) >> 32) as u32
+            }
+            MulDivOp::Div => {
+                if sb == 0 {
+                    u32::MAX
+                } else if sa == i32::MIN && sb == -1 {
+                    sa as u32
+                } else {
+                    sa.wrapping_div(sb) as u32
+                }
+            }
+            MulDivOp::Divu => {
+                if b == 0 {
+                    u32::MAX
+                } else {
+                    a / b
+                }
+            }
+            MulDivOp::Rem => {
+                if sb == 0 {
+                    sa as u32
+                } else if sa == i32::MIN && sb == -1 {
+                    0
+                } else {
+                    sa.wrapping_rem(sb) as u32
+                }
+            }
+            MulDivOp::Remu => {
+                if b == 0 {
+                    a
+                } else {
+                    a % b
+                }
+            }
+        }
+    }
+
+    /// Execute one instruction.  `now` is the absolute core-cycle time at
+    /// which the instruction issues (memory ops contend on `bus` at that
+    /// time); the caller advances its timeline by the cycles this adds.
+    pub fn step(
+        &mut self,
+        text: &[u32],
+        dram: &mut Dram,
+        bus: &mut AxiBus,
+        now: u64,
+    ) -> Result<StepEvent, CpuFault> {
+        let index = (self.pc / 4) as usize;
+        if self.pc % 4 != 0 || index >= text.len() {
+            return Err(CpuFault::PcOutOfRange { pc: self.pc });
+        }
+        let word = text[index];
+        let instr = decode(word).map_err(CpuFault::Decode)?;
+        self.step_instr(instr, dram, bus, now)
+    }
+
+    /// Execute an already-decoded instruction (the hot path — the machine
+    /// run loop predecodes the text section once; see §Perf in
+    /// EXPERIMENTS.md for the measured effect).
+    pub fn step_instr(
+        &mut self,
+        instr: Instr,
+        dram: &mut Dram,
+        bus: &mut AxiBus,
+        now: u64,
+    ) -> Result<StepEvent, CpuFault> {
+        let s = match instr {
+            Instr::Vector(v) => {
+                // Operand snapshot; the coordinator advances pc + cycles.
+                let (rs1, rs2) = vector_operands(&v);
+                return Ok(StepEvent::Vector {
+                    instr: v,
+                    rs1_value: self.read_reg(rs1),
+                    rs2_value: self.read_reg(rs2),
+                });
+            }
+            Instr::Scalar(s) => s,
+        };
+
+        self.retired += 1;
+        let mut next_pc = self.pc.wrapping_add(4);
+        let t = self.timing;
+
+        match s {
+            ScalarInstr::Lui { rd, imm } => {
+                self.write_reg(rd, imm as u32);
+                self.cycles += t.alu;
+            }
+            ScalarInstr::Auipc { rd, imm } => {
+                self.write_reg(rd, self.pc.wrapping_add(imm as u32));
+                self.cycles += t.alu;
+            }
+            ScalarInstr::Jal { rd, offset } => {
+                self.write_reg(rd, self.pc.wrapping_add(4));
+                next_pc = self.pc.wrapping_add(offset as u32);
+                self.cycles += t.alu + t.branch_taken_penalty;
+            }
+            ScalarInstr::Jalr { rd, rs1, offset } => {
+                let target =
+                    self.read_reg(rs1).wrapping_add(offset as u32) & !1;
+                self.write_reg(rd, self.pc.wrapping_add(4));
+                next_pc = target;
+                self.cycles += t.alu + t.branch_taken_penalty;
+            }
+            ScalarInstr::Branch { op, rs1, rs2, offset } => {
+                let (a, b) = (self.read_reg(rs1), self.read_reg(rs2));
+                let taken = match op {
+                    BranchOp::Beq => a == b,
+                    BranchOp::Bne => a != b,
+                    BranchOp::Blt => (a as i32) < (b as i32),
+                    BranchOp::Bge => (a as i32) >= (b as i32),
+                    BranchOp::Bltu => a < b,
+                    BranchOp::Bgeu => a >= b,
+                };
+                self.cycles += t.alu;
+                if taken {
+                    next_pc = self.pc.wrapping_add(offset as u32);
+                    self.cycles += t.branch_taken_penalty;
+                }
+            }
+            ScalarInstr::Load { op, rd, rs1, offset } => {
+                let addr = self.read_reg(rs1).wrapping_add(offset as u32);
+                let v = match op {
+                    LoadOp::Lb => dram.read_u8(addr) as i8 as i32 as u32,
+                    LoadOp::Lbu => dram.read_u8(addr) as u32,
+                    LoadOp::Lh => dram.read_u16(addr) as i16 as i32 as u32,
+                    LoadOp::Lhu => dram.read_u16(addr) as u32,
+                    LoadOp::Lw => dram.read_u32(addr),
+                };
+                self.write_reg(rd, v);
+                let done = bus.schedule(now, BurstKind::Scalar, 1);
+                self.cycles += done - now;
+            }
+            ScalarInstr::Store { op, rs1, rs2, offset } => {
+                let addr = self.read_reg(rs1).wrapping_add(offset as u32);
+                let v = self.read_reg(rs2);
+                match op {
+                    StoreOp::Sb => dram.write_u8(addr, v as u8),
+                    StoreOp::Sh => dram.write_u16(addr, v as u16),
+                    StoreOp::Sw => dram.write_u32(addr, v),
+                }
+                let done = bus.schedule(now, BurstKind::Scalar, 1);
+                self.cycles += done - now;
+            }
+            ScalarInstr::OpImm { op, rd, rs1, imm } => {
+                let v = self.alu(op, self.read_reg(rs1), imm as u32);
+                self.write_reg(rd, v);
+                self.cycles += t.alu;
+            }
+            ScalarInstr::Op { op, rd, rs1, rs2 } => {
+                let v =
+                    self.alu(op, self.read_reg(rs1), self.read_reg(rs2));
+                self.write_reg(rd, v);
+                self.cycles += t.alu;
+            }
+            ScalarInstr::MulDiv { op, rd, rs1, rs2 } => {
+                let v =
+                    self.muldiv(op, self.read_reg(rs1), self.read_reg(rs2));
+                self.write_reg(rd, v);
+                self.cycles += match op {
+                    MulDivOp::Mul
+                    | MulDivOp::Mulh
+                    | MulDivOp::Mulhsu
+                    | MulDivOp::Mulhu => t.mul,
+                    _ => t.div,
+                };
+            }
+            ScalarInstr::Ecall => {
+                self.cycles += t.alu;
+                return Ok(StepEvent::Halt);
+            }
+            ScalarInstr::Fence => {
+                self.cycles += t.alu;
+            }
+        }
+        self.pc = next_pc;
+        Ok(StepEvent::Retired)
+    }
+}
+
+/// Scalar operand registers a vector instruction consumes at dispatch.
+fn vector_operands(v: &VecInstr) -> (XReg, XReg) {
+    use crate::isa::rvv::{AddrMode, VSrc2};
+    match *v {
+        VecInstr::VsetVli { rs1, .. } => (rs1, XReg::ZERO),
+        VecInstr::Load { rs1, mode, .. } | VecInstr::Store { rs1, mode, .. } => {
+            match mode {
+                AddrMode::Strided { rs2 } => (rs1, rs2),
+                _ => (rs1, XReg::ZERO),
+            }
+        }
+        VecInstr::Alu { src2, .. } => match src2 {
+            VSrc2::X(x) => (x, XReg::ZERO),
+            _ => (XReg::ZERO, XReg::ZERO),
+        },
+        VecInstr::MvSx { rs1, .. } => (rs1, XReg::ZERO),
+        VecInstr::MvXs { .. } => (XReg::ZERO, XReg::ZERO),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::mem::MemTiming;
+
+    fn run(src: &str) -> (Cpu, Dram) {
+        let p = assemble(src).unwrap();
+        let mut cpu = Cpu::new(ScalarTiming::default());
+        let mut dram = Dram::new();
+        dram.write_bytes(crate::asm::DATA_BASE, &p.data);
+        let mut bus = AxiBus::new(MemTiming::default());
+        for _ in 0..1_000_000 {
+            match cpu.step(&p.text, &mut dram, &mut bus, cpu.cycles).unwrap()
+            {
+                StepEvent::Halt => return (cpu, dram),
+                StepEvent::Retired => {}
+                StepEvent::Vector { .. } => panic!("vector instr in scalar test"),
+            }
+        }
+        panic!("did not halt");
+    }
+
+    #[test]
+    fn arithmetic_loop() {
+        // sum 1..=10 = 55
+        let (cpu, _) = run(r#"
+            .text
+                li a0, 10
+                li a1, 0
+            loop:
+                add a1, a1, a0
+                addi a0, a0, -1
+                bnez a0, loop
+                halt
+        "#);
+        assert_eq!(cpu.regs[11], 55);
+    }
+
+    #[test]
+    fn memory_roundtrip_and_cycles() {
+        let (cpu, dram) = run(r#"
+            .data
+            x: .word 41
+            y: .space 4
+            .text
+                la a0, x
+                lw t0, 0(a0)
+                addi t0, t0, 1
+                sw t0, 4(a0)
+                halt
+        "#);
+        assert_eq!(dram.read_u32(crate::asm::DATA_BASE + 4), 42);
+        // 2 mem ops at 12 cycles each dominate
+        assert!(cpu.cycles >= 24, "cycles = {}", cpu.cycles);
+    }
+
+    #[test]
+    fn div_by_zero_semantics() {
+        let (cpu, _) = run(r#"
+            .text
+                li a0, 7
+                li a1, 0
+                div a2, a0, a1
+                rem a3, a0, a1
+                halt
+        "#);
+        assert_eq!(cpu.regs[12], u32::MAX);
+        assert_eq!(cpu.regs[13], 7);
+    }
+
+    #[test]
+    fn div_overflow_semantics() {
+        let (cpu, _) = run(r#"
+            .text
+                li a0, -2147483648
+                li a1, -1
+                div a2, a0, a1
+                rem a3, a0, a1
+                halt
+        "#);
+        assert_eq!(cpu.regs[12], i32::MIN as u32);
+        assert_eq!(cpu.regs[13], 0);
+    }
+
+    #[test]
+    fn shifts_and_compares() {
+        let (cpu, _) = run(r#"
+            .text
+                li a0, -8
+                srai a1, a0, 2
+                srli a2, a0, 28
+                slti a3, a0, 0
+                sltiu a4, a0, 0
+                halt
+        "#);
+        assert_eq!(cpu.regs[11] as i32, -2);
+        assert_eq!(cpu.regs[12], 0xF);
+        assert_eq!(cpu.regs[13], 1);
+        assert_eq!(cpu.regs[14], 0);
+    }
+
+    #[test]
+    fn x0_is_hardwired() {
+        let (cpu, _) = run(".text\n li t0, 5\n add zero, t0, t0\n halt\n");
+        assert_eq!(cpu.regs[0], 0);
+    }
+
+    #[test]
+    fn function_call_ret() {
+        let (cpu, _) = run(r#"
+            .text
+                li a0, 20
+                jal double
+                halt
+            double:
+                add a0, a0, a0
+                ret
+        "#);
+        assert_eq!(cpu.regs[10], 40);
+    }
+}

@@ -1,0 +1,12 @@
+//! The scalar host core: an RV32IM stand-in for the paper's MicroBlaze.
+//!
+//! Single-issue, in-order, no cache (paper §3.7) — every load/store goes
+//! to DDR3 over the shared AXI port.  Instructions are fetched from a
+//! local instruction store (the MicroBlaze runs from BRAM over LMB, not
+//! through the MIG), so fetch is covered by the base CPI.
+
+pub mod core;
+pub mod timing;
+
+pub use core::{Cpu, StepEvent};
+pub use timing::ScalarTiming;

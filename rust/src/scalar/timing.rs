@@ -1,0 +1,36 @@
+//! Scalar-core cycle model (MicroBlaze-like in-order pipeline).
+//!
+//! Calibration constants per DESIGN.md §6: together with
+//! [`crate::mem::MemTiming::scalar_access`] these place the small-profile
+//! scalar cycle counts of Table 3; they are fixed across all benchmarks.
+
+/// Per-class scalar instruction latencies, in core cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScalarTiming {
+    /// Base CPI of ALU / CSR / move instructions.
+    pub alu: u64,
+    /// Integer multiply (MicroBlaze v11 has a 3-stage multiplier).
+    pub mul: u64,
+    /// Integer divide (iterative divider).
+    pub div: u64,
+    /// Taken-branch / jump pipeline flush penalty, *added* to `alu`.
+    pub branch_taken_penalty: u64,
+}
+
+impl Default for ScalarTiming {
+    fn default() -> Self {
+        ScalarTiming { alu: 1, mul: 3, div: 32, branch_taken_penalty: 2 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let t = ScalarTiming::default();
+        assert!(t.alu <= t.mul && t.mul <= t.div);
+        assert!(t.branch_taken_penalty > 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Textual renderings of the paper's architecture figures from a live
+//! configuration (Figs 1-4 are diagrams; these commands print the same
+//! structures the modules implement).
+
+use crate::energy::resources;
+use crate::isa::csr::Vtype;
+use crate::vector::offset;
+use crate::vector::ArrowConfig;
+
+/// Fig 1: the Arrow datapath.
+pub fn datapath(c: &ArrowConfig) -> String {
+    format!(
+        "Arrow datapath (Fig 1)\n\
+         ======================\n\
+         single-issue, {}-lane, no chaining\n\
+         VLEN = {} bits ({} bytes/register), ELEN = {} bits\n\
+         pipeline: decode -> operand fetch -> execute|memory -> write-back\n\
+         register file: {} banks x {} registers, 2R1W per bank\n\
+         lane dispatch: vd in v0..v{} -> lane 0 .. vd in v{}..v31 -> lane {}\n\
+         SIMD ALU: {}-bit words, SEW-segmented carry chain (8/16/32/64)\n\
+         move block: vmv / vmerge (masked + unmasked)\n\
+         memory unit: unit-stride + strided bursts{}\n",
+        c.lanes,
+        c.vlen_bits,
+        c.vlen_bytes(),
+        c.elen_bits,
+        c.lanes,
+        c.regs_per_bank(),
+        c.regs_per_bank() - 1,
+        32 - c.regs_per_bank(),
+        c.lanes - 1,
+        c.elen_bits,
+        if c.indexed_mem {
+            ", indexed (experimental)"
+        } else {
+            " (indexed: in development)"
+        },
+    )
+}
+
+/// Fig 2: the WriteEnable byte-mask mapping for a sample configuration.
+pub fn write_enable(c: &ArrowConfig) -> String {
+    let mut s = String::from("WriteEnable byte masks (Fig 2)\n==============================\n");
+    for (sew, vl) in [(8u32, 5usize), (16, 5), (32, 5), (64, 3)] {
+        let vt = Vtype::new(sew, 1);
+        let we = offset::enable_for_vl(
+            c.vlen_bytes(),
+            (sew / 8) as usize,
+            vl,
+        );
+        let bits: String = we
+            .bytes
+            .iter()
+            .map(|&b| if b { '1' } else { '0' })
+            .collect();
+        s.push_str(&format!(
+            "e{sew:<2} vl={vl}: vlmax={:<3} enable[{}B] = {}\n",
+            vt.vlmax(c.vlen_bits),
+            c.vlen_bytes(),
+            bits
+        ));
+    }
+    s
+}
+
+/// Fig 3: SIMD ALU segmentation.
+pub fn simd_alu(c: &ArrowConfig) -> String {
+    let mut s = String::from("SIMD ALU (Fig 3)\n================\n");
+    for sew in [8u32, 16, 32, 64] {
+        let per_word = c.elen_bits / sew;
+        s.push_str(&format!(
+            "SEW={sew:<2}: {per_word} element(s) per {}-bit word; carry chain cut every {sew} bits\n",
+            c.elen_bits
+        ));
+    }
+    s.push_str(&format!(
+        "one {}-bit word per cycle per lane; {} lanes\n",
+        c.elen_bits, c.lanes
+    ));
+    s
+}
+
+/// Fig 4: system block diagram + memory interface parameters.
+pub fn system(c: &ArrowConfig) -> String {
+    let t = &c.mem_timing;
+    let r = resources::estimate(c);
+    format!(
+        "FPGA system (Fig 4)\n\
+         ===================\n\
+         MicroBlaze-class host --AXI--> Arrow IP --AXI--> MIG --> DDR3\n\
+         shared address space; no caches or scratchpads\n\
+         AXI data width: {} bits (= ELEN)\n\
+         memory clock: {}x core clock -> {} beats/core-cycle in bursts\n\
+         single outstanding transaction (no interleaving)\n\
+         burst setup: {} cycles; strided: {} cycle(s)/beat; scalar access: {} cycles\n\
+         estimated resources: {} LUT / {} FF / {} BRAM, {:.3} W, Fmax {:.0} MHz\n",
+        c.elen_bits,
+        t.beats_per_cycle,
+        t.beats_per_cycle,
+        t.burst_setup,
+        t.strided_cycles_per_beat,
+        t.scalar_access,
+        r.luts,
+        r.ffs,
+        r.brams,
+        r.power_w,
+        r.fmax_mhz,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descriptions_render() {
+        let c = ArrowConfig::default();
+        assert!(datapath(&c).contains("2-lane"));
+        assert!(datapath(&c).contains("VLEN = 256"));
+        assert!(write_enable(&c).contains("e32"));
+        assert!(simd_alu(&c).contains("SEW=8"));
+        assert!(system(&c).contains("DDR3"));
+    }
+}

@@ -1,0 +1,17 @@
+//! The full-system coordinator (paper Fig 4): scalar host + Arrow
+//! co-processor + shared AXI/MIG/DDR3 memory, on one cycle timeline.
+//!
+//! * [`machine`] — the `Machine`: program loading, the host run loop,
+//!   vector dispatch over AXI with lane/scoreboard scheduling, and the
+//!   cycle ledgers every report is built from.
+//! * [`server`] — an threaded TCP job server exposing the simulator as a
+//!   service: newline-delimited JSON requests to run benchmarks and fetch
+//!   reports.
+//! * [`describe`] — textual renderings of the architecture figures
+//!   (Figs 1-4) from the live configuration.
+
+pub mod describe;
+pub mod machine;
+pub mod server;
+
+pub use machine::{Machine, MachineError, RunSummary};

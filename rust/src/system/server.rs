@@ -1,0 +1,240 @@
+//! Job server: the simulator as a service.
+//!
+//! Line-delimited JSON over TCP, one thread per connection (the build is
+//! offline so there is no async runtime; the protocol and handlers are
+//! runtime-agnostic).  Requests:
+//!
+//! ```json
+//! {"cmd": "ping"}
+//! {"cmd": "bench", "benchmark": "vector_addition", "profile": "small",
+//!  "mode": "vector", "lanes": 2}
+//! {"cmd": "describe", "what": "datapath"}
+//! {"cmd": "list"}
+//! ```
+//!
+//! Responses are single-line JSON with `"ok": true/false`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use crate::bench::runner::{run_benchmark, Mode};
+use crate::bench::suite::{Benchmark, BENCHMARKS};
+use crate::bench::Profile;
+use crate::util::json::{self, Json};
+use crate::vector::ArrowConfig;
+
+use super::describe;
+
+fn err_response(msg: impl Into<String>) -> Json {
+    Json::obj(vec![("ok", false.into()), ("error", Json::Str(msg.into()))])
+}
+
+/// Handle one request object (pure; exercised directly by tests).
+pub fn handle_request(req: &Json) -> Json {
+    match req.get("cmd").and_then(Json::as_str) {
+        Some("ping") => {
+            Json::obj(vec![("ok", true.into()), ("pong", true.into())])
+        }
+        Some("list") => Json::obj(vec![
+            ("ok", true.into()),
+            (
+                "benchmarks",
+                Json::Arr(
+                    BENCHMARKS.iter().map(|b| b.name().into()).collect(),
+                ),
+            ),
+            (
+                "profiles",
+                Json::Arr(
+                    ["small", "medium", "large", "test"]
+                        .iter()
+                        .map(|&p| p.into())
+                        .collect(),
+                ),
+            ),
+        ]),
+        Some("describe") => {
+            let c = config_from(req);
+            let what =
+                req.get("what").and_then(Json::as_str).unwrap_or("datapath");
+            let text = match what {
+                "datapath" => describe::datapath(&c),
+                "write-enable" => describe::write_enable(&c),
+                "simd-alu" => describe::simd_alu(&c),
+                "system" => describe::system(&c),
+                other => {
+                    return err_response(format!(
+                        "unknown description `{other}`"
+                    ))
+                }
+            };
+            Json::obj(vec![("ok", true.into()), ("text", text.into())])
+        }
+        Some("bench") => {
+            let Some(b) = req
+                .get("benchmark")
+                .and_then(Json::as_str)
+                .and_then(Benchmark::by_name)
+            else {
+                return err_response("unknown benchmark");
+            };
+            let Some(p) = req
+                .get("profile")
+                .and_then(Json::as_str)
+                .and_then(Profile::by_name)
+            else {
+                return err_response("unknown profile");
+            };
+            let mode = match req.get("mode").and_then(Json::as_str) {
+                Some("scalar") => Mode::Scalar,
+                _ => Mode::Vector,
+            };
+            let config = config_from(req);
+            if let Err(e) = config.validate() {
+                return err_response(e);
+            }
+            let size = b.size(&p);
+            match run_benchmark(b, size, mode, config, 42) {
+                Ok(r) => Json::obj(vec![
+                    ("ok", true.into()),
+                    ("benchmark", b.name().into()),
+                    ("mode", mode.name().into()),
+                    ("cycles", r.cycles.into()),
+                    ("verified", r.verified.into()),
+                    (
+                        "scalar_instructions",
+                        r.summary.scalar_instructions.into(),
+                    ),
+                    (
+                        "vector_instructions",
+                        r.summary.vector_instructions.into(),
+                    ),
+                ]),
+                Err(e) => err_response(e.to_string()),
+            }
+        }
+        other => err_response(format!(
+            "unknown cmd {other:?} (ping|list|bench|describe)"
+        )),
+    }
+}
+
+fn config_from(req: &Json) -> ArrowConfig {
+    let mut c = ArrowConfig::default();
+    if let Some(lanes) = req.get("lanes").and_then(Json::as_u64) {
+        c.lanes = lanes as usize;
+    }
+    if let Some(vlen) = req.get("vlen").and_then(Json::as_u64) {
+        c.vlen_bits = vlen as u32;
+    }
+    c
+}
+
+fn handle_conn(stream: TcpStream) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match json::parse(&line) {
+            Ok(req) => handle_request(&req),
+            Err(e) => err_response(format!("bad json: {e}")),
+        };
+        if writeln!(writer, "{response}").is_err() {
+            break;
+        }
+    }
+    if let Some(peer) = peer {
+        eprintln!("connection from {peer} closed");
+    }
+}
+
+/// Serve forever on `addr` (e.g. `127.0.0.1:7676`), one thread per
+/// connection.
+pub fn serve(addr: &str) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("arrow simulator serving on {addr}");
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                std::thread::spawn(move || handle_conn(s));
+            }
+            Err(e) => eprintln!("accept: {e}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(s: &str) -> Json {
+        json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn ping() {
+        let r = handle_request(&req(r#"{"cmd": "ping"}"#));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn bench_roundtrip() {
+        let r = handle_request(&req(
+            r#"{"cmd": "bench", "benchmark": "vector_addition",
+                "profile": "test", "mode": "vector"}"#,
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("verified"), Some(&Json::Bool(true)));
+        assert!(r.get("cycles").unwrap().as_u64().unwrap() > 0);
+    }
+
+    #[test]
+    fn unknown_cmd_rejected() {
+        let r = handle_request(&req(r#"{"cmd": "nuke"}"#));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn describe_over_protocol() {
+        let r = handle_request(&req(
+            r#"{"cmd": "describe", "what": "system", "lanes": 4}"#,
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert!(r.get("text").unwrap().as_str().unwrap().contains("DDR3"));
+    }
+
+    #[test]
+    fn bad_config_rejected() {
+        let r = handle_request(&req(
+            r#"{"cmd": "bench", "benchmark": "vector_relu",
+                "profile": "test", "lanes": 3}"#,
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            handle_conn(s);
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, r#"{{"cmd": "ping"}}"#).unwrap();
+        let mut line = String::new();
+        BufReader::new(client.try_clone().unwrap())
+            .read_line(&mut line)
+            .unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("pong"), Some(&Json::Bool(true)));
+    }
+}

@@ -1,0 +1,148 @@
+//! A small measurement harness for the `cargo bench` targets (criterion
+//! is unavailable offline).  Measures wall-clock over repeated runs after
+//! a warm-up, reports mean ± σ and throughput, and emits a
+//! machine-readable summary line per benchmark.
+
+use std::time::Instant;
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    /// Optional work units per iteration (e.g. simulated cycles) for
+    /// throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12} ± {:>10}  ({} iters)",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.stddev_s),
+            self.iters
+        );
+        if let Some(u) = self.units_per_iter {
+            s.push_str(&format!("  [{:.3e} units/s]", u / self.mean_s));
+        }
+        s
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// The harness: collects measurements and prints a criterion-like report.
+pub struct Bencher {
+    /// Minimum number of timed iterations.
+    pub min_iters: u32,
+    /// Target wall-clock budget per benchmark, seconds.
+    pub budget_s: f64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Env overrides keep `cargo bench` fast in CI-style runs.
+        let budget_s = std::env::var("ARROW_BENCH_BUDGET_S")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2.0);
+        Bencher { min_iters: 3, budget_s, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    /// Time `f`, which returns an optional unit count (e.g. simulated
+    /// cycles) for throughput reporting.
+    pub fn bench<F: FnMut() -> Option<f64>>(
+        &mut self,
+        name: &str,
+        mut f: F,
+    ) {
+        // Warm-up (also primes lazy state like compiled XLA executables).
+        let warm_start = Instant::now();
+        let mut units = f();
+        let warm = warm_start.elapsed().as_secs_f64();
+
+        let iters = ((self.budget_s / warm.max(1e-9)) as u32)
+            .clamp(self.min_iters, 10_000);
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            units = f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / samples.len() as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_s: mean,
+            stddev_s: var.sqrt(),
+            units_per_iter: units,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+    }
+
+    /// Record a precomputed scalar result (for table-style benches where
+    /// the interesting output is the model's number, not wall time).
+    pub fn record_value(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{name:<44} = {value:.6e} {unit}");
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Final summary footer.
+    pub fn finish(self) {
+        println!("\n{} benchmarks measured", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher { min_iters: 3, budget_s: 0.01, results: vec![] };
+        let mut x = 0u64;
+        b.bench("spin", || {
+            for i in 0..1000u64 {
+                x = x.wrapping_add(i);
+            }
+            Some(1000.0)
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].mean_s >= 0.0);
+        assert!(x > 0);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

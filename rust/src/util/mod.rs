@@ -1,0 +1,14 @@
+//! In-tree substrates that would normally be external crates.  The build
+//! is fully offline (DESIGN.md §2), so the pieces the system needs beyond
+//! `xla` are implemented here:
+//!
+//! * [`json`] — a small, strict JSON parser + serializer (manifest files
+//!   and the job-server protocol);
+//! * [`bencher`] — a criterion-style measurement harness for the `cargo
+//!   bench` targets (warm-up, repeated timing, mean/σ reporting);
+//! * [`rng`] — a seeded SplitMix64 generator powering the in-tree
+//!   property tests and workload generation.
+
+pub mod bencher;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,87 @@
+//! SplitMix64: the seeded generator behind workloads and the in-tree
+//! property tests (proptest is unavailable offline; tests draw many
+//! seeded cases from this instead — same idea, deterministic by default).
+
+/// SplitMix64 PRNG (Steele et al., "Fast splittable pseudorandom number
+/// generators").
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[lo, hi)` (panics if empty).
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi, "empty range");
+        let span = (hi - lo) as u64;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn i32_any(&mut self) -> i32 {
+        self.next_u32() as i32
+    }
+
+    /// Vector of i32 in `[lo, hi)`.
+    pub fn i32_vec(&mut self, len: usize, lo: i64, hi: i64) -> Vec<i32> {
+        (0..len).map(|_| self.range_i64(lo, hi) as i32).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.range_usize(0, items.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_respected() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.range_i64(-5, 5);
+            assert!((-5..5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        let mut r = Rng::new(2);
+        let mut counts = [0u32; 8];
+        for _ in 0..8000 {
+            counts[r.range_usize(0, 8)] += 1;
+        }
+        for c in counts {
+            assert!((700..1300).contains(&c), "{counts:?}");
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! The SIMD ALU (paper §3.5, Fig 3).
+//!
+//! The hardware ALU is ELEN=64 bits wide with multiplexers segmenting the
+//! carry chain at SEW boundaries, so one word-pass processes ELEN/SEW
+//! elements.  This model computes element-at-SEW semantics directly —
+//! bit-identical to the segmented datapath — while the *cycle* cost of a
+//! word-pass lives in the pipeline model (`unit.rs`).
+//!
+//! All operations follow RVV v0.9 single-width integer semantics:
+//! two's-complement wraparound, shift amounts masked to `SEW-1` bits,
+//! division by zero yielding all-ones (quotient) / dividend (remainder),
+//! and overflow `MIN/-1` yielding `MIN` / `0`.
+
+use crate::isa::rvv::VAluOp;
+
+/// Read element `i` of a SEW-wide little-endian element array,
+/// sign-extended to i64.
+pub fn read_elem(bytes: &[u8], i: usize, sew_bytes: usize) -> i64 {
+    let o = i * sew_bytes;
+    let mut buf = [0u8; 8];
+    buf[..sew_bytes].copy_from_slice(&bytes[o..o + sew_bytes]);
+    let v = u64::from_le_bytes(buf);
+    sign_extend(v, sew_bytes * 8)
+}
+
+/// Write element `i`, truncating to SEW.
+pub fn write_elem(bytes: &mut [u8], i: usize, sew_bytes: usize, value: i64) {
+    let o = i * sew_bytes;
+    bytes[o..o + sew_bytes].copy_from_slice(&value.to_le_bytes()[..sew_bytes]);
+}
+
+fn sign_extend(v: u64, bits: usize) -> i64 {
+    let shift = 64 - bits;
+    ((v << shift) as i64) >> shift
+}
+
+fn to_unsigned(v: i64, sew_bits: u32) -> u64 {
+    if sew_bits == 64 {
+        v as u64
+    } else {
+        (v as u64) & ((1u64 << sew_bits) - 1)
+    }
+}
+
+/// One element-wise binary op at SEW width.  `a` is the vs2 operand and
+/// `b` the vs1/rs1/imm operand, matching the RVV operand order
+/// (`vsub.vv vd, vs2, vs1` computes `vs2 - vs1`; `vrsub` the reverse).
+pub fn eval(op: VAluOp, a: i64, b: i64, sew_bits: u32) -> i64 {
+    use VAluOp::*;
+    let ua = to_unsigned(a, sew_bits);
+    let ub = to_unsigned(b, sew_bits);
+    let shamt = (ub as u32) & (sew_bits - 1);
+    let v: i64 = match op {
+        Add | RedSum => a.wrapping_add(b),
+        Sub => a.wrapping_sub(b),
+        Rsub => b.wrapping_sub(a),
+        And | RedAnd => a & b,
+        Or | RedOr => a | b,
+        Xor | RedXor => a ^ b,
+        Min | RedMin => a.min(b),
+        Max | RedMax => a.max(b),
+        Minu | RedMinu => ua.min(ub) as i64,
+        Maxu | RedMaxu => ua.max(ub) as i64,
+        Sll => ((ua as u128) << shamt) as i64,
+        Srl => (ua >> shamt) as i64,
+        Sra => a >> shamt,
+        Mseq => (a == b) as i64,
+        Msne => (a != b) as i64,
+        Mslt => (a < b) as i64,
+        Msltu => (ua < ub) as i64,
+        Msle => (a <= b) as i64,
+        Msleu => (ua <= ub) as i64,
+        Msgt => (a > b) as i64,
+        Msgtu => (ua > ub) as i64,
+        Mul => a.wrapping_mul(b),
+        Mulh => (((a as i128) * (b as i128)) >> sew_bits) as i64,
+        Mulhu => (((ua as u128) * (ub as u128)) >> sew_bits) as i64,
+        Div => {
+            if b == 0 {
+                -1
+            } else if a == min_of(sew_bits) && b == -1 {
+                a
+            } else {
+                a.wrapping_div(b)
+            }
+        }
+        Divu => {
+            if ub == 0 {
+                -1 // all ones at SEW after truncation
+            } else {
+                (ua / ub) as i64
+            }
+        }
+        Rem => {
+            if b == 0 {
+                a
+            } else if a == min_of(sew_bits) && b == -1 {
+                0
+            } else {
+                a.wrapping_rem(b)
+            }
+        }
+        Remu => {
+            if ub == 0 {
+                a
+            } else {
+                (ua % ub) as i64
+            }
+        }
+        Merge => unreachable!("merge handled by the move block"),
+    };
+    // Truncate to SEW then sign-extend, like the segmented carry chain.
+    sign_extend(to_unsigned(v, sew_bits), sew_bits as usize)
+}
+
+fn min_of(sew_bits: u32) -> i64 {
+    -(1i64 << (sew_bits - 1))
+}
+
+/// Identity element of a reduction op (the `vs1[0]` seed is the real
+/// initial value; this is used for masked-off element skipping).
+pub fn reduction_identity(op: VAluOp, sew_bits: u32) -> i64 {
+    use VAluOp::*;
+    match op {
+        RedSum | RedOr | RedXor => 0,
+        RedAnd => -1,
+        RedMax => min_of(sew_bits),
+        RedMin => -1 - min_of(sew_bits), // MAX at SEW
+        RedMaxu => 0,
+        RedMinu => sign_extend(to_unsigned(-1, sew_bits), sew_bits as usize),
+        _ => panic!("not a reduction: {op:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use VAluOp::*;
+
+    #[test]
+    fn elem_rw_roundtrip_all_sews() {
+        for sew_bytes in [1usize, 2, 4, 8] {
+            let mut buf = vec![0u8; 32];
+            let vals: Vec<i64> = vec![-1, 0, 1, -128];
+            for (i, &v) in vals.iter().enumerate() {
+                write_elem(&mut buf, i, sew_bytes, v);
+            }
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(read_elem(&buf, i, sew_bytes), v, "sew {sew_bytes}");
+            }
+        }
+    }
+
+    #[test]
+    fn wrapping_add_at_sew8() {
+        assert_eq!(eval(Add, 127, 1, 8), -128);
+        assert_eq!(eval(Sub, -128, 1, 8), 127);
+    }
+
+    #[test]
+    fn mul_low_and_high() {
+        assert_eq!(eval(Mul, 1 << 20, 1 << 15, 32), 0); // 2^35 mod 2^32
+        assert_eq!(eval(Mulh, 1 << 20, 1 << 15, 32), 8);
+        assert_eq!(eval(Mulhu, -1, -1, 8), -2); // 255*255 >> 8 = 254 -> sext
+    }
+
+    #[test]
+    fn division_rvv_semantics() {
+        assert_eq!(eval(Div, 7, 0, 32), -1);
+        assert_eq!(eval(Rem, 7, 0, 32), 7);
+        assert_eq!(eval(Div, i32::MIN as i64, -1, 32), i32::MIN as i64);
+        assert_eq!(eval(Rem, i32::MIN as i64, -1, 32), 0);
+        assert_eq!(eval(Div, -7, 2, 32), -3); // truncating
+        assert_eq!(eval(Divu, -1, 2, 8), 127); // 255/2
+    }
+
+    #[test]
+    fn shifts_mask_amount() {
+        assert_eq!(eval(Sll, 1, 33, 32), 2); // shamt 33 & 31 = 1
+        assert_eq!(eval(Srl, -1, 4, 8), 15); // logical on 8-bit
+        assert_eq!(eval(Sra, -16, 2, 8), -4);
+    }
+
+    #[test]
+    fn unsigned_minmax() {
+        assert_eq!(eval(Maxu, -1, 1, 8), -1); // 255 > 1
+        assert_eq!(eval(Minu, -1, 1, 8), 1);
+        assert_eq!(eval(Max, -1, 1, 8), 1);
+    }
+
+    #[test]
+    fn compares_produce_bits() {
+        assert_eq!(eval(Mslt, -5, 3, 32), 1);
+        assert_eq!(eval(Msltu, -5, 3, 32), 0); // huge unsigned
+        assert_eq!(eval(Mseq, 4, 4, 16), 1);
+    }
+
+    #[test]
+    fn reduction_identities() {
+        assert_eq!(reduction_identity(RedMax, 8), -128);
+        assert_eq!(reduction_identity(RedMin, 8), 127);
+        assert_eq!(reduction_identity(RedMinu, 8), -1); // 0xFF
+        assert_eq!(reduction_identity(RedSum, 32), 0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Arrow design-time configuration (paper §3: "Some of its architectural
+//! parameters can be configured at design time including the number of
+//! lanes, maximum vector length (VLEN), and maximum vector element width
+//! (ELEN)").
+
+use crate::mem::MemTiming;
+
+/// Per-instruction pipeline cycle model of the Arrow datapath.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VectorTiming {
+    /// Host-side cycles to push one vector instruction over the AXI bus
+    /// into Arrow's decoder (instructions are "dispatched from a scalar
+    /// host processor", §3.2).
+    pub dispatch: u64,
+    /// Pipeline fill: decode + operand-fetch + write-back stages around
+    /// the execute phase (§3.2 lists decode, operand fetch, execute or
+    /// memory access, write-back).
+    pub issue_overhead: u64,
+    /// ELEN-bit words processed per cycle per lane by the SIMD ALU.
+    pub alu_words_per_cycle: u64,
+    /// Extra cycles to fold the per-word partial results of a reduction
+    /// into element 0 (the tree/sequential fold at the end of `vred*`).
+    pub reduction_tail: u64,
+    /// Extra host cycles to read back a scalar result (`vsetvli` vl,
+    /// `vmv.x.s`) over AXI — the host blocks on these.
+    pub scalar_readback: u64,
+}
+
+impl Default for VectorTiming {
+    fn default() -> Self {
+        VectorTiming {
+            dispatch: 1,
+            issue_overhead: 2,
+            alu_words_per_cycle: 2,
+            reduction_tail: 2,
+            scalar_readback: 1,
+        }
+    }
+}
+
+/// Design-time parameters of an Arrow instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrowConfig {
+    /// Number of vector lanes (and register-file banks). Paper: 2.
+    pub lanes: usize,
+    /// Vector register length in bits. Paper: 256.
+    pub vlen_bits: u32,
+    /// Maximum element width in bits (= datapath word). Paper: 64.
+    pub elen_bits: u32,
+    /// Indexed (gather/scatter) memory access: decodes, but the paper
+    /// lists it as "still in development" — disabled by default.
+    pub indexed_mem: bool,
+    pub timing: VectorTiming,
+    pub mem_timing: MemTiming,
+}
+
+impl Default for ArrowConfig {
+    fn default() -> Self {
+        ArrowConfig {
+            lanes: 2,
+            vlen_bits: 256,
+            elen_bits: 64,
+            indexed_mem: false,
+            timing: VectorTiming::default(),
+            mem_timing: MemTiming::default(),
+        }
+    }
+}
+
+impl ArrowConfig {
+    /// Bytes per vector register.
+    pub fn vlen_bytes(&self) -> usize {
+        (self.vlen_bits / 8) as usize
+    }
+
+    /// Bytes per ELEN word (the SIMD ALU / memory datapath width).
+    pub fn elen_bytes(&self) -> usize {
+        (self.elen_bits / 8) as usize
+    }
+
+    /// Vector registers per register-file bank (= per lane).
+    pub fn regs_per_bank(&self) -> usize {
+        32 / self.lanes
+    }
+
+    /// Lane executing an instruction whose destination register is `vd`
+    /// (controller dispatch rule, §3.3).
+    pub fn lane_of(&self, vd: u8) -> usize {
+        (vd as usize) / self.regs_per_bank()
+    }
+
+    /// Sanity checks for a design-space point.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.lanes.is_power_of_two() || self.lanes == 0 || self.lanes > 32 {
+            return Err(format!("lanes must be a power of two in 1..=32, got {}", self.lanes));
+        }
+        if !matches!(self.vlen_bits, 64 | 128 | 256 | 512 | 1024) {
+            return Err(format!("unsupported VLEN {}", self.vlen_bits));
+        }
+        if !matches!(self.elen_bits, 32 | 64) {
+            return Err(format!("unsupported ELEN {}", self.elen_bits));
+        }
+        if self.vlen_bits < self.elen_bits {
+            return Err("VLEN must be >= ELEN".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configuration() {
+        let c = ArrowConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.lanes, 2);
+        assert_eq!(c.vlen_bytes(), 32);
+        assert_eq!(c.elen_bytes(), 8);
+        assert_eq!(c.regs_per_bank(), 16);
+    }
+
+    #[test]
+    fn lane_dispatch_rule() {
+        let c = ArrowConfig::default();
+        assert_eq!(c.lane_of(0), 0);
+        assert_eq!(c.lane_of(15), 0);
+        assert_eq!(c.lane_of(16), 1);
+        assert_eq!(c.lane_of(31), 1);
+        let four = ArrowConfig { lanes: 4, ..Default::default() };
+        assert_eq!(four.lane_of(8), 1);
+        assert_eq!(four.lane_of(31), 3);
+    }
+
+    #[test]
+    fn validation_rejects_bad_points() {
+        assert!(ArrowConfig { lanes: 3, ..Default::default() }.validate().is_err());
+        assert!(ArrowConfig { vlen_bits: 96, ..Default::default() }.validate().is_err());
+        assert!(
+            ArrowConfig { vlen_bits: 64, elen_bits: 64, ..Default::default() }
+                .validate()
+                .is_ok()
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! The Arrow vector co-processor (paper §3, Fig 1).
+//!
+//! A single-issue, multi-lane (default dual-lane) vector accelerator:
+//!
+//! * [`config`] — design-time parameters: LANES, VLEN, ELEN (paper:
+//!   2 lanes, VLEN=256, ELEN=64) and the per-stage cycle model.
+//! * [`vrf`] — the banked vector register file: one bank per lane
+//!   (v0-v15 / v16-v31 for two lanes), 2R1W per bank (§3.4).
+//! * [`offset`] — the offset generator: per-ELEN-word byte offsets and
+//!   WriteEnable byte-select masks (§3.4, Fig 2).
+//! * [`alu`] — the SIMD ALU: ELEN-bit words with SEW-segmented carry
+//!   chains, processing ELEN/SEW elements per word (§3.5, Fig 3).
+//! * [`unit`] — the execution engine tying decode/control, register
+//!   access, ALU, move/merge block and the memory unit (§3.6) together;
+//!   produces both the architectural effects and an [`unit::ExecPlan`]
+//!   describing the resources the system scheduler books (lane occupancy,
+//!   AXI beats).
+//!
+//! No chaining: one vector instruction occupies its lane start-to-finish
+//! (§3); overlap only happens between instructions routed to different
+//! lanes, which is exactly the dual-lane parallelism the controller's
+//! bank-dispatch scheme exposes (§3.3).
+
+pub mod alu;
+pub mod config;
+pub mod offset;
+pub mod unit;
+pub mod vrf;
+
+pub use config::{ArrowConfig, VectorTiming};
+pub use unit::{ArrowUnit, ExecError, ExecPlan, VectorEffect};

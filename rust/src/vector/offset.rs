@@ -1,0 +1,134 @@
+//! Offset generator (paper §3.4, Fig 2).
+//!
+//! Vector data moves through the datapath in ELEN-bit words; elements are
+//! SEW bits.  For each vector register the offset generator emits
+//! `VLEN/ELEN` word offsets, and for writes a per-byte WriteEnable
+//! selector saying which bytes of each ELEN word a result may update —
+//! that is how element masks, tails (`i >= vl`) and narrow SEW land on
+//! arbitrary bytes of the 64-bit write port.
+
+/// Per-byte write-enable mask for a register group, plus the word offsets
+/// the datapath walks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WriteEnable {
+    /// One flag per byte of the destination register group.
+    pub bytes: Vec<bool>,
+}
+
+impl WriteEnable {
+    /// Number of enabled bytes.
+    pub fn enabled(&self) -> usize {
+        self.bytes.iter().filter(|&&b| b).count()
+    }
+
+    /// Intersect with another enable mask.
+    pub fn and(mut self, other: &WriteEnable) -> WriteEnable {
+        assert_eq!(self.bytes.len(), other.bytes.len());
+        for (a, b) in self.bytes.iter_mut().zip(&other.bytes) {
+            *a &= *b;
+        }
+        self
+    }
+}
+
+/// ELEN-word offsets (in bytes) of a register group: `[VLEN/ELEN] * LMUL`
+/// offsets per §3.4.
+pub fn word_offsets(group_bytes: usize, elen_bytes: usize) -> Vec<usize> {
+    (0..group_bytes / elen_bytes).map(|w| w * elen_bytes).collect()
+}
+
+/// Write-enable covering elements `0..vl` of `sew_bytes`-wide elements in
+/// a `group_bytes`-long destination (tail-undisturbed: bytes past
+/// `vl * sew_bytes` stay off).
+pub fn enable_for_vl(group_bytes: usize, sew_bytes: usize, vl: usize) -> WriteEnable {
+    let active = (vl * sew_bytes).min(group_bytes);
+    let mut bytes = vec![false; group_bytes];
+    bytes[..active].iter_mut().for_each(|b| *b = true);
+    WriteEnable { bytes }
+}
+
+/// Write-enable from an element-level predicate (the v0 mask register):
+/// byte `i` is enabled iff its element index is < `vl` and
+/// `mask(elem_index)` holds.
+pub fn enable_for_mask(
+    group_bytes: usize,
+    sew_bytes: usize,
+    vl: usize,
+    mask: impl Fn(usize) -> bool,
+) -> WriteEnable {
+    let mut bytes = vec![false; group_bytes];
+    for (i, b) in bytes.iter_mut().enumerate() {
+        let elem = i / sew_bytes;
+        *b = elem < vl && mask(elem);
+    }
+    WriteEnable { bytes }
+}
+
+/// Write-enable for a single element (reductions write only element 0;
+/// `vmv.s.x` likewise).
+pub fn enable_for_element(
+    group_bytes: usize,
+    sew_bytes: usize,
+    elem: usize,
+) -> WriteEnable {
+    let mut bytes = vec![false; group_bytes];
+    let start = elem * sew_bytes;
+    if start + sew_bytes <= group_bytes {
+        bytes[start..start + sew_bytes].iter_mut().for_each(|b| *b = true);
+    }
+    WriteEnable { bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_offsets_paper_config() {
+        // VLEN=256 register (32 B) in ELEN=64 (8 B) words: 4 offsets.
+        assert_eq!(word_offsets(32, 8), vec![0, 8, 16, 24]);
+    }
+
+    #[test]
+    fn vl_enable_tail_undisturbed() {
+        // 8-element e32 register, vl=5: 20 bytes on, 12 off.
+        let we = enable_for_vl(32, 4, 5);
+        assert_eq!(we.enabled(), 20);
+        assert!(we.bytes[19]);
+        assert!(!we.bytes[20]);
+    }
+
+    #[test]
+    fn vl_enable_clamps_to_group() {
+        let we = enable_for_vl(32, 4, 100);
+        assert_eq!(we.enabled(), 32);
+    }
+
+    #[test]
+    fn mask_enable_fig2_pattern() {
+        // Fig 2: arbitrary bytes within an ELEN word enabled per element.
+        // e16 elements, mask on elements 0 and 2 -> bytes 0,1 and 4,5 of
+        // the first ELEN word.
+        let we = enable_for_mask(32, 2, 16, |e| e % 2 == 0);
+        assert!(we.bytes[0] && we.bytes[1]);
+        assert!(!we.bytes[2] && !we.bytes[3]);
+        assert!(we.bytes[4] && we.bytes[5]);
+        assert_eq!(we.enabled(), 16);
+    }
+
+    #[test]
+    fn element_enable_for_reduction() {
+        let we = enable_for_element(32, 4, 0);
+        assert_eq!(we.enabled(), 4);
+        assert!(we.bytes[0..4].iter().all(|&b| b));
+        let none = enable_for_element(32, 4, 9); // out of range
+        assert_eq!(none.enabled(), 0);
+    }
+
+    #[test]
+    fn and_composes_masks() {
+        let a = enable_for_vl(32, 4, 8);
+        let b = enable_for_mask(32, 4, 8, |e| e < 2);
+        assert_eq!(a.and(&b).enabled(), 8);
+    }
+}

@@ -1,0 +1,1092 @@
+//! The Arrow execution engine: decode/control, operand fetch, SIMD ALU,
+//! move/merge block and memory unit, tied to the banked VRF.
+//!
+//! `execute` applies the architectural effects of one vector instruction
+//! and returns an [`ExecPlan`] describing the resources it occupies (lane,
+//! execute cycles, AXI beats).  The *system* scheduler (`system::machine`)
+//! books those resources on the shared timeline — keeping function and
+//! timing separate the way the paper's datapath (Fig 1) separates control
+//! signals from data movement.
+
+use crate::isa::csr::Vtype;
+use crate::isa::reg::XReg;
+use crate::isa::rvv::{
+    AddrMode, MaskMode, OpCategory, VAluOp, VSrc2, VecInstr, VmemWidth,
+};
+use crate::mem::{BurstKind, Dram};
+
+use super::alu;
+use super::config::ArrowConfig;
+use super::offset;
+use super::vrf::Vrf;
+
+/// Resource booking for one executed vector instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecPlan {
+    /// Lane the controller dispatched to (by destination bank, §3.3).
+    pub lane: usize,
+    /// Cycles the lane's execute stage is occupied (excluding memory).
+    pub exec_cycles: u64,
+    /// AXI transaction this instruction performs, if any.
+    pub mem: Option<(BurstKind, u64)>,
+    /// Result the host reads back (`vsetvli` -> vl, `vmv.x.s`).
+    pub scalar_result: Option<u32>,
+    pub category: OpCategory,
+}
+
+/// Architectural side effects beyond the VRF (for tracing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct VectorEffect {
+    pub elements: u64,
+    pub mem_bytes: u64,
+}
+
+/// Vector execution faults.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecError {
+    /// Memory-op element width disagrees with vtype SEW.  Arrow requires
+    /// `vle<w>`/`vse<w>` width == SEW (EEW != SEW register-group
+    /// rescaling is not implemented by the hardware).
+    WidthMismatch { width: u32, sew: u32 },
+    /// Indexed (gather/scatter) access with `indexed_mem` disabled —
+    /// "still in development" in the paper.
+    IndexedUnsupported,
+    /// Register group not aligned to LMUL or spilling past v31.
+    BadRegisterGroup { reg: u8, lmul: u32 },
+    /// Reserved vtype encoding.
+    BadVtype { vtypei: u32 },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::WidthMismatch { width, sew } => write!(
+                f,
+                "vector memory width e{width} != SEW e{sew} (EEW rescaling unsupported)"
+            ),
+            ExecError::IndexedUnsupported => {
+                write!(f, "indexed vector memory access is not enabled")
+            }
+            ExecError::BadRegisterGroup { reg, lmul } => {
+                write!(f, "register group v{reg} invalid for LMUL {lmul}")
+            }
+            ExecError::BadVtype { vtypei } => {
+                write!(f, "reserved vtype encoding {vtypei:#x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// Cumulative co-processor statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UnitStats {
+    pub instructions: u64,
+    pub config_ops: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub arith_ops: u64,
+    pub reductions: u64,
+    pub moves: u64,
+    pub elements_processed: u64,
+    pub mem_bytes: u64,
+}
+
+/// The Arrow co-processor state.
+#[derive(Debug, Clone)]
+pub struct ArrowUnit {
+    config: ArrowConfig,
+    vrf: Vrf,
+    vtype: Vtype,
+    vl: u32,
+    stats: UnitStats,
+}
+
+impl ArrowUnit {
+    pub fn new(config: ArrowConfig) -> Self {
+        config.validate().expect("invalid Arrow configuration");
+        ArrowUnit {
+            vrf: Vrf::new(&config),
+            config,
+            vtype: Vtype::default(),
+            vl: 0,
+            stats: UnitStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &ArrowConfig {
+        &self.config
+    }
+
+    pub fn vl(&self) -> u32 {
+        self.vl
+    }
+
+    pub fn vtype(&self) -> Vtype {
+        self.vtype
+    }
+
+    pub fn stats(&self) -> UnitStats {
+        self.stats
+    }
+
+    pub fn vrf(&self) -> &Vrf {
+        &self.vrf
+    }
+
+    fn sew_bytes(&self) -> usize {
+        (self.vtype.sew_bits / 8) as usize
+    }
+
+    fn check_group(&self, reg: u8) -> Result<(), ExecError> {
+        let lmul = self.vtype.lmul;
+        if reg as u32 % lmul != 0 || reg as u32 + lmul > 32 {
+            return Err(ExecError::BadRegisterGroup { reg, lmul });
+        }
+        Ok(())
+    }
+
+    /// Mask predicate from v0 (one bit per element, LSB-first).
+    fn mask_bit(v0: &[u8], elem: usize) -> bool {
+        (v0[elem / 8] >> (elem % 8)) & 1 == 1
+    }
+
+    /// ELEN-word passes the SIMD ALU needs for `vl` SEW elements.
+    fn word_passes(&self, vl: u32) -> u64 {
+        let active = vl as u64 * self.sew_bytes() as u64;
+        active.div_ceil(self.config.elen_bytes() as u64)
+    }
+
+    fn exec_cycles_for(&self, category: OpCategory, vl: u32) -> u64 {
+        let t = self.config.timing;
+        let words = self.word_passes(vl).max(1);
+        match category {
+            OpCategory::Config => 1,
+            OpCategory::Arith | OpCategory::MoveMerge => {
+                t.issue_overhead + words.div_ceil(t.alu_words_per_cycle)
+            }
+            OpCategory::Reduction => {
+                t.issue_overhead
+                    + words.div_ceil(t.alu_words_per_cycle)
+                    + t.reduction_tail
+            }
+            // Memory ops: the lane is occupied for the pipeline overhead;
+            // transfer time is booked on the AXI port by the scheduler.
+            OpCategory::Load | OpCategory::Store => t.issue_overhead,
+        }
+    }
+
+    /// Execute one vector instruction.  `rs1_value`/`rs2_value` are the
+    /// scalar operands snapshot at dispatch; `rs1_is_x0` drives the
+    /// `vsetvli x0` VLMAX idiom.
+    pub fn execute(
+        &mut self,
+        instr: VecInstr,
+        rs1_value: u32,
+        rs2_value: u32,
+        dram: &mut Dram,
+    ) -> Result<ExecPlan, ExecError> {
+        self.stats.instructions += 1;
+        match instr {
+            VecInstr::VsetVli { rd, rs1, vtypei } => {
+                let vtype = Vtype::decode(vtypei)
+                    .ok_or(ExecError::BadVtype { vtypei })?;
+                let vlmax = vtype.vlmax(self.config.vlen_bits);
+                let avl = if rs1 == XReg::ZERO {
+                    if rd == XReg::ZERO {
+                        self.vl // keep vl (vtype change only)
+                    } else {
+                        vlmax
+                    }
+                } else {
+                    rs1_value
+                };
+                self.vtype = vtype;
+                self.vl = vtype.compute_vl(avl, self.config.vlen_bits);
+                self.stats.config_ops += 1;
+                Ok(ExecPlan {
+                    lane: 0,
+                    exec_cycles: self.exec_cycles_for(OpCategory::Config, 0),
+                    mem: None,
+                    scalar_result: Some(self.vl),
+                    category: OpCategory::Config,
+                })
+            }
+            VecInstr::Load { vd, width, mode, mask, .. } => {
+                self.exec_load(vd, rs1_value, rs2_value, width, mode, mask, dram)
+            }
+            VecInstr::Store { vs3, width, mode, mask, .. } => {
+                self.exec_store(vs3, rs1_value, rs2_value, width, mode, mask, dram)
+            }
+            VecInstr::Alu { op, vd, vs2, src2, mask } => {
+                if op == VAluOp::Merge {
+                    self.exec_merge(vd, vs2, src2, mask, rs1_value)
+                } else if op.is_reduction() {
+                    self.exec_reduction(op, vd, vs2, src2, mask)
+                } else if op.is_compare() {
+                    self.exec_compare(op, vd, vs2, src2, mask, rs1_value)
+                } else {
+                    self.exec_arith(op, vd, vs2, src2, mask, rs1_value)
+                }
+            }
+            VecInstr::MvXs { vs2, .. } => {
+                let group = self.vrf.read_group(vs2.0, 1);
+                let v = alu::read_elem(&group, 0, self.sew_bytes());
+                self.stats.moves += 1;
+                Ok(ExecPlan {
+                    lane: self.config.lane_of(vs2.0),
+                    exec_cycles: self
+                        .exec_cycles_for(OpCategory::MoveMerge, 1),
+                    mem: None,
+                    scalar_result: Some(v as u32),
+                    category: OpCategory::MoveMerge,
+                })
+            }
+            VecInstr::MvSx { vd, .. } => {
+                self.check_group(vd.0)?;
+                let sew_bytes = self.sew_bytes();
+                let mut data = self.vrf.peek_group(vd.0, 1).to_vec();
+                alu::write_elem(&mut data, 0, sew_bytes, rs1_value as i32 as i64);
+                let we = offset::enable_for_element(data.len(), sew_bytes, 0);
+                self.vrf.write_group_masked(vd.0, &data, &we.bytes);
+                self.stats.moves += 1;
+                Ok(ExecPlan {
+                    lane: self.config.lane_of(vd.0),
+                    exec_cycles: self
+                        .exec_cycles_for(OpCategory::MoveMerge, 1),
+                    mem: None,
+                    scalar_result: None,
+                    category: OpCategory::MoveMerge,
+                })
+            }
+        }
+    }
+
+    /// Broadcast / gather the second operand as SEW elements.
+    fn src2_elems(
+        &mut self,
+        src2: VSrc2,
+        vl: usize,
+        rs1_value: u32,
+    ) -> Result<Vec<i64>, ExecError> {
+        let sew_bytes = self.sew_bytes();
+        Ok(match src2 {
+            VSrc2::V(vs1) => {
+                self.check_group(vs1.0)?;
+                let g = self.vrf.read_group(vs1.0, self.vtype.lmul);
+                (0..vl).map(|i| alu::read_elem(&g, i, sew_bytes)).collect()
+            }
+            VSrc2::X(_) => vec![rs1_value as i32 as i64; vl],
+            VSrc2::I(imm) => vec![imm as i64; vl],
+        })
+    }
+
+    fn exec_arith(
+        &mut self,
+        op: VAluOp,
+        vd: crate::isa::reg::VReg,
+        vs2: crate::isa::reg::VReg,
+        src2: VSrc2,
+        mask: MaskMode,
+        rs1_value: u32,
+    ) -> Result<ExecPlan, ExecError> {
+        self.check_group(vd.0)?;
+        self.check_group(vs2.0)?;
+        let vl = self.vl as usize;
+        let sew_bytes = self.sew_bytes();
+        let sew_bits = self.vtype.sew_bits;
+        let a = self.vrf.read_group(vs2.0, self.vtype.lmul);
+        // Broadcast operands (.vx/.vi) skip the element-vector
+        // materialisation — the hot path of the matmul axpy loop (§Perf).
+        let b_vec: Option<Vec<i64>> = match src2 {
+            VSrc2::V(vs1) => {
+                self.check_group(vs1.0)?;
+                let g = self.vrf.read_group(vs1.0, self.vtype.lmul);
+                Some((0..vl).map(|i| alu::read_elem(&g, i, sew_bytes)).collect())
+            }
+            _ => None,
+        };
+        let b_scalar: i64 = match src2 {
+            VSrc2::X(_) => rs1_value as i32 as i64,
+            VSrc2::I(imm) => imm as i64,
+            VSrc2::V(_) => 0,
+        };
+
+        let mut out = self.vrf.peek_group(vd.0, self.vtype.lmul).to_vec();
+        for i in 0..vl {
+            let av = alu::read_elem(&a, i, sew_bytes);
+            let bv = match &b_vec {
+                Some(b) => b[i],
+                None => b_scalar,
+            };
+            alu::write_elem(&mut out, i, sew_bytes, alu::eval(op, av, bv, sew_bits));
+        }
+        match mask {
+            // tail-undisturbed prefix write, no per-byte enable vector
+            MaskMode::Unmasked => self.vrf.write_group_prefix(
+                vd.0,
+                &out,
+                (vl * sew_bytes).min(out.len()),
+            ),
+            MaskMode::Masked => {
+                let v0 = self.vrf.peek_group(0, 1).to_vec();
+                let we =
+                    offset::enable_for_mask(out.len(), sew_bytes, vl, |e| {
+                        Self::mask_bit(&v0, e)
+                    });
+                self.vrf.write_group_masked(vd.0, &out, &we.bytes);
+            }
+        }
+        self.stats.arith_ops += 1;
+        self.stats.elements_processed += vl as u64;
+        Ok(ExecPlan {
+            lane: self.config.lane_of(vd.0),
+            exec_cycles: self.exec_cycles_for(OpCategory::Arith, self.vl),
+            mem: None,
+            scalar_result: None,
+            category: OpCategory::Arith,
+        })
+    }
+
+    fn exec_compare(
+        &mut self,
+        op: VAluOp,
+        vd: crate::isa::reg::VReg,
+        vs2: crate::isa::reg::VReg,
+        src2: VSrc2,
+        mask: MaskMode,
+        rs1_value: u32,
+    ) -> Result<ExecPlan, ExecError> {
+        self.check_group(vs2.0)?;
+        let vl = self.vl as usize;
+        let sew_bytes = self.sew_bytes();
+        let sew_bits = self.vtype.sew_bits;
+        let a = self.vrf.read_group(vs2.0, self.vtype.lmul);
+        let b = self.src2_elems(src2, vl, rs1_value)?;
+        let v0 = self.vrf.peek_group(0, 1).to_vec();
+
+        // Mask destination is a single register; bits past vl undisturbed.
+        let mut out = self.vrf.peek_group(vd.0, 1).to_vec();
+        for i in 0..vl {
+            if mask == MaskMode::Masked && !Self::mask_bit(&v0, i) {
+                continue;
+            }
+            let av = alu::read_elem(&a, i, sew_bytes);
+            let bit = alu::eval(op, av, b[i], sew_bits) & 1;
+            let byte = &mut out[i / 8];
+            *byte = (*byte & !(1 << (i % 8))) | ((bit as u8) << (i % 8));
+        }
+        self.vrf.write_group(vd.0, &out);
+        self.stats.arith_ops += 1;
+        self.stats.elements_processed += vl as u64;
+        Ok(ExecPlan {
+            lane: self.config.lane_of(vd.0),
+            exec_cycles: self.exec_cycles_for(OpCategory::Arith, self.vl),
+            mem: None,
+            scalar_result: None,
+            category: OpCategory::Arith,
+        })
+    }
+
+    fn exec_merge(
+        &mut self,
+        vd: crate::isa::reg::VReg,
+        vs2: crate::isa::reg::VReg,
+        src2: VSrc2,
+        mask: MaskMode,
+        rs1_value: u32,
+    ) -> Result<ExecPlan, ExecError> {
+        self.check_group(vd.0)?;
+        let vl = self.vl as usize;
+        let sew_bytes = self.sew_bytes();
+        let b = self.src2_elems(src2, vl, rs1_value)?;
+        let v0 = self.vrf.peek_group(0, 1).to_vec();
+
+        let mut out = self.vrf.peek_group(vd.0, self.vtype.lmul).to_vec();
+        match mask {
+            // vmv.v.*: unconditional move of src2.
+            MaskMode::Unmasked => {
+                for (i, &bv) in b.iter().enumerate().take(vl) {
+                    alu::write_elem(&mut out, i, sew_bytes, bv);
+                }
+            }
+            // vmerge: vd[i] = v0[i] ? src2[i] : vs2[i].
+            MaskMode::Masked => {
+                self.check_group(vs2.0)?;
+                let a = self.vrf.read_group(vs2.0, self.vtype.lmul);
+                for i in 0..vl {
+                    let v = if Self::mask_bit(&v0, i) {
+                        b[i]
+                    } else {
+                        alu::read_elem(&a, i, sew_bytes)
+                    };
+                    alu::write_elem(&mut out, i, sew_bytes, v);
+                }
+            }
+        }
+        self.vrf.write_group_prefix(
+            vd.0,
+            &out,
+            (vl * sew_bytes).min(out.len()),
+        );
+        self.stats.moves += 1;
+        self.stats.elements_processed += vl as u64;
+        Ok(ExecPlan {
+            lane: self.config.lane_of(vd.0),
+            exec_cycles: self.exec_cycles_for(OpCategory::MoveMerge, self.vl),
+            mem: None,
+            scalar_result: None,
+            category: OpCategory::MoveMerge,
+        })
+    }
+
+    fn exec_reduction(
+        &mut self,
+        op: VAluOp,
+        vd: crate::isa::reg::VReg,
+        vs2: crate::isa::reg::VReg,
+        src2: VSrc2,
+        mask: MaskMode,
+    ) -> Result<ExecPlan, ExecError> {
+        self.check_group(vs2.0)?;
+        let vl = self.vl as usize;
+        let sew_bytes = self.sew_bytes();
+        let sew_bits = self.vtype.sew_bits;
+        let VSrc2::V(vs1) = src2 else {
+            unreachable!("reductions are .vs only (enforced by decode)")
+        };
+        let seed_group = self.vrf.read_group(vs1.0, 1);
+        let mut acc = alu::read_elem(&seed_group, 0, sew_bytes);
+        let a = self.vrf.read_group(vs2.0, self.vtype.lmul);
+        let v0 = self.vrf.peek_group(0, 1).to_vec();
+        for i in 0..vl {
+            if mask == MaskMode::Masked && !Self::mask_bit(&v0, i) {
+                continue;
+            }
+            acc = alu::eval(op, acc, alu::read_elem(&a, i, sew_bytes), sew_bits);
+        }
+        let mut out = self.vrf.peek_group(vd.0, 1).to_vec();
+        alu::write_elem(&mut out, 0, sew_bytes, acc);
+        let we = offset::enable_for_element(out.len(), sew_bytes, 0);
+        self.vrf.write_group_masked(vd.0, &out, &we.bytes);
+        self.stats.reductions += 1;
+        self.stats.elements_processed += vl as u64;
+        Ok(ExecPlan {
+            lane: self.config.lane_of(vd.0),
+            exec_cycles: self.exec_cycles_for(OpCategory::Reduction, self.vl),
+            mem: None,
+            scalar_result: None,
+            category: OpCategory::Reduction,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_load(
+        &mut self,
+        vd: crate::isa::reg::VReg,
+        base: u32,
+        stride: u32,
+        width: VmemWidth,
+        mode: AddrMode,
+        mask: MaskMode,
+        dram: &mut Dram,
+    ) -> Result<ExecPlan, ExecError> {
+        self.check_mem(width, &mode)?;
+        self.check_group(vd.0)?;
+        let vl = self.vl as usize;
+        let sew_bytes = self.sew_bytes();
+        let v0 = self.vrf.peek_group(0, 1).to_vec();
+
+        let mut data = self.vrf.peek_group(vd.0, self.vtype.lmul).to_vec();
+        let (kind, beats) = match mode {
+            AddrMode::UnitStride => {
+                let mut buf = vec![0u8; vl * sew_bytes];
+                dram.read_bytes(base, &mut buf);
+                data[..buf.len()].copy_from_slice(&buf);
+                let beats = (vl as u64 * sew_bytes as u64)
+                    .div_ceil(self.config.elen_bytes() as u64);
+                (BurstKind::Unit, beats)
+            }
+            AddrMode::Strided { .. } => {
+                for i in 0..vl {
+                    let addr =
+                        base.wrapping_add((stride as i32 * i as i32) as u32);
+                    let mut buf = [0u8; 8];
+                    dram.read_bytes(addr, &mut buf[..sew_bytes]);
+                    data[i * sew_bytes..(i + 1) * sew_bytes]
+                        .copy_from_slice(&buf[..sew_bytes]);
+                }
+                // One ELEN-wide access per element (§3.7: every access is
+                // 64 bits wide whether the data is needed or not).
+                (BurstKind::Strided, vl as u64)
+            }
+            AddrMode::Indexed { vs2 } => {
+                // Gather: element i comes from base + zext(offsets[i]),
+                // offsets read at SEW width from vs2 (vlxei<SEW>).  Each
+                // element is its own ELEN-wide access, like strided.
+                self.check_group(vs2.0)?;
+                let offs = self.vrf.read_group(vs2.0, self.vtype.lmul);
+                let zmask: u64 = if sew_bytes == 8 { u64::MAX } else { (1u64 << (sew_bytes * 8)) - 1 };
+                for i in 0..vl {
+                    // indices zero-extend (vlxei semantics)
+                    let off = (alu::read_elem(&offs, i, sew_bytes) as u64 & zmask) as u32;
+                    let addr = base.wrapping_add(off);
+                    let mut buf = [0u8; 8];
+                    dram.read_bytes(addr, &mut buf[..sew_bytes]);
+                    data[i * sew_bytes..(i + 1) * sew_bytes]
+                        .copy_from_slice(&buf[..sew_bytes]);
+                }
+                (BurstKind::Strided, vl as u64)
+            }
+        };
+        // WriteEnMemSel: vl-tail x element mask (Fig 2 / §3.6).
+        match mask {
+            MaskMode::Unmasked => self.vrf.write_group_prefix(
+                vd.0,
+                &data,
+                (vl * sew_bytes).min(data.len()),
+            ),
+            MaskMode::Masked => {
+                let we = offset::enable_for_mask(
+                    data.len(),
+                    sew_bytes,
+                    vl,
+                    |e| Self::mask_bit(&v0, e),
+                );
+                self.vrf.write_group_masked(vd.0, &data, &we.bytes);
+            }
+        }
+        self.stats.loads += 1;
+        self.stats.elements_processed += vl as u64;
+        self.stats.mem_bytes += beats * self.config.elen_bytes() as u64;
+        Ok(ExecPlan {
+            lane: self.config.lane_of(vd.0),
+            exec_cycles: self.exec_cycles_for(OpCategory::Load, self.vl),
+            mem: Some((kind, beats)),
+            scalar_result: None,
+            category: OpCategory::Load,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_store(
+        &mut self,
+        vs3: crate::isa::reg::VReg,
+        base: u32,
+        stride: u32,
+        width: VmemWidth,
+        mode: AddrMode,
+        mask: MaskMode,
+        dram: &mut Dram,
+    ) -> Result<ExecPlan, ExecError> {
+        self.check_mem(width, &mode)?;
+        self.check_group(vs3.0)?;
+        let vl = self.vl as usize;
+        let sew_bytes = self.sew_bytes();
+        let v0 = self.vrf.peek_group(0, 1).to_vec();
+        let data = self.vrf.read_group(vs3.0, self.vtype.lmul);
+
+        let enabled = |e: usize| {
+            mask == MaskMode::Unmasked || Self::mask_bit(&v0, e)
+        };
+        let (kind, beats) = match mode {
+            AddrMode::UnitStride => {
+                for i in 0..vl {
+                    if enabled(i) {
+                        dram.write_bytes(
+                            base.wrapping_add((i * sew_bytes) as u32),
+                            &data[i * sew_bytes..(i + 1) * sew_bytes],
+                        );
+                    }
+                }
+                let beats = (vl as u64 * sew_bytes as u64)
+                    .div_ceil(self.config.elen_bytes() as u64);
+                (BurstKind::Unit, beats)
+            }
+            AddrMode::Strided { .. } => {
+                for i in 0..vl {
+                    if enabled(i) {
+                        let addr = base
+                            .wrapping_add((stride as i32 * i as i32) as u32);
+                        dram.write_bytes(
+                            addr,
+                            &data[i * sew_bytes..(i + 1) * sew_bytes],
+                        );
+                    }
+                }
+                (BurstKind::Strided, vl as u64)
+            }
+            AddrMode::Indexed { vs2 } => {
+                // Scatter: element i goes to base + zext(offsets[i]).
+                self.check_group(vs2.0)?;
+                let offs = self.vrf.read_group(vs2.0, self.vtype.lmul);
+                let zmask: u64 = if sew_bytes == 8 { u64::MAX } else { (1u64 << (sew_bytes * 8)) - 1 };
+                for i in 0..vl {
+                    if enabled(i) {
+                        let off = (alu::read_elem(&offs, i, sew_bytes) as u64 & zmask) as u32;
+                        dram.write_bytes(
+                            base.wrapping_add(off),
+                            &data[i * sew_bytes..(i + 1) * sew_bytes],
+                        );
+                    }
+                }
+                (BurstKind::Strided, vl as u64)
+            }
+        };
+        self.stats.stores += 1;
+        self.stats.elements_processed += vl as u64;
+        self.stats.mem_bytes += beats * self.config.elen_bytes() as u64;
+        Ok(ExecPlan {
+            lane: self.config.lane_of(vs3.0),
+            exec_cycles: self.exec_cycles_for(OpCategory::Store, self.vl),
+            mem: Some((kind, beats)),
+            scalar_result: None,
+            category: OpCategory::Store,
+        })
+    }
+
+    fn check_mem(
+        &self,
+        width: VmemWidth,
+        mode: &AddrMode,
+    ) -> Result<(), ExecError> {
+        if matches!(mode, AddrMode::Indexed { .. }) && !self.config.indexed_mem
+        {
+            return Err(ExecError::IndexedUnsupported);
+        }
+        if width.bits() != self.vtype.sew_bits {
+            return Err(ExecError::WidthMismatch {
+                width: width.bits(),
+                sew: self.vtype.sew_bits,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::VReg;
+
+    fn setup(sew: u32, lmul: u32, avl: u32) -> (ArrowUnit, Dram) {
+        let mut unit = ArrowUnit::new(ArrowConfig::default());
+        let mut dram = Dram::new();
+        let vt = Vtype::new(sew, lmul).encode();
+        unit.execute(
+            VecInstr::VsetVli { rd: XReg(5), rs1: XReg(10), vtypei: vt },
+            avl,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        (unit, dram)
+    }
+
+    fn load_unit(unit: &mut ArrowUnit, dram: &mut Dram, vd: u8, addr: u32) {
+        unit.execute(
+            VecInstr::Load {
+                vd: VReg(vd),
+                rs1: XReg(10),
+                width: VmemWidth::E32,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Unmasked,
+            },
+            addr,
+            0,
+            dram,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn vsetvli_returns_vl() {
+        let (unit, _) = setup(32, 8, 1000);
+        assert_eq!(unit.vl(), 64); // VLEN=256 * m8 / e32
+        let (unit, _) = setup(32, 1, 5);
+        assert_eq!(unit.vl(), 5);
+    }
+
+    #[test]
+    fn load_add_store_roundtrip() {
+        let (mut unit, mut dram) = setup(32, 1, 8);
+        let xs: Vec<i32> = (0..8).collect();
+        let ys: Vec<i32> = (100..108).collect();
+        dram.write_i32_slice(0x1000, &xs);
+        dram.write_i32_slice(0x2000, &ys);
+        load_unit(&mut unit, &mut dram, 1, 0x1000);
+        load_unit(&mut unit, &mut dram, 2, 0x2000);
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Add,
+                vd: VReg(3),
+                vs2: VReg(1),
+                src2: VSrc2::V(VReg(2)),
+                mask: MaskMode::Unmasked,
+            },
+            0,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        unit.execute(
+            VecInstr::Store {
+                vs3: VReg(3),
+                rs1: XReg(11),
+                width: VmemWidth::E32,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Unmasked,
+            },
+            0x3000,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        assert_eq!(
+            dram.read_i32_slice(0x3000, 8),
+            vec![100, 102, 104, 106, 108, 110, 112, 114]
+        );
+    }
+
+    #[test]
+    fn lane_dispatch_and_plan() {
+        let (mut unit, mut dram) = setup(32, 8, 64);
+        dram.write_i32_slice(0x1000, &vec![1; 64]);
+        let plan = unit
+            .execute(
+                VecInstr::Load {
+                    vd: VReg(16),
+                    rs1: XReg(10),
+                    width: VmemWidth::E32,
+                    mode: AddrMode::UnitStride,
+                    mask: MaskMode::Unmasked,
+                },
+                0x1000,
+                0,
+                &mut dram,
+            )
+            .unwrap();
+        assert_eq!(plan.lane, 1);
+        // 64 e32 elements = 256 bytes = 32 ELEN beats
+        assert_eq!(plan.mem, Some((BurstKind::Unit, 32)));
+    }
+
+    #[test]
+    fn strided_load_gathers_column() {
+        let (mut unit, mut dram) = setup(32, 1, 4);
+        // 4x4 row-major matrix; gather column 1 with stride 16 bytes.
+        let m: Vec<i32> = (0..16).collect();
+        dram.write_i32_slice(0x4000, &m);
+        let plan = unit
+            .execute(
+                VecInstr::Load {
+                    vd: VReg(1),
+                    rs1: XReg(10),
+                    width: VmemWidth::E32,
+                    mode: AddrMode::Strided { rs2: XReg(11) },
+                    mask: MaskMode::Unmasked,
+                },
+                0x4000 + 4,
+                16,
+                &mut dram,
+            )
+            .unwrap();
+        assert_eq!(plan.mem, Some((BurstKind::Strided, 4)));
+        unit.execute(
+            VecInstr::Store {
+                vs3: VReg(1),
+                rs1: XReg(12),
+                width: VmemWidth::E32,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Unmasked,
+            },
+            0x5000,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        assert_eq!(dram.read_i32_slice(0x5000, 4), vec![1, 5, 9, 13]);
+    }
+
+    #[test]
+    fn vx_broadcast_and_relu_idiom() {
+        let (mut unit, mut dram) = setup(32, 1, 8);
+        let xs: Vec<i32> = vec![-3, 5, -1, 0, 7, -9, 2, -8];
+        dram.write_i32_slice(0x1000, &xs);
+        load_unit(&mut unit, &mut dram, 1, 0x1000);
+        // vmax.vx v2, v1, x0  (relu)
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Max,
+                vd: VReg(2),
+                vs2: VReg(1),
+                src2: VSrc2::X(XReg(0)),
+                mask: MaskMode::Unmasked,
+            },
+            0,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        unit.execute(
+            VecInstr::Store {
+                vs3: VReg(2),
+                rs1: XReg(11),
+                width: VmemWidth::E32,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Unmasked,
+            },
+            0x2000,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        assert_eq!(
+            dram.read_i32_slice(0x2000, 8),
+            vec![0, 5, 0, 0, 7, 0, 2, 0]
+        );
+    }
+
+    #[test]
+    fn reduction_sums_with_seed() {
+        let (mut unit, mut dram) = setup(32, 1, 8);
+        dram.write_i32_slice(0x1000, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        load_unit(&mut unit, &mut dram, 1, 0x1000);
+        // seed v2[0] = 100 via vmv.s.x
+        unit.execute(
+            VecInstr::MvSx { vd: VReg(2), rs1: XReg(10) },
+            100,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::RedSum,
+                vd: VReg(3),
+                vs2: VReg(1),
+                src2: VSrc2::V(VReg(2)),
+                mask: MaskMode::Unmasked,
+            },
+            0,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        let plan = unit
+            .execute(VecInstr::MvXs { rd: XReg(10), vs2: VReg(3) }, 0, 0, &mut dram)
+            .unwrap();
+        assert_eq!(plan.scalar_result, Some(136));
+    }
+
+    #[test]
+    fn masked_merge_selects() {
+        let (mut unit, mut dram) = setup(32, 1, 8);
+        dram.write_i32_slice(0x1000, &[10, 20, 30, 40, 50, 60, 70, 80]);
+        load_unit(&mut unit, &mut dram, 1, 0x1000);
+        // v0 mask = 0b01010101
+        let mut mask_bytes = vec![0u8; 32];
+        mask_bytes[0] = 0b0101_0101;
+        // place mask via vmv after switching to e8? simpler: compare.
+        // vmslt.vx v0, v1, 45 -> elements < 45 set (first four + none)
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Mslt,
+                vd: VReg(0),
+                vs2: VReg(1),
+                src2: VSrc2::X(XReg(11)),
+                mask: MaskMode::Unmasked,
+            },
+            45,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        // vmerge.vxm v2, v1, 0, v0: where mask -> 0, else v1
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Merge,
+                vd: VReg(2),
+                vs2: VReg(1),
+                src2: VSrc2::X(XReg(0)),
+                mask: MaskMode::Masked,
+            },
+            0,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        unit.execute(
+            VecInstr::Store {
+                vs3: VReg(2),
+                rs1: XReg(12),
+                width: VmemWidth::E32,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Unmasked,
+            },
+            0x2000,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        assert_eq!(
+            dram.read_i32_slice(0x2000, 8),
+            vec![0, 0, 0, 0, 50, 60, 70, 80]
+        );
+    }
+
+    #[test]
+    fn tail_undisturbed_on_short_vl() {
+        let (mut unit, mut dram) = setup(32, 1, 8);
+        dram.write_i32_slice(0x1000, &[9; 8]);
+        load_unit(&mut unit, &mut dram, 1, 0x1000);
+        // shrink vl to 3, overwrite with zeros via vmv.v.i
+        let vt = Vtype::new(32, 1).encode();
+        unit.execute(
+            VecInstr::VsetVli { rd: XReg(5), rs1: XReg(10), vtypei: vt },
+            3,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Merge,
+                vd: VReg(1),
+                vs2: VReg(0),
+                src2: VSrc2::I(0),
+                mask: MaskMode::Unmasked,
+            },
+            0,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        let g = unit.vrf().peek_group(1, 1).to_vec();
+        let elems: Vec<i64> =
+            (0..8).map(|i| alu::read_elem(&g, i, 4)).collect();
+        assert_eq!(elems, vec![0, 0, 0, 9, 9, 9, 9, 9]);
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        let (mut unit, mut dram) = setup(32, 1, 8);
+        let r = unit.execute(
+            VecInstr::Load {
+                vd: VReg(1),
+                rs1: XReg(10),
+                width: VmemWidth::E16,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Unmasked,
+            },
+            0x1000,
+            0,
+            &mut dram,
+        );
+        assert!(matches!(r, Err(ExecError::WidthMismatch { .. })));
+    }
+
+    #[test]
+    fn indexed_gather_scatter_when_enabled() {
+        let config = ArrowConfig { indexed_mem: true, ..Default::default() };
+        let mut unit = ArrowUnit::new(config);
+        let mut dram = Dram::new();
+        let vt = Vtype::new(32, 1).encode();
+        unit.execute(
+            VecInstr::VsetVli { rd: XReg(5), rs1: XReg(10), vtypei: vt },
+            8,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        // table[i] = 100 + i; offsets pick a permutation (byte offsets)
+        dram.write_i32_slice(0x1000, &(0..16).map(|i| 100 + i).collect::<Vec<_>>());
+        let perm = [7i32, 0, 3, 1, 6, 2, 5, 4];
+        let offs: Vec<i32> = perm.iter().map(|&p| p * 4).collect();
+        dram.write_i32_slice(0x2000, &offs);
+        unit.execute(
+            VecInstr::Load {
+                vd: VReg(2),
+                rs1: XReg(10),
+                width: VmemWidth::E32,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Unmasked,
+            },
+            0x2000,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        let plan = unit
+            .execute(
+                VecInstr::Load {
+                    vd: VReg(1),
+                    rs1: XReg(10),
+                    width: VmemWidth::E32,
+                    mode: AddrMode::Indexed { vs2: VReg(2) },
+                    mask: MaskMode::Unmasked,
+                },
+                0x1000,
+                0,
+                &mut dram,
+            )
+            .unwrap();
+        assert_eq!(plan.mem, Some((BurstKind::Strided, 8)));
+        // scatter the gathered values to 0x3000 + same offsets
+        unit.execute(
+            VecInstr::Store {
+                vs3: VReg(1),
+                rs1: XReg(11),
+                width: VmemWidth::E32,
+                mode: AddrMode::Indexed { vs2: VReg(2) },
+                mask: MaskMode::Unmasked,
+            },
+            0x3000,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        // gather then scatter through the same permutation restores order
+        assert_eq!(
+            dram.read_i32_slice(0x3000, 8),
+            (0..8).map(|i| 100 + i).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn indexed_gated() {
+        let (mut unit, mut dram) = setup(32, 1, 8);
+        let r = unit.execute(
+            VecInstr::Load {
+                vd: VReg(1),
+                rs1: XReg(10),
+                width: VmemWidth::E32,
+                mode: AddrMode::Indexed { vs2: VReg(2) },
+                mask: MaskMode::Unmasked,
+            },
+            0x1000,
+            0,
+            &mut dram,
+        );
+        assert_eq!(r, Err(ExecError::IndexedUnsupported));
+    }
+
+    #[test]
+    fn lmul_group_misalignment_rejected() {
+        let (mut unit, mut dram) = setup(32, 8, 64);
+        let r = unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Add,
+                vd: VReg(3), // not a multiple of 8
+                vs2: VReg(0),
+                src2: VSrc2::V(VReg(8)),
+                mask: MaskMode::Unmasked,
+            },
+            0,
+            0,
+            &mut dram,
+        );
+        assert!(matches!(r, Err(ExecError::BadRegisterGroup { .. })));
+    }
+}

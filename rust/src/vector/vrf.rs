@@ -1,0 +1,187 @@
+//! Banked vector register file (paper §3.4).
+//!
+//! One bank per lane: for the dual-lane configuration, bank 0 holds
+//! v0-v15 and bank 1 holds v16-v31.  Each bank has two read ports and one
+//! write port, letting both banks feed both lanes each cycle.  Writes go
+//! through per-byte write-enable masks produced by the offset generator
+//! (Fig 2) — this is how masked and tail-undisturbed element updates reach
+//! arbitrary bytes inside an ELEN-bit word.
+
+use super::config::ArrowConfig;
+
+/// Per-bank access statistics (exercised by tests and the energy model).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BankStats {
+    pub reads: u64,
+    pub writes: u64,
+}
+
+/// The vector register file: 32 x VLEN bits, banked by lane.
+#[derive(Debug, Clone)]
+pub struct Vrf {
+    bytes: Vec<u8>,
+    vlen_bytes: usize,
+    regs_per_bank: usize,
+    stats: Vec<BankStats>,
+}
+
+impl Vrf {
+    pub fn new(config: &ArrowConfig) -> Self {
+        Vrf {
+            bytes: vec![0; 32 * config.vlen_bytes()],
+            vlen_bytes: config.vlen_bytes(),
+            regs_per_bank: config.regs_per_bank(),
+            stats: vec![BankStats::default(); config.lanes],
+        }
+    }
+
+    fn bank_of(&self, reg: u8) -> usize {
+        (reg as usize) / self.regs_per_bank
+    }
+
+    fn check_group(&self, reg: u8, lmul: u32) {
+        assert!(reg < 32, "vector register {reg} out of range");
+        assert!(
+            reg as u32 % lmul == 0,
+            "register group v{reg} not aligned to LMUL {lmul}"
+        );
+        assert!(
+            (reg as u32 + lmul) <= 32,
+            "register group v{reg}..v{} exceeds the file",
+            reg as u32 + lmul - 1
+        );
+    }
+
+    /// Read an LMUL register group as one contiguous byte slice.
+    pub fn read_group(&mut self, reg: u8, lmul: u32) -> Vec<u8> {
+        self.check_group(reg, lmul);
+        let start = reg as usize * self.vlen_bytes;
+        let len = lmul as usize * self.vlen_bytes;
+        let bank = self.bank_of(reg);
+        self.stats[bank].reads += 1;
+        self.bytes[start..start + len].to_vec()
+    }
+
+    /// Read without recording a port access (debug/checks).
+    pub fn peek_group(&self, reg: u8, lmul: u32) -> &[u8] {
+        self.check_group(reg, lmul);
+        let start = reg as usize * self.vlen_bytes;
+        &self.bytes[start..start + lmul as usize * self.vlen_bytes]
+    }
+
+    /// Write a register group through a per-byte write-enable mask:
+    /// `enable[i]` gates `data[i]` (Fig 2's WriteEnable bits).
+    pub fn write_group_masked(
+        &mut self,
+        reg: u8,
+        data: &[u8],
+        enable: &[bool],
+    ) {
+        assert_eq!(data.len(), enable.len(), "data/enable length mismatch");
+        let lmul = (data.len() / self.vlen_bytes).max(1) as u32;
+        self.check_group(reg, lmul);
+        assert!(
+            data.len() % self.vlen_bytes == 0,
+            "write must cover whole registers"
+        );
+        let start = reg as usize * self.vlen_bytes;
+        for (i, (&b, &en)) in data.iter().zip(enable).enumerate() {
+            if en {
+                self.bytes[start + i] = b;
+            }
+        }
+        let bank = self.bank_of(reg);
+        self.stats[bank].writes += 1;
+    }
+
+    /// Unmasked full-group write.
+    pub fn write_group(&mut self, reg: u8, data: &[u8]) {
+        self.write_group_prefix(reg, data, data.len());
+    }
+
+    /// Write the first `active` bytes of a group (the tail-undisturbed
+    /// fast path: `enable_for_vl` is always a byte prefix, so the common
+    /// unmasked case needs no per-byte enable vector — §Perf).
+    pub fn write_group_prefix(&mut self, reg: u8, data: &[u8], active: usize) {
+        let lmul = (data.len() / self.vlen_bytes).max(1) as u32;
+        self.check_group(reg, lmul);
+        assert!(
+            data.len() % self.vlen_bytes == 0,
+            "write must cover whole registers"
+        );
+        assert!(active <= data.len());
+        let start = reg as usize * self.vlen_bytes;
+        self.bytes[start..start + active].copy_from_slice(&data[..active]);
+        let bank = self.bank_of(reg);
+        self.stats[bank].writes += 1;
+    }
+
+    pub fn bank_stats(&self) -> &[BankStats] {
+        &self.stats
+    }
+
+    pub fn vlen_bytes(&self) -> usize {
+        self.vlen_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vrf() -> Vrf {
+        Vrf::new(&ArrowConfig::default())
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut v = vrf();
+        let data: Vec<u8> = (0..32).collect();
+        v.write_group(3, &data);
+        assert_eq!(v.read_group(3, 1), data);
+    }
+
+    #[test]
+    fn masked_write_preserves_disabled_bytes() {
+        let mut v = vrf();
+        v.write_group(0, &[0xFFu8; 32]);
+        let data = [0x11u8; 32];
+        let mut enable = [false; 32];
+        enable[4] = true;
+        enable[5] = true;
+        v.write_group_masked(0, &data, &enable);
+        let out = v.peek_group(0, 1);
+        assert_eq!(out[3], 0xFF);
+        assert_eq!(out[4], 0x11);
+        assert_eq!(out[5], 0x11);
+        assert_eq!(out[6], 0xFF);
+    }
+
+    #[test]
+    fn group_spans_registers() {
+        let mut v = vrf();
+        let data: Vec<u8> = (0..64).map(|i| i as u8).collect();
+        v.write_group(8, &data); // v8..v9 (LMUL=2)
+        assert_eq!(v.read_group(8, 2), data);
+        assert_eq!(v.peek_group(9, 1), &data[32..]);
+    }
+
+    #[test]
+    fn bank_statistics() {
+        let mut v = vrf();
+        v.read_group(0, 1);
+        v.read_group(16, 1);
+        v.read_group(16, 1);
+        v.write_group(31, &[0u8; 32]);
+        let s = v.bank_stats();
+        assert_eq!(s[0], BankStats { reads: 1, writes: 0 });
+        assert_eq!(s[1], BankStats { reads: 2, writes: 1 });
+    }
+
+    #[test]
+    #[should_panic(expected = "not aligned")]
+    fn misaligned_group_panics() {
+        let mut v = vrf();
+        v.read_group(3, 2);
+    }
+}

@@ -1,0 +1,223 @@
+//! Cross-layer integration tests: assembler -> machine -> benchmarks ->
+//! XLA golden-model oracle -> reports.
+
+use arrow_rvv::bench::analytic;
+use arrow_rvv::bench::cnn::{run_cnn, CnnWorkload};
+use arrow_rvv::bench::runner::{run_benchmark, run_with_workload, Mode};
+use arrow_rvv::bench::suite::{BenchSize, Benchmark, BENCHMARKS};
+use arrow_rvv::bench::{profiles, Profile};
+use arrow_rvv::energy::EnergyModel;
+use arrow_rvv::report;
+use arrow_rvv::runtime::Oracle;
+use arrow_rvv::vector::ArrowConfig;
+
+fn oracle() -> Option<Oracle> {
+    match Oracle::open_default() {
+        Ok(o) => Some(o),
+        Err(e) => {
+            eprintln!("artifacts not built, skipping oracle checks: {e}");
+            None
+        }
+    }
+}
+
+/// Every benchmark with a lowered artifact matches the XLA golden model
+/// bit-exactly (the `arrow validate` path).
+#[test]
+fn simulator_matches_xla_oracle() {
+    let Some(mut oracle) = oracle() else { return };
+    let config = ArrowConfig::default();
+    let mut checked = 0;
+    for b in BENCHMARKS {
+        let size = b.size(&profiles::TEST);
+        let Some(artifact) = b.oracle_artifact(size) else { continue };
+        let w = b.workload(size, 42);
+        let inputs: Vec<Vec<i32>> =
+            w.inputs.iter().map(|(_, v)| v.clone()).collect();
+        let golden: Vec<i32> = oracle
+            .run_i32(&artifact, &inputs)
+            .unwrap()
+            .into_iter()
+            .flatten()
+            .collect();
+        let sim =
+            run_with_workload(b, size, Mode::Vector, config, &w).unwrap();
+        assert_eq!(sim.output, golden, "{} vs `{artifact}`", b.name());
+        checked += 1;
+    }
+    assert!(checked >= 8, "only {checked} artifact validations ran");
+}
+
+/// The end-to-end CNN agrees across all three layers.
+#[test]
+fn cnn_three_layer_agreement() {
+    let w = CnnWorkload::generate(777);
+    let expected = w.expected_logits();
+    let (logits, _) = run_cnn(true, &w, ArrowConfig::default()).unwrap();
+    assert_eq!(logits, expected);
+    if let Some(mut o) = oracle() {
+        let golden = o.run_i32("cnn", &w.oracle_inputs()).unwrap();
+        assert_eq!(golden[0], expected);
+    }
+}
+
+/// Scalar and vector variants compute identical results on every
+/// benchmark (test profile).
+#[test]
+fn scalar_vector_equivalence() {
+    let config = ArrowConfig::default();
+    for b in BENCHMARKS {
+        let size = b.size(&profiles::TEST);
+        let w = b.workload(size, 99);
+        let s = run_with_workload(b, size, Mode::Scalar, config, &w).unwrap();
+        let v = run_with_workload(b, size, Mode::Vector, config, &w).unwrap();
+        assert!(s.verified, "{} scalar", b.name());
+        assert!(v.verified, "{} vector", b.name());
+        assert_eq!(s.output, v.output, "{}", b.name());
+    }
+}
+
+/// Table 3's qualitative claims (§5.2) hold on the small profile:
+/// element-wise vector ops beat matrix max-pool, which beats conv.
+#[test]
+fn speedup_ordering_matches_paper() {
+    let config = ArrowConfig::default();
+    let speedup = |b: Benchmark, size: BenchSize| {
+        let s = run_benchmark(b, size, Mode::Scalar, config, 5).unwrap();
+        let v = run_benchmark(b, size, Mode::Vector, config, 5).unwrap();
+        assert!(s.verified && v.verified);
+        s.cycles as f64 / v.cycles as f64
+    };
+    let small = Profile::by_name("small").unwrap();
+    let vadd = speedup(Benchmark::VAdd, Benchmark::VAdd.size(&small));
+    let pool = speedup(Benchmark::MaxPool, Benchmark::MaxPool.size(&small));
+    let conv = speedup(
+        Benchmark::Conv2d,
+        BenchSize { n: 64, k: 3, batch: 3 }, // scaled conv (image dim only)
+    );
+    assert!(vadd > pool, "vadd {vadd} !> maxpool {pool}");
+    assert!(pool > conv, "maxpool {pool} !> conv {conv}");
+    assert!(conv > 1.0, "conv should still win: {conv}");
+}
+
+/// Larger profiles amortize vector overheads: speedup is monotone in
+/// data size (the paper's second §5.2 observation).
+#[test]
+fn speedup_grows_with_profile_size() {
+    let config = ArrowConfig::default();
+    let speedup = |n: usize| {
+        let size = BenchSize { n, k: 0, batch: 0 };
+        let s = run_benchmark(Benchmark::VAdd, size, Mode::Scalar, config, 5)
+            .unwrap();
+        let v = run_benchmark(Benchmark::VAdd, size, Mode::Vector, config, 5)
+            .unwrap();
+        s.cycles as f64 / v.cycles as f64
+    };
+    let (s64, s512, s4096) = (speedup(64), speedup(512), speedup(4096));
+    assert!(s64 < s512, "{s64} !< {s512}");
+    assert!(s512 <= s4096 * 1.05, "{s512} !<= {s4096}");
+}
+
+/// The analytic extrapolation agrees with full simulation at held-out
+/// sizes for the cubic benchmark (matmul) — the DESIGN.md §6 guarantee.
+#[test]
+fn matmul_analytic_matches_simulation() {
+    let config = ArrowConfig::default();
+    // scalar: fit [16,32,48,64] -> check at 80
+    let pred = analytic::extrapolate(
+        Benchmark::MatMul,
+        BenchSize { n: 80, k: 0, batch: 0 },
+        Mode::Scalar,
+        config,
+    )
+    .unwrap();
+    let sim = analytic::cycles_auto(
+        Benchmark::MatMul,
+        BenchSize { n: 80, k: 0, batch: 0 },
+        Mode::Scalar,
+        config,
+    )
+    .unwrap()
+    .0;
+    let err = (pred as f64 - sim as f64).abs() / sim as f64;
+    assert!(err < 0.01, "pred {pred} sim {sim}");
+}
+
+/// Vector matmul analytic fit holds at a strip-aligned held-out size.
+#[test]
+fn matmul_vector_analytic_matches_simulation() {
+    let config = ArrowConfig::default();
+    let size = BenchSize { n: 320, k: 0, batch: 0 };
+    let pred =
+        analytic::extrapolate(Benchmark::MatMul, size, Mode::Vector, config)
+            .unwrap();
+    let sim = run_benchmark(Benchmark::MatMul, size, Mode::Vector, config, 1)
+        .unwrap()
+        .cycles;
+    let err = (pred as f64 - sim as f64).abs() / sim as f64;
+    assert!(err < 0.01, "pred {pred} sim {sim} err {err}");
+}
+
+/// Full Table 3 + Table 4 generation on the test profile stays coherent:
+/// energy ratios = (power ratio) / speedup.
+#[test]
+fn tables_internally_consistent() {
+    let rows =
+        report::table3(ArrowConfig::default(), &[profiles::TEST]).unwrap();
+    assert_eq!(rows.len(), 9);
+    let model = EnergyModel::default();
+    for row in &rows {
+        for (_, c) in &row.cells {
+            let ratio = model.energy_ratio(c.scalar, c.vector);
+            let expect = (model.system_power_w / model.scalar_power_w)
+                / c.speedup();
+            assert!(
+                (ratio - expect).abs() < 1e-12,
+                "{}: {ratio} vs {expect}",
+                row.benchmark.name()
+            );
+        }
+    }
+    let t3 = report::render_table3(&rows);
+    let t4 = report::render_table4(&rows, &model);
+    assert!(t3.contains("Vector Addition"));
+    assert!(t4.contains("2D Convolution"));
+}
+
+/// Design-space configurations all still compute correct results.
+#[test]
+fn correctness_across_design_space() {
+    for lanes in [1usize, 2, 4] {
+        for vlen in [128u32, 256, 512] {
+            let config = ArrowConfig {
+                lanes,
+                vlen_bits: vlen,
+                ..Default::default()
+            };
+            for b in [Benchmark::VDot, Benchmark::MatMul, Benchmark::MaxPool]
+            {
+                let size = BenchSize { n: 32, k: 0, batch: 0 };
+                let r =
+                    run_benchmark(b, size, Mode::Vector, config, 3).unwrap();
+                assert!(
+                    r.verified,
+                    "{} wrong at lanes={lanes} vlen={vlen}",
+                    b.name()
+                );
+            }
+        }
+    }
+}
+
+/// The energy model reproduces Table 4's structure for the paper's own
+/// Table 3 cycle counts (sanity that the derivation is the paper's).
+#[test]
+fn paper_table4_derivation() {
+    let m = EnergyModel::default();
+    // Paper row: vector addition large, scalar 2.2e5 cycles -> 5.44e-4 J.
+    let e = m.scalar_energy_j(220_000);
+    assert!((e - 5.94e-4).abs() / 5.94e-4 < 0.1, "{e}");
+    // Vector side: 2.8e3 cycles at 0.297 W -> 8.3e-6 J (paper 7.6e-6).
+    let ev = m.vector_energy_j(2_800);
+    assert!((ev - 7.6e-6).abs() / 7.6e-6 < 0.15, "{ev}");
+}

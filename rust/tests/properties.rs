@@ -1,0 +1,426 @@
+//! Property-based tests over the coordinator and ISA invariants
+//! (routing, batching/bursts, register state), driven by the in-tree
+//! seeded generator (`util::rng`) — hundreds of random cases per
+//! property, deterministic by default, overridable via ARROW_PROP_SEED.
+
+use arrow_rvv::asm::assemble;
+use arrow_rvv::isa::csr::Vtype;
+use arrow_rvv::isa::reg::{VReg, XReg};
+use arrow_rvv::isa::rvv::{AddrMode, MaskMode, VAluOp, VSrc2, VecInstr, VmemWidth};
+use arrow_rvv::isa::rv32::{AluOp, BranchOp, LoadOp, MulDivOp, ScalarInstr, StoreOp};
+use arrow_rvv::isa::{decode, disasm, encode, Instr};
+use arrow_rvv::mem::{AxiBus, BurstKind, Dram, MemTiming};
+use arrow_rvv::util::json;
+use arrow_rvv::util::rng::Rng;
+use arrow_rvv::vector::offset;
+use arrow_rvv::vector::{ArrowConfig, ArrowUnit};
+
+fn rng() -> Rng {
+    let seed = std::env::var("ARROW_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA770_2021);
+    Rng::new(seed)
+}
+
+fn random_scalar_instr(r: &mut Rng) -> ScalarInstr {
+    let rd = XReg(r.range_usize(0, 32) as u8);
+    let rs1 = XReg(r.range_usize(0, 32) as u8);
+    let rs2 = XReg(r.range_usize(0, 32) as u8);
+    let imm12 = r.range_i64(-2048, 2048) as i32;
+    match r.range_usize(0, 9) {
+        0 => ScalarInstr::Lui { rd, imm: (r.range_i64(0, 1 << 20) as i32) << 12 },
+        1 => ScalarInstr::Jal { rd, offset: (r.range_i64(-(1 << 19), 1 << 19) as i32) & !1 },
+        2 => ScalarInstr::Jalr { rd, rs1, offset: imm12 },
+        3 => {
+            let op = *r.pick(&[
+                BranchOp::Beq,
+                BranchOp::Bne,
+                BranchOp::Blt,
+                BranchOp::Bge,
+                BranchOp::Bltu,
+                BranchOp::Bgeu,
+            ]);
+            ScalarInstr::Branch {
+                op,
+                rs1,
+                rs2,
+                offset: (r.range_i64(-4096, 4096) as i32) & !1,
+            }
+        }
+        4 => {
+            let op = *r.pick(&[
+                LoadOp::Lb,
+                LoadOp::Lh,
+                LoadOp::Lw,
+                LoadOp::Lbu,
+                LoadOp::Lhu,
+            ]);
+            ScalarInstr::Load { op, rd, rs1, offset: imm12 }
+        }
+        5 => {
+            let op = *r.pick(&[StoreOp::Sb, StoreOp::Sh, StoreOp::Sw]);
+            ScalarInstr::Store { op, rs1, rs2, offset: imm12 }
+        }
+        6 => {
+            let op = *r.pick(&[
+                AluOp::Add,
+                AluOp::Sll,
+                AluOp::Slt,
+                AluOp::Sltu,
+                AluOp::Xor,
+                AluOp::Srl,
+                AluOp::Sra,
+                AluOp::Or,
+                AluOp::And,
+            ]);
+            let imm = if matches!(op, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                r.range_i64(0, 32) as i32
+            } else {
+                imm12
+            };
+            ScalarInstr::OpImm { op, rd, rs1, imm }
+        }
+        7 => {
+            let op = *r.pick(&[
+                AluOp::Add,
+                AluOp::Sub,
+                AluOp::Sll,
+                AluOp::Slt,
+                AluOp::Sltu,
+                AluOp::Xor,
+                AluOp::Srl,
+                AluOp::Sra,
+                AluOp::Or,
+                AluOp::And,
+            ]);
+            ScalarInstr::Op { op, rd, rs1, rs2 }
+        }
+        _ => {
+            let op = *r.pick(&[
+                MulDivOp::Mul,
+                MulDivOp::Mulh,
+                MulDivOp::Mulhsu,
+                MulDivOp::Mulhu,
+                MulDivOp::Div,
+                MulDivOp::Divu,
+                MulDivOp::Rem,
+                MulDivOp::Remu,
+            ]);
+            ScalarInstr::MulDiv { op, rd, rs1, rs2 }
+        }
+    }
+}
+
+fn random_vector_instr(r: &mut Rng) -> VecInstr {
+    let vd = VReg(r.range_usize(0, 32) as u8);
+    let vs2 = VReg(r.range_usize(0, 32) as u8);
+    let rs1 = XReg(r.range_usize(0, 32) as u8);
+    let mask = *r.pick(&[MaskMode::Unmasked, MaskMode::Masked]);
+    let width = *r.pick(&[
+        VmemWidth::E8,
+        VmemWidth::E16,
+        VmemWidth::E32,
+        VmemWidth::E64,
+    ]);
+    match r.range_usize(0, 6) {
+        0 => VecInstr::VsetVli {
+            rd: XReg(r.range_usize(0, 32) as u8),
+            rs1,
+            vtypei: Vtype::new(
+                *r.pick(&[8, 16, 32, 64]),
+                *r.pick(&[1, 2, 4, 8]),
+            )
+            .encode(),
+        },
+        1 => {
+            let mode = match r.range_usize(0, 3) {
+                0 => AddrMode::UnitStride,
+                1 => AddrMode::Strided { rs2: XReg(r.range_usize(0, 32) as u8) },
+                _ => AddrMode::Indexed { vs2: VReg(r.range_usize(0, 32) as u8) },
+            };
+            VecInstr::Load { vd, rs1, width, mode, mask }
+        }
+        2 => {
+            let mode = match r.range_usize(0, 3) {
+                0 => AddrMode::UnitStride,
+                1 => AddrMode::Strided { rs2: XReg(r.range_usize(0, 32) as u8) },
+                _ => AddrMode::Indexed { vs2: VReg(r.range_usize(0, 32) as u8) },
+            };
+            VecInstr::Store { vs3: vd, rs1, width, mode, mask }
+        }
+        3 => VecInstr::MvXs { rd: rs1, vs2 },
+        4 => VecInstr::MvSx { vd, rs1 },
+        _ => {
+            use VAluOp::*;
+            let op = *r.pick(&[
+                Add, Sub, Minu, Min, Maxu, Max, And, Or, Xor, Mseq, Msne,
+                Msltu, Mslt, Msleu, Msle, Sll, Srl, Sra, Mul, Mulh, Mulhu,
+                Divu, Div, Remu, Rem, RedSum, RedMax, RedMaxu, RedMin,
+                RedMinu, RedAnd, RedOr, RedXor, Merge,
+            ]);
+            let src2 = if op.is_opm() {
+                // OPM has no .vi form; reductions are .vs only.
+                if op.is_reduction() || r.range_usize(0, 2) == 0 {
+                    VSrc2::V(VReg(r.range_usize(0, 32) as u8))
+                } else {
+                    VSrc2::X(rs1)
+                }
+            } else {
+                match r.range_usize(0, 3) {
+                    0 => VSrc2::V(VReg(r.range_usize(0, 32) as u8)),
+                    1 => VSrc2::X(rs1),
+                    _ => VSrc2::I(r.range_i64(-16, 16) as i32),
+                }
+            };
+            VecInstr::Alu { op, vd, vs2, src2, mask }
+        }
+    }
+}
+
+/// encode(decode(w)) == w and decode(encode(i)) == i over random
+/// instructions — 2000 cases each way.
+#[test]
+fn prop_encode_decode_roundtrip() {
+    let mut r = rng();
+    for _ in 0..2000 {
+        let i = if r.range_usize(0, 2) == 0 {
+            Instr::Scalar(random_scalar_instr(&mut r))
+        } else {
+            Instr::Vector(random_vector_instr(&mut r))
+        };
+        let w = encode(i);
+        let back = decode(w)
+            .unwrap_or_else(|e| panic!("decode({w:#010x}) of {i:?}: {e}"));
+        assert_eq!(back, i, "word {w:#010x}");
+    }
+}
+
+/// decode never panics on arbitrary words.
+#[test]
+fn prop_decode_total() {
+    let mut r = rng();
+    for _ in 0..20_000 {
+        let _ = decode(r.next_u32());
+    }
+}
+
+/// disasm -> assemble round-trips for label-free instructions.
+#[test]
+fn prop_disasm_assemble_roundtrip() {
+    let mut r = rng();
+    let mut checked = 0;
+    for _ in 0..1500 {
+        let i = if r.range_usize(0, 2) == 0 {
+            Instr::Scalar(random_scalar_instr(&mut r))
+        } else {
+            Instr::Vector(random_vector_instr(&mut r))
+        };
+        // Skip pc-relative / pseudo-ambiguous shapes.
+        if matches!(
+            i,
+            Instr::Scalar(
+                ScalarInstr::Branch { .. }
+                    | ScalarInstr::Jal { .. }
+                    | ScalarInstr::Lui { .. }
+                    | ScalarInstr::Auipc { .. }
+            )
+        ) {
+            continue;
+        }
+        let text = format!(".text\n{}\n", disasm(i));
+        let p = assemble(&text)
+            .unwrap_or_else(|e| panic!("`{}` failed: {e}", disasm(i)));
+        assert_eq!(decode(p.text[0]).unwrap(), i, "text `{}`", disasm(i));
+        checked += 1;
+    }
+    assert!(checked > 800);
+}
+
+/// Lane routing invariant (§3.3): an instruction's plan always books the
+/// lane owning its destination register's bank.
+#[test]
+fn prop_lane_routing() {
+    let mut r = rng();
+    for lanes in [2usize, 4] {
+        let config = ArrowConfig { lanes, ..Default::default() };
+        let mut unit = ArrowUnit::new(config);
+        let mut dram = Dram::new();
+        // configure e32,m1 so any vd is legal
+        unit.execute(
+            VecInstr::VsetVli {
+                rd: XReg(5),
+                rs1: XReg(10),
+                vtypei: Vtype::new(32, 1).encode(),
+            },
+            8,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        for _ in 0..300 {
+            let vd = VReg(r.range_usize(0, 32) as u8);
+            let vs2 = VReg(r.range_usize(0, 32) as u8);
+            let plan = unit
+                .execute(
+                    VecInstr::Alu {
+                        op: VAluOp::Add,
+                        vd,
+                        vs2,
+                        src2: VSrc2::V(vs2),
+                        mask: MaskMode::Unmasked,
+                    },
+                    0,
+                    0,
+                    &mut dram,
+                )
+                .unwrap();
+            assert_eq!(plan.lane, config.lane_of(vd.0));
+        }
+    }
+}
+
+/// Burst batching invariants: cost is monotone in beats; strided never
+/// beats unit-stride; the bus serialises overlapping requests.
+#[test]
+fn prop_bus_batching() {
+    let mut r = rng();
+    let t = MemTiming::default();
+    for _ in 0..500 {
+        let a = r.range_i64(1, 512) as u64;
+        let b = r.range_i64(1, 512) as u64;
+        let (lo, hi) = (a.min(b), a.max(b));
+        assert!(t.unit_burst(lo) <= t.unit_burst(hi));
+        assert!(t.strided_burst(lo) <= t.strided_burst(hi));
+        assert!(t.strided_burst(hi) >= t.unit_burst(hi));
+    }
+    for _ in 0..200 {
+        let mut bus = AxiBus::new(t);
+        let mut now = 0;
+        let mut last_done = 0;
+        for _ in 0..10 {
+            now += r.range_i64(0, 5) as u64;
+            let done = bus.schedule(
+                now,
+                *r.pick(&[BurstKind::Unit, BurstKind::Strided, BurstKind::Scalar]),
+                r.range_i64(1, 64) as u64,
+            );
+            assert!(done >= last_done, "port must serialise");
+            assert!(done > now);
+            last_done = done;
+        }
+    }
+}
+
+/// vsetvli contract: vl = min(avl, VLEN*LMUL/SEW) over random configs.
+#[test]
+fn prop_vsetvli_vl() {
+    let mut r = rng();
+    let mut dram = Dram::new();
+    for _ in 0..500 {
+        let sew = *r.pick(&[8u32, 16, 32, 64]);
+        let lmul = *r.pick(&[1u32, 2, 4, 8]);
+        let avl = r.range_i64(0, 5000) as u32;
+        let mut unit = ArrowUnit::new(ArrowConfig::default());
+        let plan = unit
+            .execute(
+                VecInstr::VsetVli {
+                    rd: XReg(5),
+                    rs1: XReg(10),
+                    vtypei: Vtype::new(sew, lmul).encode(),
+                },
+                avl,
+                0,
+                &mut dram,
+            )
+            .unwrap();
+        let vlmax = 256 * lmul / sew;
+        assert_eq!(plan.scalar_result, Some(avl.min(vlmax)));
+        assert_eq!(unit.vl(), avl.min(vlmax));
+    }
+}
+
+/// Register-state invariant: a masked element-wise op updates exactly the
+/// enabled, sub-vl bytes (Fig 2) and nothing else.
+#[test]
+fn prop_write_enable_masks() {
+    let mut r = rng();
+    for _ in 0..800 {
+        let sew_bytes = *r.pick(&[1usize, 2, 4, 8]);
+        let group_bytes = 32 * *r.pick(&[1usize, 2, 4, 8]);
+        let vl = r.range_usize(0, group_bytes / sew_bytes + 1);
+        let bits: Vec<bool> =
+            (0..group_bytes / sew_bytes).map(|_| r.range_usize(0, 2) == 1).collect();
+        let we = offset::enable_for_mask(group_bytes, sew_bytes, vl, |e| bits[e]);
+        let expected: usize = bits[..vl.min(bits.len())]
+            .iter()
+            .filter(|&&b| b)
+            .count()
+            * sew_bytes;
+        assert_eq!(we.enabled(), expected);
+        // every enabled byte belongs to an enabled element below vl
+        for (i, &en) in we.bytes.iter().enumerate() {
+            let elem = i / sew_bytes;
+            assert_eq!(en, elem < vl && bits[elem], "byte {i}");
+        }
+    }
+}
+
+/// Simulated vadd equals the Rust oracle for random lengths and values —
+/// end-to-end through assembler, host, dispatch, VRF, ALU, memory unit.
+#[test]
+fn prop_machine_vadd_random() {
+    use arrow_rvv::bench::runner::{run_with_workload, Mode};
+    use arrow_rvv::bench::suite::{BenchSize, Benchmark};
+    let mut r = rng();
+    for _ in 0..25 {
+        let n = r.range_usize(1, 40) * 8;
+        let size = BenchSize { n, k: 0, batch: 0 };
+        let w = Benchmark::VAdd.workload(size, r.next_u64());
+        let res = run_with_workload(
+            Benchmark::VAdd,
+            size,
+            Mode::Vector,
+            ArrowConfig::default(),
+            &w,
+        )
+        .unwrap();
+        assert!(res.verified, "n = {n}");
+    }
+}
+
+/// JSON parser round-trips random documents built from the generator.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(r: &mut Rng, depth: usize) -> json::Json {
+        use json::Json;
+        match if depth == 0 { r.range_usize(0, 4) } else { r.range_usize(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.range_usize(0, 2) == 1),
+            2 => Json::Num(r.range_i64(-1_000_000, 1_000_000) as f64),
+            3 => Json::Str(
+                (0..r.range_usize(0, 12))
+                    .map(|_| *r.pick(&['a', 'Z', '"', '\\', '\n', '☃', ' ']))
+                    .collect(),
+            ),
+            4 => Json::Arr(
+                (0..r.range_usize(0, 5))
+                    .map(|_| random_json(r, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..r.range_usize(0, 5))
+                    .map(|i| (format!("k{i}"), random_json(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut r = rng();
+    for _ in 0..500 {
+        let doc = random_json(&mut r, 3);
+        let text = doc.to_string();
+        let back = json::parse(&text)
+            .unwrap_or_else(|e| panic!("`{text}`: {e}"));
+        assert_eq!(back, doc, "`{text}`");
+    }
+}

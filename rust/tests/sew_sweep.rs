@@ -1,0 +1,241 @@
+//! End-to-end SEW sweep: the Table-3 benchmarks only exercise e32, but
+//! Arrow's SIMD ALU claim (Fig 3) is that one ELEN=64-bit word processes
+//! 8/4/2/1 elements for SEW=8/16/32/64.  These tests run whole assembly
+//! programs at every SEW through the assembler, host, dispatch, VRF,
+//! write-enable and memory-unit paths, checking results bit-exactly and
+//! the cycle model's word-pass arithmetic.
+
+use arrow_rvv::asm::assemble;
+use arrow_rvv::scalar::ScalarTiming;
+use arrow_rvv::system::Machine;
+use arrow_rvv::util::rng::Rng;
+use arrow_rvv::vector::ArrowConfig;
+
+fn machine(src: &str) -> Machine {
+    Machine::new(
+        assemble(src).unwrap(),
+        ArrowConfig::default(),
+        ScalarTiming::default(),
+    )
+}
+
+/// vadd at a given SEW over `n` elements; data written/read as raw bytes.
+fn vadd_program(sew: u32, n: usize) -> String {
+    let bytes = n * (sew as usize / 8);
+    format!(
+        r#"
+        .data
+        in_a: .space {bytes}
+        in_b: .space {bytes}
+        out:  .space {bytes}
+        .text
+            la a0, in_a
+            la a1, in_b
+            la a2, out
+            li a3, {n}
+        loop:
+            vsetvli t0, a3, e{sew},m8
+            vle{sew}.v v0, (a0)
+            vle{sew}.v v8, (a1)
+            vadd.vv v16, v0, v8
+            vse{sew}.v v16, (a2)
+            li t2, {sew_bytes}
+            mul t1, t0, t2
+            add a0, a0, t1
+            add a1, a1, t1
+            add a2, a2, t1
+            sub a3, a3, t0
+            bnez a3, loop
+            halt
+    "#,
+        sew_bytes = sew / 8,
+    )
+}
+
+fn write_elems(m: &mut Machine, label: &str, sew: u32, vals: &[i64]) {
+    let addr = m.addr_of(label);
+    let sb = (sew / 8) as usize;
+    for (i, &v) in vals.iter().enumerate() {
+        let bytes = v.to_le_bytes();
+        m.dram.write_bytes(addr + (i * sb) as u32, &bytes[..sb]);
+    }
+}
+
+fn read_elems(m: &Machine, label: &str, sew: u32, n: usize) -> Vec<i64> {
+    let addr = m.addr_of(label);
+    let sb = (sew / 8) as usize;
+    (0..n)
+        .map(|i| {
+            let mut buf = [0u8; 8];
+            m.dram.read_bytes(addr + (i * sb) as u32, &mut buf[..sb]);
+            // sign-extend at SEW
+            let raw = u64::from_le_bytes(buf);
+            let shift = 64 - sew;
+            ((raw << shift) as i64) >> shift
+        })
+        .collect()
+}
+
+#[test]
+fn vadd_all_sews_bit_exact() {
+    let mut rng = Rng::new(0x5E4);
+    for sew in [8u32, 16, 32, 64] {
+        let n = 100; // not strip-aligned: exercises vsetvli tails
+        let lim = if sew == 64 { i64::MAX / 4 } else { 1i64 << (sew - 1) };
+        let a: Vec<i64> = (0..n).map(|_| rng.range_i64(-lim, lim)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.range_i64(-lim, lim)).collect();
+        let mut m = machine(&vadd_program(sew, n));
+        write_elems(&mut m, "in_a", sew, &a);
+        write_elems(&mut m, "in_b", sew, &b);
+        m.run(1_000_000).unwrap();
+        let got = read_elems(&m, "out", sew, n);
+        let mask_shift = 64 - sew;
+        let want: Vec<i64> = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| {
+                ((x.wrapping_add(y) << mask_shift) as i64) >> mask_shift
+            })
+            .collect();
+        assert_eq!(got, want, "SEW {sew}");
+    }
+}
+
+#[test]
+fn narrower_sew_means_fewer_word_passes() {
+    // Same element count: e8 packs 8 elements per ELEN word, e64 packs 1
+    // — the SIMD ALU claim.  Cycle counts must be monotone in SEW.
+    let mut cycles = Vec::new();
+    for sew in [8u32, 16, 32, 64] {
+        let n = 256;
+        let mut m = machine(&vadd_program(sew, n));
+        let lim = if sew == 64 { i64::MAX / 4 } else { 1i64 << (sew - 1) };
+        let mut rng = Rng::new(7);
+        let a: Vec<i64> = (0..n).map(|_| rng.range_i64(-lim, lim)).collect();
+        write_elems(&mut m, "in_a", sew, &a);
+        write_elems(&mut m, "in_b", sew, &a);
+        let s = m.run(1_000_000).unwrap();
+        cycles.push((sew, s.cycles));
+    }
+    for w in cycles.windows(2) {
+        assert!(
+            w[0].1 < w[1].1,
+            "e{} ({} cy) should beat e{} ({} cy)",
+            w[0].0,
+            w[0].1,
+            w[1].0,
+            w[1].1
+        );
+    }
+}
+
+#[test]
+fn e8_relu_via_vmax() {
+    let n = 64;
+    let mut m = machine(
+        r#"
+        .data
+        in_a: .space 64
+        out:  .space 64
+        .text
+            la a0, in_a
+            la a2, out
+            li a3, 64
+            vsetvli t0, a3, e8,m8
+            vle8.v v0, (a0)
+            vmax.vx v8, v0, zero
+            vse8.v v8, (a2)
+            halt
+    "#,
+    );
+    let vals: Vec<i64> = (0..n).map(|i| i as i64 - 32).collect();
+    write_elems(&mut m, "in_a", 8, &vals);
+    m.run(10_000).unwrap();
+    let got = read_elems(&m, "out", 8, n);
+    let want: Vec<i64> = vals.iter().map(|&v| v.max(0)).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn e64_dot_product() {
+    // SEW=64: one element per ELEN word, exercising the widest datapath.
+    let n = 16;
+    let mut m = machine(
+        r#"
+        .data
+        in_a: .space 128
+        in_b: .space 128
+        out:  .space 8
+        .text
+            la a0, in_a
+            la a1, in_b
+            li a3, 16
+            vsetvli t0, zero, e64,m8
+            vmv.v.i v16, 0
+        loop:
+            vsetvli t0, a3, e64,m8
+            vle64.v v0, (a0)
+            vle64.v v8, (a1)
+            vmul.vv v24, v0, v8
+            vadd.vv v16, v16, v24
+            slli t1, t0, 3
+            add a0, a0, t1
+            add a1, a1, t1
+            sub a3, a3, t0
+            bnez a3, loop
+            vsetvli t0, zero, e64,m8
+            vmv.s.x v0, zero
+            vredsum.vs v8, v16, v0
+            la a2, out
+            vse64.v v8, (a2)
+            halt
+    "#,
+    );
+    // (the final vse64 at VLMAX spills the accumulator group past `out`
+    // into unmapped scratch DRAM; only out[0] — the reduction — matters)
+    let a: Vec<i64> = (0..n as i64).map(|i| i * 3 - 20).collect();
+    let b: Vec<i64> = (0..n as i64).map(|i| 7 - i).collect();
+    write_elems(&mut m, "in_a", 64, &a);
+    write_elems(&mut m, "in_b", 64, &b);
+    m.run(100_000).unwrap();
+    let got = read_elems(&m, "out", 64, 1)[0];
+    let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn mixed_sew_program_reconfigures() {
+    // One program that switches SEW mid-stream: e32 add, then reinterpret
+    // the same bytes as e8 and max against zero.
+    let mut m = machine(
+        r#"
+        .data
+        in_a: .space 32
+        out:  .space 32
+        .text
+            la a0, in_a
+            li a3, 8
+            vsetvli t0, a3, e32,m1
+            vle32.v v1, (a0)
+            vadd.vv v2, v1, v1
+            li a3, 32
+            vsetvli t0, a3, e8,m1
+            vmax.vx v3, v2, zero
+            la a2, out
+            vse8.v v3, (a2)
+            halt
+    "#,
+    );
+    let vals: Vec<i64> = vec![1, -1, 256, -256, 100, -100, 0, 3];
+    write_elems(&mut m, "in_a", 32, &vals);
+    m.run(10_000).unwrap();
+    // expected: (v+v) as 4 bytes each, per-byte relu
+    let mut want = Vec::new();
+    for &v in &vals {
+        for byte in ((v as i32).wrapping_add(v as i32)).to_le_bytes() {
+            want.push((byte as i8).max(0) as i64);
+        }
+    }
+    let got = read_elems(&m, "out", 8, 32);
+    assert_eq!(got, want);
+}
