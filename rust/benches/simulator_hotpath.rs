@@ -3,12 +3,22 @@
 //! Reports simulated instructions/second and simulated cycles/second for
 //! the workloads that dominate Table-3 generation: the scalar matmul
 //! inner loop, the vectorized matmul dispatch loop, and the element-wise
-//! strip loop.  EXPERIMENTS.md §Perf records before/after for each
-//! optimization iteration against these numbers.
+//! strip loop.  A counting global allocator additionally reports *heap
+//! allocations per executed vector instruction* — the zero-allocation
+//! engine contract (preallocated `ExecScratch`, prefix writes, stack
+//! scoreboard lists) says the steady-state unmasked ALU path performs
+//! none, so the whole-run average must stay below one allocation per
+//! hundred vector instructions (setup: program assembly, session build,
+//! DDR3 paging).  EXPERIMENTS.md §Perf records before/after for each
+//! optimization iteration against these numbers; `BENCH_*.json` keeps
+//! the machine-readable history.
 //!
 //! ```bash
 //! cargo bench --bench simulator_hotpath
 //! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use arrow_rvv::asm::assemble;
 use arrow_rvv::bench::runner::{run_benchmark, Mode};
@@ -17,6 +27,40 @@ use arrow_rvv::scalar::ScalarTiming;
 use arrow_rvv::system::Machine;
 use arrow_rvv::util::bencher::Bencher;
 use arrow_rvv::vector::ArrowConfig;
+
+/// Counts every heap allocation so the zero-allocation claim is a
+/// measured number, not an assertion.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
 
 fn main() {
     let config = ArrowConfig::default();
@@ -63,6 +107,39 @@ fn main() {
         Some(r.summary.vector_instructions as f64)
     });
 
+    // The allocation-sensitive target: the largest matmul that is still
+    // comfortable to iterate on, dominated by unmasked .vx/.vv ALU ops
+    // and unit-stride loads — the exact path the zero-allocation
+    // ExecScratch engine optimises.
+    let alloc_before = allocations();
+    let mut vec_instructions = 0u64;
+    bench.bench("vector_matmul256_large (vec instr/s)", || {
+        let r = run_benchmark(
+            Benchmark::MatMul,
+            BenchSize { n: 256, k: 0, batch: 0 },
+            Mode::Vector,
+            config,
+            1,
+        )
+        .unwrap();
+        vec_instructions += r.summary.vector_instructions;
+        Some(r.summary.vector_instructions as f64)
+    });
+    let allocs = (allocations() - alloc_before) as f64;
+    if vec_instructions > 0 {
+        let per_instr = allocs / vec_instructions as f64;
+        bench.record_value(
+            "vector_matmul256/allocs_per_vec_instr",
+            per_instr,
+            "allocations",
+        );
+        assert!(
+            per_instr < 0.01,
+            "hot path regressed: {per_instr:.4} heap allocations per \
+             vector instruction (expected < 0.01)"
+        );
+    }
+
     // Element-wise strip loop at large n: VRF copy bandwidth dominates.
     bench.bench("vector_vadd4096 (elements/s)", || {
         let _r = run_benchmark(
@@ -90,5 +167,5 @@ fn main() {
         Some(c as f64)
     });
 
-    bench.finish();
+    bench.finish_to_json("simulator_hotpath");
 }

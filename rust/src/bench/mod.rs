@@ -12,13 +12,18 @@
 //! * [`analytic`] — the cycle-count extrapolation for profiles too large
 //!   to step instruction-by-instruction (DESIGN.md §6): per-benchmark
 //!   polynomial fits through exactly-simulated smaller sizes.
+//! * [`sweep`] — parallel design-space sweeps: a worker pool fanning the
+//!   (benchmark × profile × lanes × VLEN) cartesian product across
+//!   cores, deduplicated through a canonical-config result cache.
 
 pub mod analytic;
 pub mod cnn;
 pub mod profiles;
 pub mod runner;
 pub mod suite;
+pub mod sweep;
 
 pub use profiles::{ConvShape, Profile, PROFILES};
 pub use runner::{run_benchmark, BenchResult, Mode};
 pub use suite::{Benchmark, BENCHMARKS};
+pub use sweep::{run_sweep, SweepReport, SweepSpec};

@@ -1,8 +1,8 @@
 //! Assemble, load, simulate and verify one benchmark instance.
 
 use crate::asm::assemble;
-use crate::scalar::ScalarTiming;
-use crate::system::machine::{Machine, MachineError, RunSummary};
+use crate::system::machine::{MachineError, RunSummary};
+use crate::system::Session;
 use crate::vector::ArrowConfig;
 
 use super::suite::{BenchSize, Benchmark, Workload};
@@ -19,6 +19,14 @@ impl Mode {
         match self {
             Mode::Scalar => "scalar",
             Mode::Vector => "vector",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Mode> {
+        match name {
+            "scalar" => Some(Mode::Scalar),
+            "vector" => Some(Mode::Vector),
+            _ => None,
         }
     }
 }
@@ -87,6 +95,24 @@ pub fn run_benchmark(
     run_with_workload(benchmark, size, mode, config, &workload)
 }
 
+/// Build a reusable [`Session`] for one benchmark instance (assemble +
+/// predecode once; run as many workloads as needed).
+pub fn bench_session(
+    benchmark: Benchmark,
+    size: BenchSize,
+    mode: Mode,
+    config: ArrowConfig,
+) -> Session {
+    let source = match mode {
+        Mode::Scalar => benchmark.scalar_asm(size),
+        Mode::Vector => benchmark.vector_asm(size),
+    };
+    let program = assemble(&source)
+        .unwrap_or_else(|e| panic!("{} {}: {e}", benchmark.name(), mode.name()));
+    Session::new(program, config)
+        .unwrap_or_else(|e| panic!("{} {}: {e}", benchmark.name(), mode.name()))
+}
+
 /// Like [`run_benchmark`] with a caller-provided workload (the XLA oracle
 /// path reuses the same inputs on both sides).
 pub fn run_with_workload(
@@ -96,30 +122,38 @@ pub fn run_with_workload(
     config: ArrowConfig,
     workload: &Workload,
 ) -> Result<BenchResult, MachineError> {
-    let source = match mode {
-        Mode::Scalar => benchmark.scalar_asm(size),
-        Mode::Vector => benchmark.vector_asm(size),
-    };
-    let program = assemble(&source)
-        .unwrap_or_else(|e| panic!("{} {}: {e}", benchmark.name(), mode.name()));
-    let mut machine = Machine::new(program, config, ScalarTiming::default());
-    for (label, data) in &workload.inputs {
-        let addr = machine.addr_of(label);
-        machine.dram.write_i32_slice(addr, data);
-    }
-    let summary = machine.run(DEFAULT_BUDGET)?;
-    let out_addr = machine.addr_of(workload.result_label);
-    let output =
-        machine.dram.read_i32_slice(out_addr, workload.expected.len());
-    let verified = output == workload.expected;
+    let session = bench_session(benchmark, size, mode, config);
+    run_on_session(&session, benchmark, size, mode, workload)
+}
+
+/// Run one workload through an existing session (the sweep pool reuses
+/// the assembled program across design points at the same size).
+pub fn run_on_session(
+    session: &Session,
+    benchmark: Benchmark,
+    size: BenchSize,
+    mode: Mode,
+    workload: &Workload,
+) -> Result<BenchResult, MachineError> {
+    let inputs: Vec<(&str, &[i32])> = workload
+        .inputs
+        .iter()
+        .map(|(label, data)| (*label, data.as_slice()))
+        .collect();
+    let run = session.run(
+        &inputs,
+        Some((workload.result_label, workload.expected.len())),
+        DEFAULT_BUDGET,
+    )?;
+    let verified = run.output == workload.expected;
     Ok(BenchResult {
         benchmark,
         mode,
         size,
-        cycles: summary.cycles,
-        summary,
+        cycles: run.summary.cycles,
+        summary: run.summary,
         verified,
-        output,
+        output: run.output,
     })
 }
 

@@ -1,0 +1,400 @@
+//! Parallel design-space sweeps.
+//!
+//! The paper's headline claim (2–78x over the scalar host) comes from
+//! evaluating many (benchmark × profile × lanes × VLEN) points; the
+//! SPEED and Flexible-Vector-Integration lines of work push the same
+//! grid much wider.  This module fans the cartesian product of a
+//! [`SweepSpec`] across a `std::thread` worker pool:
+//!
+//! * every *unique* point is simulated exactly once — a result cache
+//!   keyed by the canonical config string deduplicates repeated grid
+//!   entries before any worker starts;
+//! * each worker builds a [`crate::system::Session`] per point (the
+//!   program is assembled and predecoded once, then run), so results are
+//!   byte-identical to a sequential [`run_benchmark`] call with the same
+//!   seed — a property the parity tests pin down;
+//! * invalid design points (e.g. VLEN < ELEN) are reported per point
+//!   instead of aborting the sweep.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::system::machine::RunSummary;
+use crate::util::json::Json;
+use crate::vector::ArrowConfig;
+
+use super::profiles::{self, Profile};
+use super::runner::{bench_session, run_on_session, Mode};
+use super::suite::{Benchmark, BENCHMARKS};
+
+/// The grid to sweep: the cartesian product of every field.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub benchmarks: Vec<Benchmark>,
+    pub profiles: Vec<Profile>,
+    pub modes: Vec<Mode>,
+    pub lanes: Vec<usize>,
+    pub vlens: Vec<u32>,
+    /// Workload seed (same seed => byte-identical per-point results).
+    pub seed: u64,
+    /// Worker threads; 0 picks the machine's available parallelism.
+    pub threads: usize,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            benchmarks: BENCHMARKS.to_vec(),
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![2],
+            vlens: vec![256],
+            seed: 42,
+            threads: 0,
+        }
+    }
+}
+
+/// Hard cap on worker threads, whatever a request asks for.
+pub const MAX_SWEEP_THREADS: usize = 64;
+
+impl SweepSpec {
+    /// Number of grid points (before deduplication).  Saturates rather
+    /// than wrapping so oversized request grids always trip size limits.
+    pub fn grid_len(&self) -> usize {
+        self.benchmarks
+            .len()
+            .saturating_mul(self.profiles.len())
+            .saturating_mul(self.modes.len())
+            .saturating_mul(self.lanes.len())
+            .saturating_mul(self.vlens.len())
+    }
+}
+
+/// Canonical cache key of one grid point — the config part is the
+/// canonical [`ArrowConfig`] identity every later caching layer keys on.
+pub fn point_key(
+    benchmark: Benchmark,
+    profile: &Profile,
+    mode: Mode,
+    lanes: usize,
+    vlen_bits: u32,
+) -> String {
+    format!(
+        "{}|{}|{}|lanes={lanes}|vlen={vlen_bits}",
+        benchmark.name(),
+        profile.name,
+        mode.name()
+    )
+}
+
+/// Successful simulation of one point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepOutcome {
+    pub cycles: u64,
+    pub verified: bool,
+    pub summary: RunSummary,
+}
+
+/// What one grid point produced: a ledger, or a per-point error.
+pub type PointResult = Result<SweepOutcome, String>;
+
+/// One evaluated grid point (shared results are cloned out of the
+/// cache, so duplicated grid entries stay byte-identical).
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub benchmark: Benchmark,
+    pub profile: &'static str,
+    pub mode: Mode,
+    pub lanes: usize,
+    pub vlen_bits: u32,
+    pub key: String,
+    pub outcome: PointResult,
+}
+
+/// The sweep result set, in deterministic grid order.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub points: Vec<SweepPoint>,
+    /// Unique points actually simulated by the pool.
+    pub unique_simulated: usize,
+    /// Grid entries answered from the result cache.
+    pub cache_hits: usize,
+    /// Worker threads used.
+    pub threads: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Job {
+    benchmark: Benchmark,
+    profile: Profile,
+    mode: Mode,
+    lanes: usize,
+    vlen_bits: u32,
+}
+
+fn run_point(job: &Job, seed: u64) -> PointResult {
+    let config = ArrowConfig {
+        lanes: job.lanes,
+        vlen_bits: job.vlen_bits,
+        ..Default::default()
+    };
+    config.validate()?;
+    let size = job.benchmark.size(&job.profile);
+    let workload = job.benchmark.workload(size, seed);
+    let session = bench_session(job.benchmark, size, job.mode, config);
+    let r = run_on_session(&session, job.benchmark, size, job.mode, &workload)
+        .map_err(|e| e.to_string())?;
+    Ok(SweepOutcome {
+        cycles: r.cycles,
+        verified: r.verified,
+        summary: r.summary,
+    })
+}
+
+/// Run the sweep: dedupe the grid through the canonical-key cache, fan
+/// the unique points across the worker pool, then assemble the full
+/// grid (cache hits included) in deterministic order.
+pub fn run_sweep(spec: &SweepSpec) -> SweepReport {
+    // Expand the grid in deterministic order.
+    let mut grid: Vec<(Job, String)> = Vec::with_capacity(spec.grid_len());
+    for &benchmark in &spec.benchmarks {
+        for profile in &spec.profiles {
+            for &mode in &spec.modes {
+                for &lanes in &spec.lanes {
+                    for &vlen_bits in &spec.vlens {
+                        let key = point_key(
+                            benchmark, profile, mode, lanes, vlen_bits,
+                        );
+                        grid.push((
+                            Job {
+                                benchmark,
+                                profile: *profile,
+                                mode,
+                                lanes,
+                                vlen_bits,
+                            },
+                            key,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // Result cache: canonical key -> index into the unique job list.
+    let mut cache: HashMap<String, usize> = HashMap::new();
+    let mut jobs: Vec<Job> = Vec::new();
+    let mut cache_hits = 0usize;
+    for (job, key) in &grid {
+        if cache.contains_key(key) {
+            cache_hits += 1;
+        } else {
+            cache.insert(key.clone(), jobs.len());
+            jobs.push(job.clone());
+        }
+    }
+
+    let threads = if spec.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        spec.threads
+    }
+    .clamp(1, jobs.len().clamp(1, MAX_SWEEP_THREADS));
+
+    // Fan the unique jobs across the pool: workers pull the next job
+    // index from a shared atomic cursor until the queue drains.
+    let results: Mutex<Vec<Option<PointResult>>> =
+        Mutex::new(vec![None; jobs.len()]);
+    let cursor = AtomicUsize::new(0);
+    let seed = spec.seed;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let outcome = run_point(&jobs[i], seed);
+                results.lock().unwrap()[i] = Some(outcome);
+            });
+        }
+    });
+    let results = results.into_inner().unwrap();
+
+    let points = grid
+        .into_iter()
+        .map(|(job, key)| {
+            let idx = cache[&key];
+            let outcome = results[idx]
+                .clone()
+                .expect("worker pool completed every unique job");
+            SweepPoint {
+                benchmark: job.benchmark,
+                profile: job.profile.name,
+                mode: job.mode,
+                lanes: job.lanes,
+                vlen_bits: job.vlen_bits,
+                key,
+                outcome,
+            }
+        })
+        .collect();
+    SweepReport {
+        points,
+        unique_simulated: jobs.len(),
+        cache_hits,
+        threads,
+    }
+}
+
+fn point_json(p: &SweepPoint) -> Json {
+    let mut fields = vec![
+        ("benchmark", p.benchmark.name().into()),
+        ("profile", p.profile.into()),
+        ("mode", p.mode.name().into()),
+        ("lanes", (p.lanes as u64).into()),
+        ("vlen", u64::from(p.vlen_bits).into()),
+        ("key", p.key.as_str().into()),
+    ];
+    match &p.outcome {
+        Ok(o) => {
+            fields.push(("ok", true.into()));
+            fields.push(("cycles", o.cycles.into()));
+            fields.push(("verified", o.verified.into()));
+            fields.push((
+                "scalar_instructions",
+                o.summary.scalar_instructions.into(),
+            ));
+            fields.push((
+                "vector_instructions",
+                o.summary.vector_instructions.into(),
+            ));
+        }
+        Err(e) => {
+            fields.push(("ok", false.into()));
+            fields.push(("error", e.as_str().into()));
+        }
+    }
+    Json::obj(fields)
+}
+
+/// Render the whole report as one JSON object (the `arrow sweep` CLI
+/// output and the job-server response body).
+pub fn report_json(report: &SweepReport) -> Json {
+    Json::obj(vec![
+        (
+            "points",
+            Json::Arr(report.points.iter().map(point_json).collect()),
+        ),
+        ("grid", (report.points.len() as u64).into()),
+        ("unique_simulated", (report.unique_simulated as u64).into()),
+        ("cache_hits", (report.cache_hits as u64).into()),
+        ("threads", (report.threads as u64).into()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::runner::run_benchmark;
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec {
+            benchmarks: vec![Benchmark::VAdd, Benchmark::VDot],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![128, 256],
+            seed: 7,
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn sweep_matches_sequential_execution() {
+        let spec = small_spec();
+        let report = run_sweep(&spec);
+        assert_eq!(report.points.len(), spec.grid_len());
+        assert_eq!(report.cache_hits, 0);
+        for p in &report.points {
+            let config = ArrowConfig {
+                lanes: p.lanes,
+                vlen_bits: p.vlen_bits,
+                ..Default::default()
+            };
+            let size = p.benchmark.size(&profiles::TEST);
+            let seq =
+                run_benchmark(p.benchmark, size, p.mode, config, spec.seed)
+                    .unwrap();
+            let got = p.outcome.as_ref().unwrap();
+            assert!(got.verified, "{}", p.key);
+            assert_eq!(got.cycles, seq.cycles, "{}", p.key);
+            assert_eq!(got.summary, seq.summary, "{}", p.key);
+        }
+    }
+
+    #[test]
+    fn duplicate_grid_entries_hit_the_cache() {
+        let mut spec = small_spec();
+        spec.lanes = vec![2, 2, 2];
+        let report = run_sweep(&spec);
+        assert_eq!(report.points.len(), spec.grid_len());
+        // 3 lane entries collapse to 1 unique per (bench, vlen) pair.
+        assert_eq!(report.unique_simulated, 2 * 2);
+        assert_eq!(report.cache_hits, 2 * 2 * 2);
+        // Cached copies are identical to the simulated original.
+        let first = &report.points[0];
+        let dup = report
+            .points
+            .iter()
+            .skip(1)
+            .find(|p| p.key == first.key)
+            .unwrap();
+        assert_eq!(
+            first.outcome.as_ref().unwrap(),
+            dup.outcome.as_ref().unwrap()
+        );
+    }
+
+    #[test]
+    fn invalid_points_reported_not_fatal() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![2],
+            vlens: vec![128, 256],
+            seed: 1,
+            threads: 1,
+        };
+        let report = run_sweep(&spec);
+        assert!(report.points.iter().all(|p| p.outcome.is_ok()));
+
+        let bad = SweepSpec { lanes: vec![3], ..spec };
+        let report = run_sweep(&bad);
+        assert!(report.points.iter().all(|p| p.outcome.is_err()));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Scalar],
+            lanes: vec![2],
+            vlens: vec![256],
+            seed: 1,
+            threads: 1,
+        };
+        let j = report_json(&run_sweep(&spec));
+        let points = j.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 1);
+        assert_eq!(points[0].get("ok"), Some(&true.into()));
+        assert!(points[0].get("cycles").unwrap().as_u64().unwrap() > 0);
+        // Round-trips through the serializer.
+        let reparsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed.get("grid").unwrap().as_u64(), Some(1));
+    }
+}

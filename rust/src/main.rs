@@ -3,22 +3,31 @@
 //! ```text
 //! arrow report table2|table3|table4 [--profiles small,medium,large] [--summary]
 //! arrow bench --benchmark vector_addition --profile small --mode vector
+//! arrow sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
+//!             [--grid-lanes 1,2,4] [--grid-vlens 128,256,512]
+//!             [--threads N] [--seed N]
 //! arrow describe datapath|write-enable|simd-alu|system
 //! arrow validate                      # simulator vs XLA golden artifacts
 //! arrow serve [--addr 127.0.0.1:7676]
 //! arrow --lanes 4 --vlen 512 ...      # design-time overrides
 //! ```
 
-use anyhow::{anyhow, bail, Result};
-
-use arrow_rvv::bench::runner::{run_benchmark, run_with_workload, Mode};
+use arrow_rvv::bench::runner::{run_benchmark, Mode};
 use arrow_rvv::bench::suite::{Benchmark, BENCHMARKS};
+use arrow_rvv::bench::sweep::{report_json, run_sweep, SweepSpec};
 use arrow_rvv::bench::{Profile, PROFILES};
 use arrow_rvv::energy::EnergyModel;
 use arrow_rvv::report;
-use arrow_rvv::runtime::Oracle;
 use arrow_rvv::system::{describe, server};
 use arrow_rvv::vector::ArrowConfig;
+
+/// CLI error type: everything is reported as a message (the build is
+/// offline, so no external error-handling crates).
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+fn fail<T>(msg: impl Into<String>) -> Result<T> {
+    Err(msg.into().into())
+}
 
 const USAGE: &str = "\
 arrow — Arrow RISC-V vector accelerator, full-system simulator
@@ -29,6 +38,8 @@ USAGE:
 COMMANDS:
   report <table2|table3|table4> [--profiles LIST] [--summary]
   bench --benchmark NAME [--profile NAME] [--mode scalar|vector]
+  sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
+        [--grid-lanes LIST] [--grid-vlens LIST] [--threads N] [--seed N]
   describe <datapath|write-enable|simd-alu|system>
   validate
   serve [--addr HOST:PORT]
@@ -80,7 +91,20 @@ fn parse_profiles(s: &str) -> Result<Vec<Profile>> {
     s.split(',')
         .map(|p| {
             Profile::by_name(p.trim())
-                .ok_or_else(|| anyhow!("unknown profile `{p}`"))
+                .ok_or_else(|| format!("unknown profile `{p}`").into())
+        })
+        .collect()
+}
+
+fn parse_list<T, E: std::fmt::Display>(
+    s: &str,
+    what: &str,
+    parse: impl Fn(&str) -> std::result::Result<T, E>,
+) -> Result<Vec<T>> {
+    s.split(',')
+        .map(|item| {
+            parse(item.trim())
+                .map_err(|e| format!("bad {what} `{item}`: {e}").into())
         })
         .collect()
 }
@@ -99,7 +123,7 @@ fn main() -> Result<()> {
         .unwrap_or(256);
     let config =
         ArrowConfig { lanes, vlen_bits: vlen, ..Default::default() };
-    config.validate().map_err(|e| anyhow!(e))?;
+    config.validate()?;
 
     let Some(cmd) = args.next() else {
         print!("{USAGE}");
@@ -108,8 +132,9 @@ fn main() -> Result<()> {
 
     match cmd.as_str() {
         "report" => {
-            let table =
-                args.next().ok_or_else(|| anyhow!("report: which table?"))?;
+            let table = args
+                .next()
+                .ok_or("report: which table?")?;
             let profiles = parse_profiles(
                 &args
                     .opt("--profiles")
@@ -120,7 +145,7 @@ fn main() -> Result<()> {
                 "table2" => print!("{}", report::render_table2()),
                 "table3" => {
                     let rows = report::table3(config, &profiles)
-                        .map_err(|e| anyhow!("{e}"))?;
+                        .map_err(|e| e.to_string())?;
                     print!("{}", report::render_table3(&rows));
                     if summary {
                         println!(
@@ -131,7 +156,7 @@ fn main() -> Result<()> {
                 }
                 "table4" => {
                     let rows = report::table3(config, &profiles)
-                        .map_err(|e| anyhow!("{e}"))?;
+                        .map_err(|e| e.to_string())?;
                     let model = EnergyModel::default();
                     print!("{}", report::render_table4(&rows, &model));
                     if summary {
@@ -141,15 +166,15 @@ fn main() -> Result<()> {
                         );
                     }
                 }
-                other => bail!("unknown table `{other}`"),
+                other => return fail(format!("unknown table `{other}`")),
             }
         }
         "bench" => {
             let bname = args
                 .opt("--benchmark")
-                .ok_or_else(|| anyhow!("bench: --benchmark required"))?;
+                .ok_or("bench: --benchmark required")?;
             let b = Benchmark::by_name(&bname).ok_or_else(|| {
-                anyhow!(
+                format!(
                     "unknown benchmark `{bname}`; one of: {}",
                     BENCHMARKS.map(|b| b.name()).join(", ")
                 )
@@ -157,7 +182,7 @@ fn main() -> Result<()> {
             let pname =
                 args.opt("--profile").unwrap_or_else(|| "small".into());
             let p = Profile::by_name(&pname)
-                .ok_or_else(|| anyhow!("unknown profile `{pname}`"))?;
+                .ok_or_else(|| format!("unknown profile `{pname}`"))?;
             let mode = match args
                 .opt("--mode")
                 .unwrap_or_else(|| "vector".into())
@@ -165,10 +190,10 @@ fn main() -> Result<()> {
             {
                 "scalar" => Mode::Scalar,
                 "vector" => Mode::Vector,
-                other => bail!("mode `{other}`?"),
+                other => return fail(format!("mode `{other}`?")),
             };
             let r = run_benchmark(b, b.size(&p), mode, config, 42)
-                .map_err(|e| anyhow!("{e}"))?;
+                .map_err(|e| e.to_string())?;
             println!("benchmark : {} ({})", b.paper_name(), mode.name());
             println!("profile   : {}", p.name);
             println!("cycles    : {}", r.cycles);
@@ -187,16 +212,65 @@ fn main() -> Result<()> {
             };
             println!("energy    : {j:.3e} J");
         }
+        "sweep" => {
+            let mut spec = SweepSpec::default();
+            if let Some(list) = args.opt("--benchmarks") {
+                spec.benchmarks =
+                    parse_list(&list, "benchmark", |name| {
+                        Benchmark::by_name(name).ok_or("unknown benchmark")
+                    })?;
+            }
+            if let Some(list) = args.opt("--profiles") {
+                spec.profiles = parse_profiles(&list)?;
+            }
+            if let Some(list) = args.opt("--modes") {
+                spec.modes = parse_list(&list, "mode", |name| {
+                    Mode::by_name(name).ok_or("unknown mode")
+                })?;
+            }
+            if let Some(list) = args.opt("--grid-lanes") {
+                spec.lanes =
+                    parse_list(&list, "lane count", str::parse::<usize>)?;
+            }
+            if let Some(list) = args.opt("--grid-vlens") {
+                spec.vlens =
+                    parse_list(&list, "VLEN", str::parse::<u32>)?;
+            }
+            if let Some(t) = args.opt("--threads") {
+                spec.threads = t.parse()?;
+            }
+            if let Some(s) = args.opt("--seed") {
+                spec.seed = s.parse()?;
+            }
+            if spec.grid_len() == 0 {
+                return fail("sweep: empty grid");
+            }
+            eprintln!(
+                "sweeping {} grid points on {} thread(s)...",
+                spec.grid_len(),
+                if spec.threads == 0 {
+                    "auto".to_string()
+                } else {
+                    spec.threads.to_string()
+                }
+            );
+            let report = run_sweep(&spec);
+            eprintln!(
+                "{} unique points simulated, {} cache hits",
+                report.unique_simulated, report.cache_hits
+            );
+            println!("{}", report_json(&report));
+        }
         "describe" => {
             let what = args
                 .next()
-                .ok_or_else(|| anyhow!("describe: which figure?"))?;
+                .ok_or("describe: which figure?")?;
             let text = match what.as_str() {
                 "datapath" => describe::datapath(&config),
                 "write-enable" => describe::write_enable(&config),
                 "simd-alu" => describe::simd_alu(&config),
                 "system" => describe::system(&config),
-                other => bail!("unknown figure `{other}`"),
+                other => return fail(format!("unknown figure `{other}`")),
             };
             print!("{text}");
         }
@@ -207,14 +281,18 @@ fn main() -> Result<()> {
             server::serve(&addr)?;
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
-        other => bail!("unknown command `{other}`\n{USAGE}"),
+        other => return fail(format!("unknown command `{other}`\n{USAGE}")),
     }
     Ok(())
 }
 
 /// Cross-validate the simulator against every applicable XLA artifact.
+#[cfg(feature = "pjrt")]
 fn validate(config: ArrowConfig) -> Result<()> {
-    let mut oracle = Oracle::open_default()?;
+    use arrow_rvv::bench::runner::run_with_workload;
+    use arrow_rvv::runtime::Oracle;
+
+    let mut oracle = Oracle::open_default().map_err(|e| e.to_string())?;
     let mut checked = 0;
     for b in BENCHMARKS {
         for p in PROFILES.iter().chain([&arrow_rvv::bench::profiles::TEST]) {
@@ -231,13 +309,17 @@ fn validate(config: ArrowConfig) -> Result<()> {
             let w = b.workload(size, 42);
             let inputs: Vec<Vec<i32>> =
                 w.inputs.iter().map(|(_, v)| v.clone()).collect();
-            let golden = oracle.run_i32(&artifact, &inputs)?;
+            let golden =
+                oracle.run_i32(&artifact, &inputs).map_err(|e| e.to_string())?;
             let sim = run_with_workload(b, size, Mode::Vector, config, &w)
-                .map_err(|e| anyhow!("{e}"))?;
+                .map_err(|e| e.to_string())?;
             let golden_flat: Vec<i32> =
                 golden.into_iter().flatten().collect();
             if sim.output != golden_flat {
-                bail!("{} `{artifact}`: simulator != XLA oracle", b.name());
+                return fail(format!(
+                    "{} `{artifact}`: simulator != XLA oracle",
+                    b.name()
+                ));
             }
             println!("OK {:<24} ({} elements)", artifact, golden_flat.len());
             checked += 1;
@@ -245,4 +327,16 @@ fn validate(config: ArrowConfig) -> Result<()> {
     }
     println!("{checked} artifact validations passed");
     Ok(())
+}
+
+/// Without the `pjrt` feature the XLA/PJRT oracle is not compiled in
+/// (the offline build has no `xla` crate); `validate` reports how to
+/// get it instead of failing to link.
+#[cfg(not(feature = "pjrt"))]
+fn validate(_config: ArrowConfig) -> Result<()> {
+    let _ = &PROFILES; // same imports with or without the feature
+    fail(
+        "the XLA/PJRT oracle is not compiled in; \
+         rebuild with `cargo run --features pjrt -- validate`",
+    )
 }

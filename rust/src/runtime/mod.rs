@@ -7,9 +7,15 @@
 //! text (see python/compile/aot.py for why text, not serialized protos).
 
 mod manifest;
+/// The PJRT/XLA-backed oracle needs the `xla` bindings, which the
+/// offline build does not have — the whole module is compiled only with
+/// the `pjrt` cargo feature (see Cargo.toml).  The manifest loader stays
+/// available either way so artifact metadata can be inspected offline.
+#[cfg(feature = "pjrt")]
 mod oracle;
 
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use oracle::Oracle;
 
 /// Default artifacts directory, relative to the repo root.

@@ -14,9 +14,14 @@
 //!   producers; the AXI port serialises all memory traffic (§3.7);
 //! * two vector instructions with destinations in different banks overlap
 //!   — the dual-lane parallelism of §3.2/§3.3.
+//!
+//! The text section is predecoded into a per-PC instruction cache that
+//! lives with the machine (and can be shared across runs through
+//! [`crate::system::Session`]), so the run loop never re-decodes a word.
 
 use crate::asm::{Program, DATA_BASE};
 use crate::isa::rvv::VecInstr;
+use crate::isa::Instr;
 use crate::mem::{AxiBus, BusStats, Dram};
 use crate::scalar::{Cpu, ScalarTiming, StepEvent};
 use crate::scalar::core::CpuFault;
@@ -47,27 +52,65 @@ impl std::fmt::Display for MachineError {
 impl std::error::Error for MachineError {}
 
 /// Ledger of one completed run.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+///
+/// Lane accounting is sized by the configured lane count — a 16- or
+/// 32-lane design point gets full per-lane occupancy data instead of
+/// being truncated to a fixed-width array.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunSummary {
     /// End-to-end cycles: host timeline joined with all lanes drained.
     pub cycles: u64,
     pub scalar_instructions: u64,
     pub vector_instructions: u64,
-    /// Cycles each Arrow lane spent busy.
-    pub lane_busy: [u64; 8],
+    /// Cycles each Arrow lane spent busy (`lane_busy.len() == lanes`).
+    pub lane_busy: Vec<u64>,
     pub lanes: usize,
     pub bus: BusStats,
     pub unit: UnitStats,
 }
 
 impl RunSummary {
-    /// Fraction of the run each lane was occupied.
+    /// Fraction of the run each lane was occupied.  Out-of-range lanes
+    /// report 0 rather than panicking.
     pub fn lane_utilisation(&self, lane: usize) -> f64 {
         if self.cycles == 0 {
-            0.0
-        } else {
-            self.lane_busy[lane] as f64 / self.cycles as f64
+            return 0.0;
         }
+        match self.lane_busy.get(lane) {
+            Some(&busy) => busy as f64 / self.cycles as f64,
+            None => 0.0,
+        }
+    }
+}
+
+/// A small fixed-capacity register list for scoreboard bookkeeping —
+/// sources/destinations of one vector instruction (at most two LMUL=8
+/// groups plus the v0 mask), kept on the stack so dispatch performs no
+/// heap allocation.
+#[derive(Debug, Clone, Copy)]
+struct RegList {
+    regs: [u8; 24],
+    len: usize,
+}
+
+impl RegList {
+    fn new() -> RegList {
+        RegList { regs: [0; 24], len: 0 }
+    }
+
+    fn push(&mut self, r: u8) {
+        self.regs[self.len] = r;
+        self.len += 1;
+    }
+
+    fn extend(&mut self, range: std::ops::Range<u8>) {
+        for r in range {
+            self.push(r);
+        }
+    }
+
+    fn iter(&self) -> impl Iterator<Item = u8> + '_ {
+        self.regs[..self.len].iter().copied()
     }
 }
 
@@ -78,6 +121,9 @@ pub struct Machine {
     pub dram: Dram,
     pub bus: AxiBus,
     program: Program,
+    /// Per-PC decoded-instruction cache (lazily filled; persists across
+    /// `run` calls and can be seeded by a `Session`).
+    decoded: Vec<Option<Instr>>,
     /// Absolute host-timeline position.
     host_time: u64,
     /// Absolute time each lane frees up.
@@ -98,6 +144,23 @@ impl Machine {
         config: ArrowConfig,
         scalar_timing: ScalarTiming,
     ) -> Self {
+        let decoded = vec![None; program.text.len()];
+        Machine::with_decoded(program, decoded, config, scalar_timing)
+    }
+
+    /// Build a machine with a pre-populated decoded-instruction cache
+    /// (the `Session` fast path: decode once, run many).
+    pub fn with_decoded(
+        program: Program,
+        decoded: Vec<Option<Instr>>,
+        config: ArrowConfig,
+        scalar_timing: ScalarTiming,
+    ) -> Self {
+        assert_eq!(
+            decoded.len(),
+            program.text.len(),
+            "decode cache must cover the text section"
+        );
         let mut dram = Dram::new();
         dram.write_bytes(DATA_BASE, &program.data);
         let bus = AxiBus::new(config.mem_timing);
@@ -109,6 +172,7 @@ impl Machine {
             dram,
             bus,
             program,
+            decoded,
             host_time: 0,
             reg_ready: [0; 32],
             vector_instructions: 0,
@@ -132,11 +196,11 @@ impl Machine {
     }
 
     /// Registers read by a vector instruction (scoreboard sources).
-    fn source_regs(&self, instr: &VecInstr) -> Vec<u8> {
+    fn source_regs(&self, instr: &VecInstr) -> RegList {
         use crate::isa::rvv::{AddrMode, MaskMode, VSrc2};
         let lmul = self.arrow.vtype().lmul as u8;
         let group = |base: u8| base..base.saturating_add(lmul).min(32);
-        let mut regs = Vec::new();
+        let mut regs = RegList::new();
         match *instr {
             VecInstr::VsetVli { .. } => {}
             VecInstr::Load { mode, mask, .. } => {
@@ -179,15 +243,17 @@ impl Machine {
         regs
     }
 
-    fn dest_regs(&self, instr: &VecInstr) -> Vec<u8> {
+    fn dest_regs(&self, instr: &VecInstr) -> RegList {
         let lmul = self.arrow.vtype().lmul as u8;
+        let mut regs = RegList::new();
         match instr.dest_vreg() {
             Some(vd) if !matches!(instr, VecInstr::Store { .. }) => {
                 let hi = vd.0.saturating_add(lmul).min(32);
-                (vd.0..hi).collect()
+                regs.extend(vd.0..hi);
             }
-            _ => Vec::new(),
+            _ => {}
         }
+        regs
     }
 
     /// Dispatch one vector instruction to Arrow; returns host-visible
@@ -212,7 +278,7 @@ impl Machine {
         let dep_ready = sources
             .iter()
             .chain(dests.iter())
-            .map(|&r| self.reg_ready[r as usize])
+            .map(|r| self.reg_ready[r as usize])
             .max()
             .unwrap_or(0);
         let start = self
@@ -229,7 +295,7 @@ impl Machine {
         };
         self.lane_free[plan.lane] = done;
         self.lane_busy[plan.lane] += done - start;
-        for r in dests {
+        for r in dests.iter() {
             self.reg_ready[r as usize] = done;
         }
         self.vector_instructions += 1;
@@ -263,10 +329,6 @@ impl Machine {
         max_instructions: u64,
     ) -> Result<RunSummary, MachineError> {
         use crate::isa::decode;
-        use crate::isa::Instr;
-        // Predecode lazily: each text word is decoded at most once per run
-        // (decoding dominated the naive loop — EXPERIMENTS.md §Perf).
-        let mut decoded: Vec<Option<Instr>> = vec![None; text.len()];
         let mut executed = 0u64;
         loop {
             if executed >= max_instructions {
@@ -279,12 +341,14 @@ impl Machine {
                     pc: self.cpu.pc,
                 }));
             }
-            let instr = match decoded[index] {
+            // Decoded at most once per machine lifetime (a Session seeds
+            // the whole cache up front, amortising it across runs).
+            let instr = match self.decoded[index] {
                 Some(i) => i,
                 None => {
                     let i = decode(text[index])
                         .map_err(|e| MachineError::Cpu(CpuFault::Decode(e)))?;
-                    decoded[index] = Some(i);
+                    self.decoded[index] = Some(i);
                     i
                 }
             };
@@ -307,17 +371,13 @@ impl Machine {
 
     /// Ledger snapshot; end-to-end cycles join host + drained lanes.
     pub fn summary(&self) -> RunSummary {
-        let mut lane_busy = [0u64; 8];
-        for (i, &b) in self.lane_busy.iter().enumerate().take(8) {
-            lane_busy[i] = b;
-        }
         let drained =
             self.lane_free.iter().copied().max().unwrap_or(0);
         RunSummary {
             cycles: self.host_time.max(drained),
             scalar_instructions: self.cpu.retired,
             vector_instructions: self.vector_instructions,
-            lane_busy,
+            lane_busy: self.lane_busy.clone(),
             lanes: self.arrow.config().lanes,
             bus: self.bus.stats(),
             unit: self.arrow.stats(),
@@ -466,5 +526,38 @@ mod tests {
         );
         m.run(1000).unwrap();
         assert_eq!(m.cpu.regs[10], 9);
+    }
+
+    /// Regression: lane bookkeeping beyond 8 lanes used to overflow the
+    /// fixed `[u64; 8]` in `RunSummary` — a 16-lane design point must
+    /// report all 16 lanes and not panic in `lane_utilisation`.
+    #[test]
+    fn sixteen_lane_summary_covers_all_lanes() {
+        let config = ArrowConfig { lanes: 16, ..Default::default() };
+        config.validate().unwrap();
+        let program = assemble(
+            r#"
+            .text
+                li a2, 8
+                vsetvli t0, a2, e32,m1
+                vadd.vv v1, v0, v0
+                vadd.vv v30, v0, v0
+                halt
+            "#,
+        )
+        .unwrap();
+        let mut m = Machine::new(program, config, crate::scalar::ScalarTiming::default());
+        let s = m.run(100).unwrap();
+        assert_eq!(s.lanes, 16);
+        assert_eq!(s.lane_busy.len(), 16);
+        // v1 lives in bank 0, v30 in bank 15 (2 regs per bank).
+        assert!(s.lane_busy[0] > 0);
+        assert!(s.lane_busy[15] > 0);
+        for lane in 0..16 {
+            let u = s.lane_utilisation(lane);
+            assert!((0.0..=1.0).contains(&u));
+        }
+        // Out-of-range lanes report zero instead of panicking.
+        assert_eq!(s.lane_utilisation(31), 0.0);
     }
 }

@@ -4,14 +4,19 @@
 //! * [`machine`] — the `Machine`: program loading, the host run loop,
 //!   vector dispatch over AXI with lane/scoreboard scheduling, and the
 //!   cycle ledgers every report is built from.
+//! * [`session`] — the `Session`: program + config bound once (with the
+//!   text predecoded), then run against many workloads — the reuse seam
+//!   the benchmark runner and the sweep pool are built on.
 //! * [`server`] — an threaded TCP job server exposing the simulator as a
-//!   service: newline-delimited JSON requests to run benchmarks and fetch
-//!   reports.
+//!   service: newline-delimited JSON requests to run benchmarks, fan out
+//!   design-space sweeps and fetch reports.
 //! * [`describe`] — textual renderings of the architecture figures
 //!   (Figs 1-4) from the live configuration.
 
 pub mod describe;
 pub mod machine;
 pub mod server;
+pub mod session;
 
 pub use machine::{Machine, MachineError, RunSummary};
+pub use session::{Session, SessionRun};

@@ -8,22 +8,32 @@
 //! {"cmd": "ping"}
 //! {"cmd": "bench", "benchmark": "vector_addition", "profile": "small",
 //!  "mode": "vector", "lanes": 2}
+//! {"cmd": "sweep", "benchmarks": ["vector_addition"], "profiles": ["test"],
+//!  "modes": ["vector"], "lanes": [1, 2, 4], "vlens": [128, 256]}
 //! {"cmd": "describe", "what": "datapath"}
 //! {"cmd": "list"}
 //! ```
 //!
-//! Responses are single-line JSON with `"ok": true/false`.
+//! Responses are single-line JSON with `"ok": true/false`.  `sweep` fans
+//! its grid across the in-process worker pool (see
+//! [`crate::bench::sweep`]) and answers with one point object per grid
+//! entry.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
 use crate::bench::runner::{run_benchmark, Mode};
 use crate::bench::suite::{Benchmark, BENCHMARKS};
+use crate::bench::sweep::{self, SweepSpec};
 use crate::bench::Profile;
 use crate::util::json::{self, Json};
 use crate::vector::ArrowConfig;
 
 use super::describe;
+
+/// Upper bound on one request's sweep grid, to keep a single connection
+/// from monopolising the process.
+const MAX_SWEEP_GRID: usize = 4096;
 
 fn err_response(msg: impl Into<String>) -> Json {
     Json::obj(vec![("ok", false.into()), ("error", Json::Str(msg.into()))])
@@ -113,10 +123,95 @@ pub fn handle_request(req: &Json) -> Json {
                 Err(e) => err_response(e.to_string()),
             }
         }
+        Some("sweep") => match sweep_spec_from(req) {
+            Ok(spec) => {
+                let report = sweep::run_sweep(&spec);
+                let Json::Obj(mut body) = sweep::report_json(&report) else {
+                    unreachable!("report_json returns an object")
+                };
+                body.insert("ok".into(), true.into());
+                Json::Obj(body)
+            }
+            Err(e) => err_response(e),
+        },
         other => err_response(format!(
-            "unknown cmd {other:?} (ping|list|bench|describe)"
+            "unknown cmd {other:?} (ping|list|bench|sweep|describe)"
         )),
     }
+}
+
+/// Parse a `sweep` request body into a [`SweepSpec`]; every unknown
+/// name or malformed field is a client error, not a panic.
+fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
+    fn named_list<T>(
+        req: &Json,
+        key: &str,
+        lookup: impl Fn(&str) -> Option<T>,
+        kind: &str,
+    ) -> Result<Option<Vec<T>>, String> {
+        let Some(v) = req.get(key) else { return Ok(None) };
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| format!("`{key}` must be an array of names"))?;
+        let mut out = Vec::with_capacity(arr.len());
+        for item in arr {
+            let name = item
+                .as_str()
+                .ok_or_else(|| format!("`{key}` must be an array of names"))?;
+            out.push(
+                lookup(name)
+                    .ok_or_else(|| format!("unknown {kind} `{name}`"))?,
+            );
+        }
+        if out.is_empty() {
+            return Err(format!("`{key}` must not be empty"));
+        }
+        Ok(Some(out))
+    }
+
+    fn num_list(req: &Json, key: &str) -> Result<Option<Vec<u64>>, String> {
+        let Some(v) = req.get(key) else { return Ok(None) };
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| format!("`{key}` must be an array of numbers"))?;
+        let out: Option<Vec<u64>> = arr.iter().map(Json::as_u64).collect();
+        let out = out
+            .ok_or_else(|| format!("`{key}` must be an array of numbers"))?;
+        if out.is_empty() {
+            return Err(format!("`{key}` must not be empty"));
+        }
+        Ok(Some(out))
+    }
+
+    let mut spec = SweepSpec::default();
+    if let Some(b) = named_list(req, "benchmarks", Benchmark::by_name, "benchmark")? {
+        spec.benchmarks = b;
+    }
+    if let Some(p) = named_list(req, "profiles", Profile::by_name, "profile")? {
+        spec.profiles = p;
+    }
+    if let Some(m) = named_list(req, "modes", Mode::by_name, "mode")? {
+        spec.modes = m;
+    }
+    if let Some(l) = num_list(req, "lanes")? {
+        spec.lanes = l.into_iter().map(|n| n as usize).collect();
+    }
+    if let Some(v) = num_list(req, "vlens")? {
+        spec.vlens = v.into_iter().map(|n| n as u32).collect();
+    }
+    if let Some(t) = req.get("threads").and_then(Json::as_u64) {
+        spec.threads = t as usize;
+    }
+    if let Some(s) = req.get("seed").and_then(Json::as_u64) {
+        spec.seed = s;
+    }
+    let grid = spec.grid_len();
+    if grid > MAX_SWEEP_GRID {
+        return Err(format!(
+            "sweep grid of {grid} points exceeds the {MAX_SWEEP_GRID}-point limit"
+        ));
+    }
+    Ok(spec)
 }
 
 fn config_from(req: &Json) -> ArrowConfig {
@@ -200,6 +295,122 @@ mod tests {
     fn unknown_cmd_rejected() {
         let r = handle_request(&req(r#"{"cmd": "nuke"}"#));
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let msg = r.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("unknown cmd"), "{msg}");
+    }
+
+    #[test]
+    fn missing_cmd_rejected() {
+        let r = handle_request(&req(r#"{"benchmark": "vector_addition"}"#));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn unknown_benchmark_rejected() {
+        let r = handle_request(&req(
+            r#"{"cmd": "bench", "benchmark": "quicksort", "profile": "test"}"#,
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            r.get("error").unwrap().as_str(),
+            Some("unknown benchmark")
+        );
+    }
+
+    #[test]
+    fn unknown_profile_rejected() {
+        let r = handle_request(&req(
+            r#"{"cmd": "bench", "benchmark": "vector_addition",
+                "profile": "enormous"}"#,
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("error").unwrap().as_str(), Some("unknown profile"));
+    }
+
+    #[test]
+    fn unknown_describe_figure_rejected() {
+        let r = handle_request(&req(
+            r#"{"cmd": "describe", "what": "flux-capacitor"}"#,
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn sweep_roundtrip_with_cache() {
+        let r = handle_request(&req(
+            r#"{"cmd": "sweep", "benchmarks": ["vector_addition"],
+                "profiles": ["test"], "modes": ["vector"],
+                "lanes": [1, 2, 2], "vlens": [256], "threads": 2}"#,
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let points = r.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 3);
+        for p in points {
+            assert_eq!(p.get("ok"), Some(&Json::Bool(true)));
+            assert_eq!(p.get("verified"), Some(&Json::Bool(true)));
+            assert!(p.get("cycles").unwrap().as_u64().unwrap() > 0);
+        }
+        // lanes [1, 2, 2]: one duplicated point answered from the cache.
+        assert_eq!(r.get("unique_simulated").unwrap().as_u64(), Some(2));
+        assert_eq!(r.get("cache_hits").unwrap().as_u64(), Some(1));
+        // Duplicated points carry byte-identical results.
+        assert_eq!(points[1].to_string(), points[2].to_string());
+    }
+
+    #[test]
+    fn sweep_invalid_lane_count_reported_per_point() {
+        let r = handle_request(&req(
+            r#"{"cmd": "sweep", "benchmarks": ["vector_addition"],
+                "profiles": ["test"], "modes": ["vector"],
+                "lanes": [3], "vlens": [256], "threads": 1}"#,
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let points = r.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points[0].get("ok"), Some(&Json::Bool(false)));
+        assert!(points[0]
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("lanes"));
+    }
+
+    #[test]
+    fn sweep_bad_shapes_rejected() {
+        for body in [
+            r#"{"cmd": "sweep", "benchmarks": ["sudoku"]}"#,
+            r#"{"cmd": "sweep", "profiles": ["galactic"]}"#,
+            r#"{"cmd": "sweep", "modes": ["quantum"]}"#,
+            r#"{"cmd": "sweep", "benchmarks": "vector_addition"}"#,
+            r#"{"cmd": "sweep", "lanes": ["two"]}"#,
+            r#"{"cmd": "sweep", "vlens": []}"#,
+        ] {
+            let r = handle_request(&req(body));
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{body}");
+        }
+    }
+
+    #[test]
+    fn sweep_grid_limit_enforced() {
+        // 9 benchmarks x 4 profiles x 2 modes x 6 lane counts x 5 VLENs
+        // = 2160 would run for hours on the large profile; the limit is
+        // on the *count*, so trip it with repeated entries instead.
+        let lanes: Vec<String> =
+            (0..5000).map(|_| "2".to_string()).collect();
+        let body = format!(
+            r#"{{"cmd": "sweep", "benchmarks": ["vector_addition"],
+                 "profiles": ["test"], "modes": ["vector"],
+                 "lanes": [{}], "vlens": [256]}}"#,
+            lanes.join(",")
+        );
+        let r = handle_request(&req(&body));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert!(r
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("limit"));
     }
 
     #[test]

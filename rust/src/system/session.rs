@@ -1,0 +1,178 @@
+//! `Session` — build once, run many.
+//!
+//! A session pairs an assembled [`Program`] with a validated
+//! [`ArrowConfig`] and predecodes the whole text section up front.  Each
+//! [`Session::run`] then stamps out a fresh [`Machine`] (clean DDR3,
+//! registers and ledgers) that shares the decoded-instruction cache, so
+//! the per-run cost is loading workload data — not re-assembling or
+//! re-decoding the program.
+//!
+//! This is the seam the service layers build on: the benchmark runner
+//! executes every workload through a session, and the `sweep` subsystem
+//! fans sessions for different design points across a worker pool.
+
+use crate::asm::Program;
+use crate::isa::{decode, Instr};
+use crate::scalar::ScalarTiming;
+use crate::vector::ArrowConfig;
+
+use super::machine::{Machine, MachineError, RunSummary};
+
+/// A reusable execution context: program + configuration, decoded once.
+#[derive(Debug, Clone)]
+pub struct Session {
+    program: Program,
+    /// Per-PC decode cache shared by every machine the session builds.
+    /// Words that fail to decode stay `None` and fault at execution time
+    /// (exactly like the lazy path), so data words in `.text` or
+    /// deliberately bad encodings keep their seed-time semantics.
+    decoded: Vec<Option<Instr>>,
+    config: ArrowConfig,
+    timing: ScalarTiming,
+}
+
+/// Outcome of one session run: the cycle ledger plus any result words
+/// read back from simulated DDR3.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionRun {
+    pub summary: RunSummary,
+    pub output: Vec<i32>,
+}
+
+impl Session {
+    /// Build a session.  Fails (rather than panicking later) on an
+    /// invalid design point.
+    pub fn new(
+        program: Program,
+        config: ArrowConfig,
+    ) -> Result<Session, String> {
+        config.validate()?;
+        let decoded =
+            program.text.iter().map(|&w| decode(w).ok()).collect();
+        Ok(Session {
+            program,
+            decoded,
+            config,
+            timing: ScalarTiming::default(),
+        })
+    }
+
+    /// Override the scalar host timing model.
+    pub fn with_timing(mut self, timing: ScalarTiming) -> Session {
+        self.timing = timing;
+        self
+    }
+
+    pub fn config(&self) -> &ArrowConfig {
+        &self.config
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// Stamp out a fresh machine sharing the predecoded text.
+    pub fn machine(&self) -> Machine {
+        Machine::with_decoded(
+            self.program.clone(),
+            self.decoded.clone(),
+            self.config,
+            self.timing,
+        )
+    }
+
+    /// Run one workload: write each `(label, words)` input into DDR3,
+    /// execute until `ecall` (or `budget` instructions), and read
+    /// `result.1` words back from `result.0`.
+    pub fn run(
+        &self,
+        inputs: &[(&str, &[i32])],
+        result: Option<(&str, usize)>,
+        budget: u64,
+    ) -> Result<SessionRun, MachineError> {
+        let mut machine = self.machine();
+        for (label, data) in inputs {
+            let addr = machine.addr_of(label);
+            machine.dram.write_i32_slice(addr, data);
+        }
+        let summary = machine.run(budget)?;
+        let output = match result {
+            Some((label, len)) => {
+                machine.dram.read_i32_slice(machine.addr_of(label), len)
+            }
+            None => Vec::new(),
+        };
+        Ok(SessionRun { summary, output })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+
+    const SAXPY: &str = r#"
+        .data
+        xs: .word 1, 2, 3, 4, 5, 6, 7, 8
+        ys: .word 10, 20, 30, 40, 50, 60, 70, 80
+        zs: .space 32
+        .text
+            li a2, 8
+            vsetvli t0, a2, e32,m1
+            la a0, xs
+            vle32.v v1, (a0)
+            la a0, ys
+            vle32.v v2, (a0)
+            vadd.vv v3, v1, v2
+            la a0, zs
+            vse32.v v3, (a0)
+            halt
+    "#;
+
+    #[test]
+    fn run_many_workloads_one_session() {
+        let session =
+            Session::new(assemble(SAXPY).unwrap(), ArrowConfig::default())
+                .unwrap();
+        let mut last_cycles = None;
+        for offset in 0..4 {
+            let xs: Vec<i32> = (0..8).map(|i| i + offset).collect();
+            let ys: Vec<i32> = (0..8).map(|i| 10 * i).collect();
+            let r = session
+                .run(
+                    &[("xs", &xs), ("ys", &ys)],
+                    Some(("zs", 8)),
+                    10_000,
+                )
+                .unwrap();
+            let want: Vec<i32> = (0..8).map(|i| i + offset + 10 * i).collect();
+            assert_eq!(r.output, want, "offset {offset}");
+            // Same program + config: the cycle ledger is identical run
+            // to run regardless of the data values.
+            if let Some(prev) = last_cycles {
+                assert_eq!(r.summary.cycles, prev);
+            }
+            last_cycles = Some(r.summary.cycles);
+        }
+    }
+
+    #[test]
+    fn session_matches_one_shot_machine() {
+        let program = assemble(SAXPY).unwrap();
+        let session =
+            Session::new(program.clone(), ArrowConfig::default()).unwrap();
+        let sr = session.run(&[], Some(("zs", 8)), 10_000).unwrap();
+        let mut m = Machine::with_defaults(program);
+        let summary = m.run(10_000).unwrap();
+        let out = m.dram.read_i32_slice(m.addr_of("zs"), 8);
+        assert_eq!(sr.summary, summary);
+        assert_eq!(sr.output, out);
+    }
+
+    #[test]
+    fn invalid_config_rejected_up_front() {
+        let program = assemble(".text\n halt\n").unwrap();
+        let bad = ArrowConfig { lanes: 3, ..Default::default() };
+        assert!(Session::new(program, bad).is_err());
+    }
+}

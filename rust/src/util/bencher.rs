@@ -52,6 +52,9 @@ pub struct Bencher {
     /// Target wall-clock budget per benchmark, seconds.
     pub budget_s: f64,
     results: Vec<Measurement>,
+    /// Precomputed scalar results recorded via [`Bencher::record_value`]
+    /// (name, value, unit).
+    values: Vec<(String, f64, String)>,
 }
 
 impl Default for Bencher {
@@ -61,7 +64,12 @@ impl Default for Bencher {
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or(2.0);
-        Bencher { min_iters: 3, budget_s, results: Vec::new() }
+        Bencher {
+            min_iters: 3,
+            budget_s,
+            results: Vec::new(),
+            values: Vec::new(),
+        }
     }
 }
 
@@ -107,14 +115,66 @@ impl Bencher {
     /// the interesting output is the model's number, not wall time).
     pub fn record_value(&mut self, name: &str, value: f64, unit: &str) {
         println!("{name:<44} = {value:.6e} {unit}");
+        self.values.push((name.to_string(), value, unit.to_string()));
     }
 
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
 
+    /// Machine-readable dump of everything measured/recorded so far.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let measurements = self
+            .results
+            .iter()
+            .map(|m| {
+                let mut fields = vec![
+                    ("name", m.name.as_str().into()),
+                    ("iters", u64::from(m.iters).into()),
+                    ("mean_s", m.mean_s.into()),
+                    ("stddev_s", m.stddev_s.into()),
+                ];
+                if let Some(u) = m.units_per_iter {
+                    fields.push(("units_per_iter", u.into()));
+                    if m.mean_s > 0.0 {
+                        fields.push(("units_per_s", (u / m.mean_s).into()));
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let values = self
+            .values
+            .iter()
+            .map(|(name, value, unit)| {
+                Json::obj(vec![
+                    ("name", name.as_str().into()),
+                    ("value", (*value).into()),
+                    ("unit", unit.as_str().into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("measurements", Json::Arr(measurements)),
+            ("values", Json::Arr(values)),
+        ])
+    }
+
     /// Final summary footer.
     pub fn finish(self) {
+        println!("\n{} benchmarks measured", self.results.len());
+    }
+
+    /// Footer plus a `BENCH_<suite>.json` dump next to the working
+    /// directory, so speedups are recorded across PRs (EXPERIMENTS.md
+    /// §Perf keeps the history).
+    pub fn finish_to_json(self, suite: &str) {
+        let path = format!("BENCH_{suite}.json");
+        match std::fs::write(&path, format!("{}\n", self.to_json())) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
         println!("\n{} benchmarks measured", self.results.len());
     }
 }
@@ -125,7 +185,11 @@ mod tests {
 
     #[test]
     fn measures_something() {
-        let mut b = Bencher { min_iters: 3, budget_s: 0.01, results: vec![] };
+        let mut b = Bencher {
+            min_iters: 3,
+            budget_s: 0.01,
+            ..Default::default()
+        };
         let mut x = 0u64;
         b.bench("spin", || {
             for i in 0..1000u64 {
@@ -136,6 +200,14 @@ mod tests {
         assert_eq!(b.results().len(), 1);
         assert!(b.results()[0].mean_s >= 0.0);
         assert!(x > 0);
+        b.record_value("model_number", 42.0, "cycles");
+        let j = b.to_json();
+        assert_eq!(
+            j.get("measurements").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        let values = j.get("values").unwrap().as_arr().unwrap();
+        assert_eq!(values[0].get("name").unwrap().as_str(), Some("model_number"));
     }
 
     #[test]

@@ -57,11 +57,22 @@ pub fn enable_for_mask(
     mask: impl Fn(usize) -> bool,
 ) -> WriteEnable {
     let mut bytes = vec![false; group_bytes];
+    fill_enable_for_mask(&mut bytes, sew_bytes, vl, mask);
+    WriteEnable { bytes }
+}
+
+/// In-place variant of [`enable_for_mask`] over a caller-owned buffer
+/// (the execution engine reuses one scratch buffer across instructions).
+pub fn fill_enable_for_mask(
+    bytes: &mut [bool],
+    sew_bytes: usize,
+    vl: usize,
+    mask: impl Fn(usize) -> bool,
+) {
     for (i, b) in bytes.iter_mut().enumerate() {
         let elem = i / sew_bytes;
         *b = elem < vl && mask(elem);
     }
-    WriteEnable { bytes }
 }
 
 /// Write-enable for a single element (reductions write only element 0;
@@ -72,11 +83,21 @@ pub fn enable_for_element(
     elem: usize,
 ) -> WriteEnable {
     let mut bytes = vec![false; group_bytes];
-    let start = elem * sew_bytes;
-    if start + sew_bytes <= group_bytes {
-        bytes[start..start + sew_bytes].iter_mut().for_each(|b| *b = true);
-    }
+    fill_enable_for_element(&mut bytes, sew_bytes, elem);
     WriteEnable { bytes }
+}
+
+/// In-place variant of [`enable_for_element`].
+pub fn fill_enable_for_element(
+    bytes: &mut [bool],
+    sew_bytes: usize,
+    elem: usize,
+) {
+    bytes.fill(false);
+    let start = elem * sew_bytes;
+    if start + sew_bytes <= bytes.len() {
+        bytes[start..start + sew_bytes].fill(true);
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +144,15 @@ mod tests {
         assert!(we.bytes[0..4].iter().all(|&b| b));
         let none = enable_for_element(32, 4, 9); // out of range
         assert_eq!(none.enabled(), 0);
+    }
+
+    #[test]
+    fn fill_variants_match_allocating_ones() {
+        let mut buf = [true; 32];
+        fill_enable_for_mask(&mut buf, 2, 16, |e| e % 3 == 0);
+        assert_eq!(buf.to_vec(), enable_for_mask(32, 2, 16, |e| e % 3 == 0).bytes);
+        fill_enable_for_element(&mut buf, 4, 2);
+        assert_eq!(buf.to_vec(), enable_for_element(32, 4, 2).bytes);
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //! books those resources on the shared timeline — keeping function and
 //! timing separate the way the paper's datapath (Fig 1) separates control
 //! signals from data movement.
+//!
+//! The engine is zero-allocation on the hot path: operand groups, the
+//! destination staging buffer, the v0 mask snapshot and the write-enable
+//! vector all live in a preallocated [`ExecScratch`] owned by the unit
+//! and reused across instructions (§Perf).
 
 use crate::isa::csr::Vtype;
 use crate::isa::reg::XReg;
@@ -93,6 +98,45 @@ pub struct UnitStats {
     pub mem_bytes: u64,
 }
 
+/// Preallocated working buffers, sized once for the largest LMUL=8
+/// register group.  Only a prefix of each buffer is live per
+/// instruction; stale suffix bytes are never written back because the
+/// prefix/write-enable write paths ignore them.
+#[derive(Debug, Clone)]
+struct ExecScratch {
+    /// vs2 operand (or vs3 store-data) group bytes.
+    a: Vec<u8>,
+    /// vs1 operand / index-offset group bytes.
+    b: Vec<u8>,
+    /// Destination staging buffer.
+    out: Vec<u8>,
+    /// Snapshot of v0 (the mask register), one VLEN register.
+    mask: Vec<u8>,
+    /// Per-byte write-enable staging for masked writes.
+    we: Vec<bool>,
+}
+
+impl ExecScratch {
+    fn new(config: &ArrowConfig) -> Self {
+        let group = 8 * config.vlen_bytes();
+        ExecScratch {
+            a: vec![0; group],
+            b: vec![0; group],
+            out: vec![0; group],
+            mask: vec![0; config.vlen_bytes()],
+            we: vec![false; group],
+        }
+    }
+}
+
+/// Resolved second operand: a vector staged in the scratch `b` buffer,
+/// or a broadcast scalar (.vx/.vi) that never touches the VRF.
+#[derive(Debug, Clone, Copy)]
+enum Src2Val {
+    Vector,
+    Scalar(i64),
+}
+
 /// The Arrow co-processor state.
 #[derive(Debug, Clone)]
 pub struct ArrowUnit {
@@ -101,6 +145,7 @@ pub struct ArrowUnit {
     vtype: Vtype,
     vl: u32,
     stats: UnitStats,
+    scratch: ExecScratch,
 }
 
 impl ArrowUnit {
@@ -108,6 +153,7 @@ impl ArrowUnit {
         config.validate().expect("invalid Arrow configuration");
         ArrowUnit {
             vrf: Vrf::new(&config),
+            scratch: ExecScratch::new(&config),
             config,
             vtype: Vtype::default(),
             vl: 0,
@@ -139,6 +185,11 @@ impl ArrowUnit {
         (self.vtype.sew_bits / 8) as usize
     }
 
+    /// Bytes in the current LMUL register group.
+    fn group_len(&self) -> usize {
+        self.vtype.lmul as usize * self.vrf.vlen_bytes()
+    }
+
     fn check_group(&self, reg: u8) -> Result<(), ExecError> {
         let lmul = self.vtype.lmul;
         if reg as u32 % lmul != 0 || reg as u32 + lmul > 32 {
@@ -150,6 +201,36 @@ impl ArrowUnit {
     /// Mask predicate from v0 (one bit per element, LSB-first).
     fn mask_bit(v0: &[u8], elem: usize) -> bool {
         (v0[elem / 8] >> (elem % 8)) & 1 == 1
+    }
+
+    /// Snapshot v0 into the scratch mask buffer (no port access, like
+    /// the old `peek_group(0, 1).to_vec()` path).
+    fn snapshot_mask(&mut self) {
+        let vlen = self.vrf.vlen_bytes();
+        self.scratch.mask[..vlen].copy_from_slice(self.vrf.peek_group(0, 1));
+    }
+
+    /// Stage the second operand: vector groups are copied into scratch
+    /// `b`; broadcast operands (.vx/.vi) stay scalar — the hot path of
+    /// the matmul axpy loop never materialises an element vector.
+    fn fetch_src2(
+        &mut self,
+        src2: VSrc2,
+        rs1_value: u32,
+    ) -> Result<Src2Val, ExecError> {
+        match src2 {
+            VSrc2::V(vs1) => {
+                self.check_group(vs1.0)?;
+                self.vrf.read_group_into(
+                    vs1.0,
+                    self.vtype.lmul,
+                    &mut self.scratch.b,
+                );
+                Ok(Src2Val::Vector)
+            }
+            VSrc2::X(_) => Ok(Src2Val::Scalar(rs1_value as i32 as i64)),
+            VSrc2::I(imm) => Ok(Src2Val::Scalar(imm as i64)),
+        }
     }
 
     /// ELEN-word passes the SIMD ALU needs for `vl` SEW elements.
@@ -231,8 +312,8 @@ impl ArrowUnit {
                 }
             }
             VecInstr::MvXs { vs2, .. } => {
-                let group = self.vrf.read_group(vs2.0, 1);
-                let v = alu::read_elem(&group, 0, self.sew_bytes());
+                self.vrf.read_group_into(vs2.0, 1, &mut self.scratch.a);
+                let v = alu::read_elem(&self.scratch.a, 0, self.sew_bytes());
                 self.stats.moves += 1;
                 Ok(ExecPlan {
                     lane: self.config.lane_of(vs2.0),
@@ -246,10 +327,21 @@ impl ArrowUnit {
             VecInstr::MvSx { vd, .. } => {
                 self.check_group(vd.0)?;
                 let sew_bytes = self.sew_bytes();
-                let mut data = self.vrf.peek_group(vd.0, 1).to_vec();
-                alu::write_elem(&mut data, 0, sew_bytes, rs1_value as i32 as i64);
-                let we = offset::enable_for_element(data.len(), sew_bytes, 0);
-                self.vrf.write_group_masked(vd.0, &data, &we.bytes);
+                let vlen = self.vrf.vlen_bytes();
+                {
+                    let ExecScratch { out, we, .. } = &mut self.scratch;
+                    alu::write_elem(out, 0, sew_bytes, rs1_value as i32 as i64);
+                    offset::fill_enable_for_element(
+                        &mut we[..vlen],
+                        sew_bytes,
+                        0,
+                    );
+                }
+                self.vrf.write_group_masked(
+                    vd.0,
+                    &self.scratch.out[..vlen],
+                    &self.scratch.we[..vlen],
+                );
                 self.stats.moves += 1;
                 Ok(ExecPlan {
                     lane: self.config.lane_of(vd.0),
@@ -263,23 +355,23 @@ impl ArrowUnit {
         }
     }
 
-    /// Broadcast / gather the second operand as SEW elements.
-    fn src2_elems(
-        &mut self,
-        src2: VSrc2,
-        vl: usize,
-        rs1_value: u32,
-    ) -> Result<Vec<i64>, ExecError> {
+    /// Masked write-back of the staged destination: fill the reusable
+    /// write-enable buffer from the v0 snapshot, then push through the
+    /// per-byte write port.
+    fn write_back_masked(&mut self, vd: u8, glen: usize, vl: usize) {
         let sew_bytes = self.sew_bytes();
-        Ok(match src2 {
-            VSrc2::V(vs1) => {
-                self.check_group(vs1.0)?;
-                let g = self.vrf.read_group(vs1.0, self.vtype.lmul);
-                (0..vl).map(|i| alu::read_elem(&g, i, sew_bytes)).collect()
-            }
-            VSrc2::X(_) => vec![rs1_value as i32 as i64; vl],
-            VSrc2::I(imm) => vec![imm as i64; vl],
-        })
+        {
+            let ExecScratch { we, mask, .. } = &mut self.scratch;
+            let v0: &[u8] = mask;
+            offset::fill_enable_for_mask(&mut we[..glen], sew_bytes, vl, |e| {
+                Self::mask_bit(v0, e)
+            });
+        }
+        self.vrf.write_group_masked(
+            vd,
+            &self.scratch.out[..glen],
+            &self.scratch.we[..glen],
+        );
     }
 
     fn exec_arith(
@@ -296,47 +388,32 @@ impl ArrowUnit {
         let vl = self.vl as usize;
         let sew_bytes = self.sew_bytes();
         let sew_bits = self.vtype.sew_bits;
-        let a = self.vrf.read_group(vs2.0, self.vtype.lmul);
-        // Broadcast operands (.vx/.vi) skip the element-vector
-        // materialisation — the hot path of the matmul axpy loop (§Perf).
-        let b_vec: Option<Vec<i64>> = match src2 {
-            VSrc2::V(vs1) => {
-                self.check_group(vs1.0)?;
-                let g = self.vrf.read_group(vs1.0, self.vtype.lmul);
-                Some((0..vl).map(|i| alu::read_elem(&g, i, sew_bytes)).collect())
-            }
-            _ => None,
-        };
-        let b_scalar: i64 = match src2 {
-            VSrc2::X(_) => rs1_value as i32 as i64,
-            VSrc2::I(imm) => imm as i64,
-            VSrc2::V(_) => 0,
-        };
+        let glen = self.group_len();
+        self.vrf.read_group_into(vs2.0, self.vtype.lmul, &mut self.scratch.a);
+        let b = self.fetch_src2(src2, rs1_value)?;
+        if mask == MaskMode::Masked {
+            self.snapshot_mask();
+        }
 
-        let mut out = self.vrf.peek_group(vd.0, self.vtype.lmul).to_vec();
-        for i in 0..vl {
-            let av = alu::read_elem(&a, i, sew_bytes);
-            let bv = match &b_vec {
-                Some(b) => b[i],
-                None => b_scalar,
-            };
-            alu::write_elem(&mut out, i, sew_bytes, alu::eval(op, av, bv, sew_bits));
+        {
+            let ExecScratch { a, b: bbuf, out, .. } = &mut self.scratch;
+            for i in 0..vl {
+                let av = alu::read_elem(a, i, sew_bytes);
+                let bv = match b {
+                    Src2Val::Vector => alu::read_elem(bbuf, i, sew_bytes),
+                    Src2Val::Scalar(s) => s,
+                };
+                alu::write_elem(out, i, sew_bytes, alu::eval(op, av, bv, sew_bits));
+            }
         }
         match mask {
             // tail-undisturbed prefix write, no per-byte enable vector
             MaskMode::Unmasked => self.vrf.write_group_prefix(
                 vd.0,
-                &out,
-                (vl * sew_bytes).min(out.len()),
+                &self.scratch.out[..glen],
+                (vl * sew_bytes).min(glen),
             ),
-            MaskMode::Masked => {
-                let v0 = self.vrf.peek_group(0, 1).to_vec();
-                let we =
-                    offset::enable_for_mask(out.len(), sew_bytes, vl, |e| {
-                        Self::mask_bit(&v0, e)
-                    });
-                self.vrf.write_group_masked(vd.0, &out, &we.bytes);
-            }
+            MaskMode::Masked => self.write_back_masked(vd.0, glen, vl),
         }
         self.stats.arith_ops += 1;
         self.stats.elements_processed += vl as u64;
@@ -362,22 +439,34 @@ impl ArrowUnit {
         let vl = self.vl as usize;
         let sew_bytes = self.sew_bytes();
         let sew_bits = self.vtype.sew_bits;
-        let a = self.vrf.read_group(vs2.0, self.vtype.lmul);
-        let b = self.src2_elems(src2, vl, rs1_value)?;
-        let v0 = self.vrf.peek_group(0, 1).to_vec();
+        let vlen = self.vrf.vlen_bytes();
+        self.vrf.read_group_into(vs2.0, self.vtype.lmul, &mut self.scratch.a);
+        let b = self.fetch_src2(src2, rs1_value)?;
+        if mask == MaskMode::Masked {
+            self.snapshot_mask();
+        }
 
         // Mask destination is a single register; bits past vl undisturbed.
-        let mut out = self.vrf.peek_group(vd.0, 1).to_vec();
-        for i in 0..vl {
-            if mask == MaskMode::Masked && !Self::mask_bit(&v0, i) {
-                continue;
+        self.scratch.out[..vlen]
+            .copy_from_slice(self.vrf.peek_group(vd.0, 1));
+        {
+            let ExecScratch { a, b: bbuf, out, mask: v0, .. } =
+                &mut self.scratch;
+            for i in 0..vl {
+                if mask == MaskMode::Masked && !Self::mask_bit(v0, i) {
+                    continue;
+                }
+                let av = alu::read_elem(a, i, sew_bytes);
+                let bv = match b {
+                    Src2Val::Vector => alu::read_elem(bbuf, i, sew_bytes),
+                    Src2Val::Scalar(s) => s,
+                };
+                let bit = alu::eval(op, av, bv, sew_bits) & 1;
+                let byte = &mut out[i / 8];
+                *byte = (*byte & !(1 << (i % 8))) | ((bit as u8) << (i % 8));
             }
-            let av = alu::read_elem(&a, i, sew_bytes);
-            let bit = alu::eval(op, av, b[i], sew_bits) & 1;
-            let byte = &mut out[i / 8];
-            *byte = (*byte & !(1 << (i % 8))) | ((bit as u8) << (i % 8));
         }
-        self.vrf.write_group(vd.0, &out);
+        self.vrf.write_group(vd.0, &self.scratch.out[..vlen]);
         self.stats.arith_ops += 1;
         self.stats.elements_processed += vl as u64;
         Ok(ExecPlan {
@@ -400,35 +489,53 @@ impl ArrowUnit {
         self.check_group(vd.0)?;
         let vl = self.vl as usize;
         let sew_bytes = self.sew_bytes();
-        let b = self.src2_elems(src2, vl, rs1_value)?;
-        let v0 = self.vrf.peek_group(0, 1).to_vec();
+        let glen = self.group_len();
+        let b = self.fetch_src2(src2, rs1_value)?;
+        if mask == MaskMode::Masked {
+            self.snapshot_mask();
+        }
 
-        let mut out = self.vrf.peek_group(vd.0, self.vtype.lmul).to_vec();
         match mask {
             // vmv.v.*: unconditional move of src2.
             MaskMode::Unmasked => {
-                for (i, &bv) in b.iter().enumerate().take(vl) {
-                    alu::write_elem(&mut out, i, sew_bytes, bv);
+                let ExecScratch { b: bbuf, out, .. } = &mut self.scratch;
+                for i in 0..vl {
+                    let bv = match b {
+                        Src2Val::Vector => alu::read_elem(bbuf, i, sew_bytes),
+                        Src2Val::Scalar(s) => s,
+                    };
+                    alu::write_elem(out, i, sew_bytes, bv);
                 }
             }
             // vmerge: vd[i] = v0[i] ? src2[i] : vs2[i].
             MaskMode::Masked => {
                 self.check_group(vs2.0)?;
-                let a = self.vrf.read_group(vs2.0, self.vtype.lmul);
+                self.vrf.read_group_into(
+                    vs2.0,
+                    self.vtype.lmul,
+                    &mut self.scratch.a,
+                );
+                let ExecScratch { a, b: bbuf, out, mask: v0, .. } =
+                    &mut self.scratch;
                 for i in 0..vl {
-                    let v = if Self::mask_bit(&v0, i) {
-                        b[i]
+                    let v = if Self::mask_bit(v0, i) {
+                        match b {
+                            Src2Val::Vector => {
+                                alu::read_elem(bbuf, i, sew_bytes)
+                            }
+                            Src2Val::Scalar(s) => s,
+                        }
                     } else {
-                        alu::read_elem(&a, i, sew_bytes)
+                        alu::read_elem(a, i, sew_bytes)
                     };
-                    alu::write_elem(&mut out, i, sew_bytes, v);
+                    alu::write_elem(out, i, sew_bytes, v);
                 }
             }
         }
         self.vrf.write_group_prefix(
             vd.0,
-            &out,
-            (vl * sew_bytes).min(out.len()),
+            &self.scratch.out[..glen],
+            (vl * sew_bytes).min(glen),
         );
         self.stats.moves += 1;
         self.stats.elements_processed += vl as u64;
@@ -453,23 +560,40 @@ impl ArrowUnit {
         let vl = self.vl as usize;
         let sew_bytes = self.sew_bytes();
         let sew_bits = self.vtype.sew_bits;
+        let vlen = self.vrf.vlen_bytes();
         let VSrc2::V(vs1) = src2 else {
             unreachable!("reductions are .vs only (enforced by decode)")
         };
-        let seed_group = self.vrf.read_group(vs1.0, 1);
-        let mut acc = alu::read_elem(&seed_group, 0, sew_bytes);
-        let a = self.vrf.read_group(vs2.0, self.vtype.lmul);
-        let v0 = self.vrf.peek_group(0, 1).to_vec();
-        for i in 0..vl {
-            if mask == MaskMode::Masked && !Self::mask_bit(&v0, i) {
-                continue;
-            }
-            acc = alu::eval(op, acc, alu::read_elem(&a, i, sew_bytes), sew_bits);
+        self.vrf.read_group_into(vs1.0, 1, &mut self.scratch.b);
+        let mut acc = alu::read_elem(&self.scratch.b, 0, sew_bytes);
+        self.vrf.read_group_into(vs2.0, self.vtype.lmul, &mut self.scratch.a);
+        if mask == MaskMode::Masked {
+            self.snapshot_mask();
         }
-        let mut out = self.vrf.peek_group(vd.0, 1).to_vec();
-        alu::write_elem(&mut out, 0, sew_bytes, acc);
-        let we = offset::enable_for_element(out.len(), sew_bytes, 0);
-        self.vrf.write_group_masked(vd.0, &out, &we.bytes);
+        {
+            let ExecScratch { a, mask: v0, .. } = &self.scratch;
+            for i in 0..vl {
+                if mask == MaskMode::Masked && !Self::mask_bit(v0, i) {
+                    continue;
+                }
+                acc = alu::eval(
+                    op,
+                    acc,
+                    alu::read_elem(a, i, sew_bytes),
+                    sew_bits,
+                );
+            }
+        }
+        {
+            let ExecScratch { out, we, .. } = &mut self.scratch;
+            alu::write_elem(out, 0, sew_bytes, acc);
+            offset::fill_enable_for_element(&mut we[..vlen], sew_bytes, 0);
+        }
+        self.vrf.write_group_masked(
+            vd.0,
+            &self.scratch.out[..vlen],
+            &self.scratch.we[..vlen],
+        );
         self.stats.reductions += 1;
         self.stats.elements_processed += vl as u64;
         Ok(ExecPlan {
@@ -496,26 +620,27 @@ impl ArrowUnit {
         self.check_group(vd.0)?;
         let vl = self.vl as usize;
         let sew_bytes = self.sew_bytes();
-        let v0 = self.vrf.peek_group(0, 1).to_vec();
+        let glen = self.group_len();
+        if mask == MaskMode::Masked {
+            self.snapshot_mask();
+        }
 
-        let mut data = self.vrf.peek_group(vd.0, self.vtype.lmul).to_vec();
         let (kind, beats) = match mode {
             AddrMode::UnitStride => {
-                let mut buf = vec![0u8; vl * sew_bytes];
-                dram.read_bytes(base, &mut buf);
-                data[..buf.len()].copy_from_slice(&buf);
+                dram.read_bytes(base, &mut self.scratch.out[..vl * sew_bytes]);
                 let beats = (vl as u64 * sew_bytes as u64)
                     .div_ceil(self.config.elen_bytes() as u64);
                 (BurstKind::Unit, beats)
             }
             AddrMode::Strided { .. } => {
+                let out = &mut self.scratch.out;
                 for i in 0..vl {
                     let addr =
                         base.wrapping_add((stride as i32 * i as i32) as u32);
-                    let mut buf = [0u8; 8];
-                    dram.read_bytes(addr, &mut buf[..sew_bytes]);
-                    data[i * sew_bytes..(i + 1) * sew_bytes]
-                        .copy_from_slice(&buf[..sew_bytes]);
+                    dram.read_bytes(
+                        addr,
+                        &mut out[i * sew_bytes..(i + 1) * sew_bytes],
+                    );
                 }
                 // One ELEN-wide access per element (§3.7: every access is
                 // 64 bits wide whether the data is needed or not).
@@ -526,16 +651,21 @@ impl ArrowUnit {
                 // offsets read at SEW width from vs2 (vlxei<SEW>).  Each
                 // element is its own ELEN-wide access, like strided.
                 self.check_group(vs2.0)?;
-                let offs = self.vrf.read_group(vs2.0, self.vtype.lmul);
+                self.vrf.read_group_into(
+                    vs2.0,
+                    self.vtype.lmul,
+                    &mut self.scratch.b,
+                );
                 let zmask: u64 = if sew_bytes == 8 { u64::MAX } else { (1u64 << (sew_bytes * 8)) - 1 };
+                let ExecScratch { b: offs, out, .. } = &mut self.scratch;
                 for i in 0..vl {
                     // indices zero-extend (vlxei semantics)
-                    let off = (alu::read_elem(&offs, i, sew_bytes) as u64 & zmask) as u32;
+                    let off = (alu::read_elem(offs, i, sew_bytes) as u64 & zmask) as u32;
                     let addr = base.wrapping_add(off);
-                    let mut buf = [0u8; 8];
-                    dram.read_bytes(addr, &mut buf[..sew_bytes]);
-                    data[i * sew_bytes..(i + 1) * sew_bytes]
-                        .copy_from_slice(&buf[..sew_bytes]);
+                    dram.read_bytes(
+                        addr,
+                        &mut out[i * sew_bytes..(i + 1) * sew_bytes],
+                    );
                 }
                 (BurstKind::Strided, vl as u64)
             }
@@ -544,18 +674,10 @@ impl ArrowUnit {
         match mask {
             MaskMode::Unmasked => self.vrf.write_group_prefix(
                 vd.0,
-                &data,
-                (vl * sew_bytes).min(data.len()),
+                &self.scratch.out[..glen],
+                (vl * sew_bytes).min(glen),
             ),
-            MaskMode::Masked => {
-                let we = offset::enable_for_mask(
-                    data.len(),
-                    sew_bytes,
-                    vl,
-                    |e| Self::mask_bit(&v0, e),
-                );
-                self.vrf.write_group_masked(vd.0, &data, &we.bytes);
-            }
+            MaskMode::Masked => self.write_back_masked(vd.0, glen, vl),
         }
         self.stats.loads += 1;
         self.stats.elements_processed += vl as u64;
@@ -584,16 +706,16 @@ impl ArrowUnit {
         self.check_group(vs3.0)?;
         let vl = self.vl as usize;
         let sew_bytes = self.sew_bytes();
-        let v0 = self.vrf.peek_group(0, 1).to_vec();
-        let data = self.vrf.read_group(vs3.0, self.vtype.lmul);
+        if mask == MaskMode::Masked {
+            self.snapshot_mask();
+        }
+        self.vrf.read_group_into(vs3.0, self.vtype.lmul, &mut self.scratch.a);
 
-        let enabled = |e: usize| {
-            mask == MaskMode::Unmasked || Self::mask_bit(&v0, e)
-        };
         let (kind, beats) = match mode {
             AddrMode::UnitStride => {
+                let ExecScratch { a: data, mask: v0, .. } = &self.scratch;
                 for i in 0..vl {
-                    if enabled(i) {
+                    if mask == MaskMode::Unmasked || Self::mask_bit(v0, i) {
                         dram.write_bytes(
                             base.wrapping_add((i * sew_bytes) as u32),
                             &data[i * sew_bytes..(i + 1) * sew_bytes],
@@ -605,8 +727,9 @@ impl ArrowUnit {
                 (BurstKind::Unit, beats)
             }
             AddrMode::Strided { .. } => {
+                let ExecScratch { a: data, mask: v0, .. } = &self.scratch;
                 for i in 0..vl {
-                    if enabled(i) {
+                    if mask == MaskMode::Unmasked || Self::mask_bit(v0, i) {
                         let addr = base
                             .wrapping_add((stride as i32 * i as i32) as u32);
                         dram.write_bytes(
@@ -620,11 +743,17 @@ impl ArrowUnit {
             AddrMode::Indexed { vs2 } => {
                 // Scatter: element i goes to base + zext(offsets[i]).
                 self.check_group(vs2.0)?;
-                let offs = self.vrf.read_group(vs2.0, self.vtype.lmul);
+                self.vrf.read_group_into(
+                    vs2.0,
+                    self.vtype.lmul,
+                    &mut self.scratch.b,
+                );
                 let zmask: u64 = if sew_bytes == 8 { u64::MAX } else { (1u64 << (sew_bytes * 8)) - 1 };
+                let ExecScratch { a: data, b: offs, mask: v0, .. } =
+                    &self.scratch;
                 for i in 0..vl {
-                    if enabled(i) {
-                        let off = (alu::read_elem(&offs, i, sew_bytes) as u64 & zmask) as u32;
+                    if mask == MaskMode::Unmasked || Self::mask_bit(v0, i) {
+                        let off = (alu::read_elem(offs, i, sew_bytes) as u64 & zmask) as u32;
                         dram.write_bytes(
                             base.wrapping_add(off),
                             &data[i * sew_bytes..(i + 1) * sew_bytes],
@@ -1088,5 +1217,94 @@ mod tests {
             &mut dram,
         );
         assert!(matches!(r, Err(ExecError::BadRegisterGroup { .. })));
+    }
+
+    /// Scratch buffers are reused across instructions of different
+    /// shapes: a wide LMUL=8 op followed by a short masked op must not
+    /// leak stale bytes into the architectural state.
+    #[test]
+    fn scratch_reuse_across_shapes() {
+        let (mut unit, mut dram) = setup(32, 8, 64);
+        dram.write_i32_slice(0x1000, &vec![7i32; 64]);
+        load_unit(&mut unit, &mut dram, 8, 0x1000);
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Add,
+                vd: VReg(16),
+                vs2: VReg(8),
+                src2: VSrc2::V(VReg(8)),
+                mask: MaskMode::Unmasked,
+            },
+            0,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        // Shrink to e32/m1, vl=4; compare + masked add on fresh registers.
+        let vt = Vtype::new(32, 1).encode();
+        unit.execute(
+            VecInstr::VsetVli { rd: XReg(5), rs1: XReg(10), vtypei: vt },
+            4,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        dram.write_i32_slice(0x2000, &[1, -2, 3, -4]);
+        load_unit(&mut unit, &mut dram, 1, 0x2000);
+        // v0 = v1 < 0 -> mask elements 1 and 3
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Mslt,
+                vd: VReg(0),
+                vs2: VReg(1),
+                src2: VSrc2::X(XReg(0)),
+                mask: MaskMode::Unmasked,
+            },
+            0,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        // v2 starts as a copy of v1; masked add of 100 flips only negatives.
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Merge,
+                vd: VReg(2),
+                vs2: VReg(0),
+                src2: VSrc2::V(VReg(1)),
+                mask: MaskMode::Unmasked,
+            },
+            0,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        unit.execute(
+            VecInstr::Alu {
+                op: VAluOp::Add,
+                vd: VReg(2),
+                vs2: VReg(1),
+                src2: VSrc2::I(15),
+                mask: MaskMode::Masked,
+            },
+            0,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        unit.execute(
+            VecInstr::Store {
+                vs3: VReg(2),
+                rs1: XReg(12),
+                width: VmemWidth::E32,
+                mode: AddrMode::UnitStride,
+                mask: MaskMode::Unmasked,
+            },
+            0x3000,
+            0,
+            &mut dram,
+        )
+        .unwrap();
+        assert_eq!(dram.read_i32_slice(0x3000, 4), vec![1, 13, 3, 11]);
     }
 }

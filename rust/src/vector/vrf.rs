@@ -54,12 +54,23 @@ impl Vrf {
 
     /// Read an LMUL register group as one contiguous byte slice.
     pub fn read_group(&mut self, reg: u8, lmul: u32) -> Vec<u8> {
+        let mut out = vec![0; lmul as usize * self.vlen_bytes];
+        self.read_group_into(reg, lmul, &mut out);
+        out
+    }
+
+    /// Read an LMUL register group into the caller's buffer (the
+    /// zero-allocation hot path: the execution engine reuses one
+    /// preallocated scratch buffer across instructions).  Counts one
+    /// read-port access, like [`Vrf::read_group`].
+    pub fn read_group_into(&mut self, reg: u8, lmul: u32, dst: &mut [u8]) {
         self.check_group(reg, lmul);
         let start = reg as usize * self.vlen_bytes;
         let len = lmul as usize * self.vlen_bytes;
+        assert!(dst.len() >= len, "destination buffer too small");
+        dst[..len].copy_from_slice(&self.bytes[start..start + len]);
         let bank = self.bank_of(reg);
         self.stats[bank].reads += 1;
-        self.bytes[start..start + len].to_vec()
     }
 
     /// Read without recording a port access (debug/checks).
@@ -183,5 +194,19 @@ mod tests {
     fn misaligned_group_panics() {
         let mut v = vrf();
         v.read_group(3, 2);
+    }
+
+    #[test]
+    fn read_into_matches_read_group_and_counts_port() {
+        let mut v = vrf();
+        let data: Vec<u8> = (0..64).map(|i| i as u8).collect();
+        v.write_group(8, &data);
+        // Oversized scratch: only the group prefix is written.
+        let mut buf = [0xAAu8; 96];
+        v.read_group_into(8, 2, &mut buf);
+        assert_eq!(&buf[..64], &data[..]);
+        assert_eq!(&buf[64..], &[0xAAu8; 32][..]);
+        assert_eq!(v.read_group(8, 2), data);
+        assert_eq!(v.bank_stats()[0].reads, 2);
     }
 }

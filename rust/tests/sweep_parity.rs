@@ -1,0 +1,134 @@
+//! Sweep/session integration: the parallel design-space sweep must be a
+//! pure parallelisation — every point byte-identical to a sequential
+//! single-run execution — and the session/engine refactor must keep
+//! wide-lane design points fully accounted.
+
+use arrow_rvv::bench::runner::{run_benchmark, Mode};
+use arrow_rvv::bench::suite::Benchmark;
+use arrow_rvv::bench::sweep::{run_sweep, SweepSpec};
+use arrow_rvv::bench::profiles;
+use arrow_rvv::system::Session;
+use arrow_rvv::vector::ArrowConfig;
+
+/// A 24-point grid (2 benchmarks x 1 profile x 2 modes x 3 lane counts
+/// x 2 VLENs) swept across a worker pool returns byte-identical
+/// per-point `RunSummary` results to sequential single-run execution.
+#[test]
+fn sweep_is_byte_identical_to_sequential_runs() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd, Benchmark::VDot],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Scalar, Mode::Vector],
+        lanes: vec![1, 2, 4],
+        vlens: vec![128, 256],
+        seed: 42,
+        threads: 4,
+    };
+    assert_eq!(spec.grid_len(), 24);
+    let report = run_sweep(&spec);
+    assert_eq!(report.points.len(), 24);
+    assert_eq!(report.unique_simulated, 24);
+    assert_eq!(report.cache_hits, 0);
+
+    for point in &report.points {
+        let config = ArrowConfig {
+            lanes: point.lanes,
+            vlen_bits: point.vlen_bits,
+            ..Default::default()
+        };
+        let size = point.benchmark.size(&profiles::TEST);
+        let sequential = run_benchmark(
+            point.benchmark,
+            size,
+            point.mode,
+            config,
+            spec.seed,
+        )
+        .unwrap();
+        let swept = point
+            .outcome
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{}: {e}", point.key));
+        assert!(swept.verified, "{}", point.key);
+        assert!(sequential.verified, "{}", point.key);
+        assert_eq!(swept.cycles, sequential.cycles, "{}", point.key);
+        // Byte-identical ledgers: every field of the summary, including
+        // the per-lane busy vector and bus/unit statistics.
+        assert_eq!(swept.summary, sequential.summary, "{}", point.key);
+        assert_eq!(
+            format!("{:?}", swept.summary),
+            format!("{:?}", sequential.summary),
+            "{}",
+            point.key
+        );
+    }
+}
+
+/// Scalar-mode grid points never touch the vector unit, whatever the
+/// Arrow design point says.
+#[test]
+fn scalar_points_have_no_vector_work() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Scalar],
+        lanes: vec![1, 2],
+        vlens: vec![256],
+        seed: 3,
+        threads: 2,
+    };
+    let report = run_sweep(&spec);
+    for p in &report.points {
+        let o = p.outcome.as_ref().unwrap();
+        assert_eq!(o.summary.vector_instructions, 0, "{}", p.key);
+        assert!(o.summary.lane_busy.iter().all(|&b| b == 0), "{}", p.key);
+    }
+}
+
+/// A session built once serves many workloads with ledgers identical to
+/// fresh per-run machines — the "build once, run many" contract the
+/// sweep pool relies on.
+#[test]
+fn session_reuse_is_equivalent_to_fresh_machines() {
+    use arrow_rvv::asm::assemble;
+    use arrow_rvv::scalar::ScalarTiming;
+    use arrow_rvv::system::Machine;
+
+    let src = r#"
+        .data
+        xs: .word 0, 0, 0, 0, 0, 0, 0, 0
+        ys: .space 32
+        .text
+            li a2, 8
+            vsetvli t0, a2, e32,m1
+            la a0, xs
+            vle32.v v1, (a0)
+            vadd.vv v2, v1, v1
+            la a0, ys
+            vse32.v v2, (a0)
+            halt
+    "#;
+    let program = assemble(src).unwrap();
+    let session =
+        Session::new(program.clone(), ArrowConfig::default()).unwrap();
+    for seed in 0..3i32 {
+        let xs: Vec<i32> = (0..8).map(|i| i * 7 + seed).collect();
+        let from_session =
+            session.run(&[("xs", &xs)], Some(("ys", 8)), 10_000).unwrap();
+        let mut fresh = Machine::new(
+            program.clone(),
+            ArrowConfig::default(),
+            ScalarTiming::default(),
+        );
+        let addr = fresh.addr_of("xs");
+        fresh.dram.write_i32_slice(addr, &xs);
+        let summary = fresh.run(10_000).unwrap();
+        let out = fresh.dram.read_i32_slice(fresh.addr_of("ys"), 8);
+        assert_eq!(from_session.summary, summary);
+        assert_eq!(from_session.output, out);
+        assert_eq!(
+            from_session.output,
+            xs.iter().map(|x| 2 * x).collect::<Vec<i32>>()
+        );
+    }
+}
