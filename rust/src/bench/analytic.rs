@@ -65,13 +65,16 @@ pub fn extrapolation_valid(b: Benchmark, mode: Mode, s: BenchSize) -> bool {
     }
 }
 
-/// Estimate cycles at `size` from exact simulations at the fit sizes.
-pub fn extrapolate(
+/// Estimate cycles at `size` from exact runs at the fit sizes, with a
+/// caller-supplied cycle source — the evaluator passes a closure that
+/// simulates through its shared program cache instead of re-assembling
+/// every fit program per point.
+pub fn extrapolate_with<E>(
     b: Benchmark,
     size: BenchSize,
     mode: Mode,
-    config: ArrowConfig,
-) -> Result<u64, MachineError> {
+    cycles_of: &mut dyn FnMut(BenchSize) -> Result<u64, E>,
+) -> Result<u64, E> {
     assert!(
         extrapolation_valid(b, mode, size),
         "{} {:?} size {} not strip-aligned for analytic mode",
@@ -82,15 +85,38 @@ pub fn extrapolate(
     let mut pts = Vec::new();
     for n in fit_sizes(b, mode) {
         let s = BenchSize { n, ..size };
-        let y = cycles_at(b, s, mode, config)?;
+        let y = cycles_of(s)?;
         pts.push((n as f64, y as f64));
     }
     Ok(lagrange(&pts, size.n as f64).round() as u64)
 }
 
+/// Estimate cycles at `size` from exact simulations at the fit sizes.
+pub fn extrapolate(
+    b: Benchmark,
+    size: BenchSize,
+    mode: Mode,
+    config: ArrowConfig,
+) -> Result<u64, MachineError> {
+    extrapolate_with(b, size, mode, &mut |s| cycles_at(b, s, mode, config))
+}
+
 /// Simulation-instruction threshold above which the harness switches from
 /// exact simulation to analytic extrapolation.
 pub const SIM_LIMIT: u64 = 40_000_000;
+
+/// Whether a point should route through analytic extrapolation under
+/// the given instruction limit: the estimate must exceed the limit AND
+/// the fitted polynomial must be valid at the target size.
+pub fn should_extrapolate(
+    b: Benchmark,
+    size: BenchSize,
+    mode: Mode,
+    limit: u64,
+) -> bool {
+    estimated_instructions(b, size, mode) > limit
+        && extrapolation_valid(b, mode, size)
+}
 
 /// Cycle count by the cheapest sound method.
 pub fn cycles_auto(
@@ -99,12 +125,10 @@ pub fn cycles_auto(
     mode: Mode,
     config: ArrowConfig,
 ) -> Result<(u64, &'static str), MachineError> {
-    if estimated_instructions(b, size, mode) <= SIM_LIMIT
-        || !extrapolation_valid(b, mode, size)
-    {
-        Ok((cycles_at(b, size, mode, config)?, "simulated"))
-    } else {
+    if should_extrapolate(b, size, mode, SIM_LIMIT) {
         Ok((extrapolate(b, size, mode, config)?, "analytic"))
+    } else {
+        Ok((cycles_at(b, size, mode, config)?, "simulated"))
     }
 }
 

@@ -1,0 +1,519 @@
+//! The tiered point evaluator — the narrow waist every evaluation path
+//! (sweep pool, server, CLI) goes through.
+//!
+//! [`Evaluator::evaluate`] answers "what does this design point cost?"
+//! by the cheapest sound tier, in order:
+//!
+//! 1. **persistent store** ([`super::store::ResultStore`]): if a
+//!    `--cache-dir` is attached, a previously evaluated point (same
+//!    canonical [`point_key`], which folds in the workload seed and
+//!    element width, and same crate version) is answered from disk
+//!    without touching the simulator — tagged [`Provenance::Cached`];
+//! 2. **analytic extrapolation** ([`super::analytic`]): points whose
+//!    [`estimated_instructions`](super::runner::estimated_instructions)
+//!    exceed the caller's limit are extrapolated from exact simulations
+//!    at small fit sizes — tagged [`Provenance::Analytic`];
+//! 3. **full simulation**: everything else assembles (once, through the
+//!    shared [`ProgramCache`]) and runs byte-identically to a
+//!    sequential [`run_benchmark`](super::runner::run_benchmark) call —
+//!    tagged [`Provenance::Simulated`].
+//!
+//! The evaluator is `Sync`: sweep workers share one through
+//! `std::thread::scope`, and the job server shares one `Arc<Evaluator>`
+//! across every connection, so program assembly and stored results are
+//! amortised process-wide.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::asm::{assemble, Program};
+use crate::isa::{decode, Instr};
+use crate::system::machine::RunSummary;
+use crate::system::Session;
+use crate::vector::ArrowConfig;
+
+use super::analytic;
+use super::profiles::Profile;
+use super::runner::{bench_source, run_on_session, Mode};
+use super::store::ResultStore;
+use super::suite::{BenchSize, Benchmark};
+
+/// Which tier produced a result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    /// Full instruction-level simulation, output-verified.
+    Simulated,
+    /// Answered from the persistent result store.
+    Cached,
+    /// Polynomial extrapolation from exact fit-size simulations; the
+    /// cycle count is an estimate and the output is not verified.
+    Analytic,
+}
+
+impl Provenance {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Provenance::Simulated => "simulated",
+            Provenance::Cached => "cached",
+            Provenance::Analytic => "analytic",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Provenance> {
+        match name {
+            "simulated" => Some(Provenance::Simulated),
+            "cached" => Some(Provenance::Cached),
+            "analytic" => Some(Provenance::Analytic),
+            _ => None,
+        }
+    }
+}
+
+/// Successful evaluation of one design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalOutcome {
+    pub cycles: u64,
+    /// Simulator output matched the workload oracle (always `false` for
+    /// analytic estimates, which never materialise an output).
+    pub verified: bool,
+    /// Full cycle ledger.  Analytic estimates carry a ledger with only
+    /// `cycles`/`lanes` populated — instruction and bus counters need a
+    /// real run.
+    pub summary: RunSummary,
+    /// Tier that answered *this* evaluation.
+    pub provenance: Provenance,
+    /// Tier that originally computed the number: equals `provenance`
+    /// for fresh results, and stays `Simulated`/`Analytic` when a store
+    /// hit replays it — so a cached analytic *estimate* is never
+    /// mistakable for a cached exact measurement.
+    pub origin: Provenance,
+}
+
+/// What one point produced: an outcome, or a per-point error.
+pub type EvalResult = Result<EvalOutcome, String>;
+
+/// Canonical identity of one evaluated point.  Everything that can
+/// change the result is folded in: benchmark, profile, mode, the full
+/// [`ArrowConfig`] (lanes / VLEN / ELEN, indexed-memory support, and
+/// both timing models — timing ablations must never collide) and the
+/// workload seed.  This is the key for the in-request dedup cache
+/// *and* the persistent store, so two sweeps differing in any of these
+/// can never serve each other's results.
+pub fn point_key(
+    benchmark: Benchmark,
+    profile: &Profile,
+    mode: Mode,
+    config: &ArrowConfig,
+    seed: u64,
+) -> String {
+    let t = &config.timing;
+    let m = &config.mem_timing;
+    format!(
+        "{}|{}|{}|lanes={}|vlen={}|elen={}|im={}|vt={}.{}.{}.{}.{}|mt={}.{}.{}.{}|seed={seed}",
+        benchmark.name(),
+        profile.name,
+        mode.name(),
+        config.lanes,
+        config.vlen_bits,
+        config.elen_bits,
+        u8::from(config.indexed_mem),
+        t.dispatch,
+        t.issue_overhead,
+        t.alu_words_per_cycle,
+        t.reduction_tail,
+        t.scalar_readback,
+        m.burst_setup,
+        m.beats_per_cycle,
+        m.strided_cycles_per_beat,
+        m.scalar_access,
+    )
+}
+
+/// One design point for the evaluator: a benchmark instance (via its
+/// profile) plus the Arrow configuration to run it on.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub benchmark: Benchmark,
+    pub profile: Profile,
+    pub mode: Mode,
+    pub config: ArrowConfig,
+}
+
+impl EvalPoint {
+    pub fn size(&self) -> BenchSize {
+        self.benchmark.size(&self.profile)
+    }
+
+    pub fn key(&self, seed: u64) -> String {
+        point_key(self.benchmark, &self.profile, self.mode, &self.config, seed)
+    }
+}
+
+/// An assembled program with its per-PC decode cache — everything a
+/// [`Session`] needs that does not depend on the Arrow configuration.
+pub struct PreparedProgram {
+    pub program: Program,
+    pub decoded: Vec<Option<Instr>>,
+}
+
+/// Shared cache of assembled + predecoded programs, keyed by
+/// (benchmark, mode, size).  The program text depends only on those
+/// three, so every design point of a (benchmark, mode, size) group —
+/// whatever its lanes/VLEN — clones one prepared program instead of
+/// re-running the assembler.
+#[derive(Default)]
+pub struct ProgramCache {
+    map: Mutex<HashMap<(Benchmark, Mode, BenchSize), Arc<PreparedProgram>>>,
+}
+
+impl ProgramCache {
+    pub fn new() -> ProgramCache {
+        ProgramCache::default()
+    }
+
+    /// Distinct programs assembled so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch (or assemble + predecode) the program for one group.
+    pub fn prepared(
+        &self,
+        benchmark: Benchmark,
+        size: BenchSize,
+        mode: Mode,
+    ) -> Result<Arc<PreparedProgram>, String> {
+        if let Some(p) = self.map.lock().unwrap().get(&(benchmark, mode, size))
+        {
+            return Ok(Arc::clone(p));
+        }
+        // Assemble outside the lock; a racing worker at worst assembles
+        // the same deterministic program and the first insert wins.
+        let source = bench_source(benchmark, size, mode);
+        let program = assemble(&source)
+            .map_err(|e| format!("{} {}: {e}", benchmark.name(), mode.name()))?;
+        let decoded = program.text.iter().map(|&w| decode(w).ok()).collect();
+        let prepared = Arc::new(PreparedProgram { program, decoded });
+        Ok(Arc::clone(
+            self.map
+                .lock()
+                .unwrap()
+                .entry((benchmark, mode, size))
+                .or_insert(prepared),
+        ))
+    }
+
+    /// Build a session for `config` on top of a cached program.
+    pub fn session(
+        &self,
+        benchmark: Benchmark,
+        size: BenchSize,
+        mode: Mode,
+        config: ArrowConfig,
+    ) -> Result<Session, String> {
+        let prepared = self.prepared(benchmark, size, mode)?;
+        Session::from_parts(
+            prepared.program.clone(),
+            prepared.decoded.clone(),
+            config,
+        )
+    }
+}
+
+/// The tiered point evaluator: shared program cache + optional
+/// persistent result store.  Analytic routing is per-call policy (see
+/// [`Evaluator::evaluate`]) so one evaluator can serve callers with
+/// different thresholds.
+#[derive(Default)]
+pub struct Evaluator {
+    programs: ProgramCache,
+    store: Option<ResultStore>,
+    /// Result-store appends that failed (disk full, permissions…).
+    /// Evaluation succeeds anyway, but callers surface the count so a
+    /// silently-incomplete cache is diagnosable.
+    store_put_failures: AtomicU64,
+}
+
+impl Evaluator {
+    /// An evaluator with no persistent store (in-process caches only).
+    pub fn new() -> Evaluator {
+        Evaluator::default()
+    }
+
+    /// An evaluator backed by a persistent result store under `dir`.
+    pub fn with_store_dir(dir: &Path) -> std::io::Result<Evaluator> {
+        let mut e = Evaluator::new();
+        e.store = Some(ResultStore::open(dir)?);
+        Ok(e)
+    }
+
+    pub fn attach_store(&mut self, store: ResultStore) {
+        self.store = Some(store);
+    }
+
+    pub fn store(&self) -> Option<&ResultStore> {
+        self.store.as_ref()
+    }
+
+    pub fn programs(&self) -> &ProgramCache {
+        &self.programs
+    }
+
+    /// Store appends that failed so far (see `store_put_failures`).
+    pub fn store_put_failures(&self) -> u64 {
+        self.store_put_failures.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate one point by the cheapest sound tier.
+    ///
+    /// `analytic_limit` is the estimated-instruction count above which
+    /// a point routes through analytic extrapolation instead of full
+    /// simulation; `None` forces exact simulation whatever the size.
+    pub fn evaluate(
+        &self,
+        point: &EvalPoint,
+        seed: u64,
+        analytic_limit: Option<u64>,
+    ) -> EvalResult {
+        point.config.validate()?;
+        let size = point.size();
+        let key = point.key(seed);
+        let analytic_allowed = analytic_limit.is_some_and(|limit| {
+            analytic::should_extrapolate(point.benchmark, size, point.mode, limit)
+        });
+        if let Some(store) = &self.store {
+            if let Some(hit) = store.get(&key) {
+                // A stored analytic estimate only satisfies callers
+                // whose policy would route this point analytic anyway;
+                // anyone demanding exact simulation falls through, and
+                // the fresh simulation upgrades the stored record.
+                if hit.origin != Provenance::Analytic || analytic_allowed {
+                    return Ok(hit);
+                }
+            }
+        }
+        let outcome = if analytic_allowed {
+            // Fit-size simulations run through the shared program
+            // cache too (seed 1, matching `analytic::cycles_at` — the
+            // cycle ledger is data-independent, so any seed gives the
+            // same count).
+            let cycles = analytic::extrapolate_with(
+                point.benchmark,
+                size,
+                point.mode,
+                &mut |fit_size| {
+                    let session = self.programs.session(
+                        point.benchmark,
+                        fit_size,
+                        point.mode,
+                        point.config,
+                    )?;
+                    let workload = point.benchmark.workload(fit_size, 1);
+                    run_on_session(
+                        &session,
+                        point.benchmark,
+                        fit_size,
+                        point.mode,
+                        &workload,
+                    )
+                    .map(|r| r.cycles)
+                    .map_err(|e| e.to_string())
+                },
+            )?;
+            EvalOutcome {
+                cycles,
+                verified: false,
+                summary: RunSummary {
+                    cycles,
+                    lanes: point.config.lanes,
+                    lane_busy: vec![0; point.config.lanes],
+                    ..Default::default()
+                },
+                provenance: Provenance::Analytic,
+                origin: Provenance::Analytic,
+            }
+        } else {
+            let session = self.programs.session(
+                point.benchmark,
+                size,
+                point.mode,
+                point.config,
+            )?;
+            let workload = point.benchmark.workload(size, seed);
+            let r = run_on_session(
+                &session,
+                point.benchmark,
+                size,
+                point.mode,
+                &workload,
+            )
+            .map_err(|e| e.to_string())?;
+            EvalOutcome {
+                cycles: r.cycles,
+                verified: r.verified,
+                summary: r.summary,
+                provenance: Provenance::Simulated,
+                origin: Provenance::Simulated,
+            }
+        };
+        if let Some(store) = &self.store {
+            // Best-effort: a full disk or yanked cache dir must never
+            // fail the evaluation itself — but count the miss so
+            // reports can say the cache is incomplete.
+            if store.put(&key, &outcome).is_err() {
+                self.store_put_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::profiles;
+    use crate::bench::runner::run_benchmark;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        use std::sync::atomic::AtomicUsize;
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "arrow-eval-{tag}-{}-{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn test_point(
+        benchmark: Benchmark,
+        mode: Mode,
+        lanes: usize,
+    ) -> EvalPoint {
+        EvalPoint {
+            benchmark,
+            profile: profiles::TEST,
+            mode,
+            config: ArrowConfig { lanes, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn simulated_tier_matches_run_benchmark() {
+        let evaluator = Evaluator::new();
+        let point = test_point(Benchmark::VDot, Mode::Vector, 2);
+        let got = evaluator.evaluate(&point, 42, None).unwrap();
+        assert_eq!(got.provenance, Provenance::Simulated);
+        let want = run_benchmark(
+            point.benchmark,
+            point.size(),
+            point.mode,
+            point.config,
+            42,
+        )
+        .unwrap();
+        assert!(got.verified);
+        assert_eq!(got.cycles, want.cycles);
+        assert_eq!(got.summary, want.summary);
+    }
+
+    #[test]
+    fn program_cache_shared_across_design_points() {
+        let evaluator = Evaluator::new();
+        for lanes in [1, 2, 4] {
+            let point = test_point(Benchmark::VAdd, Mode::Vector, lanes);
+            evaluator.evaluate(&point, 1, None).unwrap();
+        }
+        // Three lane counts, one (benchmark, mode, size) group: the
+        // assembler ran once.
+        assert_eq!(evaluator.programs().len(), 1);
+        evaluator
+            .evaluate(&test_point(Benchmark::VAdd, Mode::Scalar, 2), 1, None)
+            .unwrap();
+        assert_eq!(evaluator.programs().len(), 2);
+    }
+
+    #[test]
+    fn analytic_tier_routes_and_matches_extrapolation() {
+        let evaluator = Evaluator::new();
+        let point = test_point(Benchmark::VAdd, Mode::Vector, 2);
+        // A zero limit forces every strip-aligned point analytic.
+        let got = evaluator.evaluate(&point, 42, Some(0)).unwrap();
+        assert_eq!(got.provenance, Provenance::Analytic);
+        assert_eq!(got.origin, Provenance::Analytic);
+        assert!(!got.verified);
+        let want = analytic::extrapolate(
+            point.benchmark,
+            point.size(),
+            point.mode,
+            point.config,
+        )
+        .unwrap();
+        assert_eq!(got.cycles, want);
+        // The fit passes through the exactly-simulated size, so the
+        // estimate equals full simulation here.
+        let sim = evaluator.evaluate(&point, 42, None).unwrap();
+        assert_eq!(got.cycles, sim.cycles);
+    }
+
+    #[test]
+    fn invalid_config_rejected_before_any_tier() {
+        let evaluator = Evaluator::new();
+        let point = test_point(Benchmark::VAdd, Mode::Vector, 3);
+        let err = evaluator.evaluate(&point, 1, None).unwrap_err();
+        assert!(err.contains("lanes"), "{err}");
+    }
+
+    #[test]
+    fn store_tier_answers_across_evaluators() {
+        let dir = tmp_dir("store");
+        let point = test_point(Benchmark::VMul, Mode::Vector, 2);
+        let first = {
+            let evaluator = Evaluator::with_store_dir(&dir).unwrap();
+            evaluator.evaluate(&point, 7, None).unwrap()
+        };
+        assert_eq!(first.provenance, Provenance::Simulated);
+        let evaluator = Evaluator::with_store_dir(&dir).unwrap();
+        let hit = evaluator.evaluate(&point, 7, None).unwrap();
+        assert_eq!(hit.provenance, Provenance::Cached);
+        assert_eq!(hit.origin, Provenance::Simulated);
+        assert_eq!(hit.cycles, first.cycles);
+        assert_eq!(hit.summary, first.summary);
+        assert_eq!(hit.verified, first.verified);
+        // A different seed is a different canonical point.
+        let other = evaluator.evaluate(&point, 8, None).unwrap();
+        assert_eq!(other.provenance, Provenance::Simulated);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cached_estimate_not_served_when_exact_simulation_demanded() {
+        let dir = tmp_dir("upgrade");
+        let point = test_point(Benchmark::VAdd, Mode::Vector, 2);
+        let evaluator = Evaluator::with_store_dir(&dir).unwrap();
+        // Populate the store with an analytic estimate...
+        let estimate = evaluator.evaluate(&point, 5, Some(0)).unwrap();
+        assert_eq!(estimate.origin, Provenance::Analytic);
+        // ...a caller whose policy routes analytic replays it...
+        let replay = evaluator.evaluate(&point, 5, Some(0)).unwrap();
+        assert_eq!(replay.provenance, Provenance::Cached);
+        assert_eq!(replay.origin, Provenance::Analytic);
+        // ...but a caller demanding exact simulation must not get the
+        // estimate: it simulates and upgrades the stored record.
+        let exact = evaluator.evaluate(&point, 5, None).unwrap();
+        assert_eq!(exact.provenance, Provenance::Simulated);
+        assert!(exact.verified);
+        let upgraded = evaluator.evaluate(&point, 5, None).unwrap();
+        assert_eq!(upgraded.provenance, Provenance::Cached);
+        assert_eq!(upgraded.origin, Provenance::Simulated);
+        assert_eq!(upgraded.cycles, exact.cycles);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

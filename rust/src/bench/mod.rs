@@ -12,18 +12,30 @@
 //! * [`analytic`] — the cycle-count extrapolation for profiles too large
 //!   to step instruction-by-instruction (DESIGN.md §6): per-benchmark
 //!   polynomial fits through exactly-simulated smaller sizes.
+//! * [`eval`] — the tiered point evaluator every evaluation path goes
+//!   through: persistent store → analytic routing → simulation on a
+//!   session built from the shared program cache, each outcome tagged
+//!   with its provenance.
+//! * [`store`] — the persistent on-disk result store (JSON-lines,
+//!   keyed by canonical point key + crate version, corruption-tolerant).
 //! * [`sweep`] — parallel design-space sweeps: a worker pool fanning the
 //!   (benchmark × profile × lanes × VLEN) cartesian product across
-//!   cores, deduplicated through a canonical-config result cache.
+//!   cores, deduplicated through the canonical point key.
 
 pub mod analytic;
 pub mod cnn;
+pub mod eval;
 pub mod profiles;
 pub mod runner;
+pub mod store;
 pub mod suite;
 pub mod sweep;
 
+pub use eval::{
+    point_key, EvalOutcome, EvalPoint, Evaluator, ProgramCache, Provenance,
+};
 pub use profiles::{ConvShape, Profile, PROFILES};
 pub use runner::{run_benchmark, BenchResult, Mode};
+pub use store::ResultStore;
 pub use suite::{Benchmark, BENCHMARKS};
-pub use sweep::{run_sweep, SweepReport, SweepSpec};
+pub use sweep::{run_sweep, run_sweep_with, SweepReport, SweepSpec};

@@ -46,6 +46,11 @@ pub const LARGE: Profile = Profile {
 
 pub const PROFILES: [Profile; 3] = [SMALL, MEDIUM, LARGE];
 
+/// Every registered profile, Table 1's plus the scaled-down test
+/// profile.  Name lookups and the server's `list` response derive from
+/// this registry, so adding a profile here is the single change needed.
+pub const ALL: [Profile; 4] = [SMALL, MEDIUM, LARGE, TEST];
+
 /// Scaled-down profile for functional tests and oracle validation
 /// (vector sizes match the AOT artifacts: n=64/512, 64x64 matrices,
 /// 64x64 conv images).
@@ -58,13 +63,7 @@ pub const TEST: Profile = Profile {
 
 impl Profile {
     pub fn by_name(name: &str) -> Option<Profile> {
-        match name {
-            "small" => Some(SMALL),
-            "medium" => Some(MEDIUM),
-            "large" => Some(LARGE),
-            "test" => Some(TEST),
-            _ => None,
-        }
+        ALL.into_iter().find(|p| p.name == name)
     }
 }
 
@@ -89,5 +88,17 @@ mod tests {
     fn lookup() {
         assert_eq!(Profile::by_name("medium"), Some(MEDIUM));
         assert_eq!(Profile::by_name("huge"), None);
+    }
+
+    #[test]
+    fn registry_is_complete_and_unambiguous() {
+        assert_eq!(ALL.len(), PROFILES.len() + 1);
+        for p in ALL {
+            assert_eq!(Profile::by_name(p.name), Some(p));
+        }
+        let mut names: Vec<&str> = ALL.iter().map(|p| p.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ALL.len(), "duplicate profile names");
     }
 }

@@ -95,6 +95,16 @@ pub fn run_benchmark(
     run_with_workload(benchmark, size, mode, config, &workload)
 }
 
+/// Assembly source for one benchmark instance — the single place the
+/// mode picks a program variant (the program cache keys on exactly the
+/// arguments of this function).
+pub fn bench_source(benchmark: Benchmark, size: BenchSize, mode: Mode) -> String {
+    match mode {
+        Mode::Scalar => benchmark.scalar_asm(size),
+        Mode::Vector => benchmark.vector_asm(size),
+    }
+}
+
 /// Build a reusable [`Session`] for one benchmark instance (assemble +
 /// predecode once; run as many workloads as needed).
 pub fn bench_session(
@@ -103,10 +113,7 @@ pub fn bench_session(
     mode: Mode,
     config: ArrowConfig,
 ) -> Session {
-    let source = match mode {
-        Mode::Scalar => benchmark.scalar_asm(size),
-        Mode::Vector => benchmark.vector_asm(size),
-    };
+    let source = bench_source(benchmark, size, mode);
     let program = assemble(&source)
         .unwrap_or_else(|e| panic!("{} {}: {e}", benchmark.name(), mode.name()));
     Session::new(program, config)

@@ -1,0 +1,440 @@
+//! Persistent on-disk result store for evaluated design points.
+//!
+//! One JSON-lines file (`results.jsonl`) under a caller-chosen cache
+//! directory.  Every line is a self-contained record of one evaluated
+//! point: the canonical [`point_key`](super::eval::point_key) (which
+//! folds in the workload seed), the crate version that produced it, and
+//! the full outcome including the cycle ledger — enough to answer a
+//! repeated sweep byte-identically without touching the simulator.
+//!
+//! The store is deliberately forgiving:
+//!
+//! * lines that fail to parse (truncated writes, editor accidents,
+//!   foreign garbage) are skipped on load — the point re-simulates and
+//!   is re-appended, never a panic;
+//! * records written by a different crate version are treated as stale
+//!   and ignored (simulator timing may have changed between versions);
+//! * append failures are reported to the caller but are never allowed
+//!   to fail an evaluation — caching is an optimisation, not a
+//!   dependency.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::system::machine::RunSummary;
+use crate::util::json::{self, Json};
+
+use super::eval::{EvalOutcome, Provenance};
+
+/// File name of the JSON-lines ledger inside the cache directory.
+pub const STORE_FILE: &str = "results.jsonl";
+
+/// Default cap on in-memory records.  Point keys fold in
+/// client-controlled fields (seed, lanes, VLEN…), so a long-running
+/// `arrow serve --cache-dir` must not let request traffic grow the
+/// index without bound: once full, new keys are still evaluated but no
+/// longer recorded (existing keys keep serving and upgrading).
+pub const MAX_STORE_ENTRIES: usize = 1 << 20;
+
+/// Persistent point-result store: an in-memory index over an
+/// append-only JSON-lines file.
+pub struct ResultStore {
+    path: PathBuf,
+    version: String,
+    entries: Mutex<HashMap<String, EvalOutcome>>,
+    entry_limit: usize,
+    /// Append handle, serialised so concurrent workers never interleave
+    /// partial lines.
+    file: Mutex<File>,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) the store under `dir`, keyed to this
+    /// crate's version.
+    pub fn open(dir: &Path) -> std::io::Result<ResultStore> {
+        ResultStore::open_versioned(dir, env!("CARGO_PKG_VERSION"))
+    }
+
+    /// Open with an explicit version tag (tests use this to exercise
+    /// stale-version eviction).
+    pub fn open_versioned(
+        dir: &Path,
+        version: &str,
+    ) -> std::io::Result<ResultStore> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(STORE_FILE);
+        let mut entries = HashMap::new();
+        if let Ok(existing) = File::open(&path) {
+            for line in BufReader::new(existing).lines() {
+                let line = match line {
+                    Ok(line) => line,
+                    // One record of invalid UTF-8: its bytes are already
+                    // consumed, so skip it and keep the rest of the
+                    // ledger serveable.
+                    Err(e) if e.kind() == ErrorKind::InvalidData => continue,
+                    // A genuine I/O error would repeat forever; stop
+                    // with whatever loaded.
+                    Err(_) => break,
+                };
+                if let Some((key, outcome)) = parse_record(&line, version) {
+                    // Later lines win: a re-recorded key (e.g. an
+                    // analytic estimate upgraded to an exact
+                    // simulation) supersedes the original.
+                    entries.insert(key, outcome);
+                }
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(ResultStore {
+            path,
+            version: version.to_string(),
+            entries: Mutex::new(entries),
+            entry_limit: MAX_STORE_ENTRIES,
+            file: Mutex::new(file),
+        })
+    }
+
+    /// Override the in-memory record cap (tests exercise the full-store
+    /// behaviour with small limits).
+    pub fn with_entry_limit(mut self, limit: usize) -> ResultStore {
+        self.entry_limit = limit;
+        self
+    }
+
+    /// Path of the backing JSON-lines file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of loadable records (current version, well-formed).
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a point.  Hits come back tagged [`Provenance::Cached`],
+    /// with `origin` still naming the tier that computed the number.
+    pub fn get(&self, key: &str) -> Option<EvalOutcome> {
+        let mut outcome = self.entries.lock().unwrap().get(key)?.clone();
+        outcome.provenance = Provenance::Cached;
+        Some(outcome)
+    }
+
+    /// Record one evaluated point.  Re-recording an identical outcome
+    /// is a no-op; a *different* outcome for an existing key (an
+    /// analytic estimate upgraded to an exact simulation) is appended
+    /// and supersedes the old record on the next load.
+    pub fn put(&self, key: &str, outcome: &EvalOutcome) -> std::io::Result<()> {
+        {
+            let mut entries = self.entries.lock().unwrap();
+            if entries.get(key).is_some_and(|e| e == outcome) {
+                return Ok(());
+            }
+            // At capacity, only existing keys may be re-recorded
+            // (upgrades); new keys are dropped rather than growing the
+            // index without bound.
+            if !entries.contains_key(key) && entries.len() >= self.entry_limit
+            {
+                return Ok(());
+            }
+            entries.insert(key.to_string(), outcome.clone());
+        }
+        // One `write_all` of the whole line (O_APPEND) so concurrent
+        // processes sharing a cache dir never interleave fragments.
+        let mut line = record_json(key, outcome, &self.version).to_string();
+        line.push('\n');
+        let mut file = self.file.lock().unwrap();
+        file.write_all(line.as_bytes())?;
+        file.flush()
+    }
+}
+
+fn summary_json(s: &RunSummary) -> Json {
+    Json::obj(vec![
+        ("cycles", s.cycles.into()),
+        ("scalar_instructions", s.scalar_instructions.into()),
+        ("vector_instructions", s.vector_instructions.into()),
+        ("lanes", (s.lanes as u64).into()),
+        (
+            "lane_busy",
+            Json::Arr(s.lane_busy.iter().map(|&b| b.into()).collect()),
+        ),
+        (
+            "bus",
+            Json::obj(vec![
+                ("transactions", s.bus.transactions.into()),
+                ("beats", s.bus.beats.into()),
+                ("busy_cycles", s.bus.busy_cycles.into()),
+                ("contention_cycles", s.bus.contention_cycles.into()),
+            ]),
+        ),
+        (
+            "unit",
+            Json::obj(vec![
+                ("instructions", s.unit.instructions.into()),
+                ("config_ops", s.unit.config_ops.into()),
+                ("loads", s.unit.loads.into()),
+                ("stores", s.unit.stores.into()),
+                ("arith_ops", s.unit.arith_ops.into()),
+                ("reductions", s.unit.reductions.into()),
+                ("moves", s.unit.moves.into()),
+                ("elements_processed", s.unit.elements_processed.into()),
+                ("mem_bytes", s.unit.mem_bytes.into()),
+            ]),
+        ),
+    ])
+}
+
+fn record_json(key: &str, outcome: &EvalOutcome, version: &str) -> Json {
+    Json::obj(vec![
+        ("v", version.into()),
+        ("key", key.into()),
+        ("cycles", outcome.cycles.into()),
+        ("verified", outcome.verified.into()),
+        // The record carries the computing tier — replayed hits keep
+        // their origin and only the in-memory `provenance` says Cached.
+        ("provenance", outcome.origin.name().into()),
+        ("summary", summary_json(&outcome.summary)),
+    ])
+}
+
+fn u64_field(j: &Json, key: &str) -> Option<u64> {
+    j.get(key).and_then(Json::as_u64)
+}
+
+fn parse_summary(j: &Json) -> Option<RunSummary> {
+    let bus = j.get("bus")?;
+    let unit = j.get("unit")?;
+    let lane_busy: Option<Vec<u64>> = j
+        .get("lane_busy")?
+        .as_arr()?
+        .iter()
+        .map(Json::as_u64)
+        .collect();
+    Some(RunSummary {
+        cycles: u64_field(j, "cycles")?,
+        scalar_instructions: u64_field(j, "scalar_instructions")?,
+        vector_instructions: u64_field(j, "vector_instructions")?,
+        lanes: u64_field(j, "lanes")? as usize,
+        lane_busy: lane_busy?,
+        bus: crate::mem::BusStats {
+            transactions: u64_field(bus, "transactions")?,
+            beats: u64_field(bus, "beats")?,
+            busy_cycles: u64_field(bus, "busy_cycles")?,
+            contention_cycles: u64_field(bus, "contention_cycles")?,
+        },
+        unit: crate::vector::UnitStats {
+            instructions: u64_field(unit, "instructions")?,
+            config_ops: u64_field(unit, "config_ops")?,
+            loads: u64_field(unit, "loads")?,
+            stores: u64_field(unit, "stores")?,
+            arith_ops: u64_field(unit, "arith_ops")?,
+            reductions: u64_field(unit, "reductions")?,
+            moves: u64_field(unit, "moves")?,
+            elements_processed: u64_field(unit, "elements_processed")?,
+            mem_bytes: u64_field(unit, "mem_bytes")?,
+        },
+    })
+}
+
+/// Parse one ledger line; `None` for anything malformed or written by a
+/// different crate version.
+fn parse_record(line: &str, version: &str) -> Option<(String, EvalOutcome)> {
+    let line = line.trim();
+    if line.is_empty() {
+        return None;
+    }
+    let j = json::parse(line).ok()?;
+    if j.get("v").and_then(Json::as_str) != Some(version) {
+        return None;
+    }
+    let key = j.get("key")?.as_str()?.to_string();
+    let origin =
+        Provenance::by_name(j.get("provenance").and_then(Json::as_str)?)?;
+    let outcome = EvalOutcome {
+        cycles: u64_field(&j, "cycles")?,
+        verified: j.get("verified")?.as_bool()?,
+        summary: parse_summary(j.get("summary")?)?,
+        provenance: origin,
+        origin,
+    };
+    Some((key, outcome))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "arrow-store-{tag}-{}-{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_outcome() -> EvalOutcome {
+        EvalOutcome {
+            cycles: 12345,
+            verified: true,
+            summary: RunSummary {
+                cycles: 12345,
+                scalar_instructions: 67,
+                vector_instructions: 89,
+                lanes: 2,
+                lane_busy: vec![11, 22],
+                bus: crate::mem::BusStats {
+                    transactions: 1,
+                    beats: 2,
+                    busy_cycles: 3,
+                    contention_cycles: 4,
+                },
+                unit: crate::vector::UnitStats {
+                    instructions: 5,
+                    config_ops: 6,
+                    loads: 7,
+                    stores: 8,
+                    arith_ops: 9,
+                    reductions: 10,
+                    moves: 11,
+                    elements_processed: 12,
+                    mem_bytes: 13,
+                },
+            },
+            provenance: Provenance::Simulated,
+            origin: Provenance::Simulated,
+        }
+    }
+
+    #[test]
+    fn roundtrip_within_and_across_opens() {
+        let dir = tmp_dir("roundtrip");
+        let outcome = sample_outcome();
+        {
+            let store = ResultStore::open(&dir).unwrap();
+            assert!(store.is_empty());
+            assert_eq!(store.get("k1"), None);
+            store.put("k1", &outcome).unwrap();
+            let hit = store.get("k1").unwrap();
+            assert_eq!(hit.provenance, Provenance::Cached);
+            assert_eq!(hit.origin, Provenance::Simulated);
+            assert_eq!(hit.cycles, outcome.cycles);
+            assert_eq!(hit.summary, outcome.summary);
+        }
+        // Re-open from disk: the full ledger survives byte-exactly.
+        let store = ResultStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 1);
+        let hit = store.get("k1").unwrap();
+        assert_eq!(hit.verified, outcome.verified);
+        assert_eq!(hit.summary, outcome.summary);
+        assert_eq!(store.get("k2"), None);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn duplicate_puts_do_not_grow_the_ledger() {
+        let dir = tmp_dir("dup");
+        let store = ResultStore::open(&dir).unwrap();
+        store.put("k", &sample_outcome()).unwrap();
+        store.put("k", &sample_outcome()).unwrap();
+        let lines = std::fs::read_to_string(store.path()).unwrap();
+        assert_eq!(lines.lines().count(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn full_store_drops_new_keys_but_still_upgrades_old_ones() {
+        let dir = tmp_dir("cap");
+        let store =
+            ResultStore::open(&dir).unwrap().with_entry_limit(2);
+        store.put("a", &sample_outcome()).unwrap();
+        store.put("b", &sample_outcome()).unwrap();
+        store.put("c", &sample_outcome()).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get("c"), None, "over-cap key must be dropped");
+        // Existing keys still re-record (the upgrade path).
+        let upgraded = EvalOutcome { cycles: 777, ..sample_outcome() };
+        store.put("a", &upgraded).unwrap();
+        assert_eq!(store.get("a").unwrap().cycles, 777);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn changed_outcome_supersedes_the_old_record() {
+        let dir = tmp_dir("supersede");
+        let estimate = EvalOutcome {
+            verified: false,
+            provenance: Provenance::Analytic,
+            origin: Provenance::Analytic,
+            ..sample_outcome()
+        };
+        {
+            let store = ResultStore::open(&dir).unwrap();
+            store.put("k", &estimate).unwrap();
+            // An exact simulation upgrades the estimate in place.
+            store.put("k", &sample_outcome()).unwrap();
+            let hit = store.get("k").unwrap();
+            assert_eq!(hit.origin, Provenance::Simulated);
+            assert!(hit.verified);
+        }
+        // Both lines are on disk; the later one wins on reload.
+        let store = ResultStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get("k").unwrap().origin, Provenance::Simulated);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stale_version_records_are_evicted() {
+        let dir = tmp_dir("stale");
+        {
+            let old = ResultStore::open_versioned(&dir, "0.0.1").unwrap();
+            old.put("k", &sample_outcome()).unwrap();
+        }
+        let newer = ResultStore::open_versioned(&dir, "0.0.2").unwrap();
+        assert_eq!(newer.get("k"), None, "stale-version record must miss");
+        // The original version still reads its own record.
+        let same = ResultStore::open_versioned(&dir, "0.0.1").unwrap();
+        assert!(same.get("k").is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_and_truncated_lines_degrade_to_misses() {
+        let dir = tmp_dir("corrupt");
+        {
+            let store = ResultStore::open(&dir).unwrap();
+            store.put("good", &sample_outcome()).unwrap();
+        }
+        // Vandalise the ledger: garbage line, a truncated record, and a
+        // well-formed record missing mandatory fields.
+        let path = dir.join(STORE_FILE);
+        let mut file =
+            OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(file, "not json at all {{{{").unwrap();
+        write!(file, "{{\"v\": \"0.1.0\", \"key\": \"trunc").unwrap();
+        writeln!(file).unwrap();
+        writeln!(file, "{{\"key\": \"no-version\", \"cycles\": 1}}").unwrap();
+        drop(file);
+
+        let store = ResultStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 1, "only the intact record loads");
+        assert!(store.get("good").is_some());
+        assert_eq!(store.get("trunc"), None);
+        assert_eq!(store.get("no-version"), None);
+        // The store stays writable after loading a vandalised ledger.
+        store.put("after", &sample_outcome()).unwrap();
+        assert!(store.get("after").is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

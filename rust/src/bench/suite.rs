@@ -13,7 +13,7 @@ use std::fmt::Write as _;
 use super::profiles::Profile;
 
 /// Concrete dimensions of one benchmark instance.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BenchSize {
     /// Vector length / matrix dim / conv image dim.
     pub n: usize,

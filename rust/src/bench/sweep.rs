@@ -1,4 +1,4 @@
-//! Parallel design-space sweeps.
+//! Parallel design-space sweeps over the tiered [`Evaluator`].
 //!
 //! The paper's headline claim (2–78x over the scalar host) comes from
 //! evaluating many (benchmark × profile × lanes × VLEN) points; the
@@ -6,27 +6,43 @@
 //! grid much wider.  This module fans the cartesian product of a
 //! [`SweepSpec`] across a `std::thread` worker pool:
 //!
-//! * every *unique* point is simulated exactly once — a result cache
-//!   keyed by the canonical config string deduplicates repeated grid
-//!   entries before any worker starts;
-//! * each worker builds a [`crate::system::Session`] per point (the
-//!   program is assembled and predecoded once, then run), so results are
-//!   byte-identical to a sequential [`run_benchmark`] call with the same
-//!   seed — a property the parity tests pin down;
+//! * every *unique* point is evaluated exactly once — the grid is
+//!   deduplicated through the canonical [`point_key`] (which folds in
+//!   lanes, VLEN, ELEN *and* the workload seed) before any worker
+//!   starts;
+//! * each unique point goes through one shared [`Evaluator`]: answered
+//!   from the persistent result store if `cache_dir` is set, routed
+//!   through analytic extrapolation if its estimated instruction count
+//!   exceeds `analytic_limit`, and otherwise fully simulated on a
+//!   [`crate::system::Session`] built from the shared program cache —
+//!   so a (benchmark, mode, size) group assembles exactly once however
+//!   many lane/VLEN points it spans;
+//! * simulated results are byte-identical to a sequential
+//!   [`run_benchmark`](super::runner::run_benchmark) call with the same
+//!   seed — a property the parity tests pin down — and every outcome is
+//!   tagged with its [`Provenance`];
 //! * invalid design points (e.g. VLEN < ELEN) are reported per point
 //!   instead of aborting the sweep.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::system::machine::RunSummary;
 use crate::util::json::Json;
 use crate::vector::ArrowConfig;
 
+use super::analytic;
+use super::eval::{EvalPoint, Evaluator};
 use super::profiles::{self, Profile};
-use super::runner::{bench_session, run_on_session, Mode};
+use super::runner::Mode;
+use super::store::ResultStore;
 use super::suite::{Benchmark, BENCHMARKS};
+
+pub use super::eval::{point_key, EvalOutcome as SweepOutcome, Provenance};
+
+/// What one grid point produced: an outcome, or a per-point error.
+pub type PointResult = super::eval::EvalResult;
 
 /// The grid to sweep: the cartesian product of every field.
 #[derive(Debug, Clone)]
@@ -40,6 +56,12 @@ pub struct SweepSpec {
     pub seed: u64,
     /// Worker threads; 0 picks the machine's available parallelism.
     pub threads: usize,
+    /// Estimated-instruction count above which a point is extrapolated
+    /// analytically instead of simulated; `None` always simulates.
+    pub analytic_limit: Option<u64>,
+    /// Directory of the persistent result store; `None` keeps the sweep
+    /// in-memory only.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for SweepSpec {
@@ -52,6 +74,8 @@ impl Default for SweepSpec {
             vlens: vec![256],
             seed: 42,
             threads: 0,
+            analytic_limit: Some(analytic::SIM_LIMIT),
+            cache_dir: None,
         }
     }
 }
@@ -72,36 +96,8 @@ impl SweepSpec {
     }
 }
 
-/// Canonical cache key of one grid point — the config part is the
-/// canonical [`ArrowConfig`] identity every later caching layer keys on.
-pub fn point_key(
-    benchmark: Benchmark,
-    profile: &Profile,
-    mode: Mode,
-    lanes: usize,
-    vlen_bits: u32,
-) -> String {
-    format!(
-        "{}|{}|{}|lanes={lanes}|vlen={vlen_bits}",
-        benchmark.name(),
-        profile.name,
-        mode.name()
-    )
-}
-
-/// Successful simulation of one point.
-#[derive(Debug, Clone, PartialEq)]
-pub struct SweepOutcome {
-    pub cycles: u64,
-    pub verified: bool,
-    pub summary: RunSummary,
-}
-
-/// What one grid point produced: a ledger, or a per-point error.
-pub type PointResult = Result<SweepOutcome, String>;
-
 /// One evaluated grid point (shared results are cloned out of the
-/// cache, so duplicated grid entries stay byte-identical).
+/// dedup cache, so duplicated grid entries stay byte-identical).
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub benchmark: Benchmark,
@@ -117,82 +113,86 @@ pub struct SweepPoint {
 #[derive(Debug, Clone)]
 pub struct SweepReport {
     pub points: Vec<SweepPoint>,
-    /// Unique points actually simulated by the pool.
+    /// Unique points answered by full simulation.
     pub unique_simulated: usize,
-    /// Grid entries answered from the result cache.
+    /// Unique points answered from the persistent result store.
+    pub store_hits: usize,
+    /// Unique points answered by analytic extrapolation.
+    pub analytic: usize,
+    /// Grid entries answered from the in-request dedup cache.
     pub cache_hits: usize,
     /// Worker threads used.
     pub threads: usize,
+    /// Set when `cache_dir` was requested but the store failed to open
+    /// (the sweep degrades to uncached evaluation).
+    pub store_error: Option<String>,
 }
 
-#[derive(Debug, Clone)]
-struct Job {
-    benchmark: Benchmark,
-    profile: Profile,
-    mode: Mode,
-    lanes: usize,
-    vlen_bits: u32,
-}
-
-fn run_point(job: &Job, seed: u64) -> PointResult {
-    let config = ArrowConfig {
-        lanes: job.lanes,
-        vlen_bits: job.vlen_bits,
-        ..Default::default()
-    };
-    config.validate()?;
-    let size = job.benchmark.size(&job.profile);
-    let workload = job.benchmark.workload(size, seed);
-    let session = bench_session(job.benchmark, size, job.mode, config);
-    let r = run_on_session(&session, job.benchmark, size, job.mode, &workload)
-        .map_err(|e| e.to_string())?;
-    Ok(SweepOutcome {
-        cycles: r.cycles,
-        verified: r.verified,
-        summary: r.summary,
-    })
-}
-
-/// Run the sweep: dedupe the grid through the canonical-key cache, fan
-/// the unique points across the worker pool, then assemble the full
-/// grid (cache hits included) in deterministic order.
+/// Run the sweep with a spec-built evaluator: attaches the persistent
+/// store when `spec.cache_dir` is set, degrading (with
+/// [`SweepReport::store_error`]) to uncached evaluation if it cannot be
+/// opened.
 pub fn run_sweep(spec: &SweepSpec) -> SweepReport {
+    let mut evaluator = Evaluator::new();
+    let mut store_error = None;
+    if let Some(dir) = &spec.cache_dir {
+        match ResultStore::open(dir) {
+            Ok(store) => evaluator.attach_store(store),
+            Err(e) => {
+                store_error =
+                    Some(format!("cache dir {}: {e}", dir.display()));
+            }
+        }
+    }
+    let mut report = run_sweep_with(spec, &evaluator);
+    if let Some(e) = store_error {
+        report.store_error = Some(e);
+    }
+    report
+}
+
+/// Run the sweep through a caller-owned [`Evaluator`] — the job server
+/// reuses one evaluator (and its program/store caches) across every
+/// request on a connection.  `spec.cache_dir` is ignored here; the
+/// evaluator owns its store.
+pub fn run_sweep_with(spec: &SweepSpec, evaluator: &Evaluator) -> SweepReport {
     // Expand the grid in deterministic order.
-    let mut grid: Vec<(Job, String)> = Vec::with_capacity(spec.grid_len());
+    let mut grid: Vec<(EvalPoint, String)> =
+        Vec::with_capacity(spec.grid_len());
     for &benchmark in &spec.benchmarks {
         for profile in &spec.profiles {
             for &mode in &spec.modes {
                 for &lanes in &spec.lanes {
                     for &vlen_bits in &spec.vlens {
-                        let key = point_key(
-                            benchmark, profile, mode, lanes, vlen_bits,
-                        );
-                        grid.push((
-                            Job {
-                                benchmark,
-                                profile: *profile,
-                                mode,
+                        let point = EvalPoint {
+                            benchmark,
+                            profile: *profile,
+                            mode,
+                            config: ArrowConfig {
                                 lanes,
                                 vlen_bits,
+                                ..Default::default()
                             },
-                            key,
-                        ));
+                        };
+                        let key = point.key(spec.seed);
+                        grid.push((point, key));
                     }
                 }
             }
         }
     }
 
-    // Result cache: canonical key -> index into the unique job list.
+    // In-request dedup cache: canonical key -> index into the unique
+    // job list.
     let mut cache: HashMap<String, usize> = HashMap::new();
-    let mut jobs: Vec<Job> = Vec::new();
+    let mut jobs: Vec<EvalPoint> = Vec::new();
     let mut cache_hits = 0usize;
-    for (job, key) in &grid {
+    for (point, key) in &grid {
         if cache.contains_key(key) {
             cache_hits += 1;
         } else {
             cache.insert(key.clone(), jobs.len());
-            jobs.push(job.clone());
+            jobs.push(point.clone());
         }
     }
 
@@ -209,6 +209,8 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepReport {
         Mutex::new(vec![None; jobs.len()]);
     let cursor = AtomicUsize::new(0);
     let seed = spec.seed;
+    let analytic_limit = spec.analytic_limit;
+    let put_failures_before = evaluator.store_put_failures();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -216,36 +218,60 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepReport {
                 if i >= jobs.len() {
                     break;
                 }
-                let outcome = run_point(&jobs[i], seed);
+                let outcome =
+                    evaluator.evaluate(&jobs[i], seed, analytic_limit);
                 results.lock().unwrap()[i] = Some(outcome);
             });
         }
     });
     let results = results.into_inner().unwrap();
 
+    let mut unique_simulated = 0usize;
+    let mut store_hits = 0usize;
+    let mut analytic = 0usize;
+    for result in results.iter().flatten() {
+        if let Ok(outcome) = result {
+            match outcome.provenance {
+                Provenance::Simulated => unique_simulated += 1,
+                Provenance::Cached => store_hits += 1,
+                Provenance::Analytic => analytic += 1,
+            }
+        }
+    }
+
     let points = grid
         .into_iter()
-        .map(|(job, key)| {
+        .map(|(point, key)| {
             let idx = cache[&key];
             let outcome = results[idx]
                 .clone()
                 .expect("worker pool completed every unique job");
             SweepPoint {
-                benchmark: job.benchmark,
-                profile: job.profile.name,
-                mode: job.mode,
-                lanes: job.lanes,
-                vlen_bits: job.vlen_bits,
+                benchmark: point.benchmark,
+                profile: point.profile.name,
+                mode: point.mode,
+                lanes: point.config.lanes,
+                vlen_bits: point.config.vlen_bits,
                 key,
                 outcome,
             }
         })
         .collect();
+    let failed_puts =
+        evaluator.store_put_failures() - put_failures_before;
     SweepReport {
         points,
-        unique_simulated: jobs.len(),
+        unique_simulated,
+        store_hits,
+        analytic,
         cache_hits,
         threads,
+        store_error: (failed_puts > 0).then(|| {
+            format!(
+                "{failed_puts} result-store append(s) failed; the cache \
+                 is incomplete and the next run will re-simulate"
+            )
+        }),
     }
 }
 
@@ -263,6 +289,8 @@ fn point_json(p: &SweepPoint) -> Json {
             fields.push(("ok", true.into()));
             fields.push(("cycles", o.cycles.into()));
             fields.push(("verified", o.verified.into()));
+            fields.push(("provenance", o.provenance.name().into()));
+            fields.push(("origin", o.origin.name().into()));
             fields.push((
                 "scalar_instructions",
                 o.summary.scalar_instructions.into(),
@@ -283,16 +311,22 @@ fn point_json(p: &SweepPoint) -> Json {
 /// Render the whole report as one JSON object (the `arrow sweep` CLI
 /// output and the job-server response body).
 pub fn report_json(report: &SweepReport) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         (
             "points",
             Json::Arr(report.points.iter().map(point_json).collect()),
         ),
         ("grid", (report.points.len() as u64).into()),
         ("unique_simulated", (report.unique_simulated as u64).into()),
+        ("store_hits", (report.store_hits as u64).into()),
+        ("analytic", (report.analytic as u64).into()),
         ("cache_hits", (report.cache_hits as u64).into()),
         ("threads", (report.threads as u64).into()),
-    ])
+    ];
+    if let Some(e) = &report.store_error {
+        fields.push(("store_error", e.as_str().into()));
+    }
+    Json::obj(fields)
 }
 
 #[cfg(test)]
@@ -309,6 +343,7 @@ mod tests {
             vlens: vec![128, 256],
             seed: 7,
             threads: 2,
+            ..Default::default()
         }
     }
 
@@ -318,6 +353,8 @@ mod tests {
         let report = run_sweep(&spec);
         assert_eq!(report.points.len(), spec.grid_len());
         assert_eq!(report.cache_hits, 0);
+        assert_eq!(report.store_hits, 0);
+        assert_eq!(report.analytic, 0);
         for p in &report.points {
             let config = ArrowConfig {
                 lanes: p.lanes,
@@ -329,6 +366,7 @@ mod tests {
                 run_benchmark(p.benchmark, size, p.mode, config, spec.seed)
                     .unwrap();
             let got = p.outcome.as_ref().unwrap();
+            assert_eq!(got.provenance, Provenance::Simulated, "{}", p.key);
             assert!(got.verified, "{}", p.key);
             assert_eq!(got.cycles, seq.cycles, "{}", p.key);
             assert_eq!(got.summary, seq.summary, "{}", p.key);
@@ -359,6 +397,22 @@ mod tests {
     }
 
     #[test]
+    fn point_keys_fold_in_seed_and_element_width() {
+        let spec = small_spec();
+        let report = run_sweep(&spec);
+        let key = &report.points[0].key;
+        assert!(key.contains("seed=7"), "{key}");
+        assert!(key.contains("elen=64"), "{key}");
+        // A different seed is a different canonical key: the persistent
+        // store can never serve one sweep's results to another seed.
+        let reseeded = SweepSpec { seed: 8, ..small_spec() };
+        let report2 = run_sweep(&reseeded);
+        for (a, b) in report.points.iter().zip(&report2.points) {
+            assert_ne!(a.key, b.key);
+        }
+    }
+
+    #[test]
     fn invalid_points_reported_not_fatal() {
         let spec = SweepSpec {
             benchmarks: vec![Benchmark::VAdd],
@@ -368,6 +422,7 @@ mod tests {
             vlens: vec![128, 256],
             seed: 1,
             threads: 1,
+            ..Default::default()
         };
         let report = run_sweep(&spec);
         assert!(report.points.iter().all(|p| p.outcome.is_ok()));
@@ -375,6 +430,30 @@ mod tests {
         let bad = SweepSpec { lanes: vec![3], ..spec };
         let report = run_sweep(&bad);
         assert!(report.points.iter().all(|p| p.outcome.is_err()));
+        assert_eq!(report.unique_simulated, 0);
+    }
+
+    #[test]
+    fn analytic_limit_routes_points() {
+        // A zero limit forces every strip-aligned vector point through
+        // the analytic tier.
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![2],
+            vlens: vec![256],
+            seed: 1,
+            threads: 1,
+            analytic_limit: Some(0),
+            ..Default::default()
+        };
+        let report = run_sweep(&spec);
+        assert_eq!(report.analytic, 1);
+        assert_eq!(report.unique_simulated, 0);
+        let o = report.points[0].outcome.as_ref().unwrap();
+        assert_eq!(o.provenance, Provenance::Analytic);
+        assert!(o.cycles > 0);
     }
 
     #[test]
@@ -387,12 +466,19 @@ mod tests {
             vlens: vec![256],
             seed: 1,
             threads: 1,
+            ..Default::default()
         };
         let j = report_json(&run_sweep(&spec));
         let points = j.get("points").unwrap().as_arr().unwrap();
         assert_eq!(points.len(), 1);
         assert_eq!(points[0].get("ok"), Some(&true.into()));
+        assert_eq!(
+            points[0].get("provenance").unwrap().as_str(),
+            Some("simulated")
+        );
         assert!(points[0].get("cycles").unwrap().as_u64().unwrap() > 0);
+        assert_eq!(j.get("store_hits").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("analytic").unwrap().as_u64(), Some(0));
         // Round-trips through the serializer.
         let reparsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(reparsed.get("grid").unwrap().as_u64(), Some(1));

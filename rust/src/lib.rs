@@ -21,7 +21,9 @@
 //! * [`energy`] — the Table-2 resource/power model and Table-4 energy
 //!   accounting.
 //! * [`bench`] — the nine-benchmark suite (scalar + vectorized assembly),
-//!   Table-1 data profiles, and the analytic large-profile extrapolation.
+//!   Table-1 data profiles, the analytic large-profile extrapolation, and
+//!   the tiered point evaluator (shared program cache, persistent result
+//!   store, analytic routing) every evaluation path goes through.
 //! * [`runtime`] — XLA/PJRT oracle: loads `artifacts/*.hlo.txt` lowered
 //!   from the JAX/Pallas golden models and validates simulator results.
 //! * [`report`] — renderers for the paper's Tables 2/3/4 and summaries.

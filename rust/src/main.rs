@@ -5,10 +5,11 @@
 //! arrow bench --benchmark vector_addition --profile small --mode vector
 //! arrow sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
 //!             [--grid-lanes 1,2,4] [--grid-vlens 128,256,512]
-//!             [--threads N] [--seed N]
+//!             [--threads N] [--seed N] [--cache-dir DIR]
+//!             [--analytic-limit N | --no-analytic]
 //! arrow describe datapath|write-enable|simd-alu|system
 //! arrow validate                      # simulator vs XLA golden artifacts
-//! arrow serve [--addr 127.0.0.1:7676]
+//! arrow serve [--addr 127.0.0.1:7676] [--cache-dir DIR]
 //! arrow --lanes 4 --vlen 512 ...      # design-time overrides
 //! ```
 
@@ -40,9 +41,10 @@ COMMANDS:
   bench --benchmark NAME [--profile NAME] [--mode scalar|vector]
   sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
         [--grid-lanes LIST] [--grid-vlens LIST] [--threads N] [--seed N]
+        [--cache-dir DIR] [--analytic-limit N | --no-analytic]
   describe <datapath|write-enable|simd-alu|system>
   validate
-  serve [--addr HOST:PORT]
+  serve [--addr HOST:PORT] [--cache-dir DIR]
   help
 ";
 
@@ -242,6 +244,15 @@ fn main() -> Result<()> {
             if let Some(s) = args.opt("--seed") {
                 spec.seed = s.parse()?;
             }
+            if let Some(dir) = args.opt("--cache-dir") {
+                spec.cache_dir = Some(std::path::PathBuf::from(dir));
+            }
+            if let Some(limit) = args.opt("--analytic-limit") {
+                spec.analytic_limit = Some(limit.parse()?);
+            }
+            if args.has("--no-analytic") {
+                spec.analytic_limit = None;
+            }
             if spec.grid_len() == 0 {
                 return fail("sweep: empty grid");
             }
@@ -255,9 +266,15 @@ fn main() -> Result<()> {
                 }
             );
             let report = run_sweep(&spec);
+            if let Some(e) = &report.store_error {
+                eprintln!("warning: {e}");
+            }
             eprintln!(
-                "{} unique points simulated, {} cache hits",
-                report.unique_simulated, report.cache_hits
+                "{} simulated, {} from store, {} analytic, {} in-request cache hits",
+                report.unique_simulated,
+                report.store_hits,
+                report.analytic,
+                report.cache_hits
             );
             println!("{}", report_json(&report));
         }
@@ -278,7 +295,11 @@ fn main() -> Result<()> {
         "serve" => {
             let addr =
                 args.opt("--addr").unwrap_or_else(|| "127.0.0.1:7676".into());
-            server::serve(&addr)?;
+            let cache_dir = args.opt("--cache-dir");
+            server::serve(
+                &addr,
+                cache_dir.as_deref().map(std::path::Path::new),
+            )?;
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => return fail(format!("unknown command `{other}`\n{USAGE}")),

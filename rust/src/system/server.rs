@@ -10,22 +10,31 @@
 //!  "mode": "vector", "lanes": 2}
 //! {"cmd": "sweep", "benchmarks": ["vector_addition"], "profiles": ["test"],
 //!  "modes": ["vector"], "lanes": [1, 2, 4], "vlens": [128, 256]}
+//! {"cmd": "batch", "requests": [{"cmd": "ping"}, {"cmd": "bench", ...}]}
 //! {"cmd": "describe", "what": "datapath"}
 //! {"cmd": "list"}
 //! ```
 //!
-//! Responses are single-line JSON with `"ok": true/false`.  `sweep` fans
-//! its grid across the in-process worker pool (see
-//! [`crate::bench::sweep`]) and answers with one point object per grid
-//! entry.
+//! Responses are single-line JSON with `"ok": true/false`.  Every
+//! evaluation (`bench`, `sweep`, and both inside `batch`) goes through
+//! one process-wide [`Evaluator`] shared across all connections, so
+//! assembled programs — and, when the server is started with a cache
+//! directory, stored results — are reused across requests.  `batch`
+//! answers many requests in one round trip: its sub-requests run
+//! sequentially on the connection's thread against that same
+//! evaluator, which is what makes one-connection/many-workloads cheap.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::Arc;
 
-use crate::bench::runner::{run_benchmark, Mode};
+use crate::bench::profiles;
+use crate::bench::runner::Mode;
+use crate::bench::store::ResultStore;
 use crate::bench::suite::{Benchmark, BENCHMARKS};
 use crate::bench::sweep::{self, SweepSpec};
-use crate::bench::Profile;
+use crate::bench::{EvalPoint, Evaluator, Profile};
 use crate::util::json::{self, Json};
 use crate::vector::ArrowConfig;
 
@@ -35,12 +44,16 @@ use super::describe;
 /// from monopolising the process.
 const MAX_SWEEP_GRID: usize = 4096;
 
+/// Upper bound on sub-requests in one `batch` envelope.
+const MAX_BATCH_REQUESTS: usize = 256;
+
 fn err_response(msg: impl Into<String>) -> Json {
     Json::obj(vec![("ok", false.into()), ("error", Json::Str(msg.into()))])
 }
 
-/// Handle one request object (pure; exercised directly by tests).
-pub fn handle_request(req: &Json) -> Json {
+/// Handle one request object against a shared evaluator (pure;
+/// exercised directly by tests).
+pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
     match req.get("cmd").and_then(Json::as_str) {
         Some("ping") => {
             Json::obj(vec![("ok", true.into()), ("pong", true.into())])
@@ -56,10 +69,7 @@ pub fn handle_request(req: &Json) -> Json {
             (
                 "profiles",
                 Json::Arr(
-                    ["small", "medium", "large", "test"]
-                        .iter()
-                        .map(|&p| p.into())
-                        .collect(),
+                    profiles::ALL.iter().map(|p| p.name.into()).collect(),
                 ),
             ),
         ]),
@@ -99,33 +109,37 @@ pub fn handle_request(req: &Json) -> Json {
                 Some("scalar") => Mode::Scalar,
                 _ => Mode::Vector,
             };
-            let config = config_from(req);
-            if let Err(e) = config.validate() {
-                return err_response(e);
-            }
-            let size = b.size(&p);
-            match run_benchmark(b, size, mode, config, 42) {
-                Ok(r) => Json::obj(vec![
+            let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(42);
+            let point = EvalPoint {
+                benchmark: b,
+                profile: p,
+                mode,
+                config: config_from(req),
+            };
+            match evaluator.evaluate(&point, seed, analytic_limit_from(req)) {
+                Ok(o) => Json::obj(vec![
                     ("ok", true.into()),
                     ("benchmark", b.name().into()),
                     ("mode", mode.name().into()),
-                    ("cycles", r.cycles.into()),
-                    ("verified", r.verified.into()),
+                    ("cycles", o.cycles.into()),
+                    ("verified", o.verified.into()),
+                    ("provenance", o.provenance.name().into()),
+                    ("origin", o.origin.name().into()),
                     (
                         "scalar_instructions",
-                        r.summary.scalar_instructions.into(),
+                        o.summary.scalar_instructions.into(),
                     ),
                     (
                         "vector_instructions",
-                        r.summary.vector_instructions.into(),
+                        o.summary.vector_instructions.into(),
                     ),
                 ]),
-                Err(e) => err_response(e.to_string()),
+                Err(e) => err_response(e),
             }
         }
         Some("sweep") => match sweep_spec_from(req) {
             Ok(spec) => {
-                let report = sweep::run_sweep(&spec);
+                let report = sweep::run_sweep_with(&spec, evaluator);
                 let Json::Obj(mut body) = sweep::report_json(&report) else {
                     unreachable!("report_json returns an object")
                 };
@@ -134,8 +148,39 @@ pub fn handle_request(req: &Json) -> Json {
             }
             Err(e) => err_response(e),
         },
+        Some("batch") => {
+            let Some(requests) =
+                req.get("requests").and_then(Json::as_arr)
+            else {
+                return err_response(
+                    "`requests` must be an array of request objects",
+                );
+            };
+            if requests.len() > MAX_BATCH_REQUESTS {
+                return err_response(format!(
+                    "batch of {} requests exceeds the {MAX_BATCH_REQUESTS}-request limit",
+                    requests.len()
+                ));
+            }
+            let responses: Vec<Json> = requests
+                .iter()
+                .map(|sub| {
+                    if sub.get("cmd").and_then(Json::as_str) == Some("batch")
+                    {
+                        err_response("nested batch requests are not allowed")
+                    } else {
+                        handle_request(sub, evaluator)
+                    }
+                })
+                .collect();
+            Json::obj(vec![
+                ("ok", true.into()),
+                ("count", (responses.len() as u64).into()),
+                ("responses", Json::Arr(responses)),
+            ])
+        }
         other => err_response(format!(
-            "unknown cmd {other:?} (ping|list|bench|sweep|describe)"
+            "unknown cmd {other:?} (ping|list|bench|sweep|batch|describe)"
         )),
     }
 }
@@ -205,6 +250,7 @@ fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
     if let Some(s) = req.get("seed").and_then(Json::as_u64) {
         spec.seed = s;
     }
+    spec.analytic_limit = analytic_limit_from(req);
     let grid = spec.grid_len();
     if grid > MAX_SWEEP_GRID {
         return Err(format!(
@@ -212,6 +258,19 @@ fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
         ));
     }
     Ok(spec)
+}
+
+/// Analytic-routing threshold of one request: `"analytic_limit": N`
+/// overrides, `"no_analytic": true` forces exact simulation, default is
+/// the crate-wide [`crate::bench::analytic::SIM_LIMIT`].
+fn analytic_limit_from(req: &Json) -> Option<u64> {
+    if req.get("no_analytic").and_then(Json::as_bool) == Some(true) {
+        return None;
+    }
+    match req.get("analytic_limit").and_then(Json::as_u64) {
+        Some(limit) => Some(limit),
+        None => Some(crate::bench::analytic::SIM_LIMIT),
+    }
 }
 
 fn config_from(req: &Json) -> ArrowConfig {
@@ -225,7 +284,7 @@ fn config_from(req: &Json) -> ArrowConfig {
     c
 }
 
-fn handle_conn(stream: TcpStream) {
+fn handle_conn(stream: TcpStream, evaluator: &Evaluator) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -238,7 +297,7 @@ fn handle_conn(stream: TcpStream) {
             continue;
         }
         let response = match json::parse(&line) {
-            Ok(req) => handle_request(&req),
+            Ok(req) => handle_request(&req, evaluator),
             Err(e) => err_response(format!("bad json: {e}")),
         };
         if writeln!(writer, "{response}").is_err() {
@@ -251,14 +310,35 @@ fn handle_conn(stream: TcpStream) {
 }
 
 /// Serve forever on `addr` (e.g. `127.0.0.1:7676`), one thread per
-/// connection.
-pub fn serve(addr: &str) -> std::io::Result<()> {
+/// connection.  All connections share one [`Evaluator`]; passing a
+/// `cache_dir` additionally backs it with the persistent result store
+/// (an unopenable store is reported and the server runs uncached).
+pub fn serve(addr: &str, cache_dir: Option<&Path>) -> std::io::Result<()> {
+    let mut evaluator = Evaluator::new();
+    if let Some(dir) = cache_dir {
+        match ResultStore::open(dir) {
+            Ok(store) => {
+                eprintln!(
+                    "result store at {} ({} entries)",
+                    store.path().display(),
+                    store.len()
+                );
+                evaluator.attach_store(store);
+            }
+            Err(e) => eprintln!(
+                "cache dir {}: {e} (serving uncached)",
+                dir.display()
+            ),
+        }
+    }
+    let evaluator = Arc::new(evaluator);
     let listener = TcpListener::bind(addr)?;
     eprintln!("arrow simulator serving on {addr}");
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
-                std::thread::spawn(move || handle_conn(s));
+                let evaluator = Arc::clone(&evaluator);
+                std::thread::spawn(move || handle_conn(s, &evaluator));
             }
             Err(e) => eprintln!("accept: {e}"),
         }
@@ -274,26 +354,53 @@ mod tests {
         json::parse(s).unwrap()
     }
 
+    /// One-shot handler with a fresh evaluator (tests that exercise
+    /// evaluator reuse build their own).
+    fn handle(s: &str) -> Json {
+        handle_request(&req(s), &Evaluator::new())
+    }
+
     #[test]
     fn ping() {
-        let r = handle_request(&req(r#"{"cmd": "ping"}"#));
+        let r = handle(r#"{"cmd": "ping"}"#);
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
     }
 
     #[test]
     fn bench_roundtrip() {
-        let r = handle_request(&req(
+        let r = handle(
             r#"{"cmd": "bench", "benchmark": "vector_addition",
                 "profile": "test", "mode": "vector"}"#,
-        ));
+        );
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
         assert_eq!(r.get("verified"), Some(&Json::Bool(true)));
+        assert_eq!(
+            r.get("provenance").unwrap().as_str(),
+            Some("simulated")
+        );
         assert!(r.get("cycles").unwrap().as_u64().unwrap() > 0);
     }
 
     #[test]
+    fn list_profiles_derived_from_registry() {
+        let r = handle(r#"{"cmd": "list"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let names: Vec<&str> = r
+            .get("profiles")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| p.as_str().unwrap())
+            .collect();
+        let registry: Vec<&str> =
+            profiles::ALL.iter().map(|p| p.name).collect();
+        assert_eq!(names, registry);
+    }
+
+    #[test]
     fn unknown_cmd_rejected() {
-        let r = handle_request(&req(r#"{"cmd": "nuke"}"#));
+        let r = handle(r#"{"cmd": "nuke"}"#);
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
         let msg = r.get("error").unwrap().as_str().unwrap();
         assert!(msg.contains("unknown cmd"), "{msg}");
@@ -301,15 +408,15 @@ mod tests {
 
     #[test]
     fn missing_cmd_rejected() {
-        let r = handle_request(&req(r#"{"benchmark": "vector_addition"}"#));
+        let r = handle(r#"{"benchmark": "vector_addition"}"#);
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]
     fn unknown_benchmark_rejected() {
-        let r = handle_request(&req(
+        let r = handle(
             r#"{"cmd": "bench", "benchmark": "quicksort", "profile": "test"}"#,
-        ));
+        );
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
         assert_eq!(
             r.get("error").unwrap().as_str(),
@@ -319,29 +426,27 @@ mod tests {
 
     #[test]
     fn unknown_profile_rejected() {
-        let r = handle_request(&req(
+        let r = handle(
             r#"{"cmd": "bench", "benchmark": "vector_addition",
                 "profile": "enormous"}"#,
-        ));
+        );
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
         assert_eq!(r.get("error").unwrap().as_str(), Some("unknown profile"));
     }
 
     #[test]
     fn unknown_describe_figure_rejected() {
-        let r = handle_request(&req(
-            r#"{"cmd": "describe", "what": "flux-capacitor"}"#,
-        ));
+        let r = handle(r#"{"cmd": "describe", "what": "flux-capacitor"}"#);
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]
     fn sweep_roundtrip_with_cache() {
-        let r = handle_request(&req(
+        let r = handle(
             r#"{"cmd": "sweep", "benchmarks": ["vector_addition"],
                 "profiles": ["test"], "modes": ["vector"],
                 "lanes": [1, 2, 2], "vlens": [256], "threads": 2}"#,
-        ));
+        );
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
         let points = r.get("points").unwrap().as_arr().unwrap();
         assert_eq!(points.len(), 3);
@@ -358,12 +463,79 @@ mod tests {
     }
 
     #[test]
+    fn batch_reuses_one_evaluator() {
+        let evaluator = Evaluator::new();
+        let body = r#"{"cmd": "batch", "requests": [
+            {"cmd": "ping"},
+            {"cmd": "bench", "benchmark": "vector_addition",
+             "profile": "test", "mode": "vector", "lanes": 1},
+            {"cmd": "bench", "benchmark": "vector_addition",
+             "profile": "test", "mode": "vector", "lanes": 2},
+            {"cmd": "bench", "benchmark": "bogus", "profile": "test"}
+        ]}"#;
+        let r = handle_request(&req(body), &evaluator);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("count").unwrap().as_u64(), Some(4));
+        let responses = r.get("responses").unwrap().as_arr().unwrap();
+        assert_eq!(responses[0].get("pong"), Some(&Json::Bool(true)));
+        for resp in &responses[1..3] {
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            assert_eq!(resp.get("verified"), Some(&Json::Bool(true)));
+        }
+        // A failing sub-request fails alone, not the envelope.
+        assert_eq!(responses[3].get("ok"), Some(&Json::Bool(false)));
+        // Both bench points share one (benchmark, mode, size) program.
+        assert_eq!(evaluator.programs().len(), 1);
+    }
+
+    #[test]
+    fn batch_shape_and_nesting_rejected() {
+        for body in [
+            r#"{"cmd": "batch"}"#,
+            r#"{"cmd": "batch", "requests": "ping"}"#,
+        ] {
+            let r = handle(body);
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{body}");
+        }
+        let r = handle(
+            r#"{"cmd": "batch", "requests":
+                [{"cmd": "batch", "requests": []}]}"#,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let responses = r.get("responses").unwrap().as_arr().unwrap();
+        assert_eq!(responses[0].get("ok"), Some(&Json::Bool(false)));
+        assert!(responses[0]
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("nested"));
+    }
+
+    #[test]
+    fn batch_size_limit_enforced() {
+        let pings: Vec<&str> = (0..257).map(|_| r#"{"cmd":"ping"}"#).collect();
+        let body = format!(
+            r#"{{"cmd": "batch", "requests": [{}]}}"#,
+            pings.join(",")
+        );
+        let r = handle(&body);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert!(r
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("limit"));
+    }
+
+    #[test]
     fn sweep_invalid_lane_count_reported_per_point() {
-        let r = handle_request(&req(
+        let r = handle(
             r#"{"cmd": "sweep", "benchmarks": ["vector_addition"],
                 "profiles": ["test"], "modes": ["vector"],
                 "lanes": [3], "vlens": [256], "threads": 1}"#,
-        ));
+        );
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
         let points = r.get("points").unwrap().as_arr().unwrap();
         assert_eq!(points[0].get("ok"), Some(&Json::Bool(false)));
@@ -385,7 +557,7 @@ mod tests {
             r#"{"cmd": "sweep", "lanes": ["two"]}"#,
             r#"{"cmd": "sweep", "vlens": []}"#,
         ] {
-            let r = handle_request(&req(body));
+            let r = handle(body);
             assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{body}");
         }
     }
@@ -403,7 +575,7 @@ mod tests {
                  "lanes": [{}], "vlens": [256]}}"#,
             lanes.join(",")
         );
-        let r = handle_request(&req(&body));
+        let r = handle(&body);
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
         assert!(r
             .get("error")
@@ -415,19 +587,19 @@ mod tests {
 
     #[test]
     fn describe_over_protocol() {
-        let r = handle_request(&req(
+        let r = handle(
             r#"{"cmd": "describe", "what": "system", "lanes": 4}"#,
-        ));
+        );
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
         assert!(r.get("text").unwrap().as_str().unwrap().contains("DDR3"));
     }
 
     #[test]
     fn bad_config_rejected() {
-        let r = handle_request(&req(
+        let r = handle(
             r#"{"cmd": "bench", "benchmark": "vector_relu",
                 "profile": "test", "lanes": 3}"#,
-        ));
+        );
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
     }
 
@@ -437,7 +609,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         std::thread::spawn(move || {
             let (s, _) = listener.accept().unwrap();
-            handle_conn(s);
+            handle_conn(s, &Evaluator::new());
         });
         let mut client = TcpStream::connect(addr).unwrap();
         writeln!(client, r#"{{"cmd": "ping"}}"#).unwrap();

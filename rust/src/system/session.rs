@@ -57,6 +57,32 @@ impl Session {
         })
     }
 
+    /// Build a session from an already-assembled and predecoded program
+    /// — the shared program-cache path ([`crate::bench::eval`]), which
+    /// skips both the assembler and the decoder.  `decoded` must be the
+    /// per-PC decode of `program.text` (as produced by
+    /// [`Session::new`]); a length mismatch is rejected.
+    pub fn from_parts(
+        program: Program,
+        decoded: Vec<Option<Instr>>,
+        config: ArrowConfig,
+    ) -> Result<Session, String> {
+        config.validate()?;
+        if decoded.len() != program.text.len() {
+            return Err(format!(
+                "decode cache covers {} words but the text section has {}",
+                decoded.len(),
+                program.text.len()
+            ));
+        }
+        Ok(Session {
+            program,
+            decoded,
+            config,
+            timing: ScalarTiming::default(),
+        })
+    }
+
     /// Override the scalar host timing model.
     pub fn with_timing(mut self, timing: ScalarTiming) -> Session {
         self.timing = timing;

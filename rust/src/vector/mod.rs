@@ -28,4 +28,4 @@ pub mod unit;
 pub mod vrf;
 
 pub use config::{ArrowConfig, VectorTiming};
-pub use unit::{ArrowUnit, ExecError, ExecPlan, VectorEffect};
+pub use unit::{ArrowUnit, ExecError, ExecPlan, UnitStats, VectorEffect};

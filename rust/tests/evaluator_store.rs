@@ -1,0 +1,182 @@
+//! Persistent-store integration: a repeated `arrow sweep` with a cache
+//! directory must answer entirely from the store (zero simulated
+//! points), byte-identically to the first run — and a vandalised store
+//! must degrade to re-simulation, never a panic.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use arrow_rvv::bench::profiles;
+use arrow_rvv::bench::runner::Mode;
+use arrow_rvv::bench::store::STORE_FILE;
+use arrow_rvv::bench::suite::Benchmark;
+use arrow_rvv::bench::sweep::{run_sweep, Provenance, SweepSpec};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "arrow-evaluator-store-{tag}-{}-{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cached_spec(dir: &Path) -> SweepSpec {
+    SweepSpec {
+        benchmarks: vec![Benchmark::VAdd, Benchmark::VDot],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Scalar, Mode::Vector],
+        lanes: vec![1, 2],
+        vlens: vec![256],
+        seed: 42,
+        threads: 2,
+        cache_dir: Some(dir.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+/// The acceptance criterion: run twice against one cache directory; the
+/// second run simulates nothing and reproduces the first run exactly.
+#[test]
+fn repeated_sweep_answers_entirely_from_the_store() {
+    let dir = tmp_dir("roundtrip");
+    let spec = cached_spec(&dir);
+
+    let first = run_sweep(&spec);
+    assert!(first.store_error.is_none(), "{:?}", first.store_error);
+    assert_eq!(first.unique_simulated, spec.grid_len());
+    assert_eq!(first.store_hits, 0);
+    assert!(dir.join(STORE_FILE).exists());
+
+    let second = run_sweep(&spec);
+    assert_eq!(second.unique_simulated, 0, "second run must not simulate");
+    assert_eq!(second.analytic, 0);
+    assert_eq!(second.store_hits, spec.grid_len());
+
+    assert_eq!(first.points.len(), second.points.len());
+    for (a, b) in first.points.iter().zip(&second.points) {
+        assert_eq!(a.key, b.key);
+        let fresh = a.outcome.as_ref().unwrap();
+        let cached = b.outcome.as_ref().unwrap();
+        assert_eq!(fresh.provenance, Provenance::Simulated, "{}", a.key);
+        assert_eq!(cached.provenance, Provenance::Cached, "{}", b.key);
+        assert_eq!(cached.origin, Provenance::Simulated, "{}", b.key);
+        // Identical modulo provenance: the store reproduced the full
+        // ledger, not just the headline cycle count.
+        assert_eq!(fresh.cycles, cached.cycles, "{}", a.key);
+        assert_eq!(fresh.verified, cached.verified, "{}", a.key);
+        assert_eq!(fresh.summary, cached.summary, "{}", a.key);
+    }
+
+    // A different seed misses the store entirely (the canonical key
+    // folds the seed in) and simulates afresh.
+    let reseeded = SweepSpec { seed: 43, ..cached_spec(&dir) };
+    let third = run_sweep(&reseeded);
+    assert_eq!(third.unique_simulated, reseeded.grid_len());
+    assert_eq!(third.store_hits, 0);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Analytic estimates persist too: a second sweep at the same grid
+/// serves yesterday's extrapolations from disk.
+#[test]
+fn analytic_results_are_stored_and_replayed() {
+    let dir = tmp_dir("analytic");
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![2],
+        vlens: vec![256],
+        seed: 1,
+        threads: 1,
+        analytic_limit: Some(0),
+        cache_dir: Some(dir.clone()),
+    };
+    let first = run_sweep(&spec);
+    assert_eq!(first.analytic, 1);
+    let second = run_sweep(&spec);
+    assert_eq!(second.analytic, 0);
+    assert_eq!(second.store_hits, 1);
+    let replayed = second.points[0].outcome.as_ref().unwrap();
+    // Replayed estimates keep their origin: a consumer can always tell
+    // an extrapolation from an exact measurement.
+    assert_eq!(replayed.origin, Provenance::Analytic);
+    assert_eq!(
+        first.points[0].outcome.as_ref().unwrap().cycles,
+        replayed.cycles
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Truncating and vandalising the ledger between runs degrades cleanly:
+/// unreadable records re-simulate, the rest of the sweep still answers,
+/// and nothing panics.
+#[test]
+fn corrupt_store_degrades_to_resimulation() {
+    let dir = tmp_dir("corrupt");
+    let spec = cached_spec(&dir);
+    let first = run_sweep(&spec);
+    assert_eq!(first.unique_simulated, spec.grid_len());
+
+    // Chop the last line in half and append garbage.
+    let path = dir.join(STORE_FILE);
+    let ledger = std::fs::read_to_string(&path).unwrap();
+    let truncated = &ledger[..ledger.len() - ledger.len() / 4];
+    std::fs::write(&path, truncated).unwrap();
+    let mut file = OpenOptions::new().append(true).open(&path).unwrap();
+    writeln!(file).unwrap();
+    writeln!(file, "}}}}not json{{{{").unwrap();
+    drop(file);
+
+    let second = run_sweep(&spec);
+    assert!(second.store_error.is_none());
+    assert_eq!(second.points.len(), spec.grid_len());
+    // Intact records still hit; mangled ones re-simulate — and the
+    // results agree with the first run either way.
+    assert!(second.unique_simulated > 0, "truncation lost some records");
+    assert!(second.store_hits > 0, "intact prefix must still serve");
+    assert_eq!(
+        second.unique_simulated + second.store_hits,
+        spec.grid_len()
+    );
+    for (a, b) in first.points.iter().zip(&second.points) {
+        let fresh = a.outcome.as_ref().unwrap();
+        let replayed = b.outcome.as_ref().unwrap();
+        assert_eq!(fresh.cycles, replayed.cycles, "{}", a.key);
+        assert_eq!(fresh.summary, replayed.summary, "{}", a.key);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// An unopenable cache directory is reported, not fatal: the sweep
+/// degrades to uncached evaluation.
+#[test]
+fn unopenable_store_reports_and_degrades() {
+    let dir = tmp_dir("unopenable");
+    std::fs::create_dir_all(&dir).unwrap();
+    // A *file* where the store expects a directory component.
+    let blocker = dir.join("blocker");
+    std::fs::write(&blocker, b"not a directory").unwrap();
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![2],
+        vlens: vec![256],
+        seed: 1,
+        threads: 1,
+        cache_dir: Some(blocker.join("store")),
+        ..Default::default()
+    };
+    let report = run_sweep(&spec);
+    assert!(report.store_error.is_some());
+    assert_eq!(report.unique_simulated, 1);
+    assert!(report.points[0].outcome.is_ok());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

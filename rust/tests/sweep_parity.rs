@@ -1,12 +1,15 @@
 //! Sweep/session integration: the parallel design-space sweep must be a
 //! pure parallelisation — every point byte-identical to a sequential
-//! single-run execution — and the session/engine refactor must keep
-//! wide-lane design points fully accounted.
+//! single-run execution — whatever tier answered it.  Cached (persistent
+//! store) and analytic points must be exactly as deterministic as
+//! simulated ones, and the canonical point key must separate sweeps
+//! that could otherwise collide (different seeds above all).
 
+use arrow_rvv::bench::profiles;
 use arrow_rvv::bench::runner::{run_benchmark, Mode};
 use arrow_rvv::bench::suite::Benchmark;
-use arrow_rvv::bench::sweep::{run_sweep, SweepSpec};
-use arrow_rvv::bench::profiles;
+use arrow_rvv::bench::sweep::{run_sweep, Provenance, SweepSpec};
+use arrow_rvv::bench::{analytic, point_key};
 use arrow_rvv::system::Session;
 use arrow_rvv::vector::ArrowConfig;
 
@@ -23,12 +26,15 @@ fn sweep_is_byte_identical_to_sequential_runs() {
         vlens: vec![128, 256],
         seed: 42,
         threads: 4,
+        ..Default::default()
     };
     assert_eq!(spec.grid_len(), 24);
     let report = run_sweep(&spec);
     assert_eq!(report.points.len(), 24);
     assert_eq!(report.unique_simulated, 24);
     assert_eq!(report.cache_hits, 0);
+    assert_eq!(report.store_hits, 0);
+    assert_eq!(report.analytic, 0);
 
     for point in &report.points {
         let config = ArrowConfig {
@@ -49,6 +55,7 @@ fn sweep_is_byte_identical_to_sequential_runs() {
             .outcome
             .as_ref()
             .unwrap_or_else(|e| panic!("{}: {e}", point.key));
+        assert_eq!(swept.provenance, Provenance::Simulated, "{}", point.key);
         assert!(swept.verified, "{}", point.key);
         assert!(sequential.verified, "{}", point.key);
         assert_eq!(swept.cycles, sequential.cycles, "{}", point.key);
@@ -64,6 +71,55 @@ fn sweep_is_byte_identical_to_sequential_runs() {
     }
 }
 
+/// The canonical point key folds in the workload seed and the element
+/// width, so sweeps that differ only in seed can never collide in the
+/// in-request dedup cache or the persistent store.
+#[test]
+fn point_key_separates_seeds_and_element_widths() {
+    let base = ArrowConfig::default();
+    let key = point_key(
+        Benchmark::VAdd,
+        &profiles::TEST,
+        Mode::Vector,
+        &base,
+        42,
+    );
+    assert!(key.contains("lanes=2"), "{key}");
+    assert!(key.contains("vlen=256"), "{key}");
+    assert!(key.contains("elen=64"), "{key}");
+    assert!(key.contains("seed=42"), "{key}");
+    let reseeded = point_key(
+        Benchmark::VAdd,
+        &profiles::TEST,
+        Mode::Vector,
+        &base,
+        43,
+    );
+    assert_ne!(key, reseeded);
+    let narrow = point_key(
+        Benchmark::VAdd,
+        &profiles::TEST,
+        Mode::Vector,
+        &ArrowConfig { elen_bits: 32, ..base },
+        42,
+    );
+    assert_ne!(key, narrow);
+
+    // And the sweep report carries exactly these keys.
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![2],
+        vlens: vec![256],
+        seed: 42,
+        threads: 1,
+        ..Default::default()
+    };
+    let report = run_sweep(&spec);
+    assert_eq!(report.points[0].key, key);
+}
+
 /// Scalar-mode grid points never touch the vector unit, whatever the
 /// Arrow design point says.
 #[test]
@@ -76,12 +132,59 @@ fn scalar_points_have_no_vector_work() {
         vlens: vec![256],
         seed: 3,
         threads: 2,
+        ..Default::default()
     };
     let report = run_sweep(&spec);
     for p in &report.points {
         let o = p.outcome.as_ref().unwrap();
         assert_eq!(o.summary.vector_instructions, 0, "{}", p.key);
         assert!(o.summary.lane_busy.iter().all(|&b| b == 0), "{}", p.key);
+    }
+}
+
+/// Analytic-tier points are exactly as deterministic as simulated ones:
+/// a parallel sweep routed through extrapolation returns the same
+/// cycles as a sequential [`analytic::extrapolate`] call, run after run.
+#[test]
+fn analytic_points_match_sequential_extrapolation() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd, Benchmark::VMul],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Scalar, Mode::Vector],
+        lanes: vec![1, 2],
+        vlens: vec![256],
+        seed: 42,
+        threads: 4,
+        // A zero limit forces every point through the analytic tier.
+        analytic_limit: Some(0),
+        ..Default::default()
+    };
+    let report = run_sweep(&spec);
+    assert_eq!(report.analytic, spec.grid_len());
+    assert_eq!(report.unique_simulated, 0);
+    for p in &report.points {
+        let o = p.outcome.as_ref().unwrap();
+        assert_eq!(o.provenance, Provenance::Analytic, "{}", p.key);
+        let config = ArrowConfig {
+            lanes: p.lanes,
+            vlen_bits: p.vlen_bits,
+            ..Default::default()
+        };
+        let size = p.benchmark.size(&profiles::TEST);
+        let sequential =
+            analytic::extrapolate(p.benchmark, size, p.mode, config)
+                .unwrap();
+        assert_eq!(o.cycles, sequential, "{}", p.key);
+    }
+    // Parallel evaluation is a pure parallelisation here too.
+    let again = run_sweep(&spec);
+    for (a, b) in report.points.iter().zip(&again.points) {
+        assert_eq!(
+            a.outcome.as_ref().unwrap(),
+            b.outcome.as_ref().unwrap(),
+            "{}",
+            a.key
+        );
     }
 }
 
