@@ -1,0 +1,867 @@
+//! Distributed sweep cluster: shard coordinator + local worker fleet.
+//!
+//! The paper's headline result is a design-space claim (2–78x speedup
+//! across lane/VLEN configurations), and the grids that claim wants —
+//! SPEED-style multi-precision SEW×timing products included — outgrow
+//! one process.  This module is the distribution layer behind the
+//! [`Evaluator`](super::eval::Evaluator) seam:
+//!
+//! * [`run_cluster`] partitions a [`SweepSpec`] cartesian grid into
+//!   deterministic cartesian sub-grids ([`SweepSpec::partition`]), fans
+//!   them out over the line-delimited JSON TCP protocol to a fleet of
+//!   `arrow serve` workers — shards travel as ordinary `sweep` requests
+//!   inside `{"cmd": "batch"}` envelopes, sized against the server's
+//!   per-request grid cap — and merges the partial reports back into
+//!   one [`SweepReport`] with the same deterministic point order and
+//!   the same provenance counters a local [`run_sweep`] of the same
+//!   spec produces.
+//! * The coordinator is **failure-aware**: a worker that is
+//!   unreachable, dies mid-stream, or answers garbage has its
+//!   unacknowledged shards pushed back on the shared queue for the
+//!   surviving workers, and anything still unanswered when every
+//!   worker is gone is evaluated locally through an [`Evaluator`] — a
+//!   cluster sweep always completes.
+//! * The coordinator **refuses version mismatches loudly**: every
+//!   worker must answer the `{"cmd": "shard"}` handshake with this
+//!   crate's version, because simulator timing and the result-store
+//!   key space may change between versions — merging mixed-version
+//!   results silently would fabricate a design-space report.
+//! * [`run_fleet`] spawns and supervises N local `arrow serve`
+//!   processes sharing one `--cache-dir`, so shards share results
+//!   through the persistent store (`arrow cluster` on the CLI) —
+//!   live workers fold in their peers' ledger appends before every
+//!   sweep request ([`ResultStore::refresh`]), so sharing works
+//!   within one fleet lifetime, not just across restarts.
+//!
+//! Determinism caveat: the *numbers* of a cluster sweep are always
+//! identical to a local run, but when a duplicate canonical key spans
+//! two shards dispatched to store-sharing workers, which tier
+//! *answered* it (simulated vs cached) depends on arrival order — the
+//! provenance split across tiers may vary run to run for exactly
+//! those keys, never the cycles or ledgers.
+//!
+//! [`run_sweep`]: super::sweep::run_sweep
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::system::machine::RunSummary;
+use crate::system::server::{MAX_BATCH_REQUESTS, MAX_SWEEP_GRID};
+use crate::util::json::{self, Json};
+
+use super::eval::{EvalOutcome, EvalPoint, EvalResult, Evaluator, Provenance};
+use super::store::ResultStore;
+use super::sweep::{self, SweepPoint, SweepReport, SweepSpec};
+
+/// Default shard size: small enough that a dead worker forfeits little
+/// work, large enough to amortise a round trip.  Always clamped to the
+/// server's per-request grid cap.
+pub const DEFAULT_SHARD_POINTS: usize = 512;
+
+/// Default `sweep` sub-requests per `batch` envelope.
+pub const DEFAULT_SHARDS_PER_BATCH: usize = 4;
+
+/// Connect timeout for the coordinator's worker sockets.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Default I/O budget *per shard in flight*: a batch of N shards gets
+/// N× this as its round-trip timeout, so big envelopes are not
+/// declared dead mid-computation.  A killed worker still fails fast
+/// (closed socket) — timeouts only bound a genuinely *hung* one.
+pub const DEFAULT_SHARD_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// A cluster sweep: the grid, the fleet, and the sharding policy.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// The full grid (threads/cache_dir apply to the local-fallback
+    /// evaluator; workers own their caches server-side).
+    pub spec: SweepSpec,
+    /// Worker addresses, `host:port`.
+    pub workers: Vec<String>,
+    /// Maximum points per shard (clamped to the server's grid cap).
+    pub shard_points: usize,
+    /// Shards shipped per batch envelope (clamped to the batch cap).
+    pub shards_per_batch: usize,
+    /// I/O budget per shard in flight — an envelope of N shards gets
+    /// N× this before its worker is declared hung.  Size it to the
+    /// slowest shard you expect (large-profile `--no-analytic` points
+    /// can simulate for a long time).
+    pub shard_timeout: Duration,
+}
+
+impl ClusterSpec {
+    pub fn new(spec: SweepSpec, workers: Vec<String>) -> ClusterSpec {
+        ClusterSpec {
+            spec,
+            workers,
+            shard_points: DEFAULT_SHARD_POINTS,
+            shards_per_batch: DEFAULT_SHARDS_PER_BATCH,
+            shard_timeout: DEFAULT_SHARD_TIMEOUT,
+        }
+    }
+}
+
+/// What one worker did for a cluster sweep.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub addr: String,
+    /// Shards this worker answered.
+    pub shards: usize,
+    /// Why the worker stopped serving (unreachable at handshake, died
+    /// mid-stream, malformed response); `None` if it survived the run.
+    pub error: Option<String>,
+}
+
+/// A merged cluster sweep: the report plus distribution provenance.
+#[derive(Debug)]
+pub struct ClusterReport {
+    /// Merged report — deterministic point order identical to a local
+    /// run of the same spec.
+    pub report: SweepReport,
+    /// Total shards the grid was split into.
+    pub shards: usize,
+    /// Shards that fell back to local evaluation.
+    pub local_shards: usize,
+    pub workers: Vec<WorkerStats>,
+}
+
+/// What a worker's `{"cmd": "shard"}` handshake advertised.
+#[derive(Debug, Clone)]
+pub struct ShardInfo {
+    pub version: String,
+    pub max_grid: usize,
+    pub max_batch: usize,
+}
+
+/// One live worker connection (the handshake and every batch ride the
+/// same socket).
+struct WorkerConn {
+    addr: String,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl WorkerConn {
+    fn connect(addr: &str) -> Result<WorkerConn, String> {
+        let socket = addr
+            .to_socket_addrs()
+            .map_err(|e| format!("{addr}: {e}"))?
+            .next()
+            .ok_or_else(|| format!("{addr}: no address"))?;
+        let stream = TcpStream::connect_timeout(&socket, CONNECT_TIMEOUT)
+            .map_err(|e| format!("{addr}: connect: {e}"))?;
+        stream.set_read_timeout(Some(DEFAULT_SHARD_TIMEOUT)).ok();
+        stream.set_write_timeout(Some(DEFAULT_SHARD_TIMEOUT)).ok();
+        let writer =
+            stream.try_clone().map_err(|e| format!("{addr}: {e}"))?;
+        Ok(WorkerConn {
+            addr: addr.to_string(),
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// Rescale both socket timeouts (per-batch: N shards get N× the
+    /// per-shard budget).  Both handles share one socket, so setting it
+    /// on the writer covers the reader too.
+    fn set_io_timeout(&self, timeout: Duration) {
+        self.writer.set_read_timeout(Some(timeout)).ok();
+        self.writer.set_write_timeout(Some(timeout)).ok();
+    }
+
+    /// One line-delimited request/response round trip.
+    fn request(&mut self, body: &Json) -> Result<Json, String> {
+        let mut line = body.to_string();
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .map_err(|e| format!("{}: send: {e}", self.addr))?;
+        let mut response = String::new();
+        let n = self
+            .reader
+            .read_line(&mut response)
+            .map_err(|e| format!("{}: recv: {e}", self.addr))?;
+        if n == 0 {
+            return Err(format!(
+                "{}: connection closed mid-stream",
+                self.addr
+            ));
+        }
+        json::parse(response.trim())
+            .map_err(|e| format!("{}: bad response: {e}", self.addr))
+    }
+
+    fn handshake(&mut self) -> Result<ShardInfo, String> {
+        let r = self.request(&Json::obj(vec![("cmd", "shard".into())]))?;
+        if r.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(format!(
+                "{}: shard handshake rejected: {r}",
+                self.addr
+            ));
+        }
+        let version = r
+            .get("version")
+            .and_then(Json::as_str)
+            .ok_or_else(|| {
+                format!(
+                    "{}: shard response carries no version (worker \
+                     predates the cluster protocol)",
+                    self.addr
+                )
+            })?
+            .to_string();
+        Ok(ShardInfo {
+            version,
+            max_grid: r
+                .get("max_grid")
+                .and_then(Json::as_u64)
+                .unwrap_or(MAX_SWEEP_GRID as u64) as usize,
+            max_batch: r
+                .get("max_batch")
+                .and_then(Json::as_u64)
+                .unwrap_or(1) as usize,
+        })
+    }
+}
+
+/// Render one shard as an ordinary `sweep` request.
+fn shard_request(shard: &SweepSpec) -> Json {
+    let mut fields = vec![
+        ("cmd", "sweep".into()),
+        (
+            "benchmarks",
+            Json::Arr(
+                shard.benchmarks.iter().map(|b| b.name().into()).collect(),
+            ),
+        ),
+        (
+            "profiles",
+            Json::Arr(shard.profiles.iter().map(|p| p.name.into()).collect()),
+        ),
+        (
+            "modes",
+            Json::Arr(shard.modes.iter().map(|m| m.name().into()).collect()),
+        ),
+        (
+            "lanes",
+            Json::Arr(
+                shard.lanes.iter().map(|&l| (l as u64).into()).collect(),
+            ),
+        ),
+        (
+            "vlens",
+            Json::Arr(
+                shard.vlens.iter().map(|&v| u64::from(v).into()).collect(),
+            ),
+        ),
+        ("seed", shard.seed.into()),
+    ];
+    match shard.analytic_limit {
+        Some(limit) => fields.push(("analytic_limit", limit.into())),
+        None => fields.push(("no_analytic", true.into())),
+    }
+    Json::obj(fields)
+}
+
+/// Decode one point of a worker's sweep response.  The wire format
+/// carries the complete cycle ledger, so the merged outcome is the
+/// exact in-memory outcome the worker computed — not a projection.
+fn point_result_from_json(p: &Json) -> Result<EvalResult, String> {
+    if p.get("ok").and_then(Json::as_bool) != Some(true) {
+        let msg = p
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown error")
+            .to_string();
+        return Ok(Err(msg));
+    }
+    let tier = |k: &str| {
+        p.get(k)
+            .and_then(Json::as_str)
+            .and_then(Provenance::by_name)
+            .ok_or_else(|| format!("shard point missing `{k}`"))
+    };
+    let summary: RunSummary = p
+        .get("summary")
+        .and_then(super::store::parse_summary)
+        .ok_or("shard point missing `summary`")?;
+    Ok(Ok(EvalOutcome {
+        cycles: p
+            .get("cycles")
+            .and_then(Json::as_u64)
+            .ok_or("shard point missing `cycles`")?,
+        verified: p
+            .get("verified")
+            .and_then(Json::as_bool)
+            .ok_or("shard point missing `verified`")?,
+        summary,
+        provenance: tier("provenance")?,
+        origin: tier("origin")?,
+    }))
+}
+
+/// Validate one shard's sweep response against the coordinator's own
+/// expansion of that shard: same point count, same canonical keys, in
+/// order.  Any disagreement means the worker evaluated a different
+/// grid than we asked for — treated as a worker failure, never merged.
+fn parse_shard_response(
+    resp: &Json,
+    expected: &[(EvalPoint, String)],
+    addr: &str,
+) -> Result<Vec<(String, EvalResult)>, String> {
+    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+        let msg = resp
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown error");
+        return Err(format!("{addr}: shard rejected: {msg}"));
+    }
+    let points = resp
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{addr}: shard response has no points"))?;
+    if points.len() != expected.len() {
+        return Err(format!(
+            "{addr}: shard returned {} points, expected {}",
+            points.len(),
+            expected.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(points.len());
+    for (p, (_, key)) in points.iter().zip(expected) {
+        let got = p.get("key").and_then(Json::as_str).unwrap_or("");
+        if got != key.as_str() {
+            return Err(format!(
+                "{addr}: shard key mismatch: got `{got}`, expected `{key}`"
+            ));
+        }
+        let result = point_result_from_json(p)
+            .map_err(|e| format!("{addr}: {e}"))?;
+        out.push((key.clone(), result));
+    }
+    Ok(out)
+}
+
+/// Run one sweep across a worker fleet and merge the shards back into a
+/// single deterministic report.  See the module docs for the dispatch,
+/// retry and fallback semantics.  The only hard error is a protocol
+/// violation the coordinator must not paper over (a version-mismatched
+/// worker); mere worker death degrades to retries and local fallback.
+pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
+    let version = env!("CARGO_PKG_VERSION");
+
+    // Handshake every worker.  Unreachable workers are tolerated (the
+    // fleet shrinks); a *version-mismatched* worker is a hard, loud
+    // refusal — its results would not be comparable with ours.  The
+    // request caps each survivor advertises bound the sharding below.
+    let mut stats: Vec<WorkerStats> = Vec::new();
+    let mut fleet: Vec<(WorkerConn, usize)> = Vec::new();
+    let mut fleet_grid = MAX_SWEEP_GRID;
+    let mut fleet_batch = MAX_BATCH_REQUESTS;
+    for addr in &cs.workers {
+        let connected = WorkerConn::connect(addr)
+            .and_then(|mut c| c.handshake().map(|info| (c, info)));
+        match connected {
+            Ok((conn, info)) => {
+                if info.version != version {
+                    return Err(format!(
+                        "worker {addr} runs crate version {} but this \
+                         coordinator is {version}; refusing to dispatch — \
+                         mixed-version results are not comparable \
+                         (upgrade the worker or the coordinator)",
+                        info.version
+                    ));
+                }
+                fleet_grid = fleet_grid.min(info.max_grid.max(1));
+                fleet_batch = fleet_batch.min(info.max_batch.max(1));
+                fleet.push((conn, stats.len()));
+                stats.push(WorkerStats {
+                    addr: addr.clone(),
+                    shards: 0,
+                    error: None,
+                });
+            }
+            Err(e) => stats.push(WorkerStats {
+                addr: addr.clone(),
+                shards: 0,
+                error: Some(e),
+            }),
+        }
+    }
+    let live_workers = fleet.len();
+
+    // Shards must fit the smallest advertised caps across the fleet
+    // (equal to our own constants today, since versions match — but
+    // negotiated, not assumed).
+    let shard_cap = cs.shard_points.clamp(1, fleet_grid);
+    let shards = cs.spec.partition(shard_cap);
+    let shards_per_batch = cs.shards_per_batch.clamp(1, fleet_batch);
+    let shard_timeout = cs.shard_timeout;
+
+    // Shared dispatch state: a work queue of shard indices, the merged
+    // per-key results, and a per-shard done bitmap.  Workers pull from
+    // the queue until it drains; a failing worker pushes its
+    // unacknowledged shards back and dies, so retries land on the
+    // survivors without any coordinator-side bookkeeping.
+    let queue: Mutex<VecDeque<usize>> = Mutex::new((0..shards.len()).collect());
+    let results: Mutex<HashMap<String, EvalResult>> =
+        Mutex::new(HashMap::new());
+    let done: Mutex<Vec<bool>> = Mutex::new(vec![false; shards.len()]);
+    let stats = Mutex::new(stats);
+
+    std::thread::scope(|scope| {
+        for (mut conn, widx) in fleet {
+            let queue = &queue;
+            let results = &results;
+            let done = &done;
+            let stats = &stats;
+            let shards = &shards;
+            scope.spawn(move || loop {
+                let batch: Vec<usize> = {
+                    let mut q = queue.lock().unwrap();
+                    let n = q.len().min(shards_per_batch);
+                    q.drain(..n).collect()
+                };
+                if batch.is_empty() {
+                    return;
+                }
+                let envelope = Json::obj(vec![
+                    ("cmd", "batch".into()),
+                    (
+                        "requests",
+                        Json::Arr(
+                            batch
+                                .iter()
+                                .map(|&i| shard_request(&shards[i]))
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                let requeue = |pending: &[usize]| {
+                    let mut q = queue.lock().unwrap();
+                    for &i in pending.iter().rev() {
+                        q.push_front(i);
+                    }
+                };
+                let die = |e: String| {
+                    stats.lock().unwrap()[widx].error = Some(e);
+                };
+                // The I/O budget scales with the envelope: N shards in
+                // flight get N× the per-shard timeout.
+                conn.set_io_timeout(
+                    shard_timeout.saturating_mul(batch.len() as u32),
+                );
+                let subs = match conn.request(&envelope) {
+                    Ok(resp) => {
+                        let count = resp
+                            .get("responses")
+                            .and_then(Json::as_arr)
+                            .map(|subs| subs.len());
+                        if resp.get("ok").and_then(Json::as_bool)
+                            == Some(true)
+                            && count == Some(batch.len())
+                        {
+                            let Json::Obj(mut body) = resp else {
+                                unreachable!("checked: is an object")
+                            };
+                            let Some(Json::Arr(subs)) =
+                                body.remove("responses")
+                            else {
+                                unreachable!("checked: responses is an array")
+                            };
+                            subs
+                        } else {
+                            requeue(&batch);
+                            die(format!(
+                                "{}: malformed batch response",
+                                conn.addr
+                            ));
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        requeue(&batch);
+                        die(e);
+                        return;
+                    }
+                };
+                for (idx, (sub, &si)) in
+                    subs.iter().zip(&batch).enumerate()
+                {
+                    // Expanded lazily per shard in flight: only the
+                    // batch being validated is materialised, not the
+                    // whole grid (the merge re-expands once at the
+                    // end; round trips dwarf the expansion cost).
+                    let expected = shards[si].expand();
+                    match parse_shard_response(sub, &expected, &conn.addr)
+                    {
+                        Ok(pairs) => {
+                            let mut r = results.lock().unwrap();
+                            for (key, result) in pairs {
+                                r.entry(key).or_insert(result);
+                            }
+                            done.lock().unwrap()[si] = true;
+                            stats.lock().unwrap()[widx].shards += 1;
+                        }
+                        Err(e) => {
+                            // The failing shard AND everything of this
+                            // batch not yet merged go back on the
+                            // queue for the survivors; this worker is
+                            // not trusted further.
+                            requeue(&batch[idx..]);
+                            die(e);
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    // Local fallback: whatever the fleet never acknowledged (no
+    // workers, all dead, or shards requeued into a drained fleet) is
+    // evaluated here, through one evaluator so program assembly and the
+    // optional persistent store are shared across leftover shards.
+    let stats = stats.into_inner().unwrap();
+    let mut results = results.into_inner().unwrap();
+    let done = done.into_inner().unwrap();
+    let mut store_errors: Vec<String> = Vec::new();
+    let pending: Vec<usize> = done
+        .iter()
+        .enumerate()
+        .filter(|(_, done)| !**done)
+        .map(|(i, _)| i)
+        .collect();
+    let local_shards = pending.len();
+    if !pending.is_empty() {
+        let mut evaluator = Evaluator::new();
+        if let Some(dir) = &cs.spec.cache_dir {
+            match ResultStore::open(dir) {
+                Ok(store) => evaluator.attach_store(store),
+                Err(e) => store_errors
+                    .push(format!("cache dir {}: {e}", dir.display())),
+            }
+        }
+        for i in pending {
+            let partial = sweep::run_sweep_with(&shards[i], &evaluator);
+            if let Some(e) = partial.store_error {
+                store_errors.push(e);
+            }
+            for p in partial.points {
+                results.entry(p.key).or_insert(p.outcome);
+            }
+        }
+    }
+
+    // Merge: walk the full grid in canonical order; the first
+    // occurrence of each key carries the tier counters (matching what a
+    // local run would report), later occurrences are in-request cache
+    // hits served the identical outcome.  An `Err` outcome for an
+    // invalid design point merges like any other — local runs report
+    // those per point too; only a *missing* key is a coordinator bug.
+    let mut points = Vec::with_capacity(cs.spec.grid_len());
+    let mut seen: HashSet<String> = HashSet::new();
+    let mut unique_simulated = 0usize;
+    let mut store_hits = 0usize;
+    let mut analytic = 0usize;
+    let mut cache_hits = 0usize;
+    for (point, key) in cs.spec.expand() {
+        let outcome = results
+            .get(&key)
+            .cloned()
+            .ok_or_else(|| format!("cluster: no result for `{key}`"))?;
+        if seen.insert(key.clone()) {
+            if let Ok(o) = &outcome {
+                match o.provenance {
+                    Provenance::Simulated => unique_simulated += 1,
+                    Provenance::Cached => store_hits += 1,
+                    Provenance::Analytic => analytic += 1,
+                }
+            }
+        } else {
+            cache_hits += 1;
+        }
+        points.push(SweepPoint {
+            benchmark: point.benchmark,
+            profile: point.profile.name,
+            mode: point.mode,
+            lanes: point.config.lanes,
+            vlen_bits: point.config.vlen_bits,
+            key,
+            outcome,
+        });
+    }
+    let report = SweepReport {
+        points,
+        unique_simulated,
+        store_hits,
+        analytic,
+        cache_hits,
+        threads: live_workers.max(1),
+        store_error: if store_errors.is_empty() {
+            None
+        } else {
+            Some(store_errors.join("; "))
+        },
+    };
+    Ok(ClusterReport {
+        report,
+        shards: shards.len(),
+        local_shards,
+        workers: stats,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Local fleet supervisor (`arrow cluster`).
+
+/// A supervised local fleet: N `arrow serve` children on loopback
+/// ports, optionally sharing one persistent result store.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Worker process count.
+    pub workers: usize,
+    /// Shared `--cache-dir` handed to every worker (shards then share
+    /// results through the store across sweeps).
+    pub cache_dir: Option<PathBuf>,
+    /// First listen port; 0 picks free ephemeral ports.
+    pub base_port: u16,
+    /// Respawns allowed per worker before it is abandoned.
+    pub max_restarts: u32,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            workers: 2,
+            cache_dir: None,
+            base_port: 0,
+            max_restarts: 5,
+        }
+    }
+}
+
+struct Member {
+    addr: String,
+    child: Child,
+    restarts: u32,
+    dead: bool,
+}
+
+fn spawn_worker(
+    exe: &Path,
+    addr: &str,
+    cache_dir: Option<&Path>,
+) -> Result<Child, String> {
+    let mut cmd = Command::new(exe);
+    cmd.arg("serve").arg("--addr").arg(addr);
+    if let Some(dir) = cache_dir {
+        cmd.arg("--cache-dir").arg(dir);
+    }
+    cmd.spawn().map_err(|e| format!("cluster: spawn {addr}: {e}"))
+}
+
+fn free_port() -> Result<u16, String> {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .and_then(|l| l.local_addr())
+        .map(|a| a.port())
+        .map_err(|e| format!("cluster: no free port: {e}"))
+}
+
+/// Poll until `addr` answers the shard handshake (a spawned child needs
+/// a beat to bind its listener).
+fn wait_ready(addr: &str) -> Result<(), String> {
+    for _ in 0..100 {
+        if let Ok(mut conn) = WorkerConn::connect(addr) {
+            if conn.handshake().is_ok() {
+                return Ok(());
+            }
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    Err(format!("cluster: worker {addr} never became ready"))
+}
+
+/// Spawn and supervise a local worker fleet.  Prints one parseable
+/// `workers: host:port,...` line to stdout once every worker answers
+/// its handshake (coordinators and CI scripts key off it), then
+/// babysits forever: a worker that exits is respawned on its port up to
+/// `max_restarts` times.  Returns only on an unrecoverable error, and
+/// kills every still-running child before returning so a failed fleet
+/// never orphans workers.  A SIGKILLed supervisor cannot clean up —
+/// tear a healthy fleet down by killing the supervisor *and* its
+/// children.
+pub fn run_fleet(fs: &FleetSpec) -> Result<(), String> {
+    if fs.workers == 0 {
+        return Err("cluster: --workers must be >= 1".into());
+    }
+    let exe = std::env::current_exe()
+        .map_err(|e| format!("cluster: current_exe: {e}"))?;
+    let mut members = Vec::with_capacity(fs.workers);
+    let result = supervise(&exe, fs, &mut members);
+    // Unrecoverable exit: reap whatever was spawned rather than
+    // leaving orphans listening forever.
+    for m in &mut members {
+        let _ = m.child.kill();
+        let _ = m.child.wait();
+    }
+    result
+}
+
+/// [`run_fleet`]'s body, split out so every early `?` return funnels
+/// through the caller's kill-the-children cleanup.
+fn supervise(
+    exe: &Path,
+    fs: &FleetSpec,
+    members: &mut Vec<Member>,
+) -> Result<(), String> {
+    for i in 0..fs.workers {
+        let port = if fs.base_port > 0 {
+            fs.base_port
+                .checked_add(i as u16)
+                .ok_or("cluster: --base-port overflows")?
+        } else {
+            free_port()?
+        };
+        let addr = format!("127.0.0.1:{port}");
+        let child = spawn_worker(exe, &addr, fs.cache_dir.as_deref())?;
+        members.push(Member { addr, child, restarts: 0, dead: false });
+    }
+    for m in members.iter() {
+        wait_ready(&m.addr)?;
+    }
+    let addrs: Vec<&str> = members.iter().map(|m| m.addr.as_str()).collect();
+    println!("workers: {}", addrs.join(","));
+    std::io::stdout().flush().ok();
+    loop {
+        std::thread::sleep(Duration::from_millis(500));
+        for m in members.iter_mut() {
+            if m.dead {
+                continue;
+            }
+            match m.child.try_wait() {
+                Ok(None) => {}
+                Ok(Some(status)) => {
+                    eprintln!("cluster: worker {} exited ({status})", m.addr);
+                    if m.restarts < fs.max_restarts {
+                        m.restarts += 1;
+                        eprintln!(
+                            "cluster: respawning {} (restart {}/{})",
+                            m.addr, m.restarts, fs.max_restarts
+                        );
+                        // Any respawn failure — spawn error, or a
+                        // child that never becomes ready (port stolen
+                        // while the worker was down) — abandons this
+                        // member only; the rest of the fleet keeps
+                        // serving, never torn down by one bad apple.
+                        match spawn_worker(
+                            exe,
+                            &m.addr,
+                            fs.cache_dir.as_deref(),
+                        ) {
+                            Ok(child) => {
+                                m.child = child;
+                                if wait_ready(&m.addr).is_err() {
+                                    eprintln!(
+                                        "cluster: abandoning {} (respawn \
+                                         never became ready)",
+                                        m.addr
+                                    );
+                                    let _ = m.child.kill();
+                                    let _ = m.child.wait();
+                                    m.dead = true;
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "cluster: abandoning {}: {e}",
+                                    m.addr
+                                );
+                                m.dead = true;
+                            }
+                        }
+                    } else {
+                        eprintln!(
+                            "cluster: abandoning {} (restart budget spent)",
+                            m.addr
+                        );
+                        m.dead = true;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("cluster: worker {}: {e}", m.addr);
+                    m.dead = true;
+                }
+            }
+        }
+        if members.iter().all(|m| m.dead) {
+            return Err(
+                "cluster: every worker exceeded its restart budget".into()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::profiles;
+    use crate::bench::runner::Mode;
+    use crate::bench::suite::Benchmark;
+
+    #[test]
+    fn shard_request_carries_the_whole_policy() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![128],
+            seed: 77,
+            analytic_limit: None,
+            ..Default::default()
+        };
+        let req = shard_request(&spec);
+        assert_eq!(req.get("cmd").unwrap().as_str(), Some("sweep"));
+        assert_eq!(req.get("seed").unwrap().as_u64(), Some(77));
+        assert_eq!(req.get("no_analytic"), Some(&true.into()));
+        let limited =
+            shard_request(&SweepSpec { analytic_limit: Some(9), ..spec });
+        assert_eq!(limited.get("analytic_limit").unwrap().as_u64(), Some(9));
+        assert_eq!(limited.get("no_analytic"), None);
+    }
+
+    #[test]
+    fn unreachable_fleet_falls_back_to_local_evaluation() {
+        // A freshly-released ephemeral port: nothing listens there.
+        let dead = format!("127.0.0.1:{}", free_port().unwrap());
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![128, 256],
+            seed: 5,
+            threads: 1,
+            ..Default::default()
+        };
+        let local = sweep::run_sweep(&spec);
+        let cs = ClusterSpec::new(spec, vec![dead]);
+        let cluster = run_cluster(&cs).unwrap();
+        assert_eq!(cluster.local_shards, cluster.shards);
+        assert!(cluster.workers[0].error.is_some());
+        assert_eq!(cluster.workers[0].shards, 0);
+        assert_eq!(
+            sweep::report_json(&cluster.report)
+                .get("points")
+                .unwrap()
+                .to_string(),
+            sweep::report_json(&local).get("points").unwrap().to_string()
+        );
+    }
+}

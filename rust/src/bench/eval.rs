@@ -270,6 +270,17 @@ impl Evaluator {
         self.store_put_failures.load(Ordering::Relaxed)
     }
 
+    /// Fold in result-store records appended by other processes sharing
+    /// the cache dir (see [`ResultStore::refresh`]).  No-op without a
+    /// store; I/O errors are swallowed — the store just keeps serving
+    /// whatever is already loaded.  The job server calls this per sweep
+    /// request so long-lived cluster workers see their peers' results.
+    pub fn refresh_store(&self) {
+        if let Some(store) = &self.store {
+            let _ = store.refresh();
+        }
+    }
+
     /// Evaluate one point by the cheapest sound tier.
     ///
     /// `analytic_limit` is the estimated-instruction count above which

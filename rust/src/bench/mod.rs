@@ -21,8 +21,13 @@
 //! * [`sweep`] — parallel design-space sweeps: a worker pool fanning the
 //!   (benchmark × profile × lanes × VLEN) cartesian product across
 //!   cores, deduplicated through the canonical point key.
+//! * [`cluster`] — the distribution layer: a shard coordinator fanning
+//!   deterministic sub-grids across a fleet of `arrow serve` workers
+//!   over TCP (with retry and local fallback), and a supervisor for
+//!   local worker fleets sharing one result store.
 
 pub mod analytic;
+pub mod cluster;
 pub mod cnn;
 pub mod eval;
 pub mod profiles;
@@ -31,6 +36,7 @@ pub mod store;
 pub mod suite;
 pub mod sweep;
 
+pub use cluster::{run_cluster, run_fleet, ClusterReport, ClusterSpec, FleetSpec};
 pub use eval::{
     point_key, EvalOutcome, EvalPoint, Evaluator, ProgramCache, Provenance,
 };

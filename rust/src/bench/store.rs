@@ -20,7 +20,7 @@
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -46,9 +46,49 @@ pub struct ResultStore {
     version: String,
     entries: Mutex<HashMap<String, EvalOutcome>>,
     entry_limit: usize,
+    /// Bytes of the ledger already folded into `entries` — the resume
+    /// point for [`refresh`](ResultStore::refresh).
+    loaded_bytes: Mutex<u64>,
     /// Append handle, serialised so concurrent workers never interleave
     /// partial lines.
     file: Mutex<File>,
+}
+
+/// Read every *complete* ledger line in `path` starting at byte
+/// `start`, returning the parsed records (in file order — later lines
+/// win when the caller folds them in) and the byte offset consumed.  A
+/// partially-appended trailing line (a concurrent writer mid-append)
+/// is left for the next call.
+fn load_records(
+    path: &Path,
+    start: u64,
+    version: &str,
+) -> std::io::Result<(Vec<(String, EvalOutcome)>, u64)> {
+    let mut file = match File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == ErrorKind::NotFound => {
+            return Ok((Vec::new(), start))
+        }
+        Err(e) => return Err(e),
+    };
+    file.seek(SeekFrom::Start(start))?;
+    let mut buf = Vec::new();
+    file.read_to_end(&mut buf)?;
+    let Some(end) = buf.iter().rposition(|&b| b == b'\n').map(|i| i + 1)
+    else {
+        return Ok((Vec::new(), start));
+    };
+    let mut records = Vec::new();
+    for line in buf[..end].split(|&b| b == b'\n') {
+        // Invalid UTF-8 degrades to replacement characters, which fail
+        // to parse and are skipped — one vandalised record never takes
+        // the ledger down.
+        let line = String::from_utf8_lossy(line);
+        if let Some(record) = parse_record(&line, version) {
+            records.push(record);
+        }
+    }
+    Ok((records, start + end as u64))
 }
 
 impl ResultStore {
@@ -66,26 +106,13 @@ impl ResultStore {
     ) -> std::io::Result<ResultStore> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(STORE_FILE);
+        let (records, loaded_bytes) = load_records(&path, 0, version)?;
         let mut entries = HashMap::new();
-        if let Ok(existing) = File::open(&path) {
-            for line in BufReader::new(existing).lines() {
-                let line = match line {
-                    Ok(line) => line,
-                    // One record of invalid UTF-8: its bytes are already
-                    // consumed, so skip it and keep the rest of the
-                    // ledger serveable.
-                    Err(e) if e.kind() == ErrorKind::InvalidData => continue,
-                    // A genuine I/O error would repeat forever; stop
-                    // with whatever loaded.
-                    Err(_) => break,
-                };
-                if let Some((key, outcome)) = parse_record(&line, version) {
-                    // Later lines win: a re-recorded key (e.g. an
-                    // analytic estimate upgraded to an exact
-                    // simulation) supersedes the original.
-                    entries.insert(key, outcome);
-                }
-            }
+        for (key, outcome) in records {
+            // Later lines win: a re-recorded key (e.g. an analytic
+            // estimate upgraded to an exact simulation) supersedes the
+            // original.
+            entries.insert(key, outcome);
         }
         let file = OpenOptions::new().create(true).append(true).open(&path)?;
         Ok(ResultStore {
@@ -93,8 +120,45 @@ impl ResultStore {
             version: version.to_string(),
             entries: Mutex::new(entries),
             entry_limit: MAX_STORE_ENTRIES,
+            loaded_bytes: Mutex::new(loaded_bytes),
             file: Mutex::new(file),
         })
+    }
+
+    /// Fold in ledger lines appended since open (or the last refresh) —
+    /// how a long-lived worker sharing a cache dir with peers sees
+    /// *their* results without reopening.  Incremental: only new bytes
+    /// are read, and a partially-appended trailing line stays pending.
+    /// A ledger that *shrank* underneath us (compacted by `arrow cache
+    /// compact`) invalidates the byte watermark, so the index is
+    /// rebuilt from scratch instead of parsing from mid-record.  The
+    /// entry cap applies exactly as in [`put`](ResultStore::put):
+    /// existing keys always update, new keys only while under the
+    /// limit.  Returns the number of records folded in (our own
+    /// appends are re-read harmlessly — same key, same outcome).
+    pub fn refresh(&self) -> std::io::Result<usize> {
+        let mut offset = self.loaded_bytes.lock().unwrap();
+        let len = match std::fs::metadata(&self.path) {
+            Ok(meta) => meta.len(),
+            Err(e) if e.kind() == ErrorKind::NotFound => 0,
+            Err(e) => return Err(e),
+        };
+        let mut entries = self.entries.lock().unwrap();
+        if len < *offset {
+            *offset = 0;
+            entries.clear();
+        }
+        let (records, end) = load_records(&self.path, *offset, &self.version)?;
+        let mut folded = 0;
+        for (key, outcome) in records {
+            if entries.contains_key(&key) || entries.len() < self.entry_limit
+            {
+                entries.insert(key, outcome);
+                folded += 1;
+            }
+        }
+        *offset = end;
+        Ok(folded)
     }
 
     /// Override the in-memory record cap (tests exercise the full-store
@@ -155,7 +219,116 @@ impl ResultStore {
     }
 }
 
-fn summary_json(s: &RunSummary) -> Json {
+/// What [`compact`] found in (and, without `--dry-run`, removed from)
+/// a ledger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CompactStats {
+    /// Lines in the ledger before compaction.
+    pub total_lines: usize,
+    /// Live records kept: current-version, well-formed, latest per key.
+    pub kept: usize,
+    /// Records written by a different crate version.
+    pub stale_version: usize,
+    /// Older records of keys that were re-recorded later (append-wins).
+    pub superseded: usize,
+    /// Unparseable lines: truncated writes, foreign garbage.
+    pub malformed: usize,
+}
+
+impl CompactStats {
+    /// Lines a rewrite drops.
+    pub fn dropped(&self) -> usize {
+        self.total_lines - self.kept
+    }
+}
+
+/// Rewrite `results.jsonl` under `dir` keeping only live records — the
+/// latest current-version record per key — dropping stale-version,
+/// superseded and malformed lines.  `dry_run` only counts.  Kept lines
+/// preserve their byte content and relative order (ordered by each
+/// key's *last* occurrence, which is the record a load would serve), so
+/// a compacted ledger loads identically to the original.  The rewrite
+/// goes through a temp file + rename; run it while no process is
+/// appending to the same dir, or their in-flight appends may be lost.
+pub fn compact(dir: &Path, dry_run: bool) -> std::io::Result<CompactStats> {
+    compact_versioned(dir, env!("CARGO_PKG_VERSION"), dry_run)
+}
+
+/// [`compact`] with an explicit version tag (tests exercise
+/// stale-version dropping without faking the crate version).
+pub fn compact_versioned(
+    dir: &Path,
+    version: &str,
+    dry_run: bool,
+) -> std::io::Result<CompactStats> {
+    let path = dir.join(STORE_FILE);
+    let mut stats = CompactStats::default();
+    let file = match File::open(&path) {
+        Ok(f) => f,
+        // No ledger yet: nothing to compact.
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(stats),
+        Err(e) => return Err(e),
+    };
+    // key -> (line index of the latest record, raw line).
+    let mut latest: HashMap<String, (usize, String)> = HashMap::new();
+    for (seq, line) in BufReader::new(file).lines().enumerate() {
+        let line = match line {
+            Ok(line) => line,
+            Err(e) if e.kind() == ErrorKind::InvalidData => {
+                stats.total_lines += 1;
+                stats.malformed += 1;
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        stats.total_lines += 1;
+        let trimmed = line.trim();
+        let parsed = json::parse(trimmed).ok();
+        match parsed
+            .as_ref()
+            .and_then(|j| j.get("v"))
+            .and_then(Json::as_str)
+        {
+            Some(v) if v != version => {
+                stats.stale_version += 1;
+                continue;
+            }
+            Some(_) => {}
+            None => {
+                stats.malformed += 1;
+                continue;
+            }
+        }
+        match parse_record(trimmed, version) {
+            Some((key, _)) => {
+                if latest.insert(key, (seq, line)).is_some() {
+                    stats.superseded += 1;
+                }
+            }
+            None => stats.malformed += 1,
+        }
+    }
+    stats.kept = latest.len();
+    if !dry_run && stats.dropped() > 0 {
+        let mut lines: Vec<(usize, String)> = latest.into_values().collect();
+        lines.sort_unstable_by_key(|&(seq, _)| seq);
+        let tmp = dir.join(format!("{STORE_FILE}.compact"));
+        {
+            let mut out = File::create(&tmp)?;
+            for (_, line) in &lines {
+                out.write_all(line.as_bytes())?;
+                out.write_all(b"\n")?;
+            }
+            out.flush()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+    }
+    Ok(stats)
+}
+
+/// Serialize a full cycle ledger (shared with the sweep wire format, so
+/// cluster workers ship complete summaries back to the coordinator).
+pub(crate) fn summary_json(s: &RunSummary) -> Json {
     Json::obj(vec![
         ("cycles", s.cycles.into()),
         ("scalar_instructions", s.scalar_instructions.into()),
@@ -208,7 +381,8 @@ fn u64_field(j: &Json, key: &str) -> Option<u64> {
     j.get(key).and_then(Json::as_u64)
 }
 
-fn parse_summary(j: &Json) -> Option<RunSummary> {
+/// Inverse of [`summary_json`] (also decodes the sweep wire format).
+pub(crate) fn parse_summary(j: &Json) -> Option<RunSummary> {
     let bus = j.get("bus")?;
     let unit = j.get("unit")?;
     let lane_busy: Option<Vec<u64>> = j
@@ -406,6 +580,123 @@ mod tests {
         // The original version still reads its own record.
         let same = ResultStore::open_versioned(&dir, "0.0.1").unwrap();
         assert!(same.get("k").is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn refresh_folds_in_a_peer_processes_appends() {
+        let dir = tmp_dir("refresh");
+        // Two handles on one dir — two worker processes sharing a
+        // cache dir, in miniature.
+        let a = ResultStore::open(&dir).unwrap();
+        let b = ResultStore::open(&dir).unwrap();
+        a.put("k1", &sample_outcome()).unwrap();
+        // b's index was loaded before the append: a miss...
+        assert_eq!(b.get("k1"), None);
+        // ...until a refresh folds the new line in.
+        assert_eq!(b.refresh().unwrap(), 1);
+        let hit = b.get("k1").unwrap();
+        assert_eq!(hit.provenance, Provenance::Cached);
+        assert_eq!(hit.cycles, sample_outcome().cycles);
+        // Idempotent and incremental: nothing new, nothing re-read.
+        assert_eq!(b.refresh().unwrap(), 0);
+        // A partially-appended trailing line stays pending (a peer
+        // mid-write) and is folded in once the newline lands.
+        let mut file =
+            OpenOptions::new().append(true).open(b.path()).unwrap();
+        let full =
+            record_json("k2", &sample_outcome(), env!("CARGO_PKG_VERSION"))
+                .to_string();
+        let (head, tail) = full.split_at(full.len() / 2);
+        write!(file, "{head}").unwrap();
+        file.flush().unwrap();
+        assert_eq!(b.refresh().unwrap(), 0);
+        assert_eq!(b.get("k2"), None);
+        writeln!(file, "{tail}").unwrap();
+        drop(file);
+        assert_eq!(b.refresh().unwrap(), 1);
+        assert!(b.get("k2").is_some());
+        // `a` can refresh past its own append too (re-reads are
+        // harmless) and pick up the foreign record.
+        a.refresh().unwrap();
+        assert!(a.get("k2").is_some());
+        // A ledger compacted (shrunk) underneath a live reader
+        // invalidates its byte watermark: refresh rebuilds instead of
+        // parsing mid-record, and serves the post-compaction state.
+        let upgraded = EvalOutcome { cycles: 1, ..sample_outcome() };
+        a.put("k1", &upgraded).unwrap();
+        let stats = compact(&dir, false).unwrap();
+        assert!(stats.dropped() > 0, "{stats:?}");
+        b.refresh().unwrap();
+        assert_eq!(b.get("k1").unwrap().cycles, 1, "superseded replay");
+        assert!(b.get("k2").is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compact_drops_stale_superseded_and_malformed_lines() {
+        let dir = tmp_dir("compact");
+        {
+            let old = ResultStore::open_versioned(&dir, "0.0.9").unwrap();
+            old.put("stale", &sample_outcome()).unwrap();
+        }
+        let store = ResultStore::open_versioned(&dir, "0.1.0").unwrap();
+        store.put("a", &sample_outcome()).unwrap();
+        let estimate = EvalOutcome {
+            verified: false,
+            provenance: Provenance::Analytic,
+            origin: Provenance::Analytic,
+            ..sample_outcome()
+        };
+        store.put("b", &estimate).unwrap();
+        // Upgrade `b`: the estimate line is now superseded.
+        store.put("b", &sample_outcome()).unwrap();
+        drop(store);
+        let mut file = OpenOptions::new()
+            .append(true)
+            .open(dir.join(STORE_FILE))
+            .unwrap();
+        writeln!(file, "garbage {{{{").unwrap();
+        drop(file);
+
+        // 1 stale + a + b-estimate + b-upgrade + garbage = 5 lines.
+        let dry = compact_versioned(&dir, "0.1.0", true).unwrap();
+        assert_eq!(dry.total_lines, 5);
+        assert_eq!(dry.kept, 2);
+        assert_eq!(dry.stale_version, 1);
+        assert_eq!(dry.superseded, 1);
+        assert_eq!(dry.malformed, 1);
+        assert_eq!(dry.dropped(), 3);
+        // Dry run rewrote nothing.
+        let text = std::fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 5);
+
+        let real = compact_versioned(&dir, "0.1.0", false).unwrap();
+        assert_eq!(real, dry);
+        let text = std::fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        // The compacted ledger loads identically: `b` keeps its
+        // upgraded (simulated) record, `stale` is gone for good.
+        let reloaded = ResultStore::open_versioned(&dir, "0.1.0").unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(
+            reloaded.get("b").unwrap().origin,
+            Provenance::Simulated
+        );
+        assert!(reloaded.get("a").is_some());
+        assert_eq!(reloaded.get("stale"), None);
+        // Idempotent: a second compaction finds nothing to drop.
+        let again = compact_versioned(&dir, "0.1.0", false).unwrap();
+        assert_eq!(again.total_lines, 2);
+        assert_eq!(again.dropped(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compact_of_missing_ledger_is_a_noop() {
+        let dir = tmp_dir("compact-none");
+        let stats = compact(&dir, false).unwrap();
+        assert_eq!(stats, CompactStats::default());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

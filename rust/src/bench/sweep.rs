@@ -94,6 +94,85 @@ impl SweepSpec {
             .saturating_mul(self.lanes.len())
             .saturating_mul(self.vlens.len())
     }
+
+    /// Expand the cartesian grid in its canonical deterministic order
+    /// (benchmarks, then profiles, modes, lanes, VLENs — outermost
+    /// first), pairing every point with its canonical key.  This order
+    /// is the report order of [`run_sweep`] and the contract
+    /// [`partition`](SweepSpec::partition) preserves.
+    pub fn expand(&self) -> Vec<(EvalPoint, String)> {
+        let mut grid: Vec<(EvalPoint, String)> =
+            Vec::with_capacity(self.grid_len());
+        for &benchmark in &self.benchmarks {
+            for profile in &self.profiles {
+                for &mode in &self.modes {
+                    for &lanes in &self.lanes {
+                        for &vlen_bits in &self.vlens {
+                            let point = EvalPoint {
+                                benchmark,
+                                profile: *profile,
+                                mode,
+                                config: ArrowConfig {
+                                    lanes,
+                                    vlen_bits,
+                                    ..Default::default()
+                                },
+                            };
+                            let key = point.key(self.seed);
+                            grid.push((point, key));
+                        }
+                    }
+                }
+            }
+        }
+        grid
+    }
+
+    /// Split the grid into cartesian sub-grids of at most `max_points`
+    /// points each, such that the concatenated expansions of the
+    /// returned specs equal `self.expand()` exactly — same points, same
+    /// order.  Sub-grids are the unit the cluster coordinator ships to
+    /// workers as ordinary `sweep` requests; `seed` and `analytic_limit`
+    /// are inherited so every shard answers exactly as a local run
+    /// would.
+    pub fn partition(&self, max_points: usize) -> Vec<SweepSpec> {
+        let max = max_points.max(1);
+        let mut shards = Vec::new();
+        for &benchmark in &self.benchmarks {
+            for profile in &self.profiles {
+                for &mode in &self.modes {
+                    let sub = |lanes: Vec<usize>, vlens: Vec<u32>| SweepSpec {
+                        benchmarks: vec![benchmark],
+                        profiles: vec![*profile],
+                        modes: vec![mode],
+                        lanes,
+                        vlens,
+                        ..self.clone()
+                    };
+                    if self.vlens.len() > max {
+                        // One VLEN row alone overflows a shard: chunk
+                        // the VLEN list, one lane entry per shard.
+                        for &lane in &self.lanes {
+                            for chunk in self.vlens.chunks(max) {
+                                shards.push(sub(vec![lane], chunk.to_vec()));
+                            }
+                        }
+                    } else {
+                        // Whole lane rows fit: chunk the lane list so
+                        // each shard carries `rows` full VLEN rows.
+                        let rows = max / self.vlens.len().max(1);
+                        for chunk in self.lanes.chunks(rows.max(1)) {
+                            shards.push(sub(
+                                chunk.to_vec(),
+                                self.vlens.clone(),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        shards
+    }
 }
 
 /// One evaluated grid point (shared results are cloned out of the
@@ -157,30 +236,7 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepReport {
 /// evaluator owns its store.
 pub fn run_sweep_with(spec: &SweepSpec, evaluator: &Evaluator) -> SweepReport {
     // Expand the grid in deterministic order.
-    let mut grid: Vec<(EvalPoint, String)> =
-        Vec::with_capacity(spec.grid_len());
-    for &benchmark in &spec.benchmarks {
-        for profile in &spec.profiles {
-            for &mode in &spec.modes {
-                for &lanes in &spec.lanes {
-                    for &vlen_bits in &spec.vlens {
-                        let point = EvalPoint {
-                            benchmark,
-                            profile: *profile,
-                            mode,
-                            config: ArrowConfig {
-                                lanes,
-                                vlen_bits,
-                                ..Default::default()
-                            },
-                        };
-                        let key = point.key(spec.seed);
-                        grid.push((point, key));
-                    }
-                }
-            }
-        }
-    }
+    let grid = spec.expand();
 
     // In-request dedup cache: canonical key -> index into the unique
     // job list.
@@ -299,6 +355,10 @@ fn point_json(p: &SweepPoint) -> Json {
                 "vector_instructions",
                 o.summary.vector_instructions.into(),
             ));
+            // The whole cycle ledger rides along, so a cluster
+            // coordinator merging this response reconstructs the exact
+            // in-memory outcome, not just the headline counters.
+            fields.push(("summary", super::store::summary_json(&o.summary)));
         }
         Err(e) => {
             fields.push(("ok", false.into()));
@@ -454,6 +514,51 @@ mod tests {
         let o = report.points[0].outcome.as_ref().unwrap();
         assert_eq!(o.provenance, Provenance::Analytic);
         assert!(o.cycles > 0);
+    }
+
+    #[test]
+    fn partition_preserves_grid_order_and_respects_caps() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd, Benchmark::VDot],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Scalar, Mode::Vector],
+            lanes: vec![1, 2, 4],
+            vlens: vec![128, 256],
+            seed: 9,
+            ..Default::default()
+        };
+        let full: Vec<String> =
+            spec.expand().into_iter().map(|(_, k)| k).collect();
+        assert_eq!(full.len(), spec.grid_len());
+        for max in [1, 2, 3, 4, 7, 100] {
+            let shards = spec.partition(max);
+            let mut concat = Vec::new();
+            for shard in &shards {
+                let points = shard.expand();
+                assert!(
+                    !points.is_empty() && points.len() <= max,
+                    "shard of {} points under max {max}",
+                    points.len()
+                );
+                assert_eq!(points.len(), shard.grid_len());
+                // Shards inherit the evaluation policy wholesale.
+                assert_eq!(shard.seed, spec.seed);
+                assert_eq!(shard.analytic_limit, spec.analytic_limit);
+                concat.extend(points.into_iter().map(|(_, k)| k));
+            }
+            assert_eq!(concat, full, "max={max}");
+        }
+        // A cap at least as large as the grid yields one shard per
+        // (benchmark, profile, mode) group — the coarsest sound split.
+        assert_eq!(spec.partition(usize::MAX).len(), 4);
+    }
+
+    #[test]
+    fn partition_of_empty_grid_is_empty() {
+        let spec = SweepSpec { lanes: vec![], ..small_spec() };
+        assert_eq!(spec.grid_len(), 0);
+        assert!(spec.partition(8).is_empty());
+        assert!(spec.expand().is_empty());
     }
 
     #[test]

@@ -7,16 +7,20 @@
 //!             [--grid-lanes 1,2,4] [--grid-vlens 128,256,512]
 //!             [--threads N] [--seed N] [--cache-dir DIR]
 //!             [--analytic-limit N | --no-analytic]
+//!             [--workers host:port,... [--shard-points N]]
 //! arrow describe datapath|write-enable|simd-alu|system
 //! arrow validate                      # simulator vs XLA golden artifacts
 //! arrow serve [--addr 127.0.0.1:7676] [--cache-dir DIR]
+//! arrow cluster --workers N [--cache-dir DIR] [--base-port P]
+//! arrow cache compact --cache-dir DIR [--dry-run]
 //! arrow --lanes 4 --vlen 512 ...      # design-time overrides
 //! ```
 
+use arrow_rvv::bench::cluster::{self, ClusterSpec, FleetSpec};
 use arrow_rvv::bench::runner::{run_benchmark, Mode};
 use arrow_rvv::bench::suite::{Benchmark, BENCHMARKS};
 use arrow_rvv::bench::sweep::{report_json, run_sweep, SweepSpec};
-use arrow_rvv::bench::{Profile, PROFILES};
+use arrow_rvv::bench::{store, Profile, PROFILES};
 use arrow_rvv::energy::EnergyModel;
 use arrow_rvv::report;
 use arrow_rvv::system::{describe, server};
@@ -42,10 +46,20 @@ COMMANDS:
   sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
         [--grid-lanes LIST] [--grid-vlens LIST] [--threads N] [--seed N]
         [--cache-dir DIR] [--analytic-limit N | --no-analytic]
+        [--workers HOST:PORT,... [--shard-points N]]
   describe <datapath|write-enable|simd-alu|system>
   validate
   serve [--addr HOST:PORT] [--cache-dir DIR]
+  cluster --workers N [--cache-dir DIR] [--base-port PORT]
+          [--max-restarts N]
+  cache compact --cache-dir DIR [--dry-run]
   help
+
+Distributed sweeps: `arrow sweep --workers a:1,b:2` shards the grid
+across running `arrow serve` workers and merges one report (dead
+workers retry on survivors, then fall back to local evaluation);
+`arrow cluster --workers N --cache-dir DIR` spawns and supervises a
+local worker fleet sharing one result store.
 ";
 
 /// Tiny argument cursor (clap is unavailable offline).
@@ -253,19 +267,63 @@ fn main() -> Result<()> {
             if args.has("--no-analytic") {
                 spec.analytic_limit = None;
             }
+            let workers = args.opt("--workers");
+            let shard_points = args
+                .opt("--shard-points")
+                .map(|v| v.parse::<usize>())
+                .transpose()?;
             if spec.grid_len() == 0 {
                 return fail("sweep: empty grid");
             }
-            eprintln!(
-                "sweeping {} grid points on {} thread(s)...",
-                spec.grid_len(),
-                if spec.threads == 0 {
-                    "auto".to_string()
-                } else {
-                    spec.threads.to_string()
+            let report = if let Some(list) = workers {
+                let workers: Vec<String> = list
+                    .split(',')
+                    .map(|w| w.trim().to_string())
+                    .filter(|w| !w.is_empty())
+                    .collect();
+                if workers.is_empty() {
+                    return fail("sweep: --workers needs host:port,...");
                 }
-            );
-            let report = run_sweep(&spec);
+                let mut cs = ClusterSpec::new(spec, workers);
+                if let Some(points) = shard_points {
+                    cs.shard_points = points;
+                }
+                eprintln!(
+                    "sweeping {} grid points across {} worker(s)...",
+                    cs.spec.grid_len(),
+                    cs.workers.len()
+                );
+                let cluster = cluster::run_cluster(&cs)
+                    .map_err(|e| e.to_string())?;
+                for w in &cluster.workers {
+                    match &w.error {
+                        None => eprintln!(
+                            "worker {}: {} shard(s)",
+                            w.addr, w.shards
+                        ),
+                        Some(e) => eprintln!(
+                            "worker {}: {} shard(s), then lost: {e}",
+                            w.addr, w.shards
+                        ),
+                    }
+                }
+                eprintln!(
+                    "{} shard(s), {} evaluated locally",
+                    cluster.shards, cluster.local_shards
+                );
+                cluster.report
+            } else {
+                eprintln!(
+                    "sweeping {} grid points on {} thread(s)...",
+                    spec.grid_len(),
+                    if spec.threads == 0 {
+                        "auto".to_string()
+                    } else {
+                        spec.threads.to_string()
+                    }
+                );
+                run_sweep(&spec)
+            };
             if let Some(e) = &report.store_error {
                 eprintln!("warning: {e}");
             }
@@ -277,6 +335,60 @@ fn main() -> Result<()> {
                 report.cache_hits
             );
             println!("{}", report_json(&report));
+        }
+        "cluster" => {
+            let workers: usize = args
+                .opt("--workers")
+                .ok_or("cluster: --workers N required")?
+                .parse()?;
+            let fleet = FleetSpec {
+                workers,
+                cache_dir: args
+                    .opt("--cache-dir")
+                    .map(std::path::PathBuf::from),
+                base_port: args
+                    .opt("--base-port")
+                    .map(|v| v.parse())
+                    .transpose()?
+                    .unwrap_or(0),
+                max_restarts: args
+                    .opt("--max-restarts")
+                    .map(|v| v.parse())
+                    .transpose()?
+                    .unwrap_or(5),
+            };
+            cluster::run_fleet(&fleet).map_err(|e| e.to_string())?;
+        }
+        "cache" => {
+            let action = args.next().ok_or("cache: which action? (compact)")?;
+            match action.as_str() {
+                "compact" => {
+                    let dir = args
+                        .opt("--cache-dir")
+                        .ok_or("cache compact: --cache-dir DIR required")?;
+                    let dry_run = args.has("--dry-run");
+                    let stats = store::compact(
+                        std::path::Path::new(&dir),
+                        dry_run,
+                    )
+                    .map_err(|e| e.to_string())?;
+                    println!(
+                        "{}: {} line(s): {} kept, {} stale-version, \
+                         {} superseded, {} malformed — {} {} dropped",
+                        if dry_run { "cache compact (dry run)" } else { "cache compact" },
+                        stats.total_lines,
+                        stats.kept,
+                        stats.stale_version,
+                        stats.superseded,
+                        stats.malformed,
+                        stats.dropped(),
+                        if dry_run { "would be" } else { "line(s)" },
+                    );
+                }
+                other => {
+                    return fail(format!("unknown cache action `{other}`"))
+                }
+            }
         }
         "describe" => {
             let what = args

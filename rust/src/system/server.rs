@@ -41,11 +41,14 @@ use crate::vector::ArrowConfig;
 use super::describe;
 
 /// Upper bound on one request's sweep grid, to keep a single connection
-/// from monopolising the process.
-const MAX_SWEEP_GRID: usize = 4096;
+/// from monopolising the process.  Public because the cluster
+/// coordinator sizes its shards against this cap (and the `shard`
+/// handshake advertises it).
+pub const MAX_SWEEP_GRID: usize = 4096;
 
-/// Upper bound on sub-requests in one `batch` envelope.
-const MAX_BATCH_REQUESTS: usize = 256;
+/// Upper bound on sub-requests in one `batch` envelope (advertised by
+/// the `shard` handshake; the coordinator chunks against it).
+pub const MAX_BATCH_REQUESTS: usize = 256;
 
 fn err_response(msg: impl Into<String>) -> Json {
     Json::obj(vec![("ok", false.into()), ("error", Json::Str(msg.into()))])
@@ -58,8 +61,22 @@ pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
         Some("ping") => {
             Json::obj(vec![("ok", true.into()), ("pong", true.into())])
         }
+        // Cluster handshake: who are you, what do you accept?  The
+        // coordinator refuses to dispatch shards to a worker whose
+        // crate version differs from its own — simulator timing (and
+        // the result-store key space) may have changed between
+        // versions, so mixed-version reports must never merge silently.
+        Some("shard") => Json::obj(vec![
+            ("ok", true.into()),
+            ("role", "worker".into()),
+            ("version", env!("CARGO_PKG_VERSION").into()),
+            ("max_grid", (MAX_SWEEP_GRID as u64).into()),
+            ("max_batch", (MAX_BATCH_REQUESTS as u64).into()),
+            ("store", evaluator.store().is_some().into()),
+        ]),
         Some("list") => Json::obj(vec![
             ("ok", true.into()),
+            ("version", env!("CARGO_PKG_VERSION").into()),
             (
                 "benchmarks",
                 Json::Arr(
@@ -139,6 +156,9 @@ pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
         }
         Some("sweep") => match sweep_spec_from(req) {
             Ok(spec) => {
+                // Fold in peer appends first: workers sharing a cache
+                // dir answer each other's shards from the store.
+                evaluator.refresh_store();
                 let report = sweep::run_sweep_with(&spec, evaluator);
                 let Json::Obj(mut body) = sweep::report_json(&report) else {
                     unreachable!("report_json returns an object")
@@ -180,7 +200,7 @@ pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
             ])
         }
         other => err_response(format!(
-            "unknown cmd {other:?} (ping|list|bench|sweep|batch|describe)"
+            "unknown cmd {other:?} (ping|list|shard|bench|sweep|batch|describe)"
         )),
     }
 }
@@ -314,6 +334,18 @@ fn handle_conn(stream: TcpStream, evaluator: &Evaluator) {
 /// `cache_dir` additionally backs it with the persistent result store
 /// (an unopenable store is reported and the server runs uncached).
 pub fn serve(addr: &str, cache_dir: Option<&Path>) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("arrow simulator serving on {addr}");
+    serve_listener(listener, cache_dir)
+}
+
+/// [`serve`] on an already-bound listener.  The in-process worker
+/// fleets of the cluster tests bind port 0 themselves (to learn the
+/// real address before serving) and hand the listener here.
+pub fn serve_listener(
+    listener: TcpListener,
+    cache_dir: Option<&Path>,
+) -> std::io::Result<()> {
     let mut evaluator = Evaluator::new();
     if let Some(dir) = cache_dir {
         match ResultStore::open(dir) {
@@ -332,8 +364,6 @@ pub fn serve(addr: &str, cache_dir: Option<&Path>) -> std::io::Result<()> {
         }
     }
     let evaluator = Arc::new(evaluator);
-    let listener = TcpListener::bind(addr)?;
-    eprintln!("arrow simulator serving on {addr}");
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
@@ -396,6 +426,33 @@ mod tests {
         let registry: Vec<&str> =
             profiles::ALL.iter().map(|p| p.name).collect();
         assert_eq!(names, registry);
+    }
+
+    #[test]
+    fn shard_handshake_advertises_version_and_caps() {
+        let r = handle(r#"{"cmd": "shard"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            r.get("version").unwrap().as_str(),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+        assert_eq!(
+            r.get("max_grid").unwrap().as_u64(),
+            Some(MAX_SWEEP_GRID as u64)
+        );
+        assert_eq!(
+            r.get("max_batch").unwrap().as_u64(),
+            Some(MAX_BATCH_REQUESTS as u64)
+        );
+        // A storeless evaluator says so.
+        assert_eq!(r.get("store"), Some(&Json::Bool(false)));
+        // And the list response carries the same version, so older
+        // clients that only speak `list` can still detect a mismatch.
+        let l = handle(r#"{"cmd": "list"}"#);
+        assert_eq!(
+            l.get("version").unwrap().as_str(),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Cluster integration: a sweep fanned across an in-process worker
+//! fleet must merge into a report byte-identical (per point) to a local
+//! run of the same spec, stay deterministic in point order, survive a
+//! worker dying mid-sweep, share results across workers through one
+//! cache dir, and refuse version-mismatched workers loudly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::thread;
+
+use arrow_rvv::bench::cluster::{run_cluster, ClusterSpec};
+use arrow_rvv::bench::profiles;
+use arrow_rvv::bench::runner::Mode;
+use arrow_rvv::bench::suite::Benchmark;
+use arrow_rvv::bench::sweep::{report_json, run_sweep, SweepSpec};
+use arrow_rvv::system::server;
+
+/// Bind port 0, learn the address, and serve a real worker on a
+/// background thread (leaked; the test process' exit reaps it).
+fn spawn_worker(cache_dir: Option<PathBuf>) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let _ = server::serve_listener(listener, cache_dir.as_deref());
+    });
+    addr
+}
+
+/// A worker that answers the `shard` handshake correctly, then drops
+/// every connection on its first real request — the wire-visible
+/// behaviour of a worker killed mid-sweep.
+fn spawn_flaky_worker() -> String {
+    spawn_fake_worker(env!("CARGO_PKG_VERSION"))
+}
+
+/// Like [`spawn_flaky_worker`], but advertising an arbitrary version.
+fn spawn_fake_worker(version: &str) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let shard_response = format!(
+        r#"{{"ok": true, "version": "{version}", "max_grid": 4096, "max_batch": 256}}"#
+    );
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let mut reader = BufReader::new(match stream.try_clone() {
+                Ok(r) => r,
+                Err(_) => continue,
+            });
+            let mut writer = stream;
+            let mut line = String::new();
+            if reader.read_line(&mut line).is_err() {
+                continue;
+            }
+            if line.contains("shard") {
+                let _ = writeln!(writer, "{shard_response}");
+            }
+            // Read (part of) the next request, then hang up on it.
+            let mut next = String::new();
+            let _ = reader.read_line(&mut next);
+            drop(writer);
+        }
+    });
+    addr
+}
+
+fn parity_spec() -> SweepSpec {
+    SweepSpec {
+        benchmarks: vec![Benchmark::VAdd, Benchmark::VDot],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Scalar, Mode::Vector],
+        lanes: vec![1, 2],
+        vlens: vec![128, 256],
+        seed: 42,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+fn points_json(report: &arrow_rvv::bench::SweepReport) -> String {
+    report_json(report).get("points").unwrap().to_string()
+}
+
+/// A sweep fanned across two worker processes merges into the same
+/// JSON report — same points, same order, same counters — as a local
+/// `run_sweep` of the identical spec.
+#[test]
+fn cluster_sweep_is_identical_to_a_local_run() {
+    let spec = parity_spec();
+    let local = run_sweep(&spec);
+    let workers = vec![spawn_worker(None), spawn_worker(None)];
+    let mut cs = ClusterSpec::new(spec.clone(), workers);
+    // Small shards + single-shard batches: the 16-point grid splits
+    // into 4 shards so both workers genuinely share the fan-out.
+    cs.shard_points = 4;
+    cs.shards_per_batch = 1;
+    let cluster = run_cluster(&cs).unwrap();
+
+    assert_eq!(cluster.shards, 4);
+    assert_eq!(cluster.local_shards, 0, "no fallback on a healthy fleet");
+    assert!(cluster.workers.iter().all(|w| w.error.is_none()));
+    assert_eq!(
+        cluster.workers.iter().map(|w| w.shards).sum::<usize>(),
+        cluster.shards
+    );
+
+    // Byte-identical per-point JSON, deterministic order included.
+    assert_eq!(points_json(&cluster.report), points_json(&local));
+    let keys: Vec<&str> =
+        cluster.report.points.iter().map(|p| p.key.as_str()).collect();
+    let local_keys: Vec<&str> =
+        local.points.iter().map(|p| p.key.as_str()).collect();
+    assert_eq!(keys, local_keys);
+    assert_eq!(cluster.report.unique_simulated, local.unique_simulated);
+    assert_eq!(cluster.report.store_hits, local.store_hits);
+    assert_eq!(cluster.report.analytic, local.analytic);
+    assert_eq!(cluster.report.cache_hits, local.cache_hits);
+    assert!(cluster.report.store_error.is_none());
+
+    // Determinism across cluster runs too.
+    let again = run_cluster(&cs).unwrap();
+    assert_eq!(points_json(&again.report), points_json(&cluster.report));
+}
+
+/// Duplicate grid entries dedup to one evaluation with the duplicates
+/// reported as cache hits — exactly as a local run counts them.
+#[test]
+fn cluster_counts_duplicate_entries_as_cache_hits() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![2, 2, 2],
+        vlens: vec![256],
+        seed: 3,
+        threads: 1,
+        ..Default::default()
+    };
+    let local = run_sweep(&spec);
+    let mut cs =
+        ClusterSpec::new(spec, vec![spawn_worker(None)]);
+    cs.shard_points = 8;
+    let cluster = run_cluster(&cs).unwrap();
+    assert_eq!(cluster.report.unique_simulated, local.unique_simulated);
+    assert_eq!(cluster.report.cache_hits, local.cache_hits);
+    assert_eq!(cluster.report.cache_hits, 2);
+    assert_eq!(points_json(&cluster.report), points_json(&local));
+}
+
+/// Killing a worker mid-sweep must not lose its shards: they retry on
+/// the surviving worker (or locally) and the merged report still
+/// matches a local run.
+#[test]
+fn worker_killed_mid_sweep_retries_on_survivors() {
+    let spec = parity_spec();
+    let local = run_sweep(&spec);
+    // The flaky worker handshakes fine, then hangs up on its first
+    // batch; listing it first makes it race for real work.
+    let workers = vec![spawn_flaky_worker(), spawn_worker(None)];
+    let mut cs = ClusterSpec::new(spec, workers);
+    cs.shard_points = 4;
+    cs.shards_per_batch = 1;
+    let cluster = run_cluster(&cs).unwrap();
+
+    let flaky = &cluster.workers[0];
+    let healthy = &cluster.workers[1];
+    assert!(
+        flaky.error.is_some(),
+        "the flaky worker must be reported lost: {flaky:?}"
+    );
+    assert_eq!(flaky.shards, 0);
+    assert!(healthy.error.is_none());
+    // Every shard was answered by the survivor or the local fallback —
+    // never dropped.
+    assert_eq!(
+        healthy.shards + cluster.local_shards,
+        cluster.shards
+    );
+    assert_eq!(points_json(&cluster.report), points_json(&local));
+}
+
+/// With every worker unreachable the whole grid falls back to local
+/// evaluation — a cluster sweep always completes.
+#[test]
+fn all_workers_dead_falls_back_to_local_evaluation() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VMul],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![1, 2],
+        vlens: vec![256],
+        seed: 11,
+        threads: 1,
+        ..Default::default()
+    };
+    let local = run_sweep(&spec);
+    // Grab a free port and release it: nothing listens there.
+    let port = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let cs = ClusterSpec::new(spec, vec![format!("127.0.0.1:{port}")]);
+    let cluster = run_cluster(&cs).unwrap();
+    assert!(cluster.workers[0].error.is_some());
+    assert_eq!(cluster.local_shards, cluster.shards);
+    assert_eq!(points_json(&cluster.report), points_json(&local));
+}
+
+/// Workers sharing one `--cache-dir` persist every shard's results: a
+/// second cluster sweep of the same spec — against the *same live
+/// fleet* — answers entirely from the store, simulating nothing.
+/// (Live workers fold in their peers' ledger appends before each
+/// sweep request, so this holds even when round 2 lands a shard on
+/// the worker that did not evaluate it in round 1.)
+#[test]
+fn shared_cache_dir_answers_second_sweep_from_store() {
+    let dir = std::env::temp_dir().join(format!(
+        "arrow-cluster-cache-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = parity_spec();
+    let workers = vec![
+        spawn_worker(Some(dir.clone())),
+        spawn_worker(Some(dir.clone())),
+    ];
+
+    let round = |spec: &SweepSpec| {
+        let mut cs = ClusterSpec::new(spec.clone(), workers.clone());
+        cs.shard_points = 4;
+        cs.shards_per_batch = 1;
+        run_cluster(&cs).unwrap()
+    };
+
+    let first = round(&spec);
+    assert_eq!(first.local_shards, 0);
+    assert!(first.report.unique_simulated > 0);
+    assert_eq!(first.report.store_hits, 0);
+
+    // The same live fleet answers round 2 without the simulator.
+    let second = round(&spec);
+    assert_eq!(second.local_shards, 0);
+    assert_eq!(
+        second.report.unique_simulated, 0,
+        "second cluster sweep must simulate nothing"
+    );
+    assert_eq!(second.report.store_hits, first.report.unique_simulated);
+    // Same ledgers, replayed: only the provenance tags differ.
+    for (a, b) in first.report.points.iter().zip(&second.report.points) {
+        assert_eq!(a.key, b.key);
+        let (a, b) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+        assert_eq!(a.cycles, b.cycles, "cached replay diverged");
+        assert_eq!(a.verified, b.verified);
+        assert_eq!(a.summary, b.summary, "full ledger must replay");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A version-mismatched worker is refused loudly — never silently
+/// merged.
+#[test]
+fn version_mismatched_worker_is_refused() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![2],
+        vlens: vec![256],
+        seed: 1,
+        threads: 1,
+        ..Default::default()
+    };
+    let imposter = spawn_fake_worker("99.0.0");
+    let cs = ClusterSpec::new(spec, vec![imposter]);
+    let err = run_cluster(&cs).unwrap_err();
+    assert!(err.contains("99.0.0"), "{err}");
+    assert!(err.contains(env!("CARGO_PKG_VERSION")), "{err}");
+    assert!(err.contains("refusing"), "{err}");
+}

@@ -6,6 +6,10 @@
 //! the cycle model's word-pass arithmetic.
 
 use arrow_rvv::asm::assemble;
+use arrow_rvv::bench::profiles;
+use arrow_rvv::bench::runner::Mode;
+use arrow_rvv::bench::suite::Benchmark;
+use arrow_rvv::bench::{point_key, EvalPoint, Evaluator, Provenance};
 use arrow_rvv::scalar::ScalarTiming;
 use arrow_rvv::system::Machine;
 use arrow_rvv::util::rng::Rng;
@@ -201,6 +205,101 @@ fn e64_dot_product() {
     let got = read_elems(&m, "out", 64, 1)[0];
     let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
     assert_eq!(got, want);
+}
+
+/// SEW-dependent timing ablations over the evaluation grid: design
+/// points that differ only in ELEN or in a timing constant carry
+/// distinct canonical keys, so they can never collide in the dedup
+/// cache or the persistent store — each ablation simulates once and
+/// replays its *own* numbers from then on.
+#[test]
+fn elen_and_timing_ablations_never_collide_in_the_store() {
+    let dir = std::env::temp_dir()
+        .join(format!("arrow-ablation-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let point = |config: ArrowConfig| EvalPoint {
+        benchmark: Benchmark::VAdd,
+        profile: profiles::TEST,
+        mode: Mode::Vector,
+        config,
+    };
+    let base = ArrowConfig::default();
+    let narrow = ArrowConfig { elen_bits: 32, ..base };
+    let slow_dispatch = {
+        let mut c = base;
+        c.timing.dispatch += 3;
+        c
+    };
+    let slow_bus = {
+        let mut c = base;
+        c.mem_timing.burst_setup += 4;
+        c
+    };
+    let ablations =
+        [point(base), point(narrow), point(slow_dispatch), point(slow_bus)];
+
+    // All four keys are distinct (ELEN and both timing models are
+    // folded into the canonical key).
+    let seed = 9;
+    let keys: Vec<String> = ablations
+        .iter()
+        .map(|p| {
+            point_key(p.benchmark, &p.profile, p.mode, &p.config, seed)
+        })
+        .collect();
+    for (i, a) in keys.iter().enumerate() {
+        assert!(a.contains("seed=9"), "{a}");
+        for b in &keys[i + 1..] {
+            assert_ne!(a, b);
+        }
+    }
+
+    let evaluator = Evaluator::with_store_dir(&dir).unwrap();
+    let first: Vec<_> = ablations
+        .iter()
+        .map(|p| evaluator.evaluate(p, seed, None).unwrap())
+        .collect();
+    for o in &first {
+        assert_eq!(o.provenance, Provenance::Simulated);
+        assert!(o.verified);
+    }
+    // The ablations genuinely change the cycle model...
+    assert!(
+        first[1].cycles > first[0].cycles,
+        "ELEN 32 halves the elements per word pass: {} vs {}",
+        first[1].cycles,
+        first[0].cycles
+    );
+    assert!(
+        first[2].cycles > first[0].cycles,
+        "extra dispatch cycles must show up: {} vs {}",
+        first[2].cycles,
+        first[0].cycles
+    );
+    assert!(
+        first[3].cycles > first[0].cycles,
+        "slower bursts must show up: {} vs {}",
+        first[3].cycles,
+        first[0].cycles
+    );
+    // ...and every ablation stored its own record.
+    assert_eq!(evaluator.store().unwrap().len(), ablations.len());
+
+    // A fresh evaluator on the same dir replays each ablation's own
+    // numbers — no cross-talk between grid variants.
+    let replay = Evaluator::with_store_dir(&dir).unwrap();
+    for (p, want) in ablations.iter().zip(&first) {
+        let got = replay.evaluate(p, seed, None).unwrap();
+        assert_eq!(got.provenance, Provenance::Cached);
+        assert_eq!(got.origin, Provenance::Simulated);
+        assert_eq!(got.cycles, want.cycles);
+        assert_eq!(got.summary, want.summary);
+    }
+    // A different seed still misses: the key folds the workload in.
+    let reseeded = replay.evaluate(&ablations[0], seed + 1, None).unwrap();
+    assert_eq!(reseeded.provenance, Provenance::Simulated);
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
