@@ -20,7 +20,14 @@
 //!   unacknowledged shards pushed back on the shared queue for the
 //!   surviving workers, and anything still unanswered when every
 //!   worker is gone is evaluated locally through an [`Evaluator`] — a
-//!   cluster sweep always completes.
+//!   cluster sweep always completes.  That includes a worker *thread*
+//!   panicking mid-dispatch: the panic is contained (its batch is
+//!   requeued, the worker retired) and every shared lock recovers from
+//!   poisoning, so one bug never aborts the coordinator.
+//! * Shards are sized **by estimated cost**, not just point count
+//!   ([`SweepSpec::partition_by_cost`]): cheap points pack densely up
+//!   to `shard_points`, expensive large-profile blocks split finer, so
+//!   one heavy shard can't straggle the whole sweep.
 //! * The coordinator **refuses version mismatches loudly**: every
 //!   worker must answer the `{"cmd": "shard"}` handshake with this
 //!   crate's version, because simulator timing and the result-store
@@ -45,9 +52,10 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::panic::AssertUnwindSafe;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use crate::system::machine::RunSummary;
@@ -66,8 +74,24 @@ pub const DEFAULT_SHARD_POINTS: usize = 512;
 /// Default `sweep` sub-requests per `batch` envelope.
 pub const DEFAULT_SHARDS_PER_BATCH: usize = 4;
 
+/// Default estimated-cost budget per shard (cumulative
+/// `estimated_instructions`): dynamic shard sizing.  One large-profile
+/// vector point runs a few hundred million estimated instructions, so
+/// this groups a handful of heavy points per shard while thousands of
+/// cheap ones still pack up to the point cap — a straggler shard can
+/// no longer hold a whole cluster sweep hostage.
+pub const DEFAULT_SHARD_COST: u64 = 1_000_000_000;
+
 /// Connect timeout for the coordinator's worker sockets.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// I/O budget for the `shard` handshake (and readiness probes).
+/// Handshakes are cheap server-side, and `run_cluster` handshakes its
+/// fleet sequentially — a worker that accepts the connection but never
+/// answers may only cost the coordinator seconds, not the full
+/// per-shard dispatch budget.  Dispatch rescales the socket timeout
+/// per batch before any real work is shipped.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Default I/O budget *per shard in flight*: a batch of N shards gets
 /// N× this as its round-trip timeout, so big envelopes are not
@@ -85,6 +109,10 @@ pub struct ClusterSpec {
     pub workers: Vec<String>,
     /// Maximum points per shard (clamped to the server's grid cap).
     pub shard_points: usize,
+    /// Maximum estimated cost (cumulative `estimated_instructions`)
+    /// per shard — cheap points pack to `shard_points`, expensive ones
+    /// split finer (see [`SweepSpec::partition_by_cost`]).
+    pub shard_cost: u64,
     /// Shards shipped per batch envelope (clamped to the batch cap).
     pub shards_per_batch: usize,
     /// I/O budget per shard in flight — an envelope of N shards gets
@@ -100,6 +128,7 @@ impl ClusterSpec {
             spec,
             workers,
             shard_points: DEFAULT_SHARD_POINTS,
+            shard_cost: DEFAULT_SHARD_COST,
             shards_per_batch: DEFAULT_SHARDS_PER_BATCH,
             shard_timeout: DEFAULT_SHARD_TIMEOUT,
         }
@@ -155,8 +184,8 @@ impl WorkerConn {
             .ok_or_else(|| format!("{addr}: no address"))?;
         let stream = TcpStream::connect_timeout(&socket, CONNECT_TIMEOUT)
             .map_err(|e| format!("{addr}: connect: {e}"))?;
-        stream.set_read_timeout(Some(DEFAULT_SHARD_TIMEOUT)).ok();
-        stream.set_write_timeout(Some(DEFAULT_SHARD_TIMEOUT)).ok();
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
+        stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
         let writer =
             stream.try_clone().map_err(|e| format!("{addr}: {e}"))?;
         Ok(WorkerConn {
@@ -259,6 +288,16 @@ fn shard_request(shard: &SweepSpec) -> Json {
                 shard.vlens.iter().map(|&v| u64::from(v).into()).collect(),
             ),
         ),
+        (
+            "elens",
+            Json::Arr(
+                shard.elens.iter().map(|&e| u64::from(e).into()).collect(),
+            ),
+        ),
+        (
+            "timing",
+            Json::Arr(shard.timing.iter().map(|t| t.name.into()).collect()),
+        ),
         ("seed", shard.seed.into()),
     ];
     match shard.analytic_limit {
@@ -303,6 +342,44 @@ fn point_result_from_json(p: &Json) -> Result<EvalResult, String> {
         provenance: tier("provenance")?,
         origin: tier("origin")?,
     }))
+}
+
+/// Lock that survives a poisoned mutex.  Every piece of shared
+/// coordinator state (work queue, merged results, done bitmap, worker
+/// stats) stays structurally sound if a worker thread panics inside a
+/// critical section — the sections only insert map entries, flip done
+/// flags and bump counters — so a panicked worker must degrade to the
+/// ordinary requeue/local-fallback path, never take the whole
+/// coordinator down with a poisoned-lock panic.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Mutex::into_inner`] with the same poison recovery as [`lock`].
+fn into_inner<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Test-only fault injection: arm `PANIC_DISPATCHES` to make the next
+/// N dispatch iterations panic *while holding the results lock*, so the
+/// regression test exercises both the catch-unwind containment and the
+/// poisoned-lock recovery paths.
+#[cfg(test)]
+pub(crate) mod test_hooks {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    pub static PANIC_DISPATCHES: AtomicUsize = AtomicUsize::new(0);
+
+    pub fn maybe_panic() {
+        if PANIC_DISPATCHES
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                n.checked_sub(1)
+            })
+            .is_ok()
+        {
+            panic!("injected dispatch panic");
+        }
+    }
 }
 
 /// Validate one shard's sweep response against the coordinator's own
@@ -397,9 +474,11 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
 
     // Shards must fit the smallest advertised caps across the fleet
     // (equal to our own constants today, since versions match — but
-    // negotiated, not assumed).
+    // negotiated, not assumed).  Within the point cap, shards are
+    // sized by estimated cost, so one heavy block can't straggle the
+    // whole sweep.
     let shard_cap = cs.shard_points.clamp(1, fleet_grid);
-    let shards = cs.spec.partition(shard_cap);
+    let shards = cs.spec.partition_by_cost(shard_cap, cs.shard_cost);
     let shards_per_batch = cs.shards_per_batch.clamp(1, fleet_batch);
     let shard_timeout = cs.shard_timeout;
 
@@ -423,100 +502,134 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
             let shards = &shards;
             scope.spawn(move || loop {
                 let batch: Vec<usize> = {
-                    let mut q = queue.lock().unwrap();
+                    let mut q = lock(queue);
                     let n = q.len().min(shards_per_batch);
                     q.drain(..n).collect()
                 };
                 if batch.is_empty() {
                     return;
                 }
-                let envelope = Json::obj(vec![
-                    ("cmd", "batch".into()),
-                    (
-                        "requests",
-                        Json::Arr(
-                            batch
-                                .iter()
-                                .map(|&i| shard_request(&shards[i]))
-                                .collect(),
-                        ),
-                    ),
-                ]);
                 let requeue = |pending: &[usize]| {
-                    let mut q = queue.lock().unwrap();
+                    let mut q = lock(queue);
                     for &i in pending.iter().rev() {
                         q.push_front(i);
                     }
                 };
-                let die = |e: String| {
-                    stats.lock().unwrap()[widx].error = Some(e);
-                };
-                // The I/O budget scales with the envelope: N shards in
-                // flight get N× the per-shard timeout.
-                conn.set_io_timeout(
-                    shard_timeout.saturating_mul(batch.len() as u32),
-                );
-                let subs = match conn.request(&envelope) {
-                    Ok(resp) => {
-                        let count = resp
-                            .get("responses")
-                            .and_then(Json::as_arr)
-                            .map(|subs| subs.len());
-                        if resp.get("ok").and_then(Json::as_bool)
-                            == Some(true)
-                            && count == Some(batch.len())
-                        {
-                            let Json::Obj(mut body) = resp else {
-                                unreachable!("checked: is an object")
-                            };
-                            let Some(Json::Arr(subs)) =
-                                body.remove("responses")
-                            else {
-                                unreachable!("checked: responses is an array")
-                            };
-                            subs
-                        } else {
-                            requeue(&batch);
-                            die(format!(
-                                "{}: malformed batch response",
-                                conn.addr
-                            ));
-                            return;
-                        }
-                    }
-                    Err(e) => {
-                        requeue(&batch);
-                        die(e);
-                        return;
-                    }
-                };
-                for (idx, (sub, &si)) in
-                    subs.iter().zip(&batch).enumerate()
-                {
-                    // Expanded lazily per shard in flight: only the
-                    // batch being validated is materialised, not the
-                    // whole grid (the merge re-expands once at the
-                    // end; round trips dwarf the expansion cost).
-                    let expected = shards[si].expand();
-                    match parse_shard_response(sub, &expected, &conn.addr)
-                    {
-                        Ok(pairs) => {
-                            let mut r = results.lock().unwrap();
-                            for (key, result) in pairs {
-                                r.entry(key).or_insert(result);
+                // Shards of this batch fully merged so far — read back
+                // after a panic so only the unmerged suffix requeues.
+                let merged = std::cell::Cell::new(0usize);
+                // One batch round trip + merge, containing its own
+                // granular requeues; `Err` retires this worker.
+                let process = |conn: &mut WorkerConn| -> Result<(), String> {
+                    let envelope = Json::obj(vec![
+                        ("cmd", "batch".into()),
+                        (
+                            "requests",
+                            Json::Arr(
+                                batch
+                                    .iter()
+                                    .map(|&i| shard_request(&shards[i]))
+                                    .collect(),
+                            ),
+                        ),
+                    ]);
+                    // The I/O budget scales with the envelope: N
+                    // shards in flight get N× the per-shard timeout.
+                    conn.set_io_timeout(
+                        shard_timeout.saturating_mul(batch.len() as u32),
+                    );
+                    let subs = match conn.request(&envelope) {
+                        Ok(resp) => {
+                            let count = resp
+                                .get("responses")
+                                .and_then(Json::as_arr)
+                                .map(|subs| subs.len());
+                            if resp.get("ok").and_then(Json::as_bool)
+                                == Some(true)
+                                && count == Some(batch.len())
+                            {
+                                let Json::Obj(mut body) = resp else {
+                                    unreachable!("checked: is an object")
+                                };
+                                let Some(Json::Arr(subs)) =
+                                    body.remove("responses")
+                                else {
+                                    unreachable!(
+                                        "checked: responses is an array"
+                                    )
+                                };
+                                subs
+                            } else {
+                                requeue(&batch);
+                                return Err(format!(
+                                    "{}: malformed batch response",
+                                    conn.addr
+                                ));
                             }
-                            done.lock().unwrap()[si] = true;
-                            stats.lock().unwrap()[widx].shards += 1;
                         }
                         Err(e) => {
-                            // The failing shard AND everything of this
-                            // batch not yet merged go back on the
-                            // queue for the survivors; this worker is
-                            // not trusted further.
-                            requeue(&batch[idx..]);
-                            die(e);
-                            return;
+                            requeue(&batch);
+                            return Err(e);
                         }
+                    };
+                    for (idx, (sub, &si)) in
+                        subs.iter().zip(&batch).enumerate()
+                    {
+                        // Expanded lazily per shard in flight: only the
+                        // batch being validated is materialised, not
+                        // the whole grid (the merge re-expands once at
+                        // the end; round trips dwarf the expansion
+                        // cost).
+                        let expected = shards[si].expand();
+                        match parse_shard_response(sub, &expected, &conn.addr)
+                        {
+                            Ok(pairs) => {
+                                let mut r = lock(results);
+                                #[cfg(test)]
+                                test_hooks::maybe_panic();
+                                for (key, result) in pairs {
+                                    r.entry(key).or_insert(result);
+                                }
+                                drop(r);
+                                lock(done)[si] = true;
+                                lock(stats)[widx].shards += 1;
+                                merged.set(idx + 1);
+                            }
+                            Err(e) => {
+                                // The failing shard AND everything of
+                                // this batch not yet merged go back on
+                                // the queue for the survivors; this
+                                // worker is not trusted further.
+                                requeue(&batch[idx..]);
+                                return Err(e);
+                            }
+                        }
+                    }
+                    Ok(())
+                };
+                // A panic anywhere in the round trip (simulator or
+                // protocol bug) is contained like any other worker
+                // failure: requeue the unmerged suffix of the batch —
+                // shards already merged and counted stay done, so
+                // per-worker shard counts still sum to the total — and
+                // retire this worker; the survivors or the local
+                // fallback finish the sweep.
+                match std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    process(&mut conn)
+                })) {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        lock(stats)[widx].error = Some(e);
+                        return;
+                    }
+                    Err(_) => {
+                        requeue(&batch[merged.get()..]);
+                        lock(stats)[widx].error = Some(format!(
+                            "{}: worker thread panicked mid-dispatch; \
+                             unmerged shards requeued",
+                            conn.addr
+                        ));
+                        return;
                     }
                 }
             });
@@ -524,12 +637,13 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
     });
 
     // Local fallback: whatever the fleet never acknowledged (no
-    // workers, all dead, or shards requeued into a drained fleet) is
-    // evaluated here, through one evaluator so program assembly and the
-    // optional persistent store are shared across leftover shards.
-    let stats = stats.into_inner().unwrap();
-    let mut results = results.into_inner().unwrap();
-    let done = done.into_inner().unwrap();
+    // workers, all dead, panicked, or shards requeued into a drained
+    // fleet) is evaluated here, through one evaluator so program
+    // assembly and the optional persistent store are shared across
+    // leftover shards.
+    let stats = into_inner(stats);
+    let mut results = into_inner(results);
+    let done = into_inner(done);
     let mut store_errors: Vec<String> = Vec::new();
     let pending: Vec<usize> = done
         .iter()
@@ -586,15 +700,7 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
         } else {
             cache_hits += 1;
         }
-        points.push(SweepPoint {
-            benchmark: point.benchmark,
-            profile: point.profile.name,
-            mode: point.mode,
-            lanes: point.config.lanes,
-            vlen_bits: point.config.vlen_bits,
-            key,
-            outcome,
-        });
+        points.push(SweepPoint::from_eval(&point, key, outcome));
     }
     let report = SweepReport {
         points,
@@ -822,6 +928,11 @@ mod tests {
             modes: vec![Mode::Vector],
             lanes: vec![1, 2],
             vlens: vec![128],
+            elens: vec![32, 64],
+            timing: vec![
+                profiles::TIMING_BASELINE,
+                profiles::TIMING_BURST_MEM,
+            ],
             seed: 77,
             analytic_limit: None,
             ..Default::default()
@@ -830,10 +941,97 @@ mod tests {
         assert_eq!(req.get("cmd").unwrap().as_str(), Some("sweep"));
         assert_eq!(req.get("seed").unwrap().as_u64(), Some(77));
         assert_eq!(req.get("no_analytic"), Some(&true.into()));
+        // The multi-precision and timing axes ride the wire first-class.
+        let elens: Vec<u64> = req
+            .get("elens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.as_u64().unwrap())
+            .collect();
+        assert_eq!(elens, vec![32, 64]);
+        let timing: Vec<&str> = req
+            .get("timing")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_str().unwrap())
+            .collect();
+        assert_eq!(timing, vec!["baseline", "burst-mem"]);
         let limited =
             shard_request(&SweepSpec { analytic_limit: Some(9), ..spec });
         assert_eq!(limited.get("analytic_limit").unwrap().as_u64(), Some(9));
         assert_eq!(limited.get("no_analytic"), None);
+    }
+
+    /// The coordinator crash regression: a worker thread that panics
+    /// mid-dispatch — with the results lock held, so the mutex is
+    /// genuinely poisoned — must degrade to the requeue/local-fallback
+    /// path (surviving workers recover the poisoned locks) instead of
+    /// aborting the whole coordinator.
+    #[test]
+    fn panicking_dispatch_degrades_to_requeue_not_a_crash() {
+        use crate::system::server;
+        use std::sync::atomic::Ordering;
+
+        let spawn = || {
+            let listener =
+                std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            std::thread::spawn(move || {
+                let _ = server::serve_listener(listener, None);
+            });
+            addr
+        };
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd, Benchmark::VDot],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Scalar, Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![128, 256],
+            seed: 21,
+            threads: 1,
+            ..Default::default()
+        };
+        let local = sweep::run_sweep(&spec);
+        let mut cs = ClusterSpec::new(spec, vec![spawn(), spawn()]);
+        cs.shard_points = 4;
+        cs.shards_per_batch = 1;
+        // Exactly one dispatch iteration (whichever worker thread gets
+        // there first) panics while merging its first shard.
+        test_hooks::PANIC_DISPATCHES.store(1, Ordering::SeqCst);
+        let cluster = run_cluster(&cs).unwrap();
+        assert_eq!(
+            test_hooks::PANIC_DISPATCHES.load(Ordering::SeqCst),
+            0,
+            "the injected panic must have fired"
+        );
+        let panicked: Vec<_> = cluster
+            .workers
+            .iter()
+            .filter(|w| {
+                w.error.as_deref().is_some_and(|e| e.contains("panicked"))
+            })
+            .collect();
+        assert_eq!(panicked.len(), 1, "{:?}", cluster.workers);
+        assert_eq!(panicked[0].shards, 0);
+        // Nothing was lost: the survivor and/or the local fallback
+        // answered every shard, and the merged report is byte-identical
+        // to a local run.
+        assert_eq!(
+            cluster.workers.iter().map(|w| w.shards).sum::<usize>()
+                + cluster.local_shards,
+            cluster.shards
+        );
+        assert_eq!(
+            sweep::report_json(&cluster.report)
+                .get("points")
+                .unwrap()
+                .to_string(),
+            sweep::report_json(&local).get("points").unwrap().to_string()
+        );
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::system::Session;
 use crate::vector::ArrowConfig;
 
 use super::analytic;
-use super::profiles::Profile;
+use super::profiles::{Profile, TimingVariant};
 use super::runner::{bench_source, run_on_session, Mode};
 use super::store::ResultStore;
 use super::suite::{BenchSize, Benchmark};
@@ -142,6 +142,33 @@ pub struct EvalPoint {
 }
 
 impl EvalPoint {
+    /// Assemble a point from sweep-grid axes: lanes/VLEN/ELEN go into
+    /// the config directly and the timing variant stamps both cycle
+    /// models — the single place grid coordinates become an
+    /// [`ArrowConfig`], so every sweep axis is canonically folded into
+    /// [`EvalPoint::key`].
+    pub fn from_axes(
+        benchmark: Benchmark,
+        profile: Profile,
+        mode: Mode,
+        lanes: usize,
+        vlen_bits: u32,
+        elen_bits: u32,
+        variant: &TimingVariant,
+    ) -> EvalPoint {
+        EvalPoint {
+            benchmark,
+            profile,
+            mode,
+            config: variant.apply(ArrowConfig {
+                lanes,
+                vlen_bits,
+                elen_bits,
+                ..Default::default()
+            }),
+        }
+    }
+
     pub fn size(&self) -> BenchSize {
         self.benchmark.size(&self.profile)
     }

@@ -6,7 +6,8 @@
 //! functions the paper used.
 //!
 //! * [`profiles`] — Table 1's small/medium/large data profiles, plus
-//!   scaled-down profiles for fast functional testing.
+//!   scaled-down profiles for fast functional testing and the registry
+//!   of named timing variants (the sweep grid's timing axis).
 //! * [`suite`] — the assembly generators and expected-result oracles.
 //! * [`runner`] — assemble + load + simulate + verify one benchmark.
 //! * [`analytic`] — the cycle-count extrapolation for profiles too large
@@ -19,8 +20,9 @@
 //! * [`store`] — the persistent on-disk result store (JSON-lines,
 //!   keyed by canonical point key + crate version, corruption-tolerant).
 //! * [`sweep`] — parallel design-space sweeps: a worker pool fanning the
-//!   (benchmark × profile × lanes × VLEN) cartesian product across
-//!   cores, deduplicated through the canonical point key.
+//!   (benchmark × profile × mode × lanes × VLEN × ELEN × timing)
+//!   cartesian product across cores, deduplicated through the
+//!   canonical point key.
 //! * [`cluster`] — the distribution layer: a shard coordinator fanning
 //!   deterministic sub-grids across a fleet of `arrow serve` workers
 //!   over TCP (with retry and local fallback), and a supervisor for
@@ -40,7 +42,9 @@ pub use cluster::{run_cluster, run_fleet, ClusterReport, ClusterSpec, FleetSpec}
 pub use eval::{
     point_key, EvalOutcome, EvalPoint, Evaluator, ProgramCache, Provenance,
 };
-pub use profiles::{ConvShape, Profile, PROFILES};
+pub use profiles::{
+    ConvShape, Profile, TimingVariant, PROFILES, TIMING_VARIANTS,
+};
 pub use runner::{run_benchmark, BenchResult, Mode};
 pub use store::ResultStore;
 pub use suite::{Benchmark, BENCHMARKS};

@@ -1,4 +1,8 @@
-//! Table 1: benchmark data-size profiles.
+//! Table 1: benchmark data-size profiles, plus the registry of named
+//! timing variants — the presets behind the sweep grid's timing axis.
+
+use crate::mem::MemTiming;
+use crate::vector::{ArrowConfig, VectorTiming};
 
 /// 2-D convolution workload shape (Table 1 bottom half).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,6 +71,96 @@ impl Profile {
     }
 }
 
+/// A named (vector, memory) timing preset — one value on the timing
+/// axis of the sweep grid.  Variants are resolvable from a string for
+/// CLI (`--timing baseline,burst-mem`) and JSON (`"timing": [...]`)
+/// use, and stamp *both* cycle models onto an [`ArrowConfig`], so the
+/// canonical point key (which folds in every timing constant) keeps
+/// every variant's results separate in the dedup cache and the
+/// persistent store.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingVariant {
+    pub name: &'static str,
+    pub timing: VectorTiming,
+    pub mem_timing: MemTiming,
+}
+
+/// The paper configuration's cycle models (identical to the
+/// `ArrowConfig::default()` constants — pinned by a test).
+pub const TIMING_BASELINE: TimingVariant = TimingVariant {
+    name: "baseline",
+    timing: VectorTiming {
+        dispatch: 1,
+        issue_overhead: 2,
+        alu_words_per_cycle: 2,
+        reduction_tail: 2,
+        scalar_readback: 1,
+    },
+    mem_timing: MemTiming {
+        burst_setup: 2,
+        beats_per_cycle: 4,
+        strided_cycles_per_beat: 2,
+        scalar_access: 13,
+    },
+};
+
+/// A tightly-coupled host: vector instructions reach Arrow's decoder in
+/// the issue cycle (no AXI dispatch hop), the pipeline fill shrinks,
+/// and scalar readbacks don't stall the host.
+pub const TIMING_FAST_DISPATCH: TimingVariant = TimingVariant {
+    name: "fast-dispatch",
+    timing: VectorTiming {
+        dispatch: 0,
+        issue_overhead: 1,
+        alu_words_per_cycle: TIMING_BASELINE.timing.alu_words_per_cycle,
+        reduction_tail: TIMING_BASELINE.timing.reduction_tail,
+        scalar_readback: 0,
+    },
+    mem_timing: TIMING_BASELINE.mem_timing,
+};
+
+/// A faster DDR interface: half the burst setup, twice the streaming
+/// beat rate, cheaper strided and scalar accesses.
+pub const TIMING_BURST_MEM: TimingVariant = TimingVariant {
+    name: "burst-mem",
+    timing: TIMING_BASELINE.timing,
+    mem_timing: MemTiming {
+        burst_setup: 1,
+        beats_per_cycle: 8,
+        strided_cycles_per_beat: 1,
+        scalar_access: 7,
+    },
+};
+
+/// Every registered timing variant; name lookups, the server's `list`
+/// response and CLI parsing all derive from this registry.
+pub const TIMING_VARIANTS: [TimingVariant; 3] =
+    [TIMING_BASELINE, TIMING_FAST_DISPATCH, TIMING_BURST_MEM];
+
+impl TimingVariant {
+    pub fn by_name(name: &str) -> Option<TimingVariant> {
+        TIMING_VARIANTS.into_iter().find(|v| v.name == name)
+    }
+
+    /// Name of the registered variant matching a config's two cycle
+    /// models, if any — ad-hoc configs report as `None` ("custom").
+    pub fn name_for(config: &ArrowConfig) -> Option<&'static str> {
+        TIMING_VARIANTS
+            .iter()
+            .find(|v| {
+                v.timing == config.timing && v.mem_timing == config.mem_timing
+            })
+            .map(|v| v.name)
+    }
+
+    /// Stamp this variant's cycle models onto a config.
+    pub fn apply(&self, mut config: ArrowConfig) -> ArrowConfig {
+        config.timing = self.timing;
+        config.mem_timing = self.mem_timing;
+        config
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +182,37 @@ mod tests {
     fn lookup() {
         assert_eq!(Profile::by_name("medium"), Some(MEDIUM));
         assert_eq!(Profile::by_name("huge"), None);
+    }
+
+    #[test]
+    fn baseline_variant_matches_the_default_config() {
+        let c = ArrowConfig::default();
+        assert_eq!(TIMING_BASELINE.timing, c.timing);
+        assert_eq!(TIMING_BASELINE.mem_timing, c.mem_timing);
+        assert_eq!(TimingVariant::name_for(&c), Some("baseline"));
+    }
+
+    #[test]
+    fn timing_registry_is_complete_and_unambiguous() {
+        let mut names: Vec<&str> =
+            TIMING_VARIANTS.iter().map(|v| v.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), TIMING_VARIANTS.len(), "duplicate names");
+        for v in TIMING_VARIANTS {
+            assert_eq!(TimingVariant::by_name(v.name), Some(v));
+            // Round-trips through a config: `apply` then `name_for`.
+            let c = v.apply(ArrowConfig::default());
+            assert_eq!(TimingVariant::name_for(&c), Some(v.name));
+            // Divisor fields must never be zeroed by a preset.
+            assert!(v.timing.alu_words_per_cycle >= 1, "{}", v.name);
+            assert!(v.mem_timing.beats_per_cycle >= 1, "{}", v.name);
+        }
+        assert_eq!(TimingVariant::by_name("warp-drive"), None);
+        // An ad-hoc config matches no registered variant.
+        let mut custom = ArrowConfig::default();
+        custom.timing.dispatch += 17;
+        assert_eq!(TimingVariant::name_for(&custom), None);
     }
 
     #[test]

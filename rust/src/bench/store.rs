@@ -22,6 +22,7 @@ use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::io::{BufRead, BufReader, ErrorKind, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::system::machine::RunSummary;
@@ -39,6 +40,48 @@ pub const STORE_FILE: &str = "results.jsonl";
 /// longer recorded (existing keys keep serving and upgrading).
 pub const MAX_STORE_ENTRIES: usize = 1 << 20;
 
+/// Ledger size above which [`ResultStore::open`] compacts the file
+/// (via [`compact_versioned`]) before loading, so a long-lived cache
+/// dir sheds its stale-version, superseded and malformed lines
+/// automatically instead of growing until someone remembers `arrow
+/// cache compact`.  Like manual compaction, the rewrite can race a
+/// peer's *in-flight* append (that one line may be lost); live peers
+/// otherwise recover at their next [`refresh`](ResultStore::refresh),
+/// which detects the replaced file and re-targets its append handle —
+/// fleet workers refresh before every sweep request.
+pub const AUTO_COMPACT_BYTES: u64 = 32 * 1024 * 1024;
+
+/// Ledger health counters, surfaced by the `{"cmd": "shard"}`
+/// handshake so a coordinator can see how bloated a worker's store is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StoreStats {
+    /// Live records in the in-memory index.
+    pub entries: usize,
+    /// Ledger bytes on disk right now.
+    pub bytes: u64,
+    /// Superseded records observed (dead lines an older record left in
+    /// the ledger): counted exactly when the ledger is (re)loaded and
+    /// whenever this handle re-records a key.  Peer upgrades folded in
+    /// by an incremental [`ResultStore::refresh`] are not re-counted —
+    /// the stat is a bloat gauge, not an audit.
+    pub superseded: u64,
+}
+
+/// Identity of the backing file — how [`ResultStore::refresh`] detects
+/// a ledger *replaced* underneath a live handle (compaction renames a
+/// rewritten file over the old one).  `None` where the platform has no
+/// stable file identity; the length-shrank heuristic still applies.
+#[cfg(unix)]
+fn file_id(meta: &std::fs::Metadata) -> Option<(u64, u64)> {
+    use std::os::unix::fs::MetadataExt;
+    Some((meta.dev(), meta.ino()))
+}
+
+#[cfg(not(unix))]
+fn file_id(_meta: &std::fs::Metadata) -> Option<(u64, u64)> {
+    None
+}
+
 /// Persistent point-result store: an in-memory index over an
 /// append-only JSON-lines file.
 pub struct ResultStore {
@@ -49,6 +92,11 @@ pub struct ResultStore {
     /// Bytes of the ledger already folded into `entries` — the resume
     /// point for [`refresh`](ResultStore::refresh).
     loaded_bytes: Mutex<u64>,
+    /// Superseded records observed so far (see [`StoreStats`]).
+    superseded: AtomicU64,
+    /// Identity of the file the append handle points at, so a refresh
+    /// notices the ledger was replaced by compaction.
+    known_id: Mutex<Option<(u64, u64)>>,
     /// Append handle, serialised so concurrent workers never interleave
     /// partial lines.
     file: Mutex<File>,
@@ -104,23 +152,49 @@ impl ResultStore {
         dir: &Path,
         version: &str,
     ) -> std::io::Result<ResultStore> {
+        ResultStore::open_tuned(dir, version, AUTO_COMPACT_BYTES)
+    }
+
+    /// [`open_versioned`](ResultStore::open_versioned) with an explicit
+    /// auto-compaction threshold (tests exercise the rewrite with tiny
+    /// ledgers).
+    pub fn open_tuned(
+        dir: &Path,
+        version: &str,
+        auto_compact_bytes: u64,
+    ) -> std::io::Result<ResultStore> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(STORE_FILE);
+        // Auto-compaction: a ledger grown past the threshold is
+        // rewritten (dropping stale-version, superseded and malformed
+        // lines) before loading.  Best-effort — a failed compaction
+        // still loads the ledger as-is.
+        if std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0)
+            > auto_compact_bytes
+        {
+            let _ = compact_versioned(dir, version, false);
+        }
         let (records, loaded_bytes) = load_records(&path, 0, version)?;
         let mut entries = HashMap::new();
+        let mut superseded = 0u64;
         for (key, outcome) in records {
             // Later lines win: a re-recorded key (e.g. an analytic
             // estimate upgraded to an exact simulation) supersedes the
             // original.
-            entries.insert(key, outcome);
+            if entries.insert(key, outcome).is_some() {
+                superseded += 1;
+            }
         }
         let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let known_id = std::fs::metadata(&path).ok().as_ref().and_then(file_id);
         Ok(ResultStore {
             path,
             version: version.to_string(),
             entries: Mutex::new(entries),
             entry_limit: MAX_STORE_ENTRIES,
             loaded_bytes: Mutex::new(loaded_bytes),
+            superseded: AtomicU64::new(superseded),
+            known_id: Mutex::new(known_id),
             file: Mutex::new(file),
         })
     }
@@ -138,21 +212,67 @@ impl ResultStore {
     /// appends are re-read harmlessly — same key, same outcome).
     pub fn refresh(&self) -> std::io::Result<usize> {
         let mut offset = self.loaded_bytes.lock().unwrap();
-        let len = match std::fs::metadata(&self.path) {
-            Ok(meta) => meta.len(),
-            Err(e) if e.kind() == ErrorKind::NotFound => 0,
+        let meta = match std::fs::metadata(&self.path) {
+            Ok(meta) => Some(meta),
+            Err(e) if e.kind() == ErrorKind::NotFound => None,
             Err(e) => return Err(e),
         };
+        let len = meta.as_ref().map(|m| m.len()).unwrap_or(0);
+        let id = meta.as_ref().and_then(file_id);
         let mut entries = self.entries.lock().unwrap();
-        if len < *offset {
+        let mut known_id = self.known_id.lock().unwrap();
+        // A ledger *replaced* underneath us (compaction renames a
+        // rewritten file over the old one) invalidates everything: the
+        // byte watermark points into the dead inode, and — worse — so
+        // does the append handle, whose writes would vanish silently.
+        // The length-shrank check alone can miss a replacement whose
+        // rewrite is no shorter than what we had loaded.
+        let replaced = id != *known_id;
+        let rebuilt = replaced || len < *offset;
+        if rebuilt {
             *offset = 0;
             entries.clear();
+            // The rebuild below recounts the dead lines exactly.
+            self.superseded.store(0, Ordering::Relaxed);
+            if replaced {
+                // Re-target the append handle at the live file.  Only
+                // a *successful* reopen updates the known identity —
+                // a transient open failure leaves it stale so the next
+                // refresh retries, rather than silently appending into
+                // the dead inode forever.  Re-stat after the reopen:
+                // `create(true)` may just have recreated a deleted
+                // ledger, whose identity `id` (observed before) misses.
+                if let Ok(file) = OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&self.path)
+                {
+                    *self.file.lock().unwrap() = file;
+                    *known_id = std::fs::metadata(&self.path)
+                        .ok()
+                        .as_ref()
+                        .and_then(file_id);
+                }
+            }
         }
+        drop(known_id);
         let (records, end) = load_records(&self.path, *offset, &self.version)?;
         let mut folded = 0;
         for (key, outcome) in records {
             if entries.contains_key(&key) || entries.len() < self.entry_limit
             {
+                // Only a full rebuild counts dead lines here — that
+                // walk sees every line exactly once, so repeated keys
+                // are superseded lines, precisely.  An *incremental*
+                // refresh re-reads this handle's own recent appends
+                // (the watermark trails local puts), where counting
+                // replacements would tally the same dead line several
+                // times over; local supersessions were already counted
+                // by `put`, and a peer's are picked up at the next
+                // (re)load.
+                if rebuilt && entries.contains_key(&key) {
+                    self.superseded.fetch_add(1, Ordering::Relaxed);
+                }
                 entries.insert(key, outcome);
                 folded += 1;
             }
@@ -190,6 +310,18 @@ impl ResultStore {
         Some(outcome)
     }
 
+    /// Ledger health counters (see [`StoreStats`]); `bytes` stats the
+    /// file fresh so peer appends show up.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            entries: self.len(),
+            bytes: std::fs::metadata(&self.path)
+                .map(|m| m.len())
+                .unwrap_or(0),
+            superseded: self.superseded.load(Ordering::Relaxed),
+        }
+    }
+
     /// Record one evaluated point.  Re-recording an identical outcome
     /// is a no-op; a *different* outcome for an existing key (an
     /// analytic estimate upgraded to an exact simulation) is appended
@@ -207,7 +339,11 @@ impl ResultStore {
             {
                 return Ok(());
             }
-            entries.insert(key.to_string(), outcome.clone());
+            // Re-recording an existing key leaves the old line dead in
+            // the ledger until the next compaction.
+            if entries.insert(key.to_string(), outcome.clone()).is_some() {
+                self.superseded.fetch_add(1, Ordering::Relaxed);
+            }
         }
         // One `write_all` of the whole line (O_APPEND) so concurrent
         // processes sharing a cache dir never interleave fragments.
@@ -689,6 +825,118 @@ mod tests {
         let again = compact_versioned(&dir, "0.1.0", false).unwrap();
         assert_eq!(again.total_lines, 2);
         assert_eq!(again.dropped(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn incremental_refresh_does_not_recount_own_superseded_lines() {
+        let dir = tmp_dir("no-overcount");
+        let store = ResultStore::open(&dir).unwrap();
+        store.put("k", &sample_outcome()).unwrap();
+        store
+            .put("k", &EvalOutcome { cycles: 1, ..sample_outcome() })
+            .unwrap();
+        assert_eq!(store.stats().superseded, 1);
+        // Incremental refreshes re-read this handle's own appends (the
+        // watermark trails local puts); the one dead line must not be
+        // tallied again and again.
+        store.refresh().unwrap();
+        store.refresh().unwrap();
+        assert_eq!(store.stats().superseded, 1);
+        assert_eq!(store.get("k").unwrap().cycles, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Compaction replaces the ledger file; a live peer must notice
+    /// even when the rewritten file is no shorter than its watermark,
+    /// and must re-target its append handle — otherwise its writes go
+    /// to the dead inode and vanish.  (File identity is unix-only.)
+    #[cfg(unix)]
+    #[test]
+    fn refresh_retargets_append_handle_after_ledger_replacement() {
+        let dir = tmp_dir("retarget");
+        let a = ResultStore::open(&dir).unwrap();
+        let b = ResultStore::open(&dir).unwrap();
+        a.put("k", &sample_outcome()).unwrap();
+        a.put("k", &EvalOutcome { cycles: 9, ..sample_outcome() })
+            .unwrap();
+        b.refresh().unwrap();
+        let watermark = std::fs::metadata(a.path()).unwrap().len();
+        // Compact (drops the superseded line, renames a new file in),
+        // then pad through a fresh handle until the new ledger is at
+        // least as long as b's watermark — only the file identity can
+        // betray the replacement now.
+        assert!(compact(&dir, false).unwrap().dropped() > 0);
+        let c = ResultStore::open(&dir).unwrap();
+        c.put("pad1", &sample_outcome()).unwrap();
+        c.put("pad2", &sample_outcome()).unwrap();
+        assert!(
+            std::fs::metadata(a.path()).unwrap().len() >= watermark,
+            "padding must defeat the length-shrank heuristic"
+        );
+        assert_eq!(b.refresh().unwrap(), 3, "full rebuild: k + 2 pads");
+        assert_eq!(b.get("k").unwrap().cycles, 9);
+        // b's appends land in the *live* file, visible to peers.
+        b.put("fresh", &sample_outcome()).unwrap();
+        c.refresh().unwrap();
+        assert!(
+            c.get("fresh").is_some(),
+            "append went to the dead pre-compaction inode"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_auto_compacts_past_the_threshold_and_reports_stats() {
+        let dir = tmp_dir("auto-compact");
+        let version = env!("CARGO_PKG_VERSION");
+        {
+            let store = ResultStore::open(&dir).unwrap();
+            store.put("a", &sample_outcome()).unwrap();
+            store.put("b", &sample_outcome()).unwrap();
+            // Supersede `a` twice: two dead lines in the ledger.
+            for cycles in [111, 222] {
+                let upgraded =
+                    EvalOutcome { cycles, ..sample_outcome() };
+                store.put("a", &upgraded).unwrap();
+            }
+            let stats = store.stats();
+            assert_eq!(stats.entries, 2);
+            assert_eq!(stats.superseded, 2);
+            assert!(stats.bytes > 0);
+            assert_eq!(
+                std::fs::read_to_string(store.path())
+                    .unwrap()
+                    .lines()
+                    .count(),
+                4
+            );
+        }
+        // Reopen below the default threshold: no rewrite.
+        let lazy = ResultStore::open(&dir).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(lazy.path()).unwrap().lines().count(),
+            4
+        );
+        // Superseded lines are re-observed at load.
+        assert_eq!(lazy.stats().superseded, 2);
+        drop(lazy);
+        // A one-byte threshold forces the auto-compaction: the ledger
+        // shrinks to its live records and loads identically.
+        let compacted = ResultStore::open_tuned(&dir, version, 1).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(compacted.path())
+                .unwrap()
+                .lines()
+                .count(),
+            2
+        );
+        assert_eq!(compacted.len(), 2);
+        assert_eq!(compacted.get("a").unwrap().cycles, 222);
+        assert!(compacted.get("b").is_some());
+        let stats = compacted.stats();
+        assert_eq!(stats.entries, 2);
+        assert_eq!(stats.superseded, 0, "compacted ledger has no dead lines");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

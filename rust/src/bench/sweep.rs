@@ -3,8 +3,10 @@
 //! The paper's headline claim (2–78x over the scalar host) comes from
 //! evaluating many (benchmark × profile × lanes × VLEN) points; the
 //! SPEED and Flexible-Vector-Integration lines of work push the same
-//! grid much wider.  This module fans the cartesian product of a
-//! [`SweepSpec`] across a `std::thread` worker pool:
+//! grid much wider — the multi-precision (ELEN) and timing-variant
+//! axes are first-class here for exactly that reason.  This module
+//! fans the cartesian product of a [`SweepSpec`] across a
+//! `std::thread` worker pool:
 //!
 //! * every *unique* point is evaluated exactly once — the grid is
 //!   deduplicated through the canonical [`point_key`] (which folds in
@@ -30,12 +32,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::util::json::Json;
-use crate::vector::ArrowConfig;
 
 use super::analytic;
 use super::eval::{EvalPoint, Evaluator};
-use super::profiles::{self, Profile};
-use super::runner::Mode;
+use super::profiles::{self, Profile, TimingVariant};
+use super::runner::{self, Mode};
 use super::store::ResultStore;
 use super::suite::{Benchmark, BENCHMARKS};
 
@@ -52,6 +53,11 @@ pub struct SweepSpec {
     pub modes: Vec<Mode>,
     pub lanes: Vec<usize>,
     pub vlens: Vec<u32>,
+    /// Element widths (bits).  ELEN halves/doubles the elements per
+    /// SIMD word pass, so this is the multi-precision axis.
+    pub elens: Vec<u32>,
+    /// Named timing presets (vector + memory cycle models).
+    pub timing: Vec<TimingVariant>,
     /// Workload seed (same seed => byte-identical per-point results).
     pub seed: u64,
     /// Worker threads; 0 picks the machine's available parallelism.
@@ -72,6 +78,8 @@ impl Default for SweepSpec {
             modes: vec![Mode::Vector],
             lanes: vec![2],
             vlens: vec![256],
+            elens: vec![64],
+            timing: vec![profiles::TIMING_BASELINE],
             seed: 42,
             threads: 0,
             analytic_limit: Some(analytic::SIM_LIMIT),
@@ -83,23 +91,41 @@ impl Default for SweepSpec {
 /// Hard cap on worker threads, whatever a request asks for.
 pub const MAX_SWEEP_THREADS: usize = 64;
 
+/// Number of cartesian axes in a [`SweepSpec`] grid, outermost first:
+/// benchmarks, profiles, modes, lanes, VLENs, ELENs, timing variants.
+const AXES: usize = 7;
+
+/// One shard of the grid: a half-open index range per axis.  Only the
+/// partitioner's shapes occur — single-value prefixes, one chunked
+/// axis, full suffixes — but the slicing is fully general.
+type AxisRanges = [(usize, usize); AXES];
+
 impl SweepSpec {
+    fn axis_lens(&self) -> [usize; AXES] {
+        [
+            self.benchmarks.len(),
+            self.profiles.len(),
+            self.modes.len(),
+            self.lanes.len(),
+            self.vlens.len(),
+            self.elens.len(),
+            self.timing.len(),
+        ]
+    }
+
     /// Number of grid points (before deduplication).  Saturates rather
     /// than wrapping so oversized request grids always trip size limits.
     pub fn grid_len(&self) -> usize {
-        self.benchmarks
-            .len()
-            .saturating_mul(self.profiles.len())
-            .saturating_mul(self.modes.len())
-            .saturating_mul(self.lanes.len())
-            .saturating_mul(self.vlens.len())
+        self.axis_lens()
+            .into_iter()
+            .fold(1usize, |acc, len| acc.saturating_mul(len))
     }
 
     /// Expand the cartesian grid in its canonical deterministic order
-    /// (benchmarks, then profiles, modes, lanes, VLENs — outermost
-    /// first), pairing every point with its canonical key.  This order
-    /// is the report order of [`run_sweep`] and the contract
-    /// [`partition`](SweepSpec::partition) preserves.
+    /// (benchmarks, then profiles, modes, lanes, VLENs, ELENs, timing
+    /// variants — outermost first), pairing every point with its
+    /// canonical key.  This order is the report order of [`run_sweep`]
+    /// and the contract [`partition`](SweepSpec::partition) preserves.
     pub fn expand(&self) -> Vec<(EvalPoint, String)> {
         let mut grid: Vec<(EvalPoint, String)> =
             Vec::with_capacity(self.grid_len());
@@ -108,18 +134,16 @@ impl SweepSpec {
                 for &mode in &self.modes {
                     for &lanes in &self.lanes {
                         for &vlen_bits in &self.vlens {
-                            let point = EvalPoint {
-                                benchmark,
-                                profile: *profile,
-                                mode,
-                                config: ArrowConfig {
-                                    lanes,
-                                    vlen_bits,
-                                    ..Default::default()
-                                },
-                            };
-                            let key = point.key(self.seed);
-                            grid.push((point, key));
+                            for &elen_bits in &self.elens {
+                                for variant in &self.timing {
+                                    let point = EvalPoint::from_axes(
+                                        benchmark, *profile, mode, lanes,
+                                        vlen_bits, elen_bits, variant,
+                                    );
+                                    let key = point.key(self.seed);
+                                    grid.push((point, key));
+                                }
+                            }
                         }
                     }
                 }
@@ -128,50 +152,195 @@ impl SweepSpec {
         grid
     }
 
-    /// Split the grid into cartesian sub-grids of at most `max_points`
-    /// points each, such that the concatenated expansions of the
-    /// returned specs equal `self.expand()` exactly — same points, same
-    /// order.  Sub-grids are the unit the cluster coordinator ships to
-    /// workers as ordinary `sweep` requests; `seed` and `analytic_limit`
-    /// are inherited so every shard answers exactly as a local run
-    /// would.
-    pub fn partition(&self, max_points: usize) -> Vec<SweepSpec> {
-        let max = max_points.max(1);
-        let mut shards = Vec::new();
-        for &benchmark in &self.benchmarks {
-            for profile in &self.profiles {
-                for &mode in &self.modes {
-                    let sub = |lanes: Vec<usize>, vlens: Vec<u32>| SweepSpec {
-                        benchmarks: vec![benchmark],
-                        profiles: vec![*profile],
-                        modes: vec![mode],
-                        lanes,
-                        vlens,
-                        ..self.clone()
-                    };
-                    if self.vlens.len() > max {
-                        // One VLEN row alone overflows a shard: chunk
-                        // the VLEN list, one lane entry per shard.
-                        for &lane in &self.lanes {
-                            for chunk in self.vlens.chunks(max) {
-                                shards.push(sub(vec![lane], chunk.to_vec()));
-                            }
-                        }
-                    } else {
-                        // Whole lane rows fit: chunk the lane list so
-                        // each shard carries `rows` full VLEN rows.
-                        let rows = max / self.vlens.len().max(1);
-                        for chunk in self.lanes.chunks(rows.max(1)) {
-                            shards.push(sub(
-                                chunk.to_vec(),
-                                self.vlens.clone(),
-                            ));
-                        }
+    /// The sub-spec selecting `ranges` of this spec's axes.
+    fn slice(&self, r: &AxisRanges) -> SweepSpec {
+        SweepSpec {
+            benchmarks: self.benchmarks[r[0].0..r[0].1].to_vec(),
+            profiles: self.profiles[r[1].0..r[1].1].to_vec(),
+            modes: self.modes[r[2].0..r[2].1].to_vec(),
+            lanes: self.lanes[r[3].0..r[3].1].to_vec(),
+            vlens: self.vlens[r[4].0..r[4].1].to_vec(),
+            elens: self.elens[r[5].0..r[5].1].to_vec(),
+            timing: self.timing[r[6].0..r[6].1].to_vec(),
+            ..self.clone()
+        }
+    }
+
+    /// Estimated evaluation cost of one grid point.  Depends only on
+    /// the benchmark instance (benchmark × profile) and mode — never on
+    /// lanes/VLEN/ELEN/timing, which only reshape the same instruction
+    /// stream — so a whole inner block shares one per-point cost.
+    fn point_cost(&self, bi: usize, pi: usize, mi: usize) -> u64 {
+        let b = self.benchmarks[bi];
+        runner::estimated_instructions(
+            b,
+            b.size(&self.profiles[pi]),
+            self.modes[mi],
+        )
+    }
+
+    /// Points contributed by one value at `level` (the product of all
+    /// inner axis lengths).
+    fn value_points(lens: &[usize; AXES], level: usize) -> usize {
+        lens[level + 1..]
+            .iter()
+            .fold(1usize, |acc, &len| acc.saturating_mul(len))
+    }
+
+    /// Estimated cost contributed by value `v` at `level`, with
+    /// `cur[..level]` pinned to single values and all inner axes full.
+    fn value_cost(
+        &self,
+        lens: &[usize; AXES],
+        cur: &AxisRanges,
+        level: usize,
+        v: usize,
+    ) -> u64 {
+        // Points per (benchmark, profile, mode) combo.
+        let block = lens[3..]
+            .iter()
+            .fold(1u64, |acc, &len| acc.saturating_mul(len as u64));
+        let mut total = 0u64;
+        match level {
+            0 => {
+                for pi in 0..lens[1] {
+                    for mi in 0..lens[2] {
+                        total = total.saturating_add(
+                            self.point_cost(v, pi, mi).saturating_mul(block),
+                        );
                     }
                 }
             }
+            1 => {
+                for mi in 0..lens[2] {
+                    total = total.saturating_add(
+                        self.point_cost(cur[0].0, v, mi)
+                            .saturating_mul(block),
+                    );
+                }
+            }
+            2 => {
+                total = self
+                    .point_cost(cur[0].0, cur[1].0, v)
+                    .saturating_mul(block);
+            }
+            _ => {
+                total = self
+                    .point_cost(cur[0].0, cur[1].0, cur[2].0)
+                    .saturating_mul(Self::value_points(lens, level) as u64);
+            }
         }
-        shards
+        total
+    }
+
+    /// Split the grid into cartesian sub-grids of at most `max_points`
+    /// points each, such that the concatenated expansions of the
+    /// returned specs equal `self.expand()` exactly — same points, same
+    /// order.  Every emitted shard respects `max_points` *exactly*:
+    /// when even one row of an axis overflows the cap, the partitioner
+    /// recurses inward and splits within the row (down to single
+    /// points), never over-filling past a fleet-advertised grid cap.
+    /// Sub-grids are the unit the cluster coordinator ships to workers
+    /// as ordinary `sweep` requests; `seed` and `analytic_limit` are
+    /// inherited so every shard answers exactly as a local run would.
+    pub fn partition(&self, max_points: usize) -> Vec<SweepSpec> {
+        self.partition_by_cost(max_points, u64::MAX)
+    }
+
+    /// [`partition`](SweepSpec::partition) with an additional budget on
+    /// the *estimated cost* (cumulative
+    /// [`estimated_instructions`](runner::estimated_instructions)) per
+    /// shard — dynamic shard sizing.  Cheap points pack densely (up to
+    /// `max_points`) while large-profile/scalar-mode points split into
+    /// small shards, so one expensive shard can't straggle a whole
+    /// cluster sweep.  A single point whose own cost exceeds
+    /// `max_cost` still gets a (one-point) shard — points are the
+    /// atom.  Deterministic: the same spec always yields the same
+    /// shards, and concatenated expansions still equal
+    /// `self.expand()` byte-for-byte.
+    pub fn partition_by_cost(
+        &self,
+        max_points: usize,
+        max_cost: u64,
+    ) -> Vec<SweepSpec> {
+        let lens = self.axis_lens();
+        if lens.contains(&0) {
+            return Vec::new();
+        }
+        let mut ranges = Vec::new();
+        let mut cur: AxisRanges = [(0, 0); AXES];
+        self.split_level(
+            &lens,
+            0,
+            &mut cur,
+            max_points.max(1),
+            max_cost.max(1),
+            &mut ranges,
+        );
+        ranges.iter().map(|r| self.slice(r)).collect()
+    }
+
+    /// Greedy order-preserving chunker: walk `level`'s values in order,
+    /// growing each chunk while both budgets hold (a chunk carries all
+    /// inner axes in full); a value too big to stand alone recurses one
+    /// axis inward.
+    fn split_level(
+        &self,
+        lens: &[usize; AXES],
+        level: usize,
+        cur: &mut AxisRanges,
+        max_points: usize,
+        max_cost: u64,
+        out: &mut Vec<AxisRanges>,
+    ) {
+        let mut s = 0;
+        while s < lens[level] {
+            let mut e = s;
+            let mut points = 0usize;
+            let mut cost = 0u64;
+            while e < lens[level] {
+                let p = points
+                    .saturating_add(Self::value_points(lens, level));
+                let c = cost
+                    .saturating_add(self.value_cost(lens, cur, level, e));
+                if p > max_points || c > max_cost {
+                    break;
+                }
+                points = p;
+                cost = c;
+                e += 1;
+            }
+            if e > s {
+                let mut shard = *cur;
+                shard[level] = (s, e);
+                for (i, &len) in lens.iter().enumerate().skip(level + 1) {
+                    shard[i] = (0, len);
+                }
+                out.push(shard);
+                s = e;
+            } else if level + 1 < AXES {
+                // Even one value of this axis overflows a budget: pin
+                // it and split within the row.
+                cur[level] = (s, s + 1);
+                self.split_level(
+                    lens,
+                    level + 1,
+                    cur,
+                    max_points,
+                    max_cost,
+                    out,
+                );
+                s += 1;
+            } else {
+                // A single innermost point always fits the point cap
+                // (>= 1); only its *cost* can overflow, and points are
+                // the atom — emit it alone.
+                let mut shard = *cur;
+                shard[level] = (s, s + 1);
+                out.push(shard);
+                s += 1;
+            }
+        }
     }
 }
 
@@ -184,8 +353,37 @@ pub struct SweepPoint {
     pub mode: Mode,
     pub lanes: usize,
     pub vlen_bits: u32,
+    pub elen_bits: u32,
+    /// Name of the registered timing variant this point ran under
+    /// ("custom" for an ad-hoc config reaching the report some other
+    /// way — grid points always name a registered variant).
+    pub timing: &'static str,
     pub key: String,
     pub outcome: PointResult,
+}
+
+impl SweepPoint {
+    /// Assemble the report row for one evaluated grid point (shared by
+    /// the local sweep pool and the cluster merge walk, so both render
+    /// byte-identical JSON).
+    pub(crate) fn from_eval(
+        point: &EvalPoint,
+        key: String,
+        outcome: PointResult,
+    ) -> SweepPoint {
+        SweepPoint {
+            benchmark: point.benchmark,
+            profile: point.profile.name,
+            mode: point.mode,
+            lanes: point.config.lanes,
+            vlen_bits: point.config.vlen_bits,
+            elen_bits: point.config.elen_bits,
+            timing: TimingVariant::name_for(&point.config)
+                .unwrap_or("custom"),
+            key,
+            outcome,
+        }
+    }
 }
 
 /// The sweep result set, in deterministic grid order.
@@ -302,15 +500,7 @@ pub fn run_sweep_with(spec: &SweepSpec, evaluator: &Evaluator) -> SweepReport {
             let outcome = results[idx]
                 .clone()
                 .expect("worker pool completed every unique job");
-            SweepPoint {
-                benchmark: point.benchmark,
-                profile: point.profile.name,
-                mode: point.mode,
-                lanes: point.config.lanes,
-                vlen_bits: point.config.vlen_bits,
-                key,
-                outcome,
-            }
+            SweepPoint::from_eval(&point, key, outcome)
         })
         .collect();
     let failed_puts =
@@ -338,6 +528,8 @@ fn point_json(p: &SweepPoint) -> Json {
         ("mode", p.mode.name().into()),
         ("lanes", (p.lanes as u64).into()),
         ("vlen", u64::from(p.vlen_bits).into()),
+        ("elen", u64::from(p.elen_bits).into()),
+        ("timing", p.timing.into()),
         ("key", p.key.as_str().into()),
     ];
     match &p.outcome {
@@ -392,7 +584,8 @@ pub fn report_json(report: &SweepReport) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bench::runner::run_benchmark;
+    use crate::bench::runner::{estimated_instructions, run_benchmark};
+    use crate::vector::ArrowConfig;
 
     fn small_spec() -> SweepSpec {
         SweepSpec {
@@ -524,17 +717,26 @@ mod tests {
             modes: vec![Mode::Scalar, Mode::Vector],
             lanes: vec![1, 2, 4],
             vlens: vec![128, 256],
+            elens: vec![32, 64],
+            timing: vec![
+                profiles::TIMING_BASELINE,
+                profiles::TIMING_BURST_MEM,
+            ],
             seed: 9,
             ..Default::default()
         };
         let full: Vec<String> =
             spec.expand().into_iter().map(|(_, k)| k).collect();
         assert_eq!(full.len(), spec.grid_len());
+        assert_eq!(full.len(), 2 * 2 * 3 * 2 * 2 * 2);
         for max in [1, 2, 3, 4, 7, 100] {
             let shards = spec.partition(max);
             let mut concat = Vec::new();
             for shard in &shards {
                 let points = shard.expand();
+                // Every shard respects the cap *exactly* — even when
+                // the cap is smaller than one row of any axis, the
+                // partitioner splits within the row.
                 assert!(
                     !points.is_empty() && points.len() <= max,
                     "shard of {} points under max {max}",
@@ -548,17 +750,138 @@ mod tests {
             }
             assert_eq!(concat, full, "max={max}");
         }
-        // A cap at least as large as the grid yields one shard per
-        // (benchmark, profile, mode) group — the coarsest sound split.
-        assert_eq!(spec.partition(usize::MAX).len(), 4);
+        // A cap at least as large as the grid yields a single shard:
+        // the whole spec.
+        assert_eq!(spec.partition(usize::MAX).len(), 1);
     }
 
     #[test]
     fn partition_of_empty_grid_is_empty() {
-        let spec = SweepSpec { lanes: vec![], ..small_spec() };
-        assert_eq!(spec.grid_len(), 0);
-        assert!(spec.partition(8).is_empty());
-        assert!(spec.expand().is_empty());
+        for empty in [
+            SweepSpec { lanes: vec![], ..small_spec() },
+            SweepSpec { elens: vec![], ..small_spec() },
+            SweepSpec { timing: vec![], ..small_spec() },
+        ] {
+            assert_eq!(empty.grid_len(), 0);
+            assert!(empty.partition(8).is_empty());
+            assert!(empty.expand().is_empty());
+        }
+    }
+
+    #[test]
+    fn elen_timing_expansion_order_pinned_byte_for_byte() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![2],
+            vlens: vec![128, 256],
+            elens: vec![32, 64],
+            timing: vec![
+                profiles::TIMING_BASELINE,
+                profiles::TIMING_BURST_MEM,
+            ],
+            seed: 5,
+            threads: 1,
+            ..Default::default()
+        };
+        let keys: Vec<String> =
+            spec.expand().into_iter().map(|(_, k)| k).collect();
+        // The very first key, pinned literally: VLEN-major over
+        // (ELEN, timing), baseline timing constants spelled out.
+        assert_eq!(
+            keys[0],
+            "vector_addition|test|vector|lanes=2|vlen=128|elen=32|im=0\
+             |vt=1.2.2.2.1|mt=2.4.2.13|seed=5"
+        );
+        // And the whole order against a hand-rolled nest: vlens outer,
+        // elens next, timing innermost.
+        let mut want = Vec::new();
+        for vlen in [128u32, 256] {
+            for elen in [32u32, 64] {
+                for variant in
+                    [profiles::TIMING_BASELINE, profiles::TIMING_BURST_MEM]
+                {
+                    let config = variant.apply(ArrowConfig {
+                        lanes: 2,
+                        vlen_bits: vlen,
+                        elen_bits: elen,
+                        ..Default::default()
+                    });
+                    want.push(point_key(
+                        Benchmark::VAdd,
+                        &profiles::TEST,
+                        Mode::Vector,
+                        &config,
+                        5,
+                    ));
+                }
+            }
+        }
+        assert_eq!(keys, want);
+        // Every point is a distinct design point: 8 distinct keys.
+        let mut dedup = keys.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len());
+    }
+
+    #[test]
+    fn cost_partition_is_deterministic_and_bounded() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd, Benchmark::MatMul],
+            profiles: vec![profiles::TEST, profiles::LARGE],
+            modes: vec![Mode::Scalar, Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![128, 256],
+            elens: vec![32, 64],
+            timing: vec![
+                profiles::TIMING_BASELINE,
+                profiles::TIMING_FAST_DISPATCH,
+            ],
+            seed: 1,
+            ..Default::default()
+        };
+        let full: Vec<String> =
+            spec.expand().into_iter().map(|(_, k)| k).collect();
+        let (max_points, max_cost) = (64usize, 1_000_000u64);
+        let shard_keys = |shards: &[SweepSpec]| -> Vec<Vec<String>> {
+            shards
+                .iter()
+                .map(|s| s.expand().into_iter().map(|(_, k)| k).collect())
+                .collect()
+        };
+        let shards = spec.partition_by_cost(max_points, max_cost);
+        // Deterministic: the same spec always yields the same shards.
+        assert_eq!(
+            shard_keys(&shards),
+            shard_keys(&spec.partition_by_cost(max_points, max_cost))
+        );
+        // Concatenated expansions equal the full grid byte-for-byte.
+        let concat: Vec<String> =
+            shard_keys(&shards).into_iter().flatten().collect();
+        assert_eq!(concat, full);
+        // Both budgets hold per shard; only unavoidable single-point
+        // shards may exceed the cost cap.
+        for shard in &shards {
+            let n = shard.grid_len();
+            assert!(n >= 1 && n <= max_points);
+            let cost: u64 = shard
+                .expand()
+                .iter()
+                .map(|(p, _)| {
+                    estimated_instructions(p.benchmark, p.size(), p.mode)
+                })
+                .fold(0u64, |acc, c| acc.saturating_add(c));
+            assert!(
+                cost <= max_cost || n == 1,
+                "{n}-point shard at cost {cost}"
+            );
+        }
+        // Cost-based sizing genuinely splits finer than the pure point
+        // cap wherever expensive (large-profile / scalar matmul)
+        // blocks dominate.
+        assert!(shards.len() > spec.partition(max_points).len());
     }
 
     #[test]

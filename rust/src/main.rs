@@ -5,9 +5,10 @@
 //! arrow bench --benchmark vector_addition --profile small --mode vector
 //! arrow sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
 //!             [--grid-lanes 1,2,4] [--grid-vlens 128,256,512]
+//!             [--elens 32,64] [--timing baseline,burst-mem]
 //!             [--threads N] [--seed N] [--cache-dir DIR]
 //!             [--analytic-limit N | --no-analytic]
-//!             [--workers host:port,... [--shard-points N]]
+//!             [--workers host:port,... [--shard-points N] [--shard-cost N]]
 //! arrow describe datapath|write-enable|simd-alu|system
 //! arrow validate                      # simulator vs XLA golden artifacts
 //! arrow serve [--addr 127.0.0.1:7676] [--cache-dir DIR]
@@ -20,7 +21,7 @@ use arrow_rvv::bench::cluster::{self, ClusterSpec, FleetSpec};
 use arrow_rvv::bench::runner::{run_benchmark, Mode};
 use arrow_rvv::bench::suite::{Benchmark, BENCHMARKS};
 use arrow_rvv::bench::sweep::{report_json, run_sweep, SweepSpec};
-use arrow_rvv::bench::{store, Profile, PROFILES};
+use arrow_rvv::bench::{store, Profile, TimingVariant, PROFILES};
 use arrow_rvv::energy::EnergyModel;
 use arrow_rvv::report;
 use arrow_rvv::system::{describe, server};
@@ -44,9 +45,10 @@ COMMANDS:
   report <table2|table3|table4> [--profiles LIST] [--summary]
   bench --benchmark NAME [--profile NAME] [--mode scalar|vector]
   sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
-        [--grid-lanes LIST] [--grid-vlens LIST] [--threads N] [--seed N]
+        [--grid-lanes LIST] [--grid-vlens LIST] [--elens LIST]
+        [--timing LIST] [--threads N] [--seed N]
         [--cache-dir DIR] [--analytic-limit N | --no-analytic]
-        [--workers HOST:PORT,... [--shard-points N]]
+        [--workers HOST:PORT,... [--shard-points N] [--shard-cost N]]
   describe <datapath|write-enable|simd-alu|system>
   validate
   serve [--addr HOST:PORT] [--cache-dir DIR]
@@ -252,6 +254,15 @@ fn main() -> Result<()> {
                 spec.vlens =
                     parse_list(&list, "VLEN", str::parse::<u32>)?;
             }
+            if let Some(list) = args.opt("--elens") {
+                spec.elens = parse_list(&list, "ELEN", str::parse::<u32>)?;
+            }
+            if let Some(list) = args.opt("--timing") {
+                spec.timing = parse_list(&list, "timing variant", |name| {
+                    TimingVariant::by_name(name)
+                        .ok_or("unknown timing variant")
+                })?;
+            }
             if let Some(t) = args.opt("--threads") {
                 spec.threads = t.parse()?;
             }
@@ -272,6 +283,10 @@ fn main() -> Result<()> {
                 .opt("--shard-points")
                 .map(|v| v.parse::<usize>())
                 .transpose()?;
+            let shard_cost = args
+                .opt("--shard-cost")
+                .map(|v| v.parse::<u64>())
+                .transpose()?;
             if spec.grid_len() == 0 {
                 return fail("sweep: empty grid");
             }
@@ -287,6 +302,9 @@ fn main() -> Result<()> {
                 let mut cs = ClusterSpec::new(spec, workers);
                 if let Some(points) = shard_points {
                     cs.shard_points = points;
+                }
+                if let Some(cost) = shard_cost {
+                    cs.shard_cost = cost;
                 }
                 eprintln!(
                     "sweeping {} grid points across {} worker(s)...",

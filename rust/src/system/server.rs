@@ -9,7 +9,8 @@
 //! {"cmd": "bench", "benchmark": "vector_addition", "profile": "small",
 //!  "mode": "vector", "lanes": 2}
 //! {"cmd": "sweep", "benchmarks": ["vector_addition"], "profiles": ["test"],
-//!  "modes": ["vector"], "lanes": [1, 2, 4], "vlens": [128, 256]}
+//!  "modes": ["vector"], "lanes": [1, 2, 4], "vlens": [128, 256],
+//!  "elens": [32, 64], "timing": ["baseline", "burst-mem"]}
 //! {"cmd": "batch", "requests": [{"cmd": "ping"}, {"cmd": "bench", ...}]}
 //! {"cmd": "describe", "what": "datapath"}
 //! {"cmd": "list"}
@@ -29,7 +30,7 @@ use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::bench::profiles;
+use crate::bench::profiles::{self, TimingVariant};
 use crate::bench::runner::Mode;
 use crate::bench::store::ResultStore;
 use crate::bench::suite::{Benchmark, BENCHMARKS};
@@ -66,14 +67,31 @@ pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
         // crate version differs from its own — simulator timing (and
         // the result-store key space) may have changed between
         // versions, so mixed-version reports must never merge silently.
-        Some("shard") => Json::obj(vec![
-            ("ok", true.into()),
-            ("role", "worker".into()),
-            ("version", env!("CARGO_PKG_VERSION").into()),
-            ("max_grid", (MAX_SWEEP_GRID as u64).into()),
-            ("max_batch", (MAX_BATCH_REQUESTS as u64).into()),
-            ("store", evaluator.store().is_some().into()),
-        ]),
+        Some("shard") => {
+            let mut fields = vec![
+                ("ok", true.into()),
+                ("role", "worker".into()),
+                ("version", env!("CARGO_PKG_VERSION").into()),
+                ("max_grid", (MAX_SWEEP_GRID as u64).into()),
+                ("max_batch", (MAX_BATCH_REQUESTS as u64).into()),
+                ("store", evaluator.store().is_some().into()),
+            ];
+            // Ledger health rides the handshake, so a coordinator (or
+            // an operator poking a worker) sees how bloated this
+            // worker's persistent store is without filesystem access.
+            if let Some(store) = evaluator.store() {
+                let s = store.stats();
+                fields.push((
+                    "ledger",
+                    Json::obj(vec![
+                        ("entries", (s.entries as u64).into()),
+                        ("bytes", s.bytes.into()),
+                        ("superseded", s.superseded.into()),
+                    ]),
+                ));
+            }
+            Json::obj(fields)
+        }
         Some("list") => Json::obj(vec![
             ("ok", true.into()),
             ("version", env!("CARGO_PKG_VERSION").into()),
@@ -87,6 +105,15 @@ pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
                 "profiles",
                 Json::Arr(
                     profiles::ALL.iter().map(|p| p.name.into()).collect(),
+                ),
+            ),
+            (
+                "timing_variants",
+                Json::Arr(
+                    profiles::TIMING_VARIANTS
+                        .iter()
+                        .map(|v| v.name.into())
+                        .collect(),
                 ),
             ),
         ]),
@@ -248,6 +275,20 @@ fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
         Ok(Some(out))
     }
 
+    /// [`num_list`] narrowed to u32 — out-of-range values are client
+    /// errors, never silently truncated onto a *valid* width (2^32+32
+    /// must not evaluate as ELEN 32).
+    fn u32_list(req: &Json, key: &str) -> Result<Option<Vec<u32>>, String> {
+        let Some(v) = num_list(req, key)? else { return Ok(None) };
+        v.into_iter()
+            .map(|n| {
+                u32::try_from(n)
+                    .map_err(|_| format!("`{key}` value {n} out of range"))
+            })
+            .collect::<Result<Vec<u32>, String>>()
+            .map(Some)
+    }
+
     let mut spec = SweepSpec::default();
     if let Some(b) = named_list(req, "benchmarks", Benchmark::by_name, "benchmark")? {
         spec.benchmarks = b;
@@ -261,8 +302,16 @@ fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
     if let Some(l) = num_list(req, "lanes")? {
         spec.lanes = l.into_iter().map(|n| n as usize).collect();
     }
-    if let Some(v) = num_list(req, "vlens")? {
-        spec.vlens = v.into_iter().map(|n| n as u32).collect();
+    if let Some(v) = u32_list(req, "vlens")? {
+        spec.vlens = v;
+    }
+    if let Some(e) = u32_list(req, "elens")? {
+        spec.elens = e;
+    }
+    if let Some(t) =
+        named_list(req, "timing", TimingVariant::by_name, "timing variant")?
+    {
+        spec.timing = t;
     }
     if let Some(t) = req.get("threads").and_then(Json::as_u64) {
         spec.threads = t as usize;
@@ -587,6 +636,80 @@ mod tests {
     }
 
     #[test]
+    fn sweep_spans_elen_and_timing_axes() {
+        let r = handle(
+            r#"{"cmd": "sweep", "benchmarks": ["vector_addition"],
+                "profiles": ["test"], "modes": ["vector"],
+                "lanes": [2], "vlens": [256], "elens": [32, 64],
+                "timing": ["baseline", "burst-mem"], "threads": 2}"#,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let points = r.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 4);
+        // Every combination is a distinct, simulated design point.
+        assert_eq!(r.get("unique_simulated").unwrap().as_u64(), Some(4));
+        assert_eq!(r.get("cache_hits").unwrap().as_u64(), Some(0));
+        let mut keys: Vec<&str> = points
+            .iter()
+            .map(|p| p.get("key").unwrap().as_str().unwrap())
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 4);
+        // Per-point axis fields ride the report.
+        assert_eq!(points[0].get("elen").unwrap().as_u64(), Some(32));
+        assert_eq!(
+            points[0].get("timing").unwrap().as_str(),
+            Some("baseline")
+        );
+        assert_eq!(
+            points[1].get("timing").unwrap().as_str(),
+            Some("burst-mem")
+        );
+    }
+
+    #[test]
+    fn shard_handshake_surfaces_ledger_stats() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "arrow-server-ledger-{}-{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let evaluator = Evaluator::with_store_dir(&dir).unwrap();
+        // Populate the ledger through a real evaluation.
+        let r = handle_request(
+            &req(r#"{"cmd": "bench", "benchmark": "vector_addition",
+                     "profile": "test", "mode": "vector"}"#),
+            &evaluator,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let shard = handle_request(&req(r#"{"cmd": "shard"}"#), &evaluator);
+        assert_eq!(shard.get("store"), Some(&Json::Bool(true)));
+        let ledger = shard.get("ledger").unwrap();
+        assert_eq!(ledger.get("entries").unwrap().as_u64(), Some(1));
+        assert!(ledger.get("bytes").unwrap().as_u64().unwrap() > 0);
+        assert_eq!(ledger.get("superseded").unwrap().as_u64(), Some(0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn list_advertises_timing_variants() {
+        let r = handle(r#"{"cmd": "list"}"#);
+        let names: Vec<&str> = r
+            .get("timing_variants")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["baseline", "fast-dispatch", "burst-mem"]);
+    }
+
+    #[test]
     fn sweep_invalid_lane_count_reported_per_point() {
         let r = handle(
             r#"{"cmd": "sweep", "benchmarks": ["vector_addition"],
@@ -613,6 +736,12 @@ mod tests {
             r#"{"cmd": "sweep", "benchmarks": "vector_addition"}"#,
             r#"{"cmd": "sweep", "lanes": ["two"]}"#,
             r#"{"cmd": "sweep", "vlens": []}"#,
+            r#"{"cmd": "sweep", "elens": ["wide"]}"#,
+            // 2^32 + 32 must be rejected, not truncated onto ELEN 32.
+            r#"{"cmd": "sweep", "elens": [4294967328]}"#,
+            r#"{"cmd": "sweep", "vlens": [4294967552]}"#,
+            r#"{"cmd": "sweep", "timing": ["warp-drive"]}"#,
+            r#"{"cmd": "sweep", "timing": []}"#,
         ] {
             let r = handle(body);
             assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{body}");

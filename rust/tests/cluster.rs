@@ -123,6 +123,53 @@ fn cluster_sweep_is_identical_to_a_local_run() {
     assert_eq!(points_json(&again.report), points_json(&cluster.report));
 }
 
+/// The multi-precision axes ride the wire first-class: a 2-worker
+/// cluster sweep over a grid spanning two ELENs and two timing
+/// variants produces a distinct store key per point and merges
+/// byte-identically to a local run — cost-sharded, deterministic.
+#[test]
+fn cluster_parity_over_elen_and_timing_axes() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd, Benchmark::VDot],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![1, 2],
+        vlens: vec![128, 256],
+        elens: vec![32, 64],
+        timing: vec![profiles::TIMING_BASELINE, profiles::TIMING_BURST_MEM],
+        seed: 42,
+        threads: 2,
+        ..Default::default()
+    };
+    assert_eq!(spec.grid_len(), 32);
+    let local = run_sweep(&spec);
+    // Every grid point is a distinct design point: 32 distinct keys.
+    let mut keys: Vec<&str> =
+        local.points.iter().map(|p| p.key.as_str()).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    assert_eq!(keys.len(), spec.grid_len());
+
+    let workers = vec![spawn_worker(None), spawn_worker(None)];
+    let mut cs = ClusterSpec::new(spec, workers);
+    cs.shard_points = 8;
+    cs.shards_per_batch = 1;
+    let cluster = run_cluster(&cs).unwrap();
+    assert_eq!(cluster.local_shards, 0, "no fallback on a healthy fleet");
+    assert_eq!(points_json(&cluster.report), points_json(&local));
+    // The per-point JSON names the new axes.
+    let j = report_json(&cluster.report);
+    let points = j.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points[0].get("elen").unwrap().as_u64(), Some(32));
+    assert_eq!(points[0].get("timing").unwrap().as_str(), Some("baseline"));
+    assert_eq!(points[1].get("timing").unwrap().as_str(), Some("burst-mem"));
+    assert_eq!(points[2].get("elen").unwrap().as_u64(), Some(64));
+
+    // Determinism across cluster runs, new axes included.
+    let again = run_cluster(&cs).unwrap();
+    assert_eq!(points_json(&again.report), points_json(&cluster.report));
+}
+
 /// Duplicate grid entries dedup to one evaluation with the duplicates
 /// reported as cache hits — exactly as a local run counts them.
 #[test]

@@ -97,6 +97,7 @@ fn analytic_results_are_stored_and_replayed() {
         threads: 1,
         analytic_limit: Some(0),
         cache_dir: Some(dir.clone()),
+        ..Default::default()
     };
     let first = run_sweep(&spec);
     assert_eq!(first.analytic, 1);
@@ -111,6 +112,46 @@ fn analytic_results_are_stored_and_replayed() {
         first.points[0].outcome.as_ref().unwrap().cycles,
         replayed.cycles
     );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A multi-precision grid (two ELENs × all three timing variants)
+/// lands one distinct store record per point, and a repeated sweep
+/// replays every one of them — the ablations can never cross-talk
+/// through the cache.
+#[test]
+fn elen_timing_axes_get_distinct_store_records() {
+    let dir = tmp_dir("axes");
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![2],
+        vlens: vec![256],
+        elens: vec![32, 64],
+        timing: profiles::TIMING_VARIANTS.to_vec(),
+        seed: 7,
+        threads: 2,
+        cache_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let first = run_sweep(&spec);
+    assert_eq!(first.unique_simulated, 6, "six distinct design points");
+    // Six distinct records on disk: one JSON line per point.
+    let ledger = std::fs::read_to_string(dir.join(STORE_FILE)).unwrap();
+    assert_eq!(ledger.lines().count(), 6);
+
+    let second = run_sweep(&spec);
+    assert_eq!(second.unique_simulated, 0);
+    assert_eq!(second.store_hits, 6);
+    for (a, b) in first.points.iter().zip(&second.points) {
+        assert_eq!(a.key, b.key);
+        let (fresh, cached) =
+            (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+        assert_eq!(cached.provenance, Provenance::Cached, "{}", b.key);
+        assert_eq!(fresh.cycles, cached.cycles, "{}", a.key);
+        assert_eq!(fresh.summary, cached.summary, "{}", a.key);
+    }
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -302,6 +302,61 @@ fn elen_and_timing_ablations_never_collide_in_the_store() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// The named timing presets behind the sweep grid's timing axis are
+/// real ablations: each registered variant resolves by name, stamps a
+/// distinct pair of cycle models, and therefore owns a distinct
+/// canonical point key — so `--timing baseline,fast-dispatch,burst-mem`
+/// can never collide in the dedup cache or the persistent store.
+#[test]
+fn named_timing_variants_are_distinct_design_points() {
+    use arrow_rvv::bench::profiles::{TimingVariant, TIMING_VARIANTS};
+
+    let seed = 3;
+    let keys: Vec<String> = TIMING_VARIANTS
+        .iter()
+        .map(|v| {
+            assert_eq!(
+                TimingVariant::by_name(v.name).map(|x| x.name),
+                Some(v.name)
+            );
+            let config = v.apply(ArrowConfig::default());
+            assert_eq!(TimingVariant::name_for(&config), Some(v.name));
+            point_key(
+                Benchmark::VAdd,
+                &profiles::TEST,
+                Mode::Vector,
+                &config,
+                seed,
+            )
+        })
+        .collect();
+    for (i, a) in keys.iter().enumerate() {
+        for b in &keys[i + 1..] {
+            assert_ne!(a, b);
+        }
+    }
+    // And each preset's simulation carries its own cycle count: the
+    // faster-host and faster-memory variants both beat the baseline.
+    let evaluator = Evaluator::new();
+    let cycles: Vec<u64> = TIMING_VARIANTS
+        .iter()
+        .map(|v| {
+            let point = EvalPoint {
+                benchmark: Benchmark::VAdd,
+                profile: profiles::TEST,
+                mode: Mode::Vector,
+                config: v.apply(ArrowConfig::default()),
+            };
+            let o = evaluator.evaluate(&point, seed, None).unwrap();
+            assert!(o.verified, "{}", v.name);
+            o.cycles
+        })
+        .collect();
+    let (baseline, fast, burst) = (cycles[0], cycles[1], cycles[2]);
+    assert!(fast < baseline, "fast-dispatch: {fast} vs {baseline}");
+    assert!(burst < baseline, "burst-mem: {burst} vs {baseline}");
+}
+
 #[test]
 fn mixed_sew_program_reconfigures() {
     // One program that switches SEW mid-stream: e32 add, then reinterpret

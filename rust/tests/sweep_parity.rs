@@ -120,6 +120,61 @@ fn point_key_separates_seeds_and_element_widths() {
     assert_eq!(report.points[0].key, key);
 }
 
+/// The ELEN and timing axes are pure parallelisation too: every point
+/// of a multi-precision grid is byte-identical to a sequential
+/// single-run execution under the same config, and the ablations
+/// genuinely move the cycle model in the direction each preset claims.
+#[test]
+fn elen_timing_sweep_matches_sequential_runs() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![2],
+        vlens: vec![256],
+        elens: vec![32, 64],
+        timing: profiles::TIMING_VARIANTS.to_vec(),
+        seed: 42,
+        threads: 2,
+        ..Default::default()
+    };
+    assert_eq!(spec.grid_len(), 6);
+    let report = run_sweep(&spec);
+    assert_eq!(report.unique_simulated, 6);
+    assert_eq!(report.cache_hits, 0);
+    for p in &report.points {
+        let variant = profiles::TimingVariant::by_name(p.timing).unwrap();
+        let config = variant.apply(ArrowConfig {
+            lanes: p.lanes,
+            vlen_bits: p.vlen_bits,
+            elen_bits: p.elen_bits,
+            ..Default::default()
+        });
+        let size = p.benchmark.size(&profiles::TEST);
+        let sequential =
+            run_benchmark(p.benchmark, size, p.mode, config, spec.seed)
+                .unwrap();
+        let swept = p.outcome.as_ref().unwrap();
+        assert!(swept.verified, "{}", p.key);
+        assert_eq!(swept.cycles, sequential.cycles, "{}", p.key);
+        assert_eq!(swept.summary, sequential.summary, "{}", p.key);
+    }
+    // Order: elens (32, 64) outer, timing variants inner.  The axes
+    // move cycles the way the presets claim: a narrower ELEN needs
+    // more word passes, a tightly-coupled host and a faster memory
+    // interface both beat the baseline.
+    let cycles: Vec<u64> = report
+        .points
+        .iter()
+        .map(|p| p.outcome.as_ref().unwrap().cycles)
+        .collect();
+    let (e32_base, e64_base) = (cycles[0], cycles[3]);
+    let (e64_fast, e64_burst) = (cycles[4], cycles[5]);
+    assert!(e32_base > e64_base, "{e32_base} vs {e64_base}");
+    assert!(e64_fast < e64_base, "{e64_fast} vs {e64_base}");
+    assert!(e64_burst < e64_base, "{e64_burst} vs {e64_base}");
+}
+
 /// Scalar-mode grid points never touch the vector unit, whatever the
 /// Arrow design point says.
 #[test]
