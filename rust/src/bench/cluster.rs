@@ -6,15 +6,27 @@
 //! one process.  This module is the distribution layer behind the
 //! [`Evaluator`](super::eval::Evaluator) seam:
 //!
-//! * [`run_cluster`] partitions a [`SweepSpec`] cartesian grid into
-//!   deterministic cartesian sub-grids ([`SweepSpec::partition`]), fans
-//!   them out over the line-delimited JSON TCP protocol to a fleet of
-//!   `arrow serve` workers — shards travel as ordinary `sweep` requests
-//!   inside `{"cmd": "batch"}` envelopes, sized against the server's
-//!   per-request grid cap — and merges the partial reports back into
-//!   one [`SweepReport`] with the same deterministic point order and
-//!   the same provenance counters a local [`run_sweep`] of the same
-//!   spec produces.
+//! * [`run_cluster`] carves a [`SweepSpec`] cartesian grid into
+//!   deterministic cartesian sub-grids (incrementally, via
+//!   [`SweepSpec::carve`] — the same algorithm
+//!   [`SweepSpec::partition_by_cost`] runs to completion), fans them
+//!   out over the line-delimited JSON TCP protocol to a fleet of
+//!   `arrow serve` workers — shards travel as ordinary `sweep`
+//!   requests inside `{"cmd": "batch"}` envelopes, sized against the
+//!   server's per-request grid cap — and merges the partial reports
+//!   back into one [`SweepReport`] with the same deterministic point
+//!   order and the same provenance counters a local [`run_sweep`] of
+//!   the same spec produces.
+//! * The fleet is **dynamic**: dispatch runs against a live
+//!   [`Membership`](super::fleet::Membership) table, not a frozen host
+//!   list.  Pre-listed `--workers` enroll as permanent members; when
+//!   the coordinator also serves a registration endpoint (`arrow sweep
+//!   --listen`), workers started as `arrow serve --join` announce
+//!   themselves and are admitted *mid-sweep*, picking up whatever is
+//!   still queued.  A member whose heartbeats stop is expired and
+//!   drained exactly like a dead worker — same requeue, same
+//!   survivors-or-local-fallback path — and is re-admitted the moment
+//!   it registers again.
 //! * The coordinator is **failure-aware**: a worker that is
 //!   unreachable, dies mid-stream, or answers garbage has its
 //!   unacknowledged shards pushed back on the shared queue for the
@@ -24,10 +36,14 @@
 //!   panicking mid-dispatch: the panic is contained (its batch is
 //!   requeued, the worker retired) and every shared lock recovers from
 //!   poisoning, so one bug never aborts the coordinator.
-//! * Shards are sized **by estimated cost**, not just point count
-//!   ([`SweepSpec::partition_by_cost`]): cheap points pack densely up
-//!   to `shard_points`, expensive large-profile blocks split finer, so
-//!   one heavy shard can't straggle the whole sweep.
+//! * Shards are sized **by measured cost**: carving starts from the
+//!   `shard_cost` estimated-instruction budget (cheap points pack
+//!   densely up to `shard_points`, expensive large-profile blocks
+//!   split finer), and every shard response's measured `elapsed_ms`
+//!   feeds an EWMA of seconds-per-estimated-instruction that
+//!   re-budgets the *next* carve — later shards shrink or grow toward
+//!   [`ClusterSpec::shard_target_time`] of real work, so a slow fleet
+//!   can't be strangled by shards sized for a fast one.
 //! * The coordinator **refuses version mismatches loudly**: every
 //!   worker must answer the `{"cmd": "shard"}` handshake with this
 //!   crate's version, because simulator timing and the result-store
@@ -55,15 +71,18 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::panic::AssertUnwindSafe;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command};
-use std::sync::{Mutex, MutexGuard, PoisonError};
-use std::time::Duration;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 use crate::system::machine::RunSummary;
-use crate::system::server::{MAX_BATCH_REQUESTS, MAX_SWEEP_GRID};
+use crate::system::server::MAX_SWEEP_GRID;
 use crate::util::json::{self, Json};
 
 use super::eval::{EvalOutcome, EvalPoint, EvalResult, Evaluator, Provenance};
-use super::store::ResultStore;
+use super::fleet::{self, MemberCaps, Membership};
+use super::runner;
+use super::store::{ResultStore, StoreStats};
 use super::sweep::{self, SweepPoint, SweepReport, SweepSpec};
 
 /// Default shard size: small enough that a dead worker forfeits little
@@ -99,20 +118,46 @@ const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 /// (closed socket) — timeouts only bound a genuinely *hung* one.
 pub const DEFAULT_SHARD_TIMEOUT: Duration = Duration::from_secs(600);
 
+/// Default target wall-time per shard for the adaptive cost loop:
+/// once workers report measured `elapsed_ms`, the carve budget is
+/// re-estimated so one shard costs about this much real work —
+/// small enough that a dead worker forfeits little, large enough to
+/// amortise a round trip.
+pub const DEFAULT_SHARD_TARGET_TIME: Duration = Duration::from_secs(30);
+
+/// Weight of the newest observation in the measured-cost EWMA.
+const COST_EWMA_WEIGHT: f64 = 0.3;
+
 /// A cluster sweep: the grid, the fleet, and the sharding policy.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     /// The full grid (threads/cache_dir apply to the local-fallback
     /// evaluator; workers own their caches server-side).
     pub spec: SweepSpec,
-    /// Worker addresses, `host:port`.
+    /// Pre-listed worker addresses, `host:port`.  May be empty when a
+    /// `membership` table (fed by a registration endpoint) is supplied
+    /// — the acceptance shape of a self-organising fleet.
     pub workers: Vec<String>,
+    /// Live fleet table shared with a registration endpoint
+    /// ([`fleet::serve_registry_on`]), so workers may `--join`
+    /// mid-sweep.  `None` dispatches against the static list only.
+    pub membership: Option<Arc<Membership>>,
+    /// How long the coordinator keeps waiting for a (first or
+    /// replacement) worker to join while work remains and the fleet is
+    /// empty, before finishing locally.  Zero — the default, and the
+    /// right value for purely static fleets — falls back immediately,
+    /// preserving the pre-fleet behaviour.
+    pub join_grace: Duration,
     /// Maximum points per shard (clamped to the server's grid cap).
     pub shard_points: usize,
-    /// Maximum estimated cost (cumulative `estimated_instructions`)
-    /// per shard — cheap points pack to `shard_points`, expensive ones
-    /// split finer (see [`SweepSpec::partition_by_cost`]).
+    /// Initial estimated-cost budget (cumulative
+    /// `estimated_instructions`) per shard — cheap points pack to
+    /// `shard_points`, expensive ones split finer.  Re-estimated
+    /// mid-sweep from measured shard wall-times (see
+    /// [`ClusterSpec::shard_target_time`]).
     pub shard_cost: u64,
+    /// Target measured wall-time per shard for the adaptive cost loop.
+    pub shard_target_time: Duration,
     /// Shards shipped per batch envelope (clamped to the batch cap).
     pub shards_per_batch: usize,
     /// I/O budget per shard in flight — an envelope of N shards gets
@@ -127,8 +172,11 @@ impl ClusterSpec {
         ClusterSpec {
             spec,
             workers,
+            membership: None,
+            join_grace: Duration::ZERO,
             shard_points: DEFAULT_SHARD_POINTS,
             shard_cost: DEFAULT_SHARD_COST,
+            shard_target_time: DEFAULT_SHARD_TARGET_TIME,
             shards_per_batch: DEFAULT_SHARDS_PER_BATCH,
             shard_timeout: DEFAULT_SHARD_TIMEOUT,
         }
@@ -142,8 +190,21 @@ pub struct WorkerStats {
     /// Shards this worker answered.
     pub shards: usize,
     /// Why the worker stopped serving (unreachable at handshake, died
-    /// mid-stream, malformed response); `None` if it survived the run.
+    /// mid-stream, malformed response, heartbeat expiry); `None` if it
+    /// survived the run.
     pub error: Option<String>,
+    /// Announced itself through the registration endpoint (vs being
+    /// pre-listed in `--workers`).
+    pub joined: bool,
+    /// `(max_grid, max_batch)` request caps it advertised.
+    pub caps: Option<(usize, usize)>,
+    /// Persistent-ledger health it last reported, if it has a store.
+    pub ledger: Option<StoreStats>,
+    /// Measured wall-time it reported across all merged shards, ms.
+    pub elapsed_ms: f64,
+    /// Cumulative estimated instructions of those shards — with
+    /// `elapsed_ms`, this worker's measured cost per instruction.
+    pub est_cost: u64,
 }
 
 /// A merged cluster sweep: the report plus distribution provenance.
@@ -156,6 +217,11 @@ pub struct ClusterReport {
     pub shards: usize,
     /// Shards that fell back to local evaluation.
     pub local_shards: usize,
+    /// Points per shard, in carve order — the visible trace of the
+    /// adaptive cost loop (later shards shrink after slow reports).
+    pub shard_sizes: Vec<usize>,
+    /// The carve budget after all mid-sweep re-estimation.
+    pub final_shard_cost: u64,
     pub workers: Vec<WorkerStats>,
 }
 
@@ -165,6 +231,9 @@ pub struct ShardInfo {
     pub version: String,
     pub max_grid: usize,
     pub max_batch: usize,
+    /// Ledger health (`entries`/`bytes`/`superseded`), when the worker
+    /// runs with a persistent store.
+    pub ledger: Option<StoreStats>,
 }
 
 /// One live worker connection (the handshake and every batch ride the
@@ -254,6 +323,7 @@ impl WorkerConn {
                 .get("max_batch")
                 .and_then(Json::as_u64)
                 .unwrap_or(1) as usize,
+            ledger: fleet::ledger_from(&r),
         })
     }
 }
@@ -424,27 +494,395 @@ fn parse_shard_response(
     Ok(out)
 }
 
+/// Shared shard state of one cluster sweep: the un-carved grid suffix,
+/// every shard carved so far (indices are stable once issued), the
+/// retry queue, the done bitmap, and the **adaptive cost budget** —
+/// workers report measured wall-time per shard, [`ShardQueue::observe`]
+/// folds it into an EWMA of seconds per estimated instruction, and the
+/// next carve is budgeted to hit the target shard time at that rate.
+struct ShardQueue {
+    spec: SweepSpec,
+    /// Total grid points (0 when any axis is empty).
+    total: usize,
+    /// Next un-carved flat grid index.
+    cursor: usize,
+    /// Carve point cap.  Shrinks (never grows) to the smallest grid
+    /// cap any fleet member advertises.
+    max_points: usize,
+    /// Current carve cost budget (cumulative estimated instructions).
+    shard_cost: u64,
+    /// Target measured wall-time per shard, seconds.
+    target_s: f64,
+    /// EWMA of measured seconds per estimated instruction.
+    rate: Option<f64>,
+    shards: Vec<SweepSpec>,
+    done: Vec<bool>,
+    requeued: VecDeque<usize>,
+}
+
+impl ShardQueue {
+    fn new(
+        spec: SweepSpec,
+        max_points: usize,
+        shard_cost: u64,
+        target: Duration,
+    ) -> ShardQueue {
+        let total = spec.grid_len();
+        ShardQueue {
+            spec,
+            total,
+            cursor: 0,
+            max_points: max_points.max(1),
+            shard_cost: shard_cost.max(1),
+            target_s: target.as_secs_f64().max(1e-3),
+            rate: None,
+            shards: Vec::new(),
+            done: Vec::new(),
+            requeued: VecDeque::new(),
+        }
+    }
+
+    /// Work still claimable: retries waiting, or grid left to carve.
+    /// (Shards popped but unanswered are not pending — they either
+    /// merge, requeue on failure, or fall to the local fallback, which
+    /// re-evaluates everything not marked done.)
+    fn pending(&self) -> bool {
+        self.cursor < self.total || !self.requeued.is_empty()
+    }
+
+    /// Claim up to `n` shards: queued retries first, then fresh carves
+    /// under the *current* budgets — this is where adaptive sizing
+    /// takes effect, shard by shard.
+    fn pop_batch(&mut self, n: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        while out.len() < n {
+            if let Some(i) = self.requeued.pop_front() {
+                out.push(i);
+                continue;
+            }
+            if self.cursor >= self.total {
+                break;
+            }
+            let (shard, points) =
+                self.spec.carve(self.cursor, self.max_points, self.shard_cost);
+            self.cursor += points;
+            self.shards.push(shard);
+            self.done.push(false);
+            out.push(self.shards.len() - 1);
+        }
+        out
+    }
+
+    /// Push unacknowledged shards back, preserving their order.
+    fn requeue(&mut self, pending: &[usize]) {
+        for &i in pending.iter().rev() {
+            self.requeued.push_front(i);
+        }
+    }
+
+    /// Fold one measured shard into the cost model and re-budget the
+    /// next carve: `shard_cost = target_time / (seconds per estimated
+    /// instruction)`.  Unusable observations (zero cost, non-positive
+    /// or non-finite time) are ignored rather than poisoning the EWMA.
+    fn observe(&mut self, est_cost: u64, elapsed_ms: f64) {
+        if est_cost == 0 || !elapsed_ms.is_finite() || elapsed_ms <= 0.0 {
+            return;
+        }
+        let observed = (elapsed_ms / 1e3) / est_cost as f64;
+        let rate = match self.rate {
+            None => observed,
+            Some(old) => {
+                COST_EWMA_WEIGHT * observed + (1.0 - COST_EWMA_WEIGHT) * old
+            }
+        };
+        self.rate = Some(rate);
+        self.shard_cost = (self.target_s / rate).clamp(1.0, 1e18) as u64;
+    }
+}
+
+/// Index of `addr` in the per-worker stats table, first-seen order —
+/// stable across re-claims, so however many dispatch threads a member
+/// gets over its lifetime (idle→re-claimed, expired→re-registered),
+/// its shards accumulate on one row.
+fn stat_index(
+    stats: &Mutex<Vec<WorkerStats>>,
+    addr: &str,
+    joined: bool,
+) -> usize {
+    let mut s = lock(stats);
+    if let Some(i) = s.iter().position(|w| w.addr == addr) {
+        if joined {
+            s[i].joined = true;
+        }
+        return i;
+    }
+    s.push(WorkerStats {
+        addr: addr.to_string(),
+        shards: 0,
+        error: None,
+        joined,
+        caps: None,
+        ledger: None,
+        elapsed_ms: 0.0,
+        est_cost: 0,
+    });
+    s.len() - 1
+}
+
+/// Everything one dispatch thread needs by reference; bundled so
+/// spawning inside the control loop stays readable.
+struct Dispatch<'a> {
+    version: &'a str,
+    shards_per_batch: usize,
+    shard_timeout: Duration,
+    membership: &'a Membership,
+    queue: &'a Mutex<ShardQueue>,
+    results: &'a Mutex<HashMap<String, EvalResult>>,
+    stats: &'a Mutex<Vec<WorkerStats>>,
+}
+
+impl Dispatch<'_> {
+    /// Serve one claimed member until the queue drains (member goes
+    /// idle), the worker fails (member retired, shards requeued), its
+    /// heartbeats expire (drained exactly like a failure), or a newer
+    /// claim supersedes this thread (`generation` went stale — the
+    /// member expired and re-registered mid-batch, and its successor
+    /// thread serves it now).
+    fn run(&self, addr: &str, widx: usize, generation: u64) {
+        let retire = |e: String| {
+            self.membership.mark_failed(addr);
+            lock(self.stats)[widx].error = Some(e);
+        };
+        let mut conn = match WorkerConn::connect(addr) {
+            Ok(c) => c,
+            Err(e) => return retire(e),
+        };
+        let info = match conn.handshake() {
+            Ok(i) => i,
+            Err(e) => return retire(e),
+        };
+        if info.version != self.version {
+            return retire(format!(
+                "{addr}: worker runs crate version {} but this coordinator \
+                 is {}; refusing to dispatch — mixed-version results are \
+                 not comparable",
+                info.version, self.version
+            ));
+        }
+        {
+            let mut s = lock(self.stats);
+            s[widx].caps = Some((info.max_grid, info.max_batch));
+            if info.ledger.is_some() {
+                s[widx].ledger = info.ledger;
+            }
+            // A member on its second life starts clean.
+            s[widx].error = None;
+        }
+        {
+            // Every future carve fits the smallest grid cap any member
+            // ever advertised (equal to our own constant today, since
+            // versions match — but negotiated, not assumed).
+            let mut q = lock(self.queue);
+            q.max_points = q.max_points.min(info.max_grid.max(1));
+        }
+        let batch_cap = self.shards_per_batch.clamp(1, info.max_batch.max(1));
+        loop {
+            // A worker whose heartbeats stopped is drained like a dead
+            // one: no new batches, and whatever it was mid-way through
+            // follows the ordinary requeue path below.
+            if self.membership.is_expired(addr) {
+                lock(self.stats)[widx].error = Some(format!(
+                    "{addr}: heartbeat expired; worker drained"
+                ));
+                return;
+            }
+            // Superseded (expired + re-registered + re-claimed while
+            // this thread was mid-batch): the successor owns the
+            // member — bow out without touching its state.
+            if !self.membership.is_current(addr, generation) {
+                return;
+            }
+            let batch: Vec<usize> = lock(self.queue).pop_batch(batch_cap);
+            if batch.is_empty() {
+                // Clean drain: re-claimable if work reappears.
+                self.membership.mark_idle(addr);
+                return;
+            }
+            // Snapshot the shard specs for the envelope (indices stay
+            // the ledger of record; specs are tiny).
+            let specs: Vec<SweepSpec> = {
+                let q = lock(self.queue);
+                batch.iter().map(|&i| q.shards[i].clone()).collect()
+            };
+            let requeue = |pending: &[usize]| {
+                lock(self.queue).requeue(pending);
+            };
+            // Shards of this batch fully merged so far — read back
+            // after a panic so only the unmerged suffix requeues.
+            let merged = std::cell::Cell::new(0usize);
+            // One batch round trip + merge, containing its own
+            // granular requeues; `Err` retires this worker.
+            let process = |conn: &mut WorkerConn| -> Result<(), String> {
+                let envelope = Json::obj(vec![
+                    ("cmd", "batch".into()),
+                    (
+                        "requests",
+                        Json::Arr(specs.iter().map(shard_request).collect()),
+                    ),
+                ]);
+                // The I/O budget scales with the envelope: N shards in
+                // flight get N× the per-shard timeout.
+                conn.set_io_timeout(
+                    self.shard_timeout.saturating_mul(batch.len() as u32),
+                );
+                let subs = match conn.request(&envelope) {
+                    Ok(resp) => {
+                        let count = resp
+                            .get("responses")
+                            .and_then(Json::as_arr)
+                            .map(|subs| subs.len());
+                        if resp.get("ok").and_then(Json::as_bool)
+                            == Some(true)
+                            && count == Some(batch.len())
+                        {
+                            let Json::Obj(mut body) = resp else {
+                                unreachable!("checked: is an object")
+                            };
+                            let Some(Json::Arr(subs)) =
+                                body.remove("responses")
+                            else {
+                                unreachable!("checked: responses is an array")
+                            };
+                            subs
+                        } else {
+                            requeue(&batch);
+                            return Err(format!(
+                                "{}: malformed batch response",
+                                conn.addr
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        requeue(&batch);
+                        return Err(e);
+                    }
+                };
+                for (idx, (sub, &si)) in subs.iter().zip(&batch).enumerate()
+                {
+                    // Expanded lazily per shard in flight: only the
+                    // batch being validated is materialised, not the
+                    // whole grid (the merge re-expands once at the
+                    // end; round trips dwarf the expansion cost).
+                    let expected = specs[idx].expand();
+                    match parse_shard_response(sub, &expected, &conn.addr) {
+                        Ok(pairs) => {
+                            let mut r = lock(self.results);
+                            #[cfg(test)]
+                            test_hooks::maybe_panic();
+                            for (key, result) in pairs {
+                                r.entry(key).or_insert(result);
+                            }
+                            drop(r);
+                            // Close the cost loop: the measured
+                            // wall-time this shard reported re-budgets
+                            // every later carve.
+                            let est = expected.iter().fold(
+                                0u64,
+                                |acc, (p, _)| {
+                                    acc.saturating_add(
+                                        runner::estimated_instructions(
+                                            p.benchmark,
+                                            p.size(),
+                                            p.mode,
+                                        ),
+                                    )
+                                },
+                            );
+                            let elapsed = sub
+                                .get("elapsed_ms")
+                                .and_then(Json::as_f64)
+                                .unwrap_or(0.0);
+                            {
+                                let mut q = lock(self.queue);
+                                q.done[si] = true;
+                                q.observe(est, elapsed);
+                            }
+                            {
+                                let mut s = lock(self.stats);
+                                s[widx].shards += 1;
+                                s[widx].elapsed_ms += elapsed;
+                                s[widx].est_cost =
+                                    s[widx].est_cost.saturating_add(est);
+                            }
+                            merged.set(idx + 1);
+                        }
+                        Err(e) => {
+                            // The failing shard AND everything of this
+                            // batch not yet merged go back on the
+                            // queue for the survivors; this worker is
+                            // not trusted further.
+                            requeue(&batch[idx..]);
+                            return Err(e);
+                        }
+                    }
+                }
+                Ok(())
+            };
+            // A panic anywhere in the round trip (simulator or
+            // protocol bug) is contained like any other worker
+            // failure: requeue the unmerged suffix of the batch —
+            // shards already merged and counted stay done, so
+            // per-worker shard counts still sum to the total — and
+            // retire this worker; the survivors or the local fallback
+            // finish the sweep.
+            match std::panic::catch_unwind(AssertUnwindSafe(|| {
+                process(&mut conn)
+            })) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return retire(e),
+                Err(_) => {
+                    requeue(&batch[merged.get()..]);
+                    return retire(format!(
+                        "{}: worker thread panicked mid-dispatch; \
+                         unmerged shards requeued",
+                        conn.addr
+                    ));
+                }
+            }
+        }
+    }
+}
+
 /// Run one sweep across a worker fleet and merge the shards back into a
-/// single deterministic report.  See the module docs for the dispatch,
-/// retry and fallback semantics.  The only hard error is a protocol
-/// violation the coordinator must not paper over (a version-mismatched
-/// worker); mere worker death degrades to retries and local fallback.
+/// single deterministic report.  Dispatch runs against the live
+/// membership table: pre-listed workers enroll up front, and — when
+/// [`ClusterSpec::membership`] is shared with a registration endpoint
+/// — workers joining mid-sweep are admitted on the next control tick
+/// and pick up whatever is still queued.  See the module docs for the
+/// retry, expiry and fallback semantics.  The only hard error is a
+/// protocol violation the coordinator must not paper over (a
+/// version-mismatched *pre-listed* worker); mere worker death degrades
+/// to retries and local fallback, and a version-mismatched *joiner*
+/// was already refused at registration.
 pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
     let version = env!("CARGO_PKG_VERSION");
+    // The fleet table: shared with a `--listen` registry (workers may
+    // join mid-sweep), or private when only a static list was given.
+    let membership: Arc<Membership> = match &cs.membership {
+        Some(m) => Arc::clone(m),
+        None => Membership::shared(),
+    };
 
-    // Handshake every worker.  Unreachable workers are tolerated (the
-    // fleet shrinks); a *version-mismatched* worker is a hard, loud
-    // refusal — its results would not be comparable with ours.  The
-    // request caps each survivor advertises bound the sharding below.
-    let mut stats: Vec<WorkerStats> = Vec::new();
-    let mut fleet: Vec<(WorkerConn, usize)> = Vec::new();
-    let mut fleet_grid = MAX_SWEEP_GRID;
-    let mut fleet_batch = MAX_BATCH_REQUESTS;
+    let stats: Mutex<Vec<WorkerStats>> = Mutex::new(Vec::new());
+
+    // Enroll every pre-listed worker as a permanent member after a
+    // version handshake.  Unreachable workers are tolerated (the fleet
+    // shrinks); a *version-mismatched* worker is a hard, loud refusal
+    // — its results would not be comparable with ours.
     for addr in &cs.workers {
-        let connected = WorkerConn::connect(addr)
-            .and_then(|mut c| c.handshake().map(|info| (c, info)));
-        match connected {
-            Ok((conn, info)) => {
+        let idx = stat_index(&stats, addr, false);
+        match WorkerConn::connect(addr).and_then(|mut c| c.handshake()) {
+            Ok(info) => {
                 if info.version != version {
                     return Err(format!(
                         "worker {addr} runs crate version {} but this \
@@ -454,205 +892,150 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
                         info.version
                     ));
                 }
-                fleet_grid = fleet_grid.min(info.max_grid.max(1));
-                fleet_batch = fleet_batch.min(info.max_batch.max(1));
-                fleet.push((conn, stats.len()));
-                stats.push(WorkerStats {
-                    addr: addr.clone(),
-                    shards: 0,
-                    error: None,
-                });
+                {
+                    let mut s = lock(&stats);
+                    s[idx].caps = Some((info.max_grid, info.max_batch));
+                    s[idx].ledger = info.ledger;
+                }
+                membership.enroll_static(
+                    addr,
+                    MemberCaps {
+                        max_grid: info.max_grid,
+                        max_batch: info.max_batch,
+                    },
+                    info.ledger,
+                );
             }
-            Err(e) => stats.push(WorkerStats {
-                addr: addr.clone(),
-                shards: 0,
-                error: Some(e),
-            }),
+            Err(e) => lock(&stats)[idx].error = Some(e),
         }
     }
-    let live_workers = fleet.len();
 
-    // Shards must fit the smallest advertised caps across the fleet
-    // (equal to our own constants today, since versions match — but
-    // negotiated, not assumed).  Within the point cap, shards are
-    // sized by estimated cost, so one heavy block can't straggle the
-    // whole sweep.
-    let shard_cap = cs.shard_points.clamp(1, fleet_grid);
-    let shards = cs.spec.partition_by_cost(shard_cap, cs.shard_cost);
-    let shards_per_batch = cs.shards_per_batch.clamp(1, fleet_batch);
-    let shard_timeout = cs.shard_timeout;
-
-    // Shared dispatch state: a work queue of shard indices, the merged
-    // per-key results, and a per-shard done bitmap.  Workers pull from
-    // the queue until it drains; a failing worker pushes its
-    // unacknowledged shards back and dies, so retries land on the
-    // survivors without any coordinator-side bookkeeping.
-    let queue: Mutex<VecDeque<usize>> = Mutex::new((0..shards.len()).collect());
+    let queue = Mutex::new(ShardQueue::new(
+        cs.spec.clone(),
+        cs.shard_points.clamp(1, MAX_SWEEP_GRID),
+        cs.shard_cost,
+        cs.shard_target_time,
+    ));
     let results: Mutex<HashMap<String, EvalResult>> =
         Mutex::new(HashMap::new());
-    let done: Mutex<Vec<bool>> = Mutex::new(vec![false; shards.len()]);
-    let stats = Mutex::new(stats);
+    let active = AtomicUsize::new(0);
+    // Distinct worker addresses ever claimed — the report's `threads`
+    // provenance (a member re-claimed after idling or re-registering
+    // is still one worker, not a new one).
+    let claimed_addrs: Mutex<HashSet<String>> = Mutex::new(HashSet::new());
+    let dispatch = Dispatch {
+        version,
+        shards_per_batch: cs.shards_per_batch,
+        shard_timeout: cs.shard_timeout,
+        membership: &membership,
+        queue: &queue,
+        results: &results,
+        stats: &stats,
+    };
 
+    // The control loop: admit claimable members as dispatch threads
+    // (fresh joiners, and idle members when retries reappear), expire
+    // the silent, and decide when the sweep is over.
     std::thread::scope(|scope| {
-        for (mut conn, widx) in fleet {
-            let queue = &queue;
-            let results = &results;
-            let done = &done;
-            let stats = &stats;
-            let shards = &shards;
-            scope.spawn(move || loop {
-                let batch: Vec<usize> = {
-                    let mut q = lock(queue);
-                    let n = q.len().min(shards_per_batch);
-                    q.drain(..n).collect()
-                };
-                if batch.is_empty() {
-                    return;
-                }
-                let requeue = |pending: &[usize]| {
-                    let mut q = lock(queue);
-                    for &i in pending.iter().rev() {
-                        q.push_front(i);
-                    }
-                };
-                // Shards of this batch fully merged so far — read back
-                // after a panic so only the unmerged suffix requeues.
-                let merged = std::cell::Cell::new(0usize);
-                // One batch round trip + merge, containing its own
-                // granular requeues; `Err` retires this worker.
-                let process = |conn: &mut WorkerConn| -> Result<(), String> {
-                    let envelope = Json::obj(vec![
-                        ("cmd", "batch".into()),
-                        (
-                            "requests",
-                            Json::Arr(
-                                batch
-                                    .iter()
-                                    .map(|&i| shard_request(&shards[i]))
-                                    .collect(),
-                            ),
-                        ),
-                    ]);
-                    // The I/O budget scales with the envelope: N
-                    // shards in flight get N× the per-shard timeout.
-                    conn.set_io_timeout(
-                        shard_timeout.saturating_mul(batch.len() as u32),
+        let mut fleetless_since: Option<Instant> = None;
+        loop {
+            for expired in membership.expire_stale() {
+                eprintln!(
+                    "cluster: worker {expired} heartbeat expired; draining"
+                );
+            }
+            let pending = lock(&queue).pending();
+            if pending {
+                for member in membership.claim_dispatchable() {
+                    let widx = stat_index(
+                        &stats,
+                        &member.addr,
+                        !member.is_static,
                     );
-                    let subs = match conn.request(&envelope) {
-                        Ok(resp) => {
-                            let count = resp
-                                .get("responses")
-                                .and_then(Json::as_arr)
-                                .map(|subs| subs.len());
-                            if resp.get("ok").and_then(Json::as_bool)
-                                == Some(true)
-                                && count == Some(batch.len())
-                            {
-                                let Json::Obj(mut body) = resp else {
-                                    unreachable!("checked: is an object")
-                                };
-                                let Some(Json::Arr(subs)) =
-                                    body.remove("responses")
-                                else {
-                                    unreachable!(
-                                        "checked: responses is an array"
-                                    )
-                                };
-                                subs
-                            } else {
-                                requeue(&batch);
-                                return Err(format!(
-                                    "{}: malformed batch response",
-                                    conn.addr
-                                ));
-                            }
-                        }
-                        Err(e) => {
-                            requeue(&batch);
-                            return Err(e);
-                        }
-                    };
-                    for (idx, (sub, &si)) in
-                        subs.iter().zip(&batch).enumerate()
-                    {
-                        // Expanded lazily per shard in flight: only the
-                        // batch being validated is materialised, not
-                        // the whole grid (the merge re-expands once at
-                        // the end; round trips dwarf the expansion
-                        // cost).
-                        let expected = shards[si].expand();
-                        match parse_shard_response(sub, &expected, &conn.addr)
+                    if member.ledger.is_some() {
+                        lock(&stats)[widx].ledger = member.ledger;
+                    }
+                    active.fetch_add(1, Ordering::SeqCst);
+                    lock(&claimed_addrs).insert(member.addr.clone());
+                    let dispatch = &dispatch;
+                    let active = &active;
+                    let addr = member.addr.clone();
+                    let generation = member.generation;
+                    scope.spawn(move || {
+                        // The dispatch body contains its own panics;
+                        // this outer guard guarantees an escaped one
+                        // can never wedge the control loop: the active
+                        // count still drops, and the member is retired
+                        // (a member stuck Active would read as a live
+                        // fleet forever and the join-grace fallback
+                        // would never fire).
+                        if std::panic::catch_unwind(AssertUnwindSafe(
+                            || dispatch.run(&addr, widx, generation),
+                        ))
+                        .is_err()
                         {
-                            Ok(pairs) => {
-                                let mut r = lock(results);
-                                #[cfg(test)]
-                                test_hooks::maybe_panic();
-                                for (key, result) in pairs {
-                                    r.entry(key).or_insert(result);
-                                }
-                                drop(r);
-                                lock(done)[si] = true;
-                                lock(stats)[widx].shards += 1;
-                                merged.set(idx + 1);
-                            }
-                            Err(e) => {
-                                // The failing shard AND everything of
-                                // this batch not yet merged go back on
-                                // the queue for the survivors; this
-                                // worker is not trusted further.
-                                requeue(&batch[idx..]);
-                                return Err(e);
-                            }
+                            dispatch.membership.mark_failed(&addr);
+                            lock(dispatch.stats)[widx].error =
+                                Some(format!(
+                                    "{addr}: dispatch thread panicked"
+                                ));
                         }
-                    }
-                    Ok(())
-                };
-                // A panic anywhere in the round trip (simulator or
-                // protocol bug) is contained like any other worker
-                // failure: requeue the unmerged suffix of the batch —
-                // shards already merged and counted stay done, so
-                // per-worker shard counts still sum to the total — and
-                // retire this worker; the survivors or the local
-                // fallback finish the sweep.
-                match std::panic::catch_unwind(AssertUnwindSafe(|| {
-                    process(&mut conn)
-                })) {
-                    Ok(Ok(())) => {}
-                    Ok(Err(e)) => {
-                        lock(stats)[widx].error = Some(e);
-                        return;
-                    }
-                    Err(_) => {
-                        requeue(&batch[merged.get()..]);
-                        lock(stats)[widx].error = Some(format!(
-                            "{}: worker thread panicked mid-dispatch; \
-                             unmerged shards requeued",
-                            conn.addr
-                        ));
-                        return;
-                    }
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    });
                 }
-            });
+            }
+            if active.load(Ordering::SeqCst) == 0 {
+                let pending = lock(&queue).pending();
+                if !pending {
+                    // Nothing queued, nothing in flight: every shard
+                    // is merged (or lost to a panic — the local
+                    // fallback below re-evaluates those).
+                    break;
+                }
+                if membership.live_count() == 0 {
+                    // Work remains and nobody can take it.  Wait out
+                    // the join grace (zero for static fleets) for a
+                    // worker to register, then finish locally.
+                    let since =
+                        *fleetless_since.get_or_insert_with(Instant::now);
+                    if since.elapsed() >= cs.join_grace {
+                        break;
+                    }
+                } else {
+                    fleetless_since = None;
+                }
+            } else {
+                fleetless_since = None;
+            }
+            std::thread::sleep(Duration::from_millis(20));
         }
     });
 
-    // Local fallback: whatever the fleet never acknowledged (no
-    // workers, all dead, panicked, or shards requeued into a drained
-    // fleet) is evaluated here, through one evaluator so program
-    // assembly and the optional persistent store are shared across
-    // leftover shards.
+    // Local fallback: whatever the fleet never answered — queued
+    // retries, shards lost to a panicking thread, and the never-carved
+    // grid suffix — is evaluated here, through one evaluator so
+    // program assembly and the optional persistent store are shared
+    // across leftover shards.
     let stats = into_inner(stats);
+    let mut queue = into_inner(queue);
     let mut results = into_inner(results);
-    let done = into_inner(done);
     let mut store_errors: Vec<String> = Vec::new();
-    let pending: Vec<usize> = done
-        .iter()
-        .enumerate()
-        .filter(|(_, done)| !**done)
-        .map(|(i, _)| i)
+    let mut local: Vec<usize> = (0..queue.shards.len())
+        .filter(|&i| !queue.done[i])
         .collect();
-    let local_shards = pending.len();
-    if !pending.is_empty() {
+    while queue.cursor < queue.total {
+        let (shard, points) = queue.spec.carve(
+            queue.cursor,
+            queue.max_points,
+            queue.shard_cost,
+        );
+        queue.cursor += points;
+        queue.shards.push(shard);
+        queue.done.push(false);
+        local.push(queue.shards.len() - 1);
+    }
+    let local_shards = local.len();
+    if !local.is_empty() {
         let mut evaluator = Evaluator::new();
         if let Some(dir) = &cs.spec.cache_dir {
             match ResultStore::open(dir) {
@@ -661,14 +1044,15 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
                     .push(format!("cache dir {}: {e}", dir.display())),
             }
         }
-        for i in pending {
-            let partial = sweep::run_sweep_with(&shards[i], &evaluator);
+        for i in local {
+            let partial = sweep::run_sweep_with(&queue.shards[i], &evaluator);
             if let Some(e) = partial.store_error {
                 store_errors.push(e);
             }
             for p in partial.points {
                 results.entry(p.key).or_insert(p.outcome);
             }
+            queue.done[i] = true;
         }
     }
 
@@ -708,7 +1092,7 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
         store_hits,
         analytic,
         cache_hits,
-        threads: live_workers.max(1),
+        threads: into_inner(claimed_addrs).len().max(1),
         store_error: if store_errors.is_empty() {
             None
         } else {
@@ -717,8 +1101,10 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
     };
     Ok(ClusterReport {
         report,
-        shards: shards.len(),
+        shards: queue.shards.len(),
         local_shards,
+        shard_sizes: queue.shards.iter().map(SweepSpec::grid_len).collect(),
+        final_shard_cost: queue.shard_cost,
         workers: stats,
     })
 }
@@ -1032,6 +1418,81 @@ mod tests {
                 .to_string(),
             sweep::report_json(&local).get("points").unwrap().to_string()
         );
+    }
+
+    /// The measured-cost feedback loop, at the queue level: a slow
+    /// report collapses the carve budget (later shards shrink to the
+    /// atom), fast reports grow it back through the EWMA, and whatever
+    /// the budget does mid-walk the carved shards still tile the full
+    /// grid exactly — so adaptivity can never change the merged
+    /// report, only the shard boundaries.
+    #[test]
+    fn shard_queue_adapts_budget_from_measured_cost() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![128, 256],
+            elens: vec![32, 64],
+            timing: vec![
+                profiles::TIMING_BASELINE,
+                profiles::TIMING_BURST_MEM,
+            ],
+            seed: 1,
+            ..Default::default()
+        };
+        assert_eq!(spec.grid_len(), 16);
+        let mut q = ShardQueue::new(
+            spec.clone(),
+            8,
+            u64::MAX,
+            Duration::from_secs(30),
+        );
+        let first = q.pop_batch(1);
+        assert_eq!(q.shards[first[0]].grid_len(), 8);
+        // A catastrophically slow shard report (1e12 ms for 1000
+        // estimated instructions) collapses the budget...
+        q.observe(1_000, 1e12);
+        assert!(q.shard_cost < 1_000, "cost {}", q.shard_cost);
+        let next = q.pop_batch(1);
+        assert_eq!(q.shards[next[0]].grid_len(), 1);
+        // ...and fast reports grow it back (an EWMA, so gradually).
+        for _ in 0..64 {
+            q.observe(1_000_000, 1.0);
+        }
+        assert!(q.shard_cost > 1_000, "cost {}", q.shard_cost);
+        // Unusable observations never poison the model.
+        let before = q.shard_cost;
+        q.observe(0, 5.0);
+        q.observe(1_000, 0.0);
+        q.observe(1_000, f64::NAN);
+        assert_eq!(q.shard_cost, before);
+        // Whatever the budget did, the walk tiles the grid exactly.
+        let mut popped: Vec<usize> = Vec::new();
+        popped.extend(&first);
+        popped.extend(&next);
+        loop {
+            let batch = q.pop_batch(4);
+            if batch.is_empty() {
+                break;
+            }
+            popped.extend(batch);
+        }
+        let keys: Vec<String> = popped
+            .iter()
+            .flat_map(|&i| {
+                q.shards[i].expand().into_iter().map(|(_, k)| k)
+            })
+            .collect();
+        let full: Vec<String> =
+            spec.expand().into_iter().map(|(_, k)| k).collect();
+        assert_eq!(keys, full);
+        // Requeues come back before fresh carves, preserving order.
+        let mut q2 = ShardQueue::new(spec, 8, u64::MAX, DEFAULT_SHARD_TARGET_TIME);
+        let b = q2.pop_batch(2);
+        q2.requeue(&b);
+        assert_eq!(q2.pop_batch(2), b);
     }
 
     #[test]

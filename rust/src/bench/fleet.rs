@@ -1,0 +1,659 @@
+//! Fleet membership: dynamic worker registration, heartbeats and
+//! expiry.
+//!
+//! PR 3/4 gave the sweep a distribution layer, but the coordinator only
+//! ever dispatched against a frozen `host:port` list handed to it up
+//! front — one machine's worth of workers, known before the sweep
+//! starts.  This module inverts the discovery direction so fleets can
+//! *self-organise*:
+//!
+//! * a worker started as `arrow serve --join host:port` announces
+//!   itself to a coordinator's **registry endpoint** with a
+//!   `{"cmd": "register"}` request carrying its crate version, request
+//!   caps, current load (in-flight requests, sweeps served) and
+//!   persistent-ledger stats, and keeps re-registering on an interval —
+//!   re-registration *is* the heartbeat;
+//! * the coordinator keeps a [`Membership`] table of everyone who
+//!   announced.  Entries expire when heartbeats stop
+//!   ([`Membership::expire_stale`]); an expired worker is drained by
+//!   the dispatch loop exactly like a dead one (its in-flight shards
+//!   requeue for the survivors) and is re-admitted the moment it
+//!   registers again;
+//! * a **version-mismatched registration is refused** at the door, for
+//!   the same reason the shard handshake refuses mismatched static
+//!   workers: simulator timing and the store key space may change
+//!   between versions, so mixed-version shards must never merge.
+//!
+//! Static `--workers` lists still work: [`run_cluster`] enrolls them as
+//! permanent members (no heartbeat, no expiry) of the same table, so
+//! the dispatch loop has exactly one notion of "the fleet" whether
+//! workers were pre-listed, announced themselves, or both.
+//!
+//! [`run_cluster`]: super::cluster::run_cluster
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
+
+use super::store::StoreStats;
+
+/// How long a registered worker may go silent before it is expired.
+/// Three missed heartbeats at the default interval.
+pub const DEFAULT_EXPIRY: Duration = Duration::from_secs(10);
+
+/// Default re-registration (heartbeat) interval for joined workers.
+pub const HEARTBEAT_INTERVAL: Duration = Duration::from_secs(2);
+
+/// Reconnect backoff for a worker whose coordinator is unreachable.
+const RECONNECT_BACKOFF: Duration = Duration::from_secs(1);
+
+/// Dispatch failures after which a member is no longer re-admitted by
+/// claim (it may still re-register, refreshing its entry, but the
+/// coordinator stops burning threads on it).  Bounds the
+/// register→claim→fail cycle a worker with a broken serve port would
+/// otherwise sustain forever.
+pub const MAX_MEMBER_FAILURES: u32 = 8;
+
+/// Poison-recovering lock (same rationale as the cluster module: the
+/// table only holds plain data, so a panicked holder leaves it sound).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Where one member sits in the dispatch lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberState {
+    /// Registered (or enrolled), no dispatch thread yet.
+    Joined,
+    /// A dispatch thread is currently pulling shards for it.
+    Active,
+    /// Its dispatch thread drained the queue and exited cleanly; the
+    /// member is re-claimed if work reappears (requeues, late carves).
+    Idle,
+    /// Its dispatch thread retired it (unreachable, died mid-stream,
+    /// malformed response, panic).  Re-admitted only by registering
+    /// again.
+    Failed,
+    /// Heartbeats stopped.  Drained like a dead worker; re-admitted by
+    /// the next registration.
+    Expired,
+}
+
+/// Request caps a member advertised (mirrors the `shard` handshake).
+#[derive(Debug, Clone, Copy)]
+pub struct MemberCaps {
+    pub max_grid: usize,
+    pub max_batch: usize,
+}
+
+/// One fleet member, as the coordinator sees it.
+#[derive(Debug, Clone)]
+pub struct Member {
+    pub addr: String,
+    pub caps: MemberCaps,
+    /// Persistent-store health the worker reported, if it has a store.
+    pub ledger: Option<StoreStats>,
+    /// Requests the worker reported in flight at its last heartbeat.
+    pub in_flight: u64,
+    /// Sweep (shard) requests the worker reported served so far.
+    pub sweeps_served: u64,
+    pub state: MemberState,
+    /// Pre-listed `--workers` member: never expires, never re-registers.
+    pub is_static: bool,
+    /// Dispatch failures so far (see [`MAX_MEMBER_FAILURES`]).
+    pub failures: u32,
+    /// Claim generation: bumped every time the member is claimed, so a
+    /// dispatch thread can detect it was superseded (its member
+    /// expired and re-registered while it was mid-batch) and bow out
+    /// instead of serving the same worker twice.
+    pub generation: u64,
+    last_seen: Instant,
+}
+
+/// What a `{"cmd": "register"}` request carries.
+#[derive(Debug, Clone)]
+pub struct Registration {
+    /// The address the worker *serves shards on* (not the registry
+    /// connection's peer address — a worker behind port-forwarding
+    /// advertises what coordinators can actually reach).
+    pub addr: String,
+    pub version: String,
+    pub max_grid: usize,
+    pub max_batch: usize,
+    pub in_flight: u64,
+    pub sweeps_served: u64,
+    pub ledger: Option<StoreStats>,
+}
+
+/// Parse the optional `ledger {entries, bytes, superseded}` object
+/// (shared by the `register` payload and the `shard` handshake).
+pub fn ledger_from(v: &Json) -> Option<StoreStats> {
+    let l = v.get("ledger")?;
+    Some(StoreStats {
+        entries: l.get("entries").and_then(Json::as_u64).unwrap_or(0) as usize,
+        bytes: l.get("bytes").and_then(Json::as_u64).unwrap_or(0),
+        superseded: l.get("superseded").and_then(Json::as_u64).unwrap_or(0),
+    })
+}
+
+impl Registration {
+    /// Decode a `register` request; a missing/empty `addr` or `version`
+    /// is a client error (there is nothing to dispatch to, or nothing
+    /// to version-check).
+    pub fn from_json(req: &Json) -> Result<Registration, String> {
+        let addr = req
+            .get("addr")
+            .and_then(Json::as_str)
+            .filter(|a| !a.is_empty())
+            .ok_or("register: `addr` (host:port this worker serves on) required")?
+            .to_string();
+        let version = req
+            .get("version")
+            .and_then(Json::as_str)
+            .filter(|v| !v.is_empty())
+            .ok_or("register: `version` required")?
+            .to_string();
+        let load = req.get("load");
+        let load_u64 = |key: &str| {
+            load.and_then(|l| l.get(key)).and_then(Json::as_u64).unwrap_or(0)
+        };
+        Ok(Registration {
+            addr,
+            version,
+            max_grid: req
+                .get("max_grid")
+                .and_then(Json::as_u64)
+                .unwrap_or(crate::system::server::MAX_SWEEP_GRID as u64)
+                as usize,
+            max_batch: req
+                .get("max_batch")
+                .and_then(Json::as_u64)
+                .unwrap_or(crate::system::server::MAX_BATCH_REQUESTS as u64)
+                as usize,
+            in_flight: load_u64("in_flight"),
+            sweeps_served: load_u64("sweeps_served"),
+            ledger: ledger_from(req),
+        })
+    }
+}
+
+/// The live fleet table: who announced, what they can do, and whether
+/// their heartbeats are still arriving.  Shared between the registry
+/// listener (writes registrations) and the cluster dispatch loop
+/// (claims members, marks outcomes, expires the silent).
+#[derive(Debug)]
+pub struct Membership {
+    version: String,
+    expiry: Duration,
+    members: Mutex<HashMap<String, Member>>,
+}
+
+impl Membership {
+    pub fn new(expiry: Duration) -> Membership {
+        Membership {
+            version: env!("CARGO_PKG_VERSION").to_string(),
+            expiry,
+            members: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// A shareable table with the default heartbeat expiry.
+    pub fn shared() -> Arc<Membership> {
+        Arc::new(Membership::new(DEFAULT_EXPIRY))
+    }
+
+    /// A shareable table with a caller-chosen expiry (tests use short
+    /// ones to exercise the drain path without real 10-second waits).
+    pub fn shared_with_expiry(expiry: Duration) -> Arc<Membership> {
+        Arc::new(Membership::new(expiry))
+    }
+
+    pub fn version(&self) -> &str {
+        &self.version
+    }
+
+    pub fn expiry(&self) -> Duration {
+        self.expiry
+    }
+
+    /// Register (or heartbeat — repeats are idempotent upserts) one
+    /// worker.  A version mismatch is refused: its shards would not be
+    /// comparable with ours.  Returns the expiry the worker should
+    /// out-pace.
+    pub fn register(&self, reg: &Registration) -> Result<Duration, String> {
+        if reg.version != self.version {
+            return Err(format!(
+                "worker {} runs crate version {} but this coordinator is \
+                 {}; registration refused — mixed-version results are not \
+                 comparable (upgrade the worker or the coordinator)",
+                reg.addr, reg.version, self.version
+            ));
+        }
+        let mut members = lock(&self.members);
+        let member =
+            members.entry(reg.addr.clone()).or_insert_with(|| Member {
+                addr: reg.addr.clone(),
+                caps: MemberCaps { max_grid: reg.max_grid, max_batch: reg.max_batch },
+                ledger: None,
+                in_flight: 0,
+                sweeps_served: 0,
+                state: MemberState::Joined,
+                is_static: false,
+                failures: 0,
+                generation: 0,
+                last_seen: Instant::now(),
+            });
+        member.caps =
+            MemberCaps { max_grid: reg.max_grid, max_batch: reg.max_batch };
+        member.ledger = reg.ledger;
+        member.in_flight = reg.in_flight;
+        member.sweeps_served = reg.sweeps_served;
+        member.last_seen = Instant::now();
+        // A failed or expired worker announcing again is re-admitted;
+        // Joined/Active/Idle members just refresh their heartbeat.
+        if matches!(member.state, MemberState::Failed | MemberState::Expired)
+        {
+            member.state = MemberState::Joined;
+        }
+        Ok(self.expiry)
+    }
+
+    /// Enroll a pre-listed `--workers` member: already version-checked
+    /// by the caller's handshake, never expires.
+    pub fn enroll_static(
+        &self,
+        addr: &str,
+        caps: MemberCaps,
+        ledger: Option<StoreStats>,
+    ) {
+        lock(&self.members).insert(
+            addr.to_string(),
+            Member {
+                addr: addr.to_string(),
+                caps,
+                ledger,
+                in_flight: 0,
+                sweeps_served: 0,
+                state: MemberState::Joined,
+                is_static: true,
+                failures: 0,
+                generation: 0,
+                last_seen: Instant::now(),
+            },
+        );
+    }
+
+    /// Expire every dynamic member whose heartbeats stopped.  Returns
+    /// the newly expired addresses (for logging); their dispatch
+    /// threads notice between batches and drain like a dead worker.
+    pub fn expire_stale(&self) -> Vec<String> {
+        let mut expired = Vec::new();
+        for member in lock(&self.members).values_mut() {
+            if !member.is_static
+                && matches!(
+                    member.state,
+                    MemberState::Joined
+                        | MemberState::Active
+                        | MemberState::Idle
+                )
+                && member.last_seen.elapsed() > self.expiry
+            {
+                member.state = MemberState::Expired;
+                expired.push(member.addr.clone());
+            }
+        }
+        expired
+    }
+
+    pub fn is_expired(&self, addr: &str) -> bool {
+        lock(&self.members)
+            .get(addr)
+            .is_some_and(|m| m.state == MemberState::Expired)
+    }
+
+    /// Whether `generation` is still the member's latest claim.  A
+    /// dispatch thread checks this between batches: if its member
+    /// expired and re-registered while it was mid-batch, a *successor*
+    /// thread owns the member now — the stale thread must bow out
+    /// rather than serve the same worker twice.
+    pub fn is_current(&self, addr: &str, generation: u64) -> bool {
+        lock(&self.members)
+            .get(addr)
+            .is_some_and(|m| m.generation == generation)
+    }
+
+    /// Claim every dispatchable member — freshly joined, or idle again
+    /// while work remains — flipping them Active and bumping their
+    /// claim generation.  The caller owes each claimed member a
+    /// dispatch thread.  Members past their failure budget are never
+    /// claimed again (a worker with a broken serve port must not
+    /// consume threads forever).
+    pub fn claim_dispatchable(&self) -> Vec<Member> {
+        let mut claimed = Vec::new();
+        for member in lock(&self.members).values_mut() {
+            if matches!(member.state, MemberState::Joined | MemberState::Idle)
+                && member.failures < MAX_MEMBER_FAILURES
+            {
+                member.state = MemberState::Active;
+                member.generation = member.generation.wrapping_add(1);
+                claimed.push(member.clone());
+            }
+        }
+        claimed
+    }
+
+    /// Its dispatch thread drained the queue and exited cleanly.
+    pub fn mark_idle(&self, addr: &str) {
+        if let Some(m) = lock(&self.members).get_mut(addr) {
+            if m.state == MemberState::Active {
+                m.state = MemberState::Idle;
+            }
+        }
+    }
+
+    /// Its dispatch thread retired it.  An already-expired member stays
+    /// Expired (the states mean the same thing to the queue; Expired
+    /// additionally documents *why* in the worker stats).
+    pub fn mark_failed(&self, addr: &str) {
+        if let Some(m) = lock(&self.members).get_mut(addr) {
+            m.failures = m.failures.saturating_add(1);
+            if m.state != MemberState::Expired {
+                m.state = MemberState::Failed;
+            }
+        }
+    }
+
+    /// Members the dispatch loop may still get work through (claimed,
+    /// claimable, or resting between claims).
+    pub fn live_count(&self) -> usize {
+        lock(&self.members)
+            .values()
+            .filter(|m| {
+                matches!(
+                    m.state,
+                    MemberState::Joined
+                        | MemberState::Active
+                        | MemberState::Idle
+                ) && m.failures < MAX_MEMBER_FAILURES
+            })
+            .count()
+    }
+
+    /// Snapshot of the whole table (health surfaces, tests).
+    pub fn members(&self) -> Vec<Member> {
+        let mut all: Vec<Member> =
+            lock(&self.members).values().cloned().collect();
+        all.sort_by(|a, b| a.addr.cmp(&b.addr));
+        all
+    }
+}
+
+/// Answer one registry request (pure; exercised directly by tests).
+pub fn handle_registry_request(req: &Json, membership: &Membership) -> Json {
+    let err = |msg: String| {
+        Json::obj(vec![("ok", false.into()), ("error", msg.into())])
+    };
+    match req.get("cmd").and_then(Json::as_str) {
+        Some("ping") => {
+            Json::obj(vec![("ok", true.into()), ("pong", true.into())])
+        }
+        Some("register") => match Registration::from_json(req) {
+            Ok(reg) => match membership.register(&reg) {
+                Ok(expiry) => Json::obj(vec![
+                    ("ok", true.into()),
+                    ("expiry_ms", (expiry.as_millis() as u64).into()),
+                ]),
+                Err(e) => err(e),
+            },
+            Err(e) => err(e),
+        },
+        other => err(format!("unknown registry cmd {other:?} (register|ping)")),
+    }
+}
+
+fn registry_conn(stream: TcpStream, membership: &Membership) {
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match json::parse(line.trim()) {
+            Ok(req) => handle_registry_request(&req, membership),
+            Err(e) => Json::obj(vec![
+                ("ok", false.into()),
+                ("error", format!("bad json: {e}").into()),
+            ]),
+        };
+        if writeln!(writer, "{response}").is_err() {
+            break;
+        }
+    }
+}
+
+/// Serve the registration endpoint on `addr` (e.g. `127.0.0.1:0`) into
+/// `membership`, on detached threads.  Returns the bound address —
+/// what workers pass to `arrow serve --join`.  The listener lives for
+/// the rest of the process (the coordinator CLI exits when the sweep
+/// does; tests leak one listener per membership, like the in-process
+/// worker fleets already do).
+pub fn serve_registry_on(
+    addr: &str,
+    membership: &Arc<Membership>,
+) -> Result<String, String> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| format!("fleet registry {addr}: {e}"))?;
+    let bound = listener
+        .local_addr()
+        .map_err(|e| format!("fleet registry: {e}"))?
+        .to_string();
+    let membership = Arc::clone(membership);
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let membership = Arc::clone(&membership);
+            std::thread::spawn(move || registry_conn(stream, &membership));
+        }
+    });
+    Ok(bound)
+}
+
+/// Announce this process to a coordinator forever, on a detached
+/// thread: connect, register, then re-register every `interval` as the
+/// heartbeat; reconnect (with backoff) whenever the coordinator goes
+/// away, so a worker started before its coordinator still joins.  A
+/// *refused* registration (version mismatch) is permanent for this
+/// process — the thread reports it and stops announcing.
+pub fn announce(
+    coordinator: String,
+    interval: Duration,
+    payload: impl Fn() -> Json + Send + 'static,
+) {
+    std::thread::spawn(move || loop {
+        if let Ok(stream) = TcpStream::connect(&coordinator) {
+            let Ok(reader) = stream.try_clone() else {
+                std::thread::sleep(RECONNECT_BACKOFF);
+                continue;
+            };
+            let mut reader = BufReader::new(reader);
+            let mut writer = stream;
+            loop {
+                let mut line = payload().to_string();
+                line.push('\n');
+                if writer.write_all(line.as_bytes()).is_err() {
+                    break;
+                }
+                let mut resp = String::new();
+                match reader.read_line(&mut resp) {
+                    Ok(n) if n > 0 => {
+                        if let Ok(r) = json::parse(resp.trim()) {
+                            if r.get("ok").and_then(Json::as_bool)
+                                == Some(false)
+                            {
+                                eprintln!(
+                                    "fleet: registration refused by {}: {}",
+                                    coordinator,
+                                    r.get("error")
+                                        .and_then(Json::as_str)
+                                        .unwrap_or("unknown error")
+                                );
+                                return;
+                            }
+                        }
+                    }
+                    _ => break,
+                }
+                std::thread::sleep(interval);
+            }
+        }
+        std::thread::sleep(RECONNECT_BACKOFF);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg(addr: &str, version: &str) -> Registration {
+        Registration {
+            addr: addr.to_string(),
+            version: version.to_string(),
+            max_grid: 4096,
+            max_batch: 256,
+            in_flight: 0,
+            sweeps_served: 0,
+            ledger: None,
+        }
+    }
+
+    #[test]
+    fn register_claim_idle_lifecycle() {
+        let m = Membership::new(Duration::from_secs(60));
+        let version = env!("CARGO_PKG_VERSION");
+        assert_eq!(m.live_count(), 0);
+        m.register(&reg("10.0.0.1:7", version)).unwrap();
+        assert_eq!(m.live_count(), 1);
+        let claimed = m.claim_dispatchable();
+        assert_eq!(claimed.len(), 1);
+        assert_eq!(claimed[0].addr, "10.0.0.1:7");
+        // Active members are not claimed twice.
+        assert!(m.claim_dispatchable().is_empty());
+        // Idle members are claimable again (requeued work reappears).
+        m.mark_idle("10.0.0.1:7");
+        assert_eq!(m.claim_dispatchable().len(), 1);
+        // Failed members need a fresh registration to come back.
+        m.mark_failed("10.0.0.1:7");
+        assert_eq!(m.live_count(), 0);
+        assert!(m.claim_dispatchable().is_empty());
+        m.register(&reg("10.0.0.1:7", version)).unwrap();
+        assert_eq!(m.claim_dispatchable().len(), 1);
+    }
+
+    #[test]
+    fn version_mismatch_refused() {
+        let m = Membership::new(Duration::from_secs(60));
+        let err = m.register(&reg("10.0.0.1:7", "99.0.0")).unwrap_err();
+        assert!(err.contains("99.0.0"), "{err}");
+        assert!(err.contains(env!("CARGO_PKG_VERSION")), "{err}");
+        assert!(err.contains("refused"), "{err}");
+        assert_eq!(m.live_count(), 0);
+        // And over the registry protocol.
+        let req = json::parse(
+            r#"{"cmd": "register", "addr": "10.0.0.1:7", "version": "99.0.0"}"#,
+        )
+        .unwrap();
+        let r = handle_registry_request(&req, &m);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("refused"));
+    }
+
+    #[test]
+    fn heartbeat_expiry_and_readmission() {
+        let m = Membership::new(Duration::from_millis(150));
+        let version = env!("CARGO_PKG_VERSION");
+        m.register(&reg("10.0.0.2:9", version)).unwrap();
+        assert!(m.expire_stale().is_empty());
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(m.expire_stale(), vec!["10.0.0.2:9".to_string()]);
+        assert!(m.is_expired("10.0.0.2:9"));
+        assert_eq!(m.live_count(), 0);
+        // The next heartbeat re-admits it.
+        m.register(&reg("10.0.0.2:9", version)).unwrap();
+        assert!(!m.is_expired("10.0.0.2:9"));
+        assert_eq!(m.live_count(), 1);
+        // Static members never expire.
+        m.enroll_static(
+            "10.0.0.3:9",
+            MemberCaps { max_grid: 4096, max_batch: 256 },
+            None,
+        );
+        std::thread::sleep(Duration::from_millis(300));
+        let expired = m.expire_stale();
+        assert!(!expired.contains(&"10.0.0.3:9".to_string()), "{expired:?}");
+    }
+
+    #[test]
+    fn claim_generation_supersedes_stale_threads() {
+        let m = Membership::new(Duration::from_secs(60));
+        let version = env!("CARGO_PKG_VERSION");
+        m.register(&reg("10.0.0.5:2", version)).unwrap();
+        let first = m.claim_dispatchable().remove(0);
+        assert!(m.is_current("10.0.0.5:2", first.generation));
+        // A later claim supersedes the earlier one: a dispatch thread
+        // still holding the old generation must bow out.
+        m.mark_idle("10.0.0.5:2");
+        let second = m.claim_dispatchable().remove(0);
+        assert!(second.generation > first.generation);
+        assert!(!m.is_current("10.0.0.5:2", first.generation));
+        assert!(m.is_current("10.0.0.5:2", second.generation));
+        // Unknown members are never current.
+        assert!(!m.is_current("10.9.9.9:1", 0));
+    }
+
+    #[test]
+    fn failure_budget_stops_readmission_by_claim() {
+        let m = Membership::new(Duration::from_secs(60));
+        let version = env!("CARGO_PKG_VERSION");
+        for _ in 0..MAX_MEMBER_FAILURES {
+            m.register(&reg("10.0.0.4:1", version)).unwrap();
+            assert_eq!(m.claim_dispatchable().len(), 1);
+            m.mark_failed("10.0.0.4:1");
+        }
+        // Registration still succeeds (the table stays fresh for
+        // health surfaces) but the member is never claimed again.
+        m.register(&reg("10.0.0.4:1", version)).unwrap();
+        assert!(m.claim_dispatchable().is_empty());
+        assert_eq!(m.live_count(), 0);
+    }
+
+    #[test]
+    fn registration_parses_load_and_ledger() {
+        let req = json::parse(&format!(
+            r#"{{"cmd": "register", "addr": "h:1", "version": "{}",
+                 "max_grid": 128, "max_batch": 8,
+                 "load": {{"in_flight": 2, "sweeps_served": 17}},
+                 "ledger": {{"entries": 5, "bytes": 900, "superseded": 1}}}}"#,
+            env!("CARGO_PKG_VERSION")
+        ))
+        .unwrap();
+        let reg = Registration::from_json(&req).unwrap();
+        assert_eq!(reg.max_grid, 128);
+        assert_eq!(reg.max_batch, 8);
+        assert_eq!(reg.in_flight, 2);
+        assert_eq!(reg.sweeps_served, 17);
+        let ledger = reg.ledger.unwrap();
+        assert_eq!(ledger.entries, 5);
+        assert_eq!(ledger.bytes, 900);
+        assert_eq!(ledger.superseded, 1);
+        // Missing addr/version are client errors.
+        let bad = json::parse(r#"{"cmd": "register", "version": "1"}"#).unwrap();
+        assert!(Registration::from_json(&bad).is_err());
+        let bad = json::parse(r#"{"cmd": "register", "addr": "h:1"}"#).unwrap();
+        assert!(Registration::from_json(&bad).is_err());
+    }
+}

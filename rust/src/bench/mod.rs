@@ -25,13 +25,19 @@
 //!   canonical point key.
 //! * [`cluster`] — the distribution layer: a shard coordinator fanning
 //!   deterministic sub-grids across a fleet of `arrow serve` workers
-//!   over TCP (with retry and local fallback), and a supervisor for
-//!   local worker fleets sharing one result store.
+//!   over TCP (with retry, adaptive shard costing from measured
+//!   wall-times, and local fallback), and a supervisor for local
+//!   worker fleets sharing one result store.
+//! * [`fleet`] — fleet membership: the worker registration/heartbeat
+//!   protocol (`arrow serve --join`), the coordinator's live
+//!   membership table with expiry, and the registry endpoint
+//!   (`arrow sweep --listen`) that lets workers join mid-sweep.
 
 pub mod analytic;
 pub mod cluster;
 pub mod cnn;
 pub mod eval;
+pub mod fleet;
 pub mod profiles;
 pub mod runner;
 pub mod store;
@@ -39,6 +45,7 @@ pub mod suite;
 pub mod sweep;
 
 pub use cluster::{run_cluster, run_fleet, ClusterReport, ClusterSpec, FleetSpec};
+pub use fleet::{Member, MemberState, Membership, Registration};
 pub use eval::{
     point_key, EvalOutcome, EvalPoint, Evaluator, ProgramCache, Provenance,
 };

@@ -31,6 +31,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::energy::EnergyModel;
 use crate::util::json::Json;
 
 use super::analytic;
@@ -258,51 +259,88 @@ impl SweepSpec {
     /// atom.  Deterministic: the same spec always yields the same
     /// shards, and concatenated expansions still equal
     /// `self.expand()` byte-for-byte.
+    ///
+    /// Implemented as repeated [`carve`](SweepSpec::carve) calls, so
+    /// the up-front partitioning the tests pin down and the cluster
+    /// coordinator's *incremental* sharding (which re-budgets
+    /// `max_cost` mid-sweep from measured worker throughput) are the
+    /// same algorithm by construction.
     pub fn partition_by_cost(
         &self,
         max_points: usize,
         max_cost: u64,
     ) -> Vec<SweepSpec> {
-        let lens = self.axis_lens();
-        if lens.contains(&0) {
+        if self.axis_lens().contains(&0) {
             return Vec::new();
         }
-        let mut ranges = Vec::new();
-        let mut cur: AxisRanges = [(0, 0); AXES];
-        self.split_level(
-            &lens,
-            0,
-            &mut cur,
-            max_points.max(1),
-            max_cost.max(1),
-            &mut ranges,
-        );
-        ranges.iter().map(|r| self.slice(r)).collect()
+        let total = self.grid_len();
+        let mut out = Vec::new();
+        let mut cursor = 0usize;
+        while cursor < total {
+            let (shard, points) = self.carve(cursor, max_points, max_cost);
+            cursor += points;
+            out.push(shard);
+        }
+        out
     }
 
-    /// Greedy order-preserving chunker: walk `level`'s values in order,
-    /// growing each chunk while both budgets hold (a chunk carries all
-    /// inner axes in full); a value too big to stand alone recurses one
-    /// axis inward.
-    fn split_level(
+    /// Mixed-radix digits of flat grid index `n` in the canonical
+    /// [`expand`](SweepSpec::expand) order (innermost axis — timing —
+    /// varies fastest).
+    fn digits(lens: &[usize; AXES], mut n: usize) -> [usize; AXES] {
+        let mut d = [0usize; AXES];
+        for i in (0..AXES).rev() {
+            d[i] = n % lens[i];
+            n /= lens[i];
+        }
+        d
+    }
+
+    /// Carve the next shard of the grid starting at flat index `start`
+    /// (in canonical expansion order): the greedy order-preserving
+    /// cartesian sub-grid within both budgets, exactly the chunk the
+    /// recursive partitioner would emit there.  Returns the sub-spec
+    /// and its point count, so a caller can walk the whole grid by
+    /// advancing `start` — *with a different `max_cost` per call* if it
+    /// has learned something about real shard cost in the meantime
+    /// (the cluster coordinator's adaptive sharding).  Whatever budget
+    /// sequence is used, consecutive carves starting at 0 always tile
+    /// `self.expand()` exactly.  `start` must be `< grid_len()` and no
+    /// axis may be empty.
+    pub(crate) fn carve(
         &self,
-        lens: &[usize; AXES],
-        level: usize,
-        cur: &mut AxisRanges,
+        start: usize,
         max_points: usize,
         max_cost: u64,
-        out: &mut Vec<AxisRanges>,
-    ) {
-        let mut s = 0;
-        while s < lens[level] {
+    ) -> (SweepSpec, usize) {
+        let lens = self.axis_lens();
+        debug_assert!(!lens.contains(&0) && start < self.grid_len());
+        let max_points = max_points.max(1);
+        let max_cost = max_cost.max(1);
+        let d = Self::digits(&lens, start);
+        // The carve point sits at the start of a row of the deepest
+        // axis with a non-zero digit (every deeper digit is zero).
+        let mut level = 0;
+        for (i, &digit) in d.iter().enumerate() {
+            if digit != 0 {
+                level = i;
+            }
+        }
+        loop {
+            let mut cur: AxisRanges = [(0, 0); AXES];
+            for (slot, &digit) in cur.iter_mut().zip(&d).take(level) {
+                *slot = (digit, digit + 1);
+            }
+            // Greedy chunk of this axis' values, all inner axes full.
+            let s = d[level];
             let mut e = s;
             let mut points = 0usize;
             let mut cost = 0u64;
             while e < lens[level] {
-                let p = points
-                    .saturating_add(Self::value_points(lens, level));
+                let p =
+                    points.saturating_add(Self::value_points(&lens, level));
                 let c = cost
-                    .saturating_add(self.value_cost(lens, cur, level, e));
+                    .saturating_add(self.value_cost(&lens, &cur, level, e));
                 if p > max_points || c > max_cost {
                     break;
                 }
@@ -311,35 +349,24 @@ impl SweepSpec {
                 e += 1;
             }
             if e > s {
-                let mut shard = *cur;
-                shard[level] = (s, e);
+                cur[level] = (s, e);
                 for (i, &len) in lens.iter().enumerate().skip(level + 1) {
-                    shard[i] = (0, len);
+                    cur[i] = (0, len);
                 }
-                out.push(shard);
-                s = e;
-            } else if level + 1 < AXES {
-                // Even one value of this axis overflows a budget: pin
-                // it and split within the row.
-                cur[level] = (s, s + 1);
-                self.split_level(
-                    lens,
-                    level + 1,
-                    cur,
-                    max_points,
-                    max_cost,
-                    out,
-                );
-                s += 1;
-            } else {
-                // A single innermost point always fits the point cap
-                // (>= 1); only its *cost* can overflow, and points are
-                // the atom — emit it alone.
-                let mut shard = *cur;
-                shard[level] = (s, s + 1);
-                out.push(shard);
-                s += 1;
+                return (self.slice(&cur), points);
             }
+            if level + 1 < AXES {
+                // Even one value of this axis overflows a budget: pin
+                // it and split within the row (the deeper digits are
+                // all zero, so the carve point starts that sub-row).
+                level += 1;
+                continue;
+            }
+            // A single innermost point always fits the point cap
+            // (>= 1); only its *cost* can overflow, and points are the
+            // atom — emit it alone.
+            cur[level] = (s, s + 1);
+            return (self.slice(&cur), 1);
         }
     }
 }
@@ -521,6 +548,19 @@ pub fn run_sweep_with(spec: &SweepSpec, evaluator: &Evaluator) -> SweepReport {
     }
 }
 
+/// Energy of one evaluated point under the paper's model: scalar-mode
+/// points run on the MicroBlaze-only system, vector-mode points on
+/// MicroBlaze+Arrow (§4.3).  Pure function of (mode, cycles), so local
+/// sweeps and cluster merges — which reconstruct the exact worker
+/// cycle counts — compute bit-identical energies.
+pub fn point_energy_j(mode: Mode, cycles: u64) -> f64 {
+    let model = EnergyModel::default();
+    match mode {
+        Mode::Scalar => model.scalar_energy_j(cycles),
+        Mode::Vector => model.vector_energy_j(cycles),
+    }
+}
+
 fn point_json(p: &SweepPoint) -> Json {
     let mut fields = vec![
         ("benchmark", p.benchmark.name().into()),
@@ -539,6 +579,21 @@ fn point_json(p: &SweepPoint) -> Json {
             fields.push(("verified", o.verified.into()));
             fields.push(("provenance", o.provenance.name().into()));
             fields.push(("origin", o.origin.name().into()));
+            // The paper's Table-4 energy axis rides every sweep point
+            // (ROADMAP): joules under the Table 2 power model, plus
+            // the wall-clock the cycle count implies at 100 MHz.
+            let model = EnergyModel::default();
+            let joules = match p.mode {
+                Mode::Scalar => model.scalar_energy_j(o.cycles),
+                Mode::Vector => model.vector_energy_j(o.cycles),
+            };
+            fields.push((
+                "energy",
+                Json::obj(vec![
+                    ("joules", joules.into()),
+                    ("time_s", model.time_s(o.cycles).into()),
+                ]),
+            ));
             fields.push((
                 "scalar_instructions",
                 o.summary.scalar_instructions.into(),
@@ -560,6 +615,16 @@ fn point_json(p: &SweepPoint) -> Json {
     Json::obj(fields)
 }
 
+/// Total energy of every successful point in the report, in joules
+/// (summed in grid order, so local and cluster reports — whose points
+/// are byte-identical — total identically too).
+pub fn energy_total_j(report: &SweepReport) -> f64 {
+    report.points.iter().fold(0.0, |acc, p| match &p.outcome {
+        Ok(o) => acc + point_energy_j(p.mode, o.cycles),
+        Err(_) => acc,
+    })
+}
+
 /// Render the whole report as one JSON object (the `arrow sweep` CLI
 /// output and the job-server response body).
 pub fn report_json(report: &SweepReport) -> Json {
@@ -574,6 +639,7 @@ pub fn report_json(report: &SweepReport) -> Json {
         ("analytic", (report.analytic as u64).into()),
         ("cache_hits", (report.cache_hits as u64).into()),
         ("threads", (report.threads as u64).into()),
+        ("energy_total_j", energy_total_j(report).into()),
     ];
     if let Some(e) = &report.store_error {
         fields.push(("store_error", e.as_str().into()));
@@ -882,6 +948,117 @@ mod tests {
         // cap wherever expensive (large-profile / scalar matmul)
         // blocks dominate.
         assert!(shards.len() > spec.partition(max_points).len());
+    }
+
+    #[test]
+    fn carve_tiles_the_grid_and_honours_mid_walk_rebudgeting() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd, Benchmark::MatMul],
+            profiles: vec![profiles::TEST, profiles::LARGE],
+            modes: vec![Mode::Scalar, Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![128, 256],
+            elens: vec![32, 64],
+            timing: vec![
+                profiles::TIMING_BASELINE,
+                profiles::TIMING_BURST_MEM,
+            ],
+            seed: 2,
+            ..Default::default()
+        };
+        let full: Vec<String> =
+            spec.expand().into_iter().map(|(_, k)| k).collect();
+        // Constant budgets: the carve walk IS partition_by_cost.
+        for (max_points, max_cost) in
+            [(7usize, u64::MAX), (64, 1_000_000u64), (3, 50_000)]
+        {
+            let mut cursor = 0usize;
+            let mut walked = Vec::new();
+            while cursor < full.len() {
+                let (shard, n) = spec.carve(cursor, max_points, max_cost);
+                assert_eq!(shard.grid_len(), n);
+                walked.push(shard);
+                cursor += n;
+            }
+            let parts = spec.partition_by_cost(max_points, max_cost);
+            assert_eq!(walked.len(), parts.len());
+            for (a, b) in walked.iter().zip(&parts) {
+                assert_eq!(
+                    a.expand().into_iter().map(|(_, k)| k).collect::<Vec<_>>(),
+                    b.expand().into_iter().map(|(_, k)| k).collect::<Vec<_>>()
+                );
+            }
+        }
+        // A budget that *changes between carves* (the coordinator
+        // re-estimating shard cost mid-sweep) still tiles the grid
+        // exactly — same points, same order, no gaps, no overlap —
+        // and the post-shrink shards respect the tighter budget.
+        let mut cursor = 0usize;
+        let mut cost = u64::MAX;
+        let mut keys = Vec::new();
+        let mut first_size = None;
+        let mut post_shrink_max = 0usize;
+        while cursor < full.len() {
+            let (shard, n) = spec.carve(cursor, 16, cost);
+            if first_size.is_none() {
+                first_size = Some(n);
+            } else {
+                post_shrink_max = post_shrink_max.max(n);
+            }
+            keys.extend(shard.expand().into_iter().map(|(_, k)| k));
+            cursor += n;
+            cost = 1; // a slow-worker report collapsed the budget
+        }
+        assert_eq!(keys, full);
+        assert_eq!(first_size, Some(16));
+        // With a cost budget of 1, every later shard is a single point.
+        assert_eq!(post_shrink_max, 1);
+    }
+
+    #[test]
+    fn energy_rides_every_point_and_totals() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Scalar, Mode::Vector],
+            lanes: vec![2],
+            vlens: vec![256],
+            seed: 4,
+            threads: 1,
+            ..Default::default()
+        };
+        let report = run_sweep(&spec);
+        let j = report_json(&report);
+        let points = j.get("points").unwrap().as_arr().unwrap();
+        let mut want_total = 0.0;
+        for (p, row) in report.points.iter().zip(points) {
+            let cycles = p.outcome.as_ref().unwrap().cycles;
+            let energy = row.get("energy").unwrap();
+            let joules = energy.get("joules").unwrap().as_f64().unwrap();
+            assert!(joules > 0.0);
+            assert_eq!(joules, point_energy_j(p.mode, cycles));
+            assert!(energy.get("time_s").unwrap().as_f64().unwrap() > 0.0);
+            want_total += joules;
+        }
+        // Scalar and vector points price under different Table 2
+        // systems: same model, different wattage.
+        let model = EnergyModel::default();
+        let scalar = report.points[0].outcome.as_ref().unwrap().cycles;
+        assert_eq!(
+            points[0].get("energy").unwrap().get("joules").unwrap().as_f64(),
+            Some(model.scalar_energy_j(scalar))
+        );
+        assert_eq!(
+            j.get("energy_total_j").unwrap().as_f64(),
+            Some(want_total)
+        );
+        // Energy survives the JSON round trip bit-for-bit (the cluster
+        // parity contract depends on deterministic f64 rendering).
+        let reparsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            reparsed.get("energy_total_j").unwrap().as_f64(),
+            Some(want_total)
+        );
     }
 
     #[test]

@@ -9,18 +9,21 @@
 //!             [--threads N] [--seed N] [--cache-dir DIR]
 //!             [--analytic-limit N | --no-analytic]
 //!             [--workers host:port,... [--shard-points N] [--shard-cost N]]
+//!             [--listen host:port [--join-grace-ms N]]
 //! arrow describe datapath|write-enable|simd-alu|system
 //! arrow validate                      # simulator vs XLA golden artifacts
 //! arrow serve [--addr 127.0.0.1:7676] [--cache-dir DIR]
+//!             [--join host:port [--advertise host:port]]
 //! arrow cluster --workers N [--cache-dir DIR] [--base-port P]
 //! arrow cache compact --cache-dir DIR [--dry-run]
 //! arrow --lanes 4 --vlen 512 ...      # design-time overrides
 //! ```
 
 use arrow_rvv::bench::cluster::{self, ClusterSpec, FleetSpec};
+use arrow_rvv::bench::fleet::{self, Membership};
 use arrow_rvv::bench::runner::{run_benchmark, Mode};
 use arrow_rvv::bench::suite::{Benchmark, BENCHMARKS};
-use arrow_rvv::bench::sweep::{report_json, run_sweep, SweepSpec};
+use arrow_rvv::bench::sweep::{energy_total_j, report_json, run_sweep, SweepSpec};
 use arrow_rvv::bench::{store, Profile, TimingVariant, PROFILES};
 use arrow_rvv::energy::EnergyModel;
 use arrow_rvv::report;
@@ -49,9 +52,11 @@ COMMANDS:
         [--timing LIST] [--threads N] [--seed N]
         [--cache-dir DIR] [--analytic-limit N | --no-analytic]
         [--workers HOST:PORT,... [--shard-points N] [--shard-cost N]]
+        [--listen HOST:PORT [--join-grace-ms N]]
   describe <datapath|write-enable|simd-alu|system>
   validate
   serve [--addr HOST:PORT] [--cache-dir DIR]
+        [--join HOST:PORT [--advertise HOST:PORT]]
   cluster --workers N [--cache-dir DIR] [--base-port PORT]
           [--max-restarts N]
   cache compact --cache-dir DIR [--dry-run]
@@ -60,8 +65,13 @@ COMMANDS:
 Distributed sweeps: `arrow sweep --workers a:1,b:2` shards the grid
 across running `arrow serve` workers and merges one report (dead
 workers retry on survivors, then fall back to local evaluation);
-`arrow cluster --workers N --cache-dir DIR` spawns and supervises a
-local worker fleet sharing one result store.
+`arrow sweep --listen 0.0.0.0:7700` additionally serves a fleet
+registry — workers started anywhere as `arrow serve --join host:7700`
+announce themselves (and keep heartbeating) and are handed shards the
+moment they appear, even mid-sweep, so a sweep may start with zero
+workers and still run fleet-wide.  Shard sizes adapt to measured
+worker throughput.  `arrow cluster --workers N --cache-dir DIR`
+spawns and supervises a local worker fleet sharing one result store.
 ";
 
 /// Tiny argument cursor (clap is unavailable offline).
@@ -125,6 +135,40 @@ fn parse_list<T, E: std::fmt::Display>(
                 .map_err(|e| format!("bad {what} `{item}`: {e}").into())
         })
         .collect()
+}
+
+/// One per-worker fleet-health line for the sweep stderr summary: how
+/// the worker arrived, what it served, the caps and ledger health it
+/// advertised, and its measured cost per estimated instruction.
+fn worker_summary(w: &cluster::WorkerStats) -> String {
+    use std::fmt::Write as _;
+    let mut line = format!(
+        "worker {}{}: {} shard(s)",
+        w.addr,
+        if w.joined { " (joined)" } else { "" },
+        w.shards
+    );
+    if let Some((grid, batch)) = w.caps {
+        let _ = write!(line, ", caps {grid} pts / {batch} per batch");
+    }
+    if let Some(l) = &w.ledger {
+        let _ = write!(
+            line,
+            ", ledger {} entries / {} B / {} superseded",
+            l.entries, l.bytes, l.superseded
+        );
+    }
+    if w.est_cost > 0 && w.elapsed_ms > 0.0 {
+        let _ = write!(
+            line,
+            ", measured {:.2e} s/instr",
+            (w.elapsed_ms / 1e3) / w.est_cost as f64
+        );
+    }
+    if let Some(e) = &w.error {
+        let _ = write!(line, ", then lost: {e}");
+    }
+    line
 }
 
 fn main() -> Result<()> {
@@ -279,6 +323,11 @@ fn main() -> Result<()> {
                 spec.analytic_limit = None;
             }
             let workers = args.opt("--workers");
+            let listen = args.opt("--listen");
+            let join_grace_ms = args
+                .opt("--join-grace-ms")
+                .map(|v| v.parse::<u64>())
+                .transpose()?;
             let shard_points = args
                 .opt("--shard-points")
                 .map(|v| v.parse::<usize>())
@@ -290,16 +339,37 @@ fn main() -> Result<()> {
             if spec.grid_len() == 0 {
                 return fail("sweep: empty grid");
             }
-            let report = if let Some(list) = workers {
-                let workers: Vec<String> = list
+            let report = if workers.is_some() || listen.is_some() {
+                let workers: Vec<String> = workers
+                    .as_deref()
+                    .unwrap_or("")
                     .split(',')
                     .map(|w| w.trim().to_string())
                     .filter(|w| !w.is_empty())
                     .collect();
-                if workers.is_empty() {
+                if workers.is_empty() && listen.is_none() {
                     return fail("sweep: --workers needs host:port,...");
                 }
                 let mut cs = ClusterSpec::new(spec, workers);
+                if let Some(addr) = listen {
+                    // Serve the fleet registry: workers `--join`ing
+                    // this endpoint are dispatched to as they appear.
+                    let membership = Membership::shared();
+                    let bound =
+                        fleet::serve_registry_on(&addr, &membership)
+                            .map_err(|e| e.to_string())?;
+                    eprintln!("fleet registry listening on {bound}");
+                    cs.membership = Some(membership);
+                    // With a registry, it is worth waiting for a fleet
+                    // to materialise before finishing locally.
+                    cs.join_grace = std::time::Duration::from_millis(30_000);
+                }
+                if let Some(ms) = join_grace_ms {
+                    // Honoured with or without --listen: a static
+                    // fleet's coordinator may also be told to wait
+                    // before finishing locally.
+                    cs.join_grace = std::time::Duration::from_millis(ms);
+                }
                 if let Some(points) = shard_points {
                     cs.shard_points = points;
                 }
@@ -307,27 +377,19 @@ fn main() -> Result<()> {
                     cs.shard_cost = cost;
                 }
                 eprintln!(
-                    "sweeping {} grid points across {} worker(s)...",
+                    "sweeping {} grid points across {} pre-listed worker(s)...",
                     cs.spec.grid_len(),
                     cs.workers.len()
                 );
                 let cluster = cluster::run_cluster(&cs)
                     .map_err(|e| e.to_string())?;
                 for w in &cluster.workers {
-                    match &w.error {
-                        None => eprintln!(
-                            "worker {}: {} shard(s)",
-                            w.addr, w.shards
-                        ),
-                        Some(e) => eprintln!(
-                            "worker {}: {} shard(s), then lost: {e}",
-                            w.addr, w.shards
-                        ),
-                    }
+                    eprintln!("{}", worker_summary(w));
                 }
                 eprintln!(
-                    "{} shard(s), {} evaluated locally",
-                    cluster.shards, cluster.local_shards
+                    "{} shard(s), {} evaluated locally, final shard cost {}",
+                    cluster.shards, cluster.local_shards,
+                    cluster.final_shard_cost
                 );
                 cluster.report
             } else {
@@ -351,6 +413,13 @@ fn main() -> Result<()> {
                 report.store_hits,
                 report.analytic,
                 report.cache_hits
+            );
+            let ok_points =
+                report.points.iter().filter(|p| p.outcome.is_ok()).count();
+            eprintln!(
+                "total energy: {:.3e} J across {ok_points} point(s) \
+                 (Table 2 power model)",
+                energy_total_j(&report)
             );
             println!("{}", report_json(&report));
         }
@@ -426,9 +495,24 @@ fn main() -> Result<()> {
             let addr =
                 args.opt("--addr").unwrap_or_else(|| "127.0.0.1:7676".into());
             let cache_dir = args.opt("--cache-dir");
+            let advertise = args.opt("--advertise");
+            let join = match args.opt("--join") {
+                Some(coordinator) => {
+                    let mut join = server::JoinSpec::new(coordinator);
+                    join.advertise = advertise;
+                    Some(join)
+                }
+                None => {
+                    if advertise.is_some() {
+                        return fail("serve: --advertise requires --join");
+                    }
+                    None
+                }
+            };
             server::serve(
                 &addr,
                 cache_dir.as_deref().map(std::path::Path::new),
+                join.as_ref(),
             )?;
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),

@@ -24,12 +24,22 @@
 //! answers many requests in one round trip: its sub-requests run
 //! sequentially on the connection's thread against that same
 //! evaluator, which is what makes one-connection/many-workloads cheap.
+//!
+//! Fleet integration: `sweep` responses carry `elapsed_ms` (measured
+//! wall-time, closing the coordinator's shard-cost feedback loop), the
+//! `shard` handshake advertises live `load` counters, and a server
+//! started with a [`JoinSpec`] (`arrow serve --join`) announces itself
+//! to a coordinator's registry via [`crate::bench::fleet`] and keeps
+//! heartbeating for as long as it lives.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
+use crate::bench::fleet;
 use crate::bench::profiles::{self, TimingVariant};
 use crate::bench::runner::Mode;
 use crate::bench::store::ResultStore;
@@ -51,13 +61,79 @@ pub const MAX_SWEEP_GRID: usize = 4096;
 /// the `shard` handshake; the coordinator chunks against it).
 pub const MAX_BATCH_REQUESTS: usize = 256;
 
+/// Live load counters for one server process, shared by every
+/// connection.  The `shard` handshake surfaces them to coordinators,
+/// and the `--join` announcer folds them into each registration
+/// heartbeat, so a fleet coordinator sees worker load without probing.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    /// Requests currently being handled, across all connections.
+    pub in_flight: AtomicUsize,
+    /// Sweep requests (cluster shards) served since startup.
+    pub sweeps_served: AtomicU64,
+}
+
+impl ServerStats {
+    /// The `{"in_flight": …, "sweeps_served": …}` object both the
+    /// handshake and the registration payload carry.
+    pub fn load_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "in_flight",
+                (self.in_flight.load(Ordering::Relaxed) as u64).into(),
+            ),
+            (
+                "sweeps_served",
+                self.sweeps_served.load(Ordering::Relaxed).into(),
+            ),
+        ])
+    }
+}
+
+/// Fleet-membership side of a worker: where to announce ourselves and
+/// how to be addressed (`arrow serve --join`).
+#[derive(Debug, Clone)]
+pub struct JoinSpec {
+    /// Coordinator registry endpoint (`host:port` of `arrow sweep
+    /// --listen`).
+    pub coordinator: String,
+    /// Address advertised for shard dispatch.  Defaults to the bound
+    /// listen address — override when the worker sits behind NAT or
+    /// binds a wildcard address coordinators cannot dial back.
+    pub advertise: Option<String>,
+    /// Re-registration (heartbeat) interval.
+    pub interval: Duration,
+}
+
+impl JoinSpec {
+    pub fn new(coordinator: impl Into<String>) -> JoinSpec {
+        JoinSpec {
+            coordinator: coordinator.into(),
+            advertise: None,
+            interval: fleet::HEARTBEAT_INTERVAL,
+        }
+    }
+}
+
 fn err_response(msg: impl Into<String>) -> Json {
     Json::obj(vec![("ok", false.into()), ("error", Json::Str(msg.into()))])
 }
 
 /// Handle one request object against a shared evaluator (pure;
-/// exercised directly by tests).
+/// exercised directly by tests).  Load counters read as zero — real
+/// connections go through [`handle_request_with`].
 pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
+    handle_request_with(req, evaluator, &ServerStats::default())
+}
+
+/// [`handle_request`] with the process-wide load counters, so the
+/// `shard` handshake can advertise them and sweep handling can count
+/// shards served.
+pub fn handle_request_with(
+    req: &Json,
+    evaluator: &Evaluator,
+    stats: &ServerStats,
+) -> Json {
     match req.get("cmd").and_then(Json::as_str) {
         Some("ping") => {
             Json::obj(vec![("ok", true.into()), ("pong", true.into())])
@@ -75,6 +151,9 @@ pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
                 ("max_grid", (MAX_SWEEP_GRID as u64).into()),
                 ("max_batch", (MAX_BATCH_REQUESTS as u64).into()),
                 ("store", evaluator.store().is_some().into()),
+                // Live load, so a coordinator (or operator) sees how
+                // busy this worker is straight from the handshake.
+                ("load", stats.load_json()),
             ];
             // Ledger health rides the handshake, so a coordinator (or
             // an operator poking a worker) sees how bloated this
@@ -186,11 +265,19 @@ pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
                 // Fold in peer appends first: workers sharing a cache
                 // dir answer each other's shards from the store.
                 evaluator.refresh_store();
+                let started = std::time::Instant::now();
                 let report = sweep::run_sweep_with(&spec, evaluator);
+                let elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+                stats.sweeps_served.fetch_add(1, Ordering::Relaxed);
                 let Json::Obj(mut body) = sweep::report_json(&report) else {
                     unreachable!("report_json returns an object")
                 };
                 body.insert("ok".into(), true.into());
+                // Measured wall-time closes the coordinator's cost
+                // loop: shard responses report how long they really
+                // took, and `run_cluster` re-budgets later shards
+                // against the observed cost per estimated instruction.
+                body.insert("elapsed_ms".into(), elapsed_ms.into());
                 Json::Obj(body)
             }
             Err(e) => err_response(e),
@@ -216,7 +303,7 @@ pub fn handle_request(req: &Json, evaluator: &Evaluator) -> Json {
                     {
                         err_response("nested batch requests are not allowed")
                     } else {
-                        handle_request(sub, evaluator)
+                        handle_request_with(sub, evaluator, stats)
                     }
                 })
                 .collect();
@@ -353,7 +440,7 @@ fn config_from(req: &Json) -> ArrowConfig {
     c
 }
 
-fn handle_conn(stream: TcpStream, evaluator: &Evaluator) {
+fn handle_conn(stream: TcpStream, evaluator: &Evaluator, stats: &ServerStats) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -365,10 +452,12 @@ fn handle_conn(stream: TcpStream, evaluator: &Evaluator) {
         if line.trim().is_empty() {
             continue;
         }
+        stats.in_flight.fetch_add(1, Ordering::Relaxed);
         let response = match json::parse(&line) {
-            Ok(req) => handle_request(&req, evaluator),
+            Ok(req) => handle_request_with(&req, evaluator, stats),
             Err(e) => err_response(format!("bad json: {e}")),
         };
+        stats.in_flight.fetch_sub(1, Ordering::Relaxed);
         if writeln!(writer, "{response}").is_err() {
             break;
         }
@@ -382,10 +471,16 @@ fn handle_conn(stream: TcpStream, evaluator: &Evaluator) {
 /// connection.  All connections share one [`Evaluator`]; passing a
 /// `cache_dir` additionally backs it with the persistent result store
 /// (an unopenable store is reported and the server runs uncached).
-pub fn serve(addr: &str, cache_dir: Option<&Path>) -> std::io::Result<()> {
+/// With a [`JoinSpec`] the worker also announces itself to a fleet
+/// coordinator and keeps heartbeating (`arrow serve --join`).
+pub fn serve(
+    addr: &str,
+    cache_dir: Option<&Path>,
+    join: Option<&JoinSpec>,
+) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("arrow simulator serving on {addr}");
-    serve_listener(listener, cache_dir)
+    serve_listener_with(listener, cache_dir, join)
 }
 
 /// [`serve`] on an already-bound listener.  The in-process worker
@@ -394,6 +489,19 @@ pub fn serve(addr: &str, cache_dir: Option<&Path>) -> std::io::Result<()> {
 pub fn serve_listener(
     listener: TcpListener,
     cache_dir: Option<&Path>,
+) -> std::io::Result<()> {
+    serve_listener_with(listener, cache_dir, None)
+}
+
+/// [`serve_listener`] with optional fleet membership: when `join` is
+/// set, a detached announcer registers this worker with the
+/// coordinator and re-registers every `join.interval` — each heartbeat
+/// carrying the live load counters and ledger stats — until the
+/// process exits or the coordinator refuses the registration.
+pub fn serve_listener_with(
+    listener: TcpListener,
+    cache_dir: Option<&Path>,
+    join: Option<&JoinSpec>,
 ) -> std::io::Result<()> {
     let mut evaluator = Evaluator::new();
     if let Some(dir) = cache_dir {
@@ -413,16 +521,70 @@ pub fn serve_listener(
         }
     }
     let evaluator = Arc::new(evaluator);
+    let stats = Arc::new(ServerStats::default());
+    if let Some(join) = join {
+        let advertise = match &join.advertise {
+            Some(a) => a.clone(),
+            None => listener.local_addr()?.to_string(),
+        };
+        eprintln!(
+            "joining fleet at {} as {advertise}",
+            join.coordinator
+        );
+        let payload_eval = Arc::clone(&evaluator);
+        let payload_stats = Arc::clone(&stats);
+        fleet::announce(
+            join.coordinator.clone(),
+            join.interval,
+            move || {
+                register_payload(&advertise, &payload_eval, &payload_stats)
+            },
+        );
+    }
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
                 let evaluator = Arc::clone(&evaluator);
-                std::thread::spawn(move || handle_conn(s, &evaluator));
+                let stats = Arc::clone(&stats);
+                std::thread::spawn(move || {
+                    handle_conn(s, &evaluator, &stats)
+                });
             }
             Err(e) => eprintln!("accept: {e}"),
         }
     }
     Ok(())
+}
+
+/// The `{"cmd": "register"}` body one heartbeat carries: identity,
+/// version, request caps, live load, and (when a store is attached)
+/// ledger health — everything the coordinator's membership table
+/// tracks per worker.
+pub fn register_payload(
+    advertise: &str,
+    evaluator: &Evaluator,
+    stats: &ServerStats,
+) -> Json {
+    let mut fields = vec![
+        ("cmd", "register".into()),
+        ("addr", advertise.into()),
+        ("version", env!("CARGO_PKG_VERSION").into()),
+        ("max_grid", (MAX_SWEEP_GRID as u64).into()),
+        ("max_batch", (MAX_BATCH_REQUESTS as u64).into()),
+        ("load", stats.load_json()),
+    ];
+    if let Some(store) = evaluator.store() {
+        let s = store.stats();
+        fields.push((
+            "ledger",
+            Json::obj(vec![
+                ("entries", (s.entries as u64).into()),
+                ("bytes", s.bytes.into()),
+                ("superseded", s.superseded.into()),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
 #[cfg(test)]
@@ -696,6 +858,65 @@ mod tests {
     }
 
     #[test]
+    fn sweep_response_reports_measured_wall_time() {
+        let stats = ServerStats::default();
+        let r = handle_request_with(
+            &req(r#"{"cmd": "sweep", "benchmarks": ["vector_addition"],
+                     "profiles": ["test"], "modes": ["vector"],
+                     "lanes": [2], "vlens": [256], "threads": 1}"#),
+            &Evaluator::new(),
+            &stats,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        // Real work took measurable time, and the shard counter moved.
+        assert!(r.get("elapsed_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(stats.sweeps_served.load(Ordering::Relaxed), 1);
+        // The point rows carry the energy axis.
+        let p = &r.get("points").unwrap().as_arr().unwrap()[0];
+        let energy = p.get("energy").unwrap();
+        assert!(energy.get("joules").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("energy_total_j").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn shard_handshake_surfaces_load() {
+        let stats = ServerStats::default();
+        stats.in_flight.store(3, Ordering::Relaxed);
+        stats.sweeps_served.store(7, Ordering::Relaxed);
+        let r = handle_request_with(
+            &req(r#"{"cmd": "shard"}"#),
+            &Evaluator::new(),
+            &stats,
+        );
+        let load = r.get("load").unwrap();
+        assert_eq!(load.get("in_flight").unwrap().as_u64(), Some(3));
+        assert_eq!(load.get("sweeps_served").unwrap().as_u64(), Some(7));
+    }
+
+    #[test]
+    fn register_payload_carries_identity_load_and_ledger() {
+        let stats = ServerStats::default();
+        stats.sweeps_served.store(5, Ordering::Relaxed);
+        let p = register_payload("10.1.1.1:7", &Evaluator::new(), &stats);
+        assert_eq!(p.get("cmd").unwrap().as_str(), Some("register"));
+        assert_eq!(p.get("addr").unwrap().as_str(), Some("10.1.1.1:7"));
+        assert_eq!(
+            p.get("version").unwrap().as_str(),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+        assert_eq!(
+            p.get("max_grid").unwrap().as_u64(),
+            Some(MAX_SWEEP_GRID as u64)
+        );
+        assert_eq!(
+            p.get("load").unwrap().get("sweeps_served").unwrap().as_u64(),
+            Some(5)
+        );
+        // Storeless workers advertise no ledger.
+        assert_eq!(p.get("ledger"), None);
+    }
+
+    #[test]
     fn list_advertises_timing_variants() {
         let r = handle(r#"{"cmd": "list"}"#);
         let names: Vec<&str> = r
@@ -795,7 +1016,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         std::thread::spawn(move || {
             let (s, _) = listener.accept().unwrap();
-            handle_conn(s, &Evaluator::new());
+            handle_conn(s, &Evaluator::new(), &ServerStats::default());
         });
         let mut client = TcpStream::connect(addr).unwrap();
         writeln!(client, r#"{{"cmd": "ping"}}"#).unwrap();

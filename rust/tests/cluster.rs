@@ -104,6 +104,18 @@ fn cluster_sweep_is_identical_to_a_local_run() {
         cluster.workers.iter().map(|w| w.shards).sum::<usize>(),
         cluster.shards
     );
+    // The carve trace covers the whole grid, and the adaptive budget
+    // never collapses on a healthy fleet of fast test-profile shards.
+    assert_eq!(cluster.shard_sizes.iter().sum::<usize>(), spec.grid_len());
+    assert!(cluster.shard_sizes.iter().all(|&n| n == 4));
+    assert!(cluster.final_shard_cost > 4, "{}", cluster.final_shard_cost);
+    // Pre-listed workers are static members with advertised caps, and
+    // storeless workers report no ledger.
+    for w in &cluster.workers {
+        assert!(!w.joined, "{w:?}");
+        assert!(w.caps.is_some(), "{w:?}");
+        assert!(w.ledger.is_none(), "{w:?}");
+    }
 
     // Byte-identical per-point JSON, deterministic order included.
     assert_eq!(points_json(&cluster.report), points_json(&local));

@@ -1,0 +1,286 @@
+//! Fleet-registration lifecycle: a sweep started with **zero**
+//! pre-listed workers completes via workers that `--join` after it
+//! starts; heartbeat expiry drains a worker like a death (its pending
+//! work requeues into the fallback path); version-mismatched
+//! registrations are refused over the wire; and the adaptive shard
+//! costing genuinely shrinks later shards after slow worker reports —
+//! all against in-process fleets binding port 0, with every merged
+//! report byte-identical to a local run of the same spec.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use arrow_rvv::bench::cluster::{run_cluster, ClusterSpec};
+use arrow_rvv::bench::fleet::{self, Membership, Registration};
+use arrow_rvv::bench::profiles;
+use arrow_rvv::bench::runner::Mode;
+use arrow_rvv::bench::suite::Benchmark;
+use arrow_rvv::bench::sweep::{report_json, run_sweep, SweepSpec};
+use arrow_rvv::bench::Evaluator;
+use arrow_rvv::system::server;
+use arrow_rvv::util::json::{self, Json};
+
+/// Bind port 0, learn the address, and serve a real worker on a
+/// background thread (leaked; the test process' exit reaps it).
+fn spawn_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let _ = server::serve_listener(listener, None);
+    });
+    addr
+}
+
+/// A worker that answers every request through the real handler, then
+/// lets `transform(request, response)` rewrite the response — how the
+/// tests fake a slow worker (sleep before answering batches) and a
+/// worker reporting absurd measured wall-times.
+fn spawn_custom_worker(
+    transform: impl Fn(&Json, Json) -> Json + Send + Sync + 'static,
+) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let evaluator = Arc::new(Evaluator::new());
+    let transform = Arc::new(transform);
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let evaluator = Arc::clone(&evaluator);
+            let transform = Arc::clone(&transform);
+            thread::spawn(move || {
+                let Ok(mut writer) = stream.try_clone() else { return };
+                let reader = BufReader::new(stream);
+                for line in reader.lines() {
+                    let Ok(line) = line else { break };
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    let Ok(req) = json::parse(line.trim()) else { break };
+                    let resp = server::handle_request(&req, &evaluator);
+                    let resp = transform(&req, resp);
+                    if writeln!(writer, "{resp}").is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    addr
+}
+
+/// One `register` round trip against a live registry endpoint.
+fn register_over_wire(registry: &str, worker: &str, version: &str) -> Json {
+    let mut stream = TcpStream::connect(registry).unwrap();
+    writeln!(
+        stream,
+        r#"{{"cmd": "register", "addr": "{worker}", "version": "{version}"}}"#
+    )
+    .unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap())
+        .read_line(&mut line)
+        .unwrap();
+    json::parse(line.trim()).unwrap()
+}
+
+fn registration(addr: &str) -> Registration {
+    Registration {
+        addr: addr.to_string(),
+        version: env!("CARGO_PKG_VERSION").to_string(),
+        max_grid: 4096,
+        max_batch: 256,
+        in_flight: 0,
+        sweeps_served: 0,
+        ledger: None,
+    }
+}
+
+fn parity_spec() -> SweepSpec {
+    SweepSpec {
+        benchmarks: vec![Benchmark::VAdd, Benchmark::VDot],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Scalar, Mode::Vector],
+        lanes: vec![1, 2],
+        vlens: vec![128, 256],
+        seed: 42,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+fn points_json(report: &arrow_rvv::bench::SweepReport) -> String {
+    report_json(report).get("points").unwrap().to_string()
+}
+
+/// The acceptance shape of the self-organising fleet: a cluster sweep
+/// started with an empty worker list completes entirely via a worker
+/// that registers *after* the sweep starts, and the merged per-point
+/// JSON — energy field included — is byte-identical to a local run.
+#[test]
+fn worker_joining_mid_sweep_picks_up_all_shards() {
+    let spec = parity_spec();
+    let local = run_sweep(&spec);
+    let membership = Membership::shared_with_expiry(Duration::from_secs(60));
+    let registry =
+        fleet::serve_registry_on("127.0.0.1:0", &membership).unwrap();
+    let worker = spawn_worker();
+    {
+        let registry = registry.clone();
+        let worker = worker.clone();
+        thread::spawn(move || {
+            // Join well after the coordinator started waiting.
+            thread::sleep(Duration::from_millis(300));
+            register_over_wire(
+                &registry,
+                &worker,
+                env!("CARGO_PKG_VERSION"),
+            );
+        });
+    }
+    let mut cs = ClusterSpec::new(spec, Vec::new());
+    cs.membership = Some(membership);
+    cs.join_grace = Duration::from_secs(60);
+    cs.shard_points = 4;
+    cs.shards_per_batch = 1;
+    let cluster = run_cluster(&cs).unwrap();
+
+    assert_eq!(cluster.local_shards, 0, "the joiner must do all the work");
+    assert_eq!(cluster.workers.len(), 1);
+    let w = &cluster.workers[0];
+    assert_eq!(w.addr, worker);
+    assert!(w.joined, "must be recorded as fleet-joined, not pre-listed");
+    assert!(w.error.is_none(), "{:?}", w.error);
+    assert_eq!(w.shards, cluster.shards);
+    assert!(w.caps.is_some());
+    assert_eq!(points_json(&cluster.report), points_json(&local));
+}
+
+/// A registered worker whose heartbeats stop is expired and drained
+/// exactly like a dead worker: no new batches, remaining shards land
+/// in the requeue/local-fallback path, and the merged report is still
+/// byte-identical to a local run.
+#[test]
+fn heartbeat_expiry_drains_worker_into_fallback() {
+    let spec = parity_spec();
+    let local = run_sweep(&spec);
+    // Slow worker: every batch takes ~600 ms, far past the 250 ms
+    // expiry — so after (at most) one merged batch the coordinator
+    // sees the heartbeat lapse and drains it.
+    let worker = spawn_custom_worker(|req, resp| {
+        if req.get("cmd").and_then(Json::as_str) == Some("batch") {
+            thread::sleep(Duration::from_millis(600));
+        }
+        resp
+    });
+    let membership =
+        Membership::shared_with_expiry(Duration::from_millis(250));
+    // Register once, directly into the table (the wire path is covered
+    // elsewhere) — and never heartbeat again.
+    membership.register(&registration(&worker)).unwrap();
+    let mut cs = ClusterSpec::new(spec, Vec::new());
+    cs.membership = Some(membership);
+    cs.shard_points = 4;
+    cs.shards_per_batch = 1;
+    let cluster = run_cluster(&cs).unwrap();
+
+    let w = &cluster.workers[0];
+    assert!(
+        w.error.as_deref().is_some_and(|e| e.contains("expired")),
+        "worker must be drained by heartbeat expiry: {:?}",
+        w.error
+    );
+    assert!(
+        cluster.local_shards >= 1,
+        "the drained worker's remaining shards must requeue into the \
+         local fallback"
+    );
+    assert_eq!(w.shards + cluster.local_shards, cluster.shards);
+    assert_eq!(points_json(&cluster.report), points_json(&local));
+}
+
+/// A version-mismatched `register` is refused over the wire and never
+/// enters the membership table; a matching one is welcomed and told
+/// the expiry it must out-pace.
+#[test]
+fn version_mismatched_registration_refused_over_the_wire() {
+    let membership = Membership::shared();
+    let registry =
+        fleet::serve_registry_on("127.0.0.1:0", &membership).unwrap();
+    let resp = register_over_wire(&registry, "127.0.0.1:1", "99.0.0");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    let err = resp.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("99.0.0"), "{err}");
+    assert!(err.contains(env!("CARGO_PKG_VERSION")), "{err}");
+    assert!(err.contains("refused"), "{err}");
+    assert_eq!(membership.live_count(), 0);
+
+    let resp = register_over_wire(
+        &registry,
+        "127.0.0.1:1",
+        env!("CARGO_PKG_VERSION"),
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    assert!(resp.get("expiry_ms").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(membership.live_count(), 1);
+}
+
+/// The measured-cost feedback loop end to end: a worker that reports
+/// absurdly slow shard wall-times makes the coordinator shrink every
+/// later carve down to single points — visibly smaller shards — while
+/// the merged report stays byte-identical to a local run (adaptivity
+/// may only move shard boundaries, never results).
+#[test]
+fn adaptive_shard_cost_shrinks_after_slow_reports() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![1, 2],
+        vlens: vec![128, 256],
+        elens: vec![32, 64],
+        timing: vec![profiles::TIMING_BASELINE, profiles::TIMING_BURST_MEM],
+        seed: 42,
+        threads: 2,
+        ..Default::default()
+    };
+    assert_eq!(spec.grid_len(), 16);
+    let local = run_sweep(&spec);
+    // Evaluate honestly, then report every shard as having taken 1e12
+    // ms: the EWMA collapses the carve budget to its floor.
+    let worker = spawn_custom_worker(|_req, mut resp| {
+        if let Json::Obj(map) = &mut resp {
+            if let Some(Json::Arr(subs)) = map.get_mut("responses") {
+                for sub in subs {
+                    if let Json::Obj(m) = sub {
+                        if m.contains_key("elapsed_ms") {
+                            m.insert("elapsed_ms".into(), Json::Num(1e12));
+                        }
+                    }
+                }
+            }
+        }
+        resp
+    });
+    let mut cs = ClusterSpec::new(spec, vec![worker]);
+    let initial_cost = cs.shard_cost;
+    cs.shard_points = 8;
+    cs.shards_per_batch = 1;
+    let cluster = run_cluster(&cs).unwrap();
+
+    assert_eq!(cluster.local_shards, 0);
+    // First shard carved under the initial budget: the full 8 points.
+    assert_eq!(cluster.shard_sizes[0], 8, "{:?}", cluster.shard_sizes);
+    // After the first slow report every later carve is a single point.
+    assert_eq!(
+        *cluster.shard_sizes.last().unwrap(),
+        1,
+        "{:?}",
+        cluster.shard_sizes
+    );
+    assert!(cluster.shards > 4, "{:?}", cluster.shard_sizes);
+    assert!(cluster.final_shard_cost < initial_cost);
+    assert_eq!(points_json(&cluster.report), points_json(&local));
+}
