@@ -1,0 +1,94 @@
+//! Sweep throughput: lockstep batching vs the sequential scalar path.
+//!
+//! The lockstep engine's pitch is that design-space points sharing a
+//! *cohort* (same program, VLEN and indexed-mem flag) differ only in
+//! cycle accounting, so N of them can ride one decode stream on a
+//! [`MachineBatch`](arrow_rvv::system::MachineBatch) instead of N full
+//! `Session` replays.  This bench measures that claim end to end
+//! through `run_sweep`: a 64-point same-program grid (one benchmark,
+//! 4 lane counts x 4 VLENs x 2 ELENs x 2 timing variants) evaluated
+//! with automatic batching against the identical grid forced down the
+//! sequential path with `batch_width: Some(1)`.  Both runs use one
+//! worker thread so the ratio isolates the engine, not the pool.
+//!
+//! The speedup ratio is recorded into `BENCH_sweep_throughput.json`
+//! and asserted `>= 1` — the batched path must never lose to the
+//! path it replaces (CI runs this as a smoke test with a small
+//! `ARROW_BENCH_BUDGET_S`).
+//!
+//! ```bash
+//! cargo bench --bench sweep_throughput
+//! ```
+
+use arrow_rvv::bench::profiles;
+use arrow_rvv::bench::runner::Mode;
+use arrow_rvv::bench::suite::Benchmark;
+use arrow_rvv::bench::sweep::{run_sweep, SweepSpec};
+use arrow_rvv::util::bencher::Bencher;
+
+/// The 64-point same-program grid: every point runs the identical VAdd
+/// vector program, so the grid splits into 4 cohorts (one per VLEN) of
+/// 16 lockstep members each.
+fn grid() -> SweepSpec {
+    SweepSpec {
+        benchmarks: vec![Benchmark::VAdd],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Vector],
+        lanes: vec![1, 2, 4, 8],
+        vlens: vec![128, 256, 512, 1024],
+        elens: vec![32, 64],
+        timing: vec![profiles::TIMING_BASELINE, profiles::TIMING_BURST_MEM],
+        seed: 11,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut bench = Bencher::default();
+
+    let batched_spec = grid();
+    let sequential_spec = SweepSpec { batch_width: Some(1), ..grid() };
+    let points = batched_spec.grid_len() as f64;
+
+    // Sanity-check the routing once before timing anything: every point
+    // must be freshly simulated (no store, no analytic shortcut), and
+    // the batched run must actually take the lockstep path.
+    let report = run_sweep(&batched_spec);
+    assert_eq!(report.points.len(), 64);
+    assert_eq!(report.unique_simulated, 64);
+    assert_eq!(report.cache_hits, 0);
+    assert_eq!(
+        (report.batched_points, report.batch_groups),
+        (64, 4),
+        "64-point grid should run as 4 VLEN cohorts of 16 lockstep \
+         members"
+    );
+    let report = run_sweep(&sequential_spec);
+    assert_eq!(report.unique_simulated, 64);
+    assert_eq!(report.batched_points, 0);
+
+    bench.bench("sweep64_lockstep_batched (points/s)", || {
+        let r = run_sweep(&batched_spec);
+        assert_eq!(r.unique_simulated, 64);
+        Some(points)
+    });
+    bench.bench("sweep64_sequential (points/s)", || {
+        let r = run_sweep(&sequential_spec);
+        assert_eq!(r.unique_simulated, 64);
+        Some(points)
+    });
+
+    let batched_s = bench.results()[0].mean_s;
+    let sequential_s = bench.results()[1].mean_s;
+    let speedup = sequential_s / batched_s;
+    bench.record_value("sweep64/batched_speedup", speedup, "x");
+    assert!(
+        speedup >= 1.0,
+        "lockstep batching lost to the sequential path it replaces: \
+         {batched_s:.4}s batched vs {sequential_s:.4}s sequential \
+         ({speedup:.2}x)"
+    );
+
+    bench.finish_to_json("sweep_throughput");
+}

@@ -205,6 +205,11 @@ pub struct WorkerStats {
     /// Cumulative estimated instructions of those shards — with
     /// `elapsed_ms`, this worker's measured cost per instruction.
     pub est_cost: u64,
+    /// Points it simulated in lockstep batches, summed over its merged
+    /// shard reports.
+    pub batched_points: u64,
+    /// Lockstep batches it launched across those shards.
+    pub batch_groups: u64,
 }
 
 /// A merged cluster sweep: the report plus distribution provenance.
@@ -373,6 +378,9 @@ fn shard_request(shard: &SweepSpec) -> Json {
     match shard.analytic_limit {
         Some(limit) => fields.push(("analytic_limit", limit.into())),
         None => fields.push(("no_analytic", true.into())),
+    }
+    if let Some(w) = shard.batch_width {
+        fields.push(("batch_width", (w as u64).into()));
     }
     Json::obj(fields)
 }
@@ -625,6 +633,8 @@ fn stat_index(
         ledger: None,
         elapsed_ms: 0.0,
         est_cost: 0,
+        batched_points: 0,
+        batch_groups: 0,
     });
     s.len() - 1
 }
@@ -808,11 +818,20 @@ impl Dispatch<'_> {
                                 q.observe(est, elapsed);
                             }
                             {
+                                let shard_count = |k: &str| {
+                                    sub.get(k)
+                                        .and_then(Json::as_u64)
+                                        .unwrap_or(0)
+                                };
                                 let mut s = lock(self.stats);
                                 s[widx].shards += 1;
                                 s[widx].elapsed_ms += elapsed;
                                 s[widx].est_cost =
                                     s[widx].est_cost.saturating_add(est);
+                                s[widx].batched_points +=
+                                    shard_count("batched_points");
+                                s[widx].batch_groups +=
+                                    shard_count("batch_groups");
                             }
                             merged.set(idx + 1);
                         }
@@ -1035,6 +1054,8 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
         local.push(queue.shards.len() - 1);
     }
     let local_shards = local.len();
+    let mut local_batched_points = 0u64;
+    let mut local_batch_groups = 0u64;
     if !local.is_empty() {
         let mut evaluator = Evaluator::new();
         if let Some(dir) = &cs.spec.cache_dir {
@@ -1049,6 +1070,8 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
             if let Some(e) = partial.store_error {
                 store_errors.push(e);
             }
+            local_batched_points += partial.batched_points;
+            local_batch_groups += partial.batch_groups;
             for p in partial.points {
                 results.entry(p.key).or_insert(p.outcome);
             }
@@ -1086,12 +1109,21 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
         }
         points.push(SweepPoint::from_eval(&point, key, outcome));
     }
+    // Batching counters are execution provenance, not grid facts: the
+    // merged totals sum what each shard *actually* did (worker shard
+    // reports plus the local fallback), so they may differ from a
+    // single local run of the whole grid — shard boundaries cut
+    // cohorts — but always account for the same simulated points.
     let report = SweepReport {
         points,
         unique_simulated,
         store_hits,
         analytic,
         cache_hits,
+        batched_points: local_batched_points
+            + stats.iter().map(|w| w.batched_points).sum::<u64>(),
+        batch_groups: local_batch_groups
+            + stats.iter().map(|w| w.batch_groups).sum::<u64>(),
         threads: into_inner(claimed_addrs).len().max(1),
         store_error: if store_errors.is_empty() {
             None
@@ -1346,10 +1378,18 @@ mod tests {
             .map(|t| t.as_str().unwrap())
             .collect();
         assert_eq!(timing, vec!["baseline", "burst-mem"]);
-        let limited =
-            shard_request(&SweepSpec { analytic_limit: Some(9), ..spec });
+        let limited = shard_request(&SweepSpec {
+            analytic_limit: Some(9),
+            ..spec.clone()
+        });
         assert_eq!(limited.get("analytic_limit").unwrap().as_u64(), Some(9));
         assert_eq!(limited.get("no_analytic"), None);
+        // Lockstep batch policy rides the wire too: absent means the
+        // worker picks its default, explicit widths are forwarded.
+        assert_eq!(req.get("batch_width"), None);
+        let widened =
+            shard_request(&SweepSpec { batch_width: Some(8), ..spec });
+        assert_eq!(widened.get("batch_width").unwrap().as_u64(), Some(8));
     }
 
     /// The coordinator crash regression: a worker thread that panics

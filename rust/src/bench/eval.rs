@@ -30,13 +30,14 @@ use std::sync::{Arc, Mutex};
 
 use crate::asm::{assemble, Program};
 use crate::isa::{decode, Instr};
+use crate::scalar::ScalarTiming;
 use crate::system::machine::RunSummary;
-use crate::system::Session;
+use crate::system::{MachineBatch, Session};
 use crate::vector::ArrowConfig;
 
 use super::analytic;
 use super::profiles::{Profile, TimingVariant};
-use super::runner::{bench_source, run_on_session, Mode};
+use super::runner::{bench_source, run_on_session, Mode, DEFAULT_BUDGET};
 use super::store::ResultStore;
 use super::suite::{BenchSize, Benchmark};
 
@@ -175,6 +176,20 @@ impl EvalPoint {
 
     pub fn key(&self, seed: u64) -> String {
         point_key(self.benchmark, &self.profile, self.mode, &self.config, seed)
+    }
+
+    /// Lockstep-cohort identity: points that agree on all of these
+    /// follow one architectural trace (same program, same `vl` per
+    /// iteration, same memory image) and may share a single
+    /// [`MachineBatch`] run — lanes, ELEN and timing are free axes.
+    pub fn cohort(&self) -> (Benchmark, Mode, BenchSize, u32, bool) {
+        (
+            self.benchmark,
+            self.mode,
+            self.size(),
+            self.config.vlen_bits,
+            self.config.indexed_mem,
+        )
     }
 }
 
@@ -320,96 +335,309 @@ impl Evaluator {
         analytic_limit: Option<u64>,
     ) -> EvalResult {
         point.config.validate()?;
-        let size = point.size();
         let key = point.key(seed);
-        let analytic_allowed = analytic_limit.is_some_and(|limit| {
-            analytic::should_extrapolate(point.benchmark, size, point.mode, limit)
-        });
-        if let Some(store) = &self.store {
-            if let Some(hit) = store.get(&key) {
-                // A stored analytic estimate only satisfies callers
-                // whose policy would route this point analytic anyway;
-                // anyone demanding exact simulation falls through, and
-                // the fresh simulation upgrades the stored record.
-                if hit.origin != Provenance::Analytic || analytic_allowed {
-                    return Ok(hit);
+        let analytic_allowed = self.analytic_allowed(point, analytic_limit);
+        if let Some(hit) = self.store_hit(&key, analytic_allowed) {
+            return Ok(hit);
+        }
+        let outcome = if analytic_allowed {
+            self.extrapolate(point)?
+        } else {
+            self.simulate(point, seed)?
+        };
+        self.store_outcome(&key, &outcome);
+        Ok(outcome)
+    }
+
+    /// Evaluate a slice of points, answering same-cohort simulation
+    /// groups with one lockstep [`MachineBatch`] run each.
+    ///
+    /// Per-point results are byte-identical to [`Evaluator::evaluate`]
+    /// (the sweep parity tests are the oracle): the store and analytic
+    /// tiers run per point exactly as before, and only points that
+    /// would fully simulate are grouped — by [`EvalPoint::cohort`] —
+    /// into lockstep runs.  Singleton cohorts fall back to the scalar
+    /// path.  `batch_width` caps members per lockstep run (`None` =
+    /// auto, [`DEFAULT_BATCH_WIDTH`]; `Some(1)` disables batching).
+    pub fn evaluate_batch(
+        &self,
+        points: &[EvalPoint],
+        seed: u64,
+        analytic_limit: Option<u64>,
+        batch_width: Option<usize>,
+    ) -> BatchEval {
+        let width_cap = batch_width.unwrap_or(DEFAULT_BATCH_WIDTH).max(1);
+        let mut results: Vec<Option<EvalResult>> =
+            points.iter().map(|_| None).collect();
+        let mut pending: Vec<usize> = Vec::new();
+        for (i, point) in points.iter().enumerate() {
+            if let Err(e) = point.config.validate() {
+                results[i] = Some(Err(e));
+                continue;
+            }
+            let key = point.key(seed);
+            let analytic_allowed =
+                self.analytic_allowed(point, analytic_limit);
+            if let Some(hit) = self.store_hit(&key, analytic_allowed) {
+                results[i] = Some(Ok(hit));
+                continue;
+            }
+            if analytic_allowed {
+                let r = self.extrapolate(point);
+                if let Ok(outcome) = &r {
+                    self.store_outcome(&key, outcome);
+                }
+                results[i] = Some(r);
+                continue;
+            }
+            pending.push(i);
+        }
+
+        let mut cohorts: HashMap<
+            (Benchmark, Mode, BenchSize, u32, bool),
+            Vec<usize>,
+        > = HashMap::new();
+        for &i in &pending {
+            cohorts.entry(points[i].cohort()).or_default().push(i);
+        }
+        // Deterministic group order (HashMap iteration is not).
+        let mut cohorts: Vec<Vec<usize>> = cohorts.into_values().collect();
+        cohorts.sort_by_key(|members| members[0]);
+
+        let mut batched_points = 0u64;
+        let mut batch_groups = 0u64;
+        for members in cohorts {
+            for chunk in members.chunks(width_cap) {
+                if chunk.len() < 2 {
+                    // A lockstep run of one would only add overhead.
+                    for &i in chunk {
+                        let point = &points[i];
+                        let r = self.simulate(point, seed);
+                        if let Ok(outcome) = &r {
+                            self.store_outcome(&point.key(seed), outcome);
+                        }
+                        results[i] = Some(r);
+                    }
+                    continue;
+                }
+                batch_groups += 1;
+                batched_points += chunk.len() as u64;
+                for (&i, r) in chunk
+                    .iter()
+                    .zip(self.simulate_lockstep(points, chunk, seed))
+                {
+                    if let Ok(outcome) = &r {
+                        self.store_outcome(&points[i].key(seed), outcome);
+                    }
+                    results[i] = Some(r);
                 }
             }
         }
-        let outcome = if analytic_allowed {
-            // Fit-size simulations run through the shared program
-            // cache too (seed 1, matching `analytic::cycles_at` — the
-            // cycle ledger is data-independent, so any seed gives the
-            // same count).
-            let cycles = analytic::extrapolate_with(
+        BatchEval {
+            results: results
+                .into_iter()
+                .map(|r| r.expect("every point answered"))
+                .collect(),
+            batched_points,
+            batch_groups,
+        }
+    }
+
+    fn analytic_allowed(
+        &self,
+        point: &EvalPoint,
+        analytic_limit: Option<u64>,
+    ) -> bool {
+        analytic_limit.is_some_and(|limit| {
+            analytic::should_extrapolate(
                 point.benchmark,
-                size,
+                point.size(),
                 point.mode,
-                &mut |fit_size| {
-                    let session = self.programs.session(
-                        point.benchmark,
-                        fit_size,
-                        point.mode,
-                        point.config,
-                    )?;
-                    let workload = point.benchmark.workload(fit_size, 1);
-                    run_on_session(
-                        &session,
-                        point.benchmark,
-                        fit_size,
-                        point.mode,
-                        &workload,
-                    )
-                    .map(|r| r.cycles)
-                    .map_err(|e| e.to_string())
-                },
-            )?;
-            EvalOutcome {
-                cycles,
-                verified: false,
-                summary: RunSummary {
-                    cycles,
-                    lanes: point.config.lanes,
-                    lane_busy: vec![0; point.config.lanes],
-                    ..Default::default()
-                },
-                provenance: Provenance::Analytic,
-                origin: Provenance::Analytic,
-            }
-        } else {
-            let session = self.programs.session(
-                point.benchmark,
-                size,
-                point.mode,
-                point.config,
-            )?;
-            let workload = point.benchmark.workload(size, seed);
-            let r = run_on_session(
-                &session,
-                point.benchmark,
-                size,
-                point.mode,
-                &workload,
+                limit,
             )
-            .map_err(|e| e.to_string())?;
-            EvalOutcome {
-                cycles: r.cycles,
-                verified: r.verified,
-                summary: r.summary,
-                provenance: Provenance::Simulated,
-                origin: Provenance::Simulated,
+        })
+    }
+
+    /// Store tier: a stored analytic estimate only satisfies callers
+    /// whose policy would route this point analytic anyway; anyone
+    /// demanding exact simulation falls through, and the fresh
+    /// simulation upgrades the stored record.
+    fn store_hit(
+        &self,
+        key: &str,
+        analytic_allowed: bool,
+    ) -> Option<EvalOutcome> {
+        let hit = self.store.as_ref()?.get(key)?;
+        if hit.origin != Provenance::Analytic || analytic_allowed {
+            Some(hit)
+        } else {
+            None
+        }
+    }
+
+    /// Analytic tier.  Fit-size simulations run through the shared
+    /// program cache too (seed 1, matching `analytic::cycles_at` — the
+    /// cycle ledger is data-independent, so any seed gives the same
+    /// count).
+    fn extrapolate(&self, point: &EvalPoint) -> Result<EvalOutcome, String> {
+        let size = point.size();
+        let cycles = analytic::extrapolate_with(
+            point.benchmark,
+            size,
+            point.mode,
+            &mut |fit_size| {
+                let session = self.programs.session(
+                    point.benchmark,
+                    fit_size,
+                    point.mode,
+                    point.config,
+                )?;
+                let workload = point.benchmark.workload(fit_size, 1);
+                run_on_session(
+                    &session,
+                    point.benchmark,
+                    fit_size,
+                    point.mode,
+                    &workload,
+                )
+                .map(|r| r.cycles)
+                .map_err(|e| e.to_string())
+            },
+        )?;
+        Ok(EvalOutcome {
+            cycles,
+            verified: false,
+            summary: RunSummary {
+                cycles,
+                lanes: point.config.lanes,
+                lane_busy: vec![0; point.config.lanes],
+                ..Default::default()
+            },
+            provenance: Provenance::Analytic,
+            origin: Provenance::Analytic,
+        })
+    }
+
+    /// Simulation tier, scalar path: one session, one machine.
+    fn simulate(
+        &self,
+        point: &EvalPoint,
+        seed: u64,
+    ) -> Result<EvalOutcome, String> {
+        let size = point.size();
+        let session = self.programs.session(
+            point.benchmark,
+            size,
+            point.mode,
+            point.config,
+        )?;
+        let workload = point.benchmark.workload(size, seed);
+        let r = run_on_session(
+            &session,
+            point.benchmark,
+            size,
+            point.mode,
+            &workload,
+        )
+        .map_err(|e| e.to_string())?;
+        Ok(EvalOutcome {
+            cycles: r.cycles,
+            verified: r.verified,
+            summary: r.summary,
+            provenance: Provenance::Simulated,
+            origin: Provenance::Simulated,
+        })
+    }
+
+    /// Simulation tier, lockstep path: one [`MachineBatch`] answers a
+    /// whole same-cohort chunk — architectural work once, per-member
+    /// ledgers out.  Errors are batch-wide by design (members share one
+    /// architectural trace), matching what each member would report
+    /// running alone.
+    fn simulate_lockstep(
+        &self,
+        points: &[EvalPoint],
+        members: &[usize],
+        seed: u64,
+    ) -> Vec<EvalResult> {
+        let lead = &points[members[0]];
+        let size = lead.size();
+        let prepared =
+            match self.programs.prepared(lead.benchmark, size, lead.mode) {
+                Ok(p) => p,
+                Err(e) => {
+                    return members.iter().map(|_| Err(e.clone())).collect()
+                }
+            };
+        let configs: Vec<ArrowConfig> =
+            members.iter().map(|&i| points[i].config).collect();
+        let mut batch = match MachineBatch::new(
+            prepared.program.clone(),
+            prepared.decoded.clone(),
+            configs,
+            ScalarTiming::default(),
+        ) {
+            Ok(b) => b,
+            Err(e) => {
+                return members.iter().map(|_| Err(e.clone())).collect()
             }
         };
+        let workload = lead.benchmark.workload(size, seed);
+        for (label, data) in &workload.inputs {
+            let addr = batch.addr_of(label);
+            batch.dram.write_i32_slice(addr, data);
+        }
+        let summaries = match batch.run(DEFAULT_BUDGET) {
+            Ok(s) => s,
+            Err(e) => {
+                let msg = e.to_string();
+                return members.iter().map(|_| Err(msg.clone())).collect();
+            }
+        };
+        let output = batch.dram.read_i32_slice(
+            batch.addr_of(workload.result_label),
+            workload.expected.len(),
+        );
+        let verified = output == workload.expected;
+        summaries
+            .into_iter()
+            .map(|summary| {
+                Ok(EvalOutcome {
+                    cycles: summary.cycles,
+                    verified,
+                    summary,
+                    provenance: Provenance::Simulated,
+                    origin: Provenance::Simulated,
+                })
+            })
+            .collect()
+    }
+
+    /// Best-effort store append: a full disk or yanked cache dir must
+    /// never fail the evaluation itself — but count the miss so reports
+    /// can say the cache is incomplete.
+    fn store_outcome(&self, key: &str, outcome: &EvalOutcome) {
         if let Some(store) = &self.store {
-            // Best-effort: a full disk or yanked cache dir must never
-            // fail the evaluation itself — but count the miss so
-            // reports can say the cache is incomplete.
-            if store.put(&key, &outcome).is_err() {
+            if store.put(key, outcome).is_err() {
                 self.store_put_failures.fetch_add(1, Ordering::Relaxed);
             }
         }
-        Ok(outcome)
     }
+}
+
+/// Default (and maximum sensible) lockstep batch width — wide enough to
+/// cover a full lanes × ELEN × timing cross at one VLEN, small enough
+/// that per-member state stays cache-resident.
+pub const DEFAULT_BATCH_WIDTH: usize = 64;
+
+/// Result of [`Evaluator::evaluate_batch`]: per-point results in input
+/// order plus counters for how much of the work ran lockstep.
+pub struct BatchEval {
+    pub results: Vec<EvalResult>,
+    /// Points answered by a lockstep run (groups of ≥ 2 members).
+    pub batched_points: u64,
+    /// Lockstep runs executed.
+    pub batch_groups: u64,
 }
 
 #[cfg(test)]
@@ -499,6 +727,32 @@ mod tests {
         // estimate equals full simulation here.
         let sim = evaluator.evaluate(&point, 42, None).unwrap();
         assert_eq!(got.cycles, sim.cycles);
+    }
+
+    #[test]
+    fn batch_matches_sequential_per_point() {
+        let evaluator = Evaluator::new();
+        let mut points: Vec<EvalPoint> = [1, 2, 4]
+            .into_iter()
+            .map(|lanes| test_point(Benchmark::VAdd, Mode::Vector, lanes))
+            .collect();
+        points.push(test_point(Benchmark::VDot, Mode::Vector, 2));
+        let batch = evaluator.evaluate_batch(&points, 9, None, None);
+        // The three VAdd lane variants share a cohort and run lockstep;
+        // the VDot point is a singleton and takes the scalar path.
+        assert_eq!(batch.batched_points, 3);
+        assert_eq!(batch.batch_groups, 1);
+        let sequential = Evaluator::new();
+        for (point, got) in points.iter().zip(&batch.results) {
+            let want = sequential.evaluate(point, 9, None).unwrap();
+            assert_eq!(got.as_ref().unwrap(), &want, "{}", point.key(9));
+        }
+        // Width 1 forces every point down the scalar path — results
+        // unchanged, nothing batched.
+        let narrow = evaluator.evaluate_batch(&points, 9, None, Some(1));
+        assert_eq!(narrow.batched_points, 0);
+        assert_eq!(narrow.batch_groups, 0);
+        assert_eq!(narrow.results, batch.results);
     }
 
     #[test]

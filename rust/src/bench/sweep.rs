@@ -15,10 +15,14 @@
 //! * each unique point goes through one shared [`Evaluator`]: answered
 //!   from the persistent result store if `cache_dir` is set, routed
 //!   through analytic extrapolation if its estimated instruction count
-//!   exceeds `analytic_limit`, and otherwise fully simulated on a
-//!   [`crate::system::Session`] built from the shared program cache —
-//!   so a (benchmark, mode, size) group assembles exactly once however
-//!   many lane/VLEN points it spans;
+//!   exceeds `analytic_limit`, and otherwise fully simulated — points
+//!   sharing a *cohort* (same program and architectural state: same
+//!   benchmark, mode, size, VLEN and indexed-mem flag) run in lockstep
+//!   on one [`crate::system::MachineBatch`] over a single decode
+//!   stream, up to [`SweepSpec::batch_width`] members per batch, and
+//!   the rest fall back to a [`crate::system::Session`] built from the
+//!   shared program cache — so a (benchmark, mode, size) group
+//!   assembles exactly once however many lane/VLEN points it spans;
 //! * simulated results are byte-identical to a sequential
 //!   [`run_benchmark`](super::runner::run_benchmark) call with the same
 //!   seed — a property the parity tests pin down — and every outcome is
@@ -28,14 +32,14 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::energy::EnergyModel;
 use crate::util::json::Json;
 
 use super::analytic;
-use super::eval::{EvalPoint, Evaluator};
+use super::eval::{EvalPoint, Evaluator, DEFAULT_BATCH_WIDTH};
 use super::profiles::{self, Profile, TimingVariant};
 use super::runner::{self, Mode};
 use super::store::ResultStore;
@@ -66,6 +70,13 @@ pub struct SweepSpec {
     /// Estimated-instruction count above which a point is extrapolated
     /// analytically instead of simulated; `None` always simulates.
     pub analytic_limit: Option<u64>,
+    /// Lockstep batch width: unique simulated points sharing a cohort
+    /// (same program, VLEN and indexed-mem flag) execute together on
+    /// one [`crate::system::MachineBatch`], at most this many per
+    /// batch.  `None` picks the default
+    /// ([`super::eval::DEFAULT_BATCH_WIDTH`]); `Some(1)` forces the
+    /// sequential scalar path (the parity tests' reference).
+    pub batch_width: Option<usize>,
     /// Directory of the persistent result store; `None` keeps the sweep
     /// in-memory only.
     pub cache_dir: Option<PathBuf>,
@@ -84,6 +95,7 @@ impl Default for SweepSpec {
             seed: 42,
             threads: 0,
             analytic_limit: Some(analytic::SIM_LIMIT),
+            batch_width: None,
             cache_dir: None,
         }
     }
@@ -425,6 +437,12 @@ pub struct SweepReport {
     pub analytic: usize,
     /// Grid entries answered from the in-request dedup cache.
     pub cache_hits: usize,
+    /// Simulated points that ran lockstep on a shared-decode
+    /// [`crate::system::MachineBatch`] (the rest of `unique_simulated`
+    /// took the sequential scalar path).
+    pub batched_points: u64,
+    /// Lockstep batches launched (each covers >= 2 `batched_points`).
+    pub batch_groups: u64,
     /// Worker threads used.
     pub threads: usize,
     /// Set when `cache_dir` was requested but the store failed to open
@@ -477,35 +495,82 @@ pub fn run_sweep_with(spec: &SweepSpec, evaluator: &Evaluator) -> SweepReport {
         }
     }
 
+    // Group the unique jobs into lockstep work units: points of one
+    // *cohort* (same program and architectural trace — see
+    // [`EvalPoint::cohort`]) batch together, chunked at the batch
+    // width.  Cohorts keep first-occurrence order and members keep
+    // grid order, so the unit walk is deterministic.
+    let width_cap =
+        spec.batch_width.unwrap_or(DEFAULT_BATCH_WIDTH).max(1);
+    let mut cohort_index: HashMap<_, usize> = HashMap::new();
+    let mut cohorts: Vec<Vec<usize>> = Vec::new();
+    for (i, job) in jobs.iter().enumerate() {
+        let slot = *cohort_index
+            .entry(job.cohort())
+            .or_insert_with(|| {
+                cohorts.push(Vec::new());
+                cohorts.len() - 1
+            });
+        cohorts[slot].push(i);
+    }
+    let units: Vec<Vec<usize>> = cohorts
+        .into_iter()
+        .flat_map(|members| {
+            members
+                .chunks(width_cap)
+                .map(<[usize]>::to_vec)
+                .collect::<Vec<_>>()
+        })
+        .collect();
+
     let threads = if spec.threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
         spec.threads
     }
-    .clamp(1, jobs.len().clamp(1, MAX_SWEEP_THREADS));
+    .clamp(1, units.len().clamp(1, MAX_SWEEP_THREADS));
 
-    // Fan the unique jobs across the pool: workers pull the next job
+    // Fan the work units across the pool: workers pull the next unit
     // index from a shared atomic cursor until the queue drains.
     let results: Mutex<Vec<Option<PointResult>>> =
         Mutex::new(vec![None; jobs.len()]);
     let cursor = AtomicUsize::new(0);
+    let batched_points = AtomicU64::new(0);
+    let batch_groups = AtomicU64::new(0);
     let seed = spec.seed;
     let analytic_limit = spec.analytic_limit;
+    let batch_width = spec.batch_width;
     let put_failures_before = evaluator.store_put_failures();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
+                let u = cursor.fetch_add(1, Ordering::Relaxed);
+                if u >= units.len() {
                     break;
                 }
-                let outcome =
-                    evaluator.evaluate(&jobs[i], seed, analytic_limit);
-                results.lock().unwrap()[i] = Some(outcome);
+                let unit = &units[u];
+                let points: Vec<EvalPoint> =
+                    unit.iter().map(|&i| jobs[i].clone()).collect();
+                let eval = evaluator.evaluate_batch(
+                    &points,
+                    seed,
+                    analytic_limit,
+                    batch_width,
+                );
+                batched_points
+                    .fetch_add(eval.batched_points, Ordering::Relaxed);
+                batch_groups
+                    .fetch_add(eval.batch_groups, Ordering::Relaxed);
+                let mut slots = results.lock().unwrap();
+                for (&i, outcome) in unit.iter().zip(eval.results) {
+                    slots[i] = Some(outcome);
+                }
             });
         }
     });
     let results = results.into_inner().unwrap();
+    let batched_points = batched_points.into_inner();
+    let batch_groups = batch_groups.into_inner();
 
     let mut unique_simulated = 0usize;
     let mut store_hits = 0usize;
@@ -538,6 +603,8 @@ pub fn run_sweep_with(spec: &SweepSpec, evaluator: &Evaluator) -> SweepReport {
         store_hits,
         analytic,
         cache_hits,
+        batched_points,
+        batch_groups,
         threads,
         store_error: (failed_puts > 0).then(|| {
             format!(
@@ -638,6 +705,8 @@ pub fn report_json(report: &SweepReport) -> Json {
         ("store_hits", (report.store_hits as u64).into()),
         ("analytic", (report.analytic as u64).into()),
         ("cache_hits", (report.cache_hits as u64).into()),
+        ("batched_points", report.batched_points.into()),
+        ("batch_groups", report.batch_groups.into()),
         ("threads", (report.threads as u64).into()),
         ("energy_total_j", energy_total_j(report).into()),
     ];
@@ -674,6 +743,11 @@ mod tests {
         assert_eq!(report.cache_hits, 0);
         assert_eq!(report.store_hits, 0);
         assert_eq!(report.analytic, 0);
+        // 4 cohorts (2 benchmarks x 2 VLENs), each batching its 2 lane
+        // variants in lockstep — and lockstep results still match the
+        // sequential runs below byte-for-byte.
+        assert_eq!(report.batched_points, 8);
+        assert_eq!(report.batch_groups, 4);
         for p in &report.points {
             let config = ArrowConfig {
                 lanes: p.lanes,
@@ -701,6 +775,9 @@ mod tests {
         // 3 lane entries collapse to 1 unique per (bench, vlen) pair.
         assert_eq!(report.unique_simulated, 2 * 2);
         assert_eq!(report.cache_hits, 2 * 2 * 2);
+        // Every cohort dedups to a single member: nothing to batch.
+        assert_eq!(report.batched_points, 0);
+        assert_eq!(report.batch_groups, 0);
         // Cached copies are identical to the simulated original.
         let first = &report.points[0];
         let dup = report

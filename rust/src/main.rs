@@ -7,6 +7,7 @@
 //!             [--grid-lanes 1,2,4] [--grid-vlens 128,256,512]
 //!             [--elens 32,64] [--timing baseline,burst-mem]
 //!             [--threads N] [--seed N] [--cache-dir DIR]
+//!             [--batch-width N]
 //!             [--analytic-limit N | --no-analytic]
 //!             [--workers host:port,... [--shard-points N] [--shard-cost N]]
 //!             [--listen host:port [--join-grace-ms N]]
@@ -50,7 +51,8 @@ COMMANDS:
   sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
         [--grid-lanes LIST] [--grid-vlens LIST] [--elens LIST]
         [--timing LIST] [--threads N] [--seed N]
-        [--cache-dir DIR] [--analytic-limit N | --no-analytic]
+        [--cache-dir DIR] [--batch-width N]
+        [--analytic-limit N | --no-analytic]
         [--workers HOST:PORT,... [--shard-points N] [--shard-cost N]]
         [--listen HOST:PORT [--join-grace-ms N]]
   describe <datapath|write-enable|simd-alu|system>
@@ -163,6 +165,13 @@ fn worker_summary(w: &cluster::WorkerStats) -> String {
             line,
             ", measured {:.2e} s/instr",
             (w.elapsed_ms / 1e3) / w.est_cost as f64
+        );
+    }
+    if w.batched_points > 0 {
+        let _ = write!(
+            line,
+            ", {} pt(s) lockstep in {} batch(es)",
+            w.batched_points, w.batch_groups
         );
     }
     if let Some(e) = &w.error {
@@ -313,6 +322,12 @@ fn main() -> Result<()> {
             if let Some(s) = args.opt("--seed") {
                 spec.seed = s.parse()?;
             }
+            if let Some(w) = args.opt("--batch-width") {
+                // 0 = auto (the default width); 1 disables lockstep
+                // batching entirely — the sequential reference path.
+                let w: usize = w.parse()?;
+                spec.batch_width = (w > 0).then_some(w);
+            }
             if let Some(dir) = args.opt("--cache-dir") {
                 spec.cache_dir = Some(std::path::PathBuf::from(dir));
             }
@@ -413,6 +428,10 @@ fn main() -> Result<()> {
                 report.store_hits,
                 report.analytic,
                 report.cache_hits
+            );
+            eprintln!(
+                "{} point(s) ran lockstep in {} batch(es)",
+                report.batched_points, report.batch_groups
             );
             let ok_points =
                 report.points.iter().filter(|p| p.outcome.is_ok()).count();

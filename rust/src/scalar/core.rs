@@ -21,6 +21,20 @@ pub enum StepEvent {
     Vector { instr: VecInstr, rs1_value: u32, rs2_value: u32 },
 }
 
+/// Cycle cost of one scalar instruction, separated from its
+/// architectural effect so a caller can charge it against any timeline.
+/// `Fixed` costs depend only on [`ScalarTiming`] (identical across a
+/// lockstep batch, which always shares one scalar timing model); `Mem`
+/// is one single-beat scalar AXI access whose latency depends on the
+/// caller's bus state and memory timing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalarCost {
+    /// Cycles consumed, independent of bus state.
+    Fixed(u64),
+    /// One `BurstKind::Scalar` access to schedule on the caller's bus.
+    Mem,
+}
+
 /// Runtime fault while executing (decode failure, PC out of range).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CpuFault {
@@ -160,15 +174,40 @@ impl Cpu {
         bus: &mut AxiBus,
         now: u64,
     ) -> Result<StepEvent, CpuFault> {
+        let (event, cost) = self.step_instr_arch(instr, dram);
+        match cost {
+            ScalarCost::Fixed(c) => self.cycles += c,
+            ScalarCost::Mem => {
+                let done = bus.schedule(now, BurstKind::Scalar, 1);
+                self.cycles += done - now;
+            }
+        }
+        Ok(event)
+    }
+
+    /// Execute the *architectural* effect of an already-decoded
+    /// instruction — registers, pc, DRAM, retired count — and report its
+    /// cycle cost without charging it anywhere.  [`Cpu::step_instr`] is
+    /// this plus charging against the cpu's own ledger and one bus; the
+    /// lockstep batch engine replays the returned [`ScalarCost`] against
+    /// every batch member's timeline instead.
+    pub fn step_instr_arch(
+        &mut self,
+        instr: Instr,
+        dram: &mut Dram,
+    ) -> (StepEvent, ScalarCost) {
         let s = match instr {
             Instr::Vector(v) => {
                 // Operand snapshot; the coordinator advances pc + cycles.
                 let (rs1, rs2) = vector_operands(&v);
-                return Ok(StepEvent::Vector {
-                    instr: v,
-                    rs1_value: self.read_reg(rs1),
-                    rs2_value: self.read_reg(rs2),
-                });
+                return (
+                    StepEvent::Vector {
+                        instr: v,
+                        rs1_value: self.read_reg(rs1),
+                        rs2_value: self.read_reg(rs2),
+                    },
+                    ScalarCost::Fixed(0),
+                );
             }
             Instr::Scalar(s) => s,
         };
@@ -176,27 +215,26 @@ impl Cpu {
         self.retired += 1;
         let mut next_pc = self.pc.wrapping_add(4);
         let t = self.timing;
+        let mut cost = ScalarCost::Fixed(t.alu);
 
         match s {
             ScalarInstr::Lui { rd, imm } => {
                 self.write_reg(rd, imm as u32);
-                self.cycles += t.alu;
             }
             ScalarInstr::Auipc { rd, imm } => {
                 self.write_reg(rd, self.pc.wrapping_add(imm as u32));
-                self.cycles += t.alu;
             }
             ScalarInstr::Jal { rd, offset } => {
                 self.write_reg(rd, self.pc.wrapping_add(4));
                 next_pc = self.pc.wrapping_add(offset as u32);
-                self.cycles += t.alu + t.branch_taken_penalty;
+                cost = ScalarCost::Fixed(t.alu + t.branch_taken_penalty);
             }
             ScalarInstr::Jalr { rd, rs1, offset } => {
                 let target =
                     self.read_reg(rs1).wrapping_add(offset as u32) & !1;
                 self.write_reg(rd, self.pc.wrapping_add(4));
                 next_pc = target;
-                self.cycles += t.alu + t.branch_taken_penalty;
+                cost = ScalarCost::Fixed(t.alu + t.branch_taken_penalty);
             }
             ScalarInstr::Branch { op, rs1, rs2, offset } => {
                 let (a, b) = (self.read_reg(rs1), self.read_reg(rs2));
@@ -208,10 +246,9 @@ impl Cpu {
                     BranchOp::Bltu => a < b,
                     BranchOp::Bgeu => a >= b,
                 };
-                self.cycles += t.alu;
                 if taken {
                     next_pc = self.pc.wrapping_add(offset as u32);
-                    self.cycles += t.branch_taken_penalty;
+                    cost = ScalarCost::Fixed(t.alu + t.branch_taken_penalty);
                 }
             }
             ScalarInstr::Load { op, rd, rs1, offset } => {
@@ -224,8 +261,7 @@ impl Cpu {
                     LoadOp::Lw => dram.read_u32(addr),
                 };
                 self.write_reg(rd, v);
-                let done = bus.schedule(now, BurstKind::Scalar, 1);
-                self.cycles += done - now;
+                cost = ScalarCost::Mem;
             }
             ScalarInstr::Store { op, rs1, rs2, offset } => {
                 let addr = self.read_reg(rs1).wrapping_add(offset as u32);
@@ -235,42 +271,36 @@ impl Cpu {
                     StoreOp::Sh => dram.write_u16(addr, v as u16),
                     StoreOp::Sw => dram.write_u32(addr, v),
                 }
-                let done = bus.schedule(now, BurstKind::Scalar, 1);
-                self.cycles += done - now;
+                cost = ScalarCost::Mem;
             }
             ScalarInstr::OpImm { op, rd, rs1, imm } => {
                 let v = self.alu(op, self.read_reg(rs1), imm as u32);
                 self.write_reg(rd, v);
-                self.cycles += t.alu;
             }
             ScalarInstr::Op { op, rd, rs1, rs2 } => {
                 let v =
                     self.alu(op, self.read_reg(rs1), self.read_reg(rs2));
                 self.write_reg(rd, v);
-                self.cycles += t.alu;
             }
             ScalarInstr::MulDiv { op, rd, rs1, rs2 } => {
                 let v =
                     self.muldiv(op, self.read_reg(rs1), self.read_reg(rs2));
                 self.write_reg(rd, v);
-                self.cycles += match op {
+                cost = ScalarCost::Fixed(match op {
                     MulDivOp::Mul
                     | MulDivOp::Mulh
                     | MulDivOp::Mulhsu
                     | MulDivOp::Mulhu => t.mul,
                     _ => t.div,
-                };
+                });
             }
             ScalarInstr::Ecall => {
-                self.cycles += t.alu;
-                return Ok(StepEvent::Halt);
+                return (StepEvent::Halt, ScalarCost::Fixed(t.alu));
             }
-            ScalarInstr::Fence => {
-                self.cycles += t.alu;
-            }
+            ScalarInstr::Fence => {}
         }
         self.pc = next_pc;
-        Ok(StepEvent::Retired)
+        (StepEvent::Retired, cost)
     }
 }
 

@@ -8,5 +8,5 @@
 pub mod core;
 pub mod timing;
 
-pub use core::{Cpu, StepEvent};
+pub use core::{Cpu, ScalarCost, StepEvent};
 pub use timing::ScalarTiming;

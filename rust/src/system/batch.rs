@@ -1,0 +1,495 @@
+//! `MachineBatch` — lockstep execution of N design points over one
+//! decode stream.
+//!
+//! Every design point in a sweep cohort executes the *same program*: the
+//! architectural trace (PC sequence, scalar registers, VRF contents,
+//! DRAM image, `vl`/`vtype`) depends only on the program, VLEN and
+//! indexed-memory support — lanes, ELEN and both timing models shape
+//! *when* things happen, never *what* happens.  A batch therefore keeps
+//! ONE architectural leader (scalar core + Arrow unit + DDR3) and steps
+//! it exactly as a single [`Machine`](super::machine::Machine) would,
+//! while replaying each instruction's cost against N per-member
+//! timelines laid out struct-of-arrays:
+//!
+//! * scalar instructions return a [`ScalarCost`] from
+//!   [`Cpu::step_instr_arch`]: `Fixed` charges every member the same
+//!   cycles, `Mem` schedules one beat on each member's own AXI bus;
+//! * vector instructions execute once on the leader; the returned
+//!   [`ExecPlan`](crate::vector::ExecPlan) carries the architectural
+//!   quantities (`timed_vl`, `sew_bytes`, `lane_reg`, burst kind) from
+//!   which each member's execute cycles, lane assignment and beat count
+//!   are recomputed under its own config via
+//!   [`exec_cycles_with`](crate::vector::exec_cycles_with) — the same
+//!   formulas the single-machine path uses, so per-member ledgers are
+//!   byte-identical to N separate runs (pinned by
+//!   `tests/sweep_parity.rs`).
+//!
+//! Decode, PC bookkeeping, scoreboard set computation and the Arrow
+//! data path are paid once per instruction instead of once per
+//! (instruction × config) — that is the whole win.  Members must agree
+//! on VLEN and indexed-memory support (enforced at construction);
+//! everything else (lanes × ELEN × timing) may vary freely.
+
+use crate::asm::{Program, DATA_BASE};
+use crate::isa::rvv::VecInstr;
+use crate::isa::Instr;
+use crate::mem::{AxiBus, BurstKind, Dram};
+use crate::scalar::core::CpuFault;
+use crate::scalar::{Cpu, ScalarCost, ScalarTiming, StepEvent};
+use crate::isa::OpCategory;
+use crate::vector::unit::UnitStats;
+use crate::vector::{exec_cycles_with, ArrowConfig, ArrowUnit};
+
+use super::machine::{
+    fuse_pairs, vector_dest_regs, vector_source_regs, MachineError,
+    RunSummary,
+};
+
+/// N lockstep design points sharing one architectural execution.
+pub struct MachineBatch {
+    /// Shared architectural leader.  Built from `configs[0]`; any member
+    /// could lead because the batch invariant (same VLEN, same
+    /// indexed-memory support) makes their traces identical.
+    cpu: Cpu,
+    arrow: ArrowUnit,
+    pub dram: Dram,
+    program: Program,
+    decoded: Vec<Option<Instr>>,
+    fused: Vec<Option<Instr>>,
+    vector_instructions: u64,
+    // Per-member timing state, struct-of-arrays: the dispatch loop walks
+    // each array straight through once per instruction.
+    configs: Vec<ArrowConfig>,
+    host_time: Vec<u64>,
+    buses: Vec<AxiBus>,
+    /// Per-member AXI traffic in bytes (`beats × member ELEN bytes`) —
+    /// the only [`UnitStats`] field that depends on the member config.
+    mem_bytes: Vec<u64>,
+    /// Member-major scoreboard: member `m` owns `reg_ready[m*32..][..32]`.
+    reg_ready: Vec<u64>,
+    /// Flattened per-member lane clocks; member `m` owns
+    /// `lane_free[lane_offsets[m]..lane_offsets[m+1]]` (lane counts vary
+    /// per member).
+    lane_free: Vec<u64>,
+    lane_busy: Vec<u64>,
+    lane_offsets: Vec<usize>,
+}
+
+impl MachineBatch {
+    /// Build a lockstep batch over an assembled + predecoded program.
+    ///
+    /// All members must share `vlen_bits` and `indexed_mem` — the two
+    /// config axes that change the architectural trace.  The decode
+    /// cache must cover the text section; the batch is sealed by
+    /// construction (it never decodes inside the run loop).
+    pub fn new(
+        program: Program,
+        decoded: Vec<Option<Instr>>,
+        configs: Vec<ArrowConfig>,
+        scalar_timing: ScalarTiming,
+    ) -> Result<MachineBatch, String> {
+        let leader = *configs
+            .first()
+            .ok_or_else(|| "batch needs at least one member".to_string())?;
+        for config in &configs {
+            config.validate()?;
+            if config.vlen_bits != leader.vlen_bits
+                || config.indexed_mem != leader.indexed_mem
+            {
+                return Err(format!(
+                    "batch members must agree on VLEN and indexed-memory \
+                     support (leader vlen={} im={}, member vlen={} im={})",
+                    leader.vlen_bits,
+                    leader.indexed_mem,
+                    config.vlen_bits,
+                    config.indexed_mem,
+                ));
+            }
+        }
+        if decoded.len() != program.text.len() {
+            return Err(format!(
+                "decode cache covers {} words but the text section has {}",
+                decoded.len(),
+                program.text.len()
+            ));
+        }
+        let fused = fuse_pairs(&decoded);
+        let mut dram = Dram::new();
+        dram.write_bytes(DATA_BASE, &program.data);
+        let n = configs.len();
+        let mut lane_offsets = Vec::with_capacity(n + 1);
+        let mut total_lanes = 0usize;
+        lane_offsets.push(0);
+        for config in &configs {
+            total_lanes += config.lanes;
+            lane_offsets.push(total_lanes);
+        }
+        Ok(MachineBatch {
+            cpu: Cpu::new(scalar_timing),
+            arrow: ArrowUnit::new(leader),
+            dram,
+            program,
+            decoded,
+            fused,
+            vector_instructions: 0,
+            host_time: vec![0; n],
+            buses: configs
+                .iter()
+                .map(|c| AxiBus::new(c.mem_timing))
+                .collect(),
+            mem_bytes: vec![0; n],
+            reg_ready: vec![0; n * 32],
+            lane_free: vec![0; total_lanes],
+            lane_busy: vec![0; total_lanes],
+            lane_offsets,
+            configs,
+        })
+    }
+
+    /// Number of lockstep members.
+    pub fn width(&self) -> usize {
+        self.configs.len()
+    }
+
+    /// Address of a data label (panics if undefined — benchmark
+    /// plumbing, mirroring [`Machine::addr_of`](super::machine::Machine::addr_of)).
+    pub fn addr_of(&self, symbol: &str) -> u32 {
+        self.program
+            .symbol(symbol)
+            .unwrap_or_else(|| panic!("undefined symbol `{symbol}`"))
+    }
+
+    /// Run until `ecall` or the instruction budget is exhausted,
+    /// returning one [`RunSummary`] per member (in construction order).
+    ///
+    /// Errors are batch-wide: members follow one architectural trace, so
+    /// a fault or budget exhaustion hits every member identically — the
+    /// same error each would report running alone.
+    pub fn run(
+        &mut self,
+        max_instructions: u64,
+    ) -> Result<Vec<RunSummary>, MachineError> {
+        let text = std::mem::take(&mut self.program.text);
+        let result = self.run_inner(&text, max_instructions);
+        self.program.text = text;
+        result
+    }
+
+    fn run_inner(
+        &mut self,
+        text: &[u32],
+        max_instructions: u64,
+    ) -> Result<Vec<RunSummary>, MachineError> {
+        use crate::isa::decode;
+        let mut executed = 0u64;
+        loop {
+            if executed >= max_instructions {
+                return Err(MachineError::BudgetExhausted { executed });
+            }
+            executed += 1;
+            let index = (self.cpu.pc / 4) as usize;
+            if self.cpu.pc % 4 != 0 || index >= text.len() {
+                return Err(MachineError::Cpu(CpuFault::PcOutOfRange {
+                    pc: self.cpu.pc,
+                }));
+            }
+            let instr = match self.decoded[index] {
+                Some(i) => i,
+                None => {
+                    // The cache is sealed by construction: a miss is an
+                    // undecodable word, faulting like the single path.
+                    let e = decode(text[index]).expect_err(
+                        "batch decode cache missing a decodable word",
+                    );
+                    return Err(MachineError::Cpu(CpuFault::Decode(e)));
+                }
+            };
+            if self.step_one(instr)? {
+                return Ok(self.summaries());
+            }
+            // Superinstruction pair — same rule as the single machine.
+            if let Some(second) = self.fused.get(index).copied().flatten() {
+                if executed >= max_instructions {
+                    return Err(MachineError::BudgetExhausted { executed });
+                }
+                executed += 1;
+                if self.step_one(second)? {
+                    return Ok(self.summaries());
+                }
+            }
+        }
+    }
+
+    /// Step the architectural leader once and replay the cost against
+    /// every member timeline.  Returns `true` on halt.
+    fn step_one(&mut self, instr: Instr) -> Result<bool, MachineError> {
+        let (event, cost) = self.cpu.step_instr_arch(instr, &mut self.dram);
+        match cost {
+            ScalarCost::Fixed(c) => {
+                for t in &mut self.host_time {
+                    *t += c;
+                }
+            }
+            ScalarCost::Mem => {
+                // One scalar AXI access per member, against the member's
+                // own bus state — identical to `Cpu::step_instr`'s
+                // charge of `schedule(now) - now` on top of `now`.
+                for (t, bus) in
+                    self.host_time.iter_mut().zip(self.buses.iter_mut())
+                {
+                    *t = bus.schedule(*t, BurstKind::Scalar, 1);
+                }
+            }
+        }
+        match event {
+            StepEvent::Retired => Ok(false),
+            StepEvent::Halt => Ok(true),
+            StepEvent::Vector { instr, rs1_value, rs2_value } => {
+                self.dispatch_vector(instr, rs1_value, rs2_value)?;
+                self.cpu.pc = self.cpu.pc.wrapping_add(4);
+                Ok(false)
+            }
+        }
+    }
+
+    /// Execute one vector instruction on the leader, then book lane
+    /// occupancy / scoreboard / bus time per member from the plan's
+    /// architectural quantities.
+    fn dispatch_vector(
+        &mut self,
+        instr: VecInstr,
+        rs1_value: u32,
+        rs2_value: u32,
+    ) -> Result<(), MachineError> {
+        // Scoreboard sets *before* execution mutates vtype (vsetvli);
+        // LMUL is architectural, so one set serves every member.
+        let lmul = self.arrow.vtype().lmul as u8;
+        let sources = vector_source_regs(lmul, &instr);
+        let dests = vector_dest_regs(lmul, &instr);
+
+        for (t, config) in self.host_time.iter_mut().zip(&self.configs) {
+            *t += config.timing.dispatch;
+        }
+        let plan = self
+            .arrow
+            .execute(instr, rs1_value, rs2_value, &mut self.dram)
+            .map_err(MachineError::Vector)?;
+
+        for (m, config) in self.configs.iter().enumerate() {
+            let elen_bytes = config.elen_bytes() as u64;
+            let exec = exec_cycles_with(
+                &config.timing,
+                elen_bytes,
+                plan.category,
+                plan.timed_vl,
+                plan.sew_bytes,
+            );
+            let lane = if plan.category == OpCategory::Config {
+                0
+            } else {
+                config.lane_of(plan.lane_reg)
+            };
+            let base = m * 32;
+            let dep_ready = sources
+                .iter()
+                .chain(dests.iter())
+                .map(|r| self.reg_ready[base + r as usize])
+                .max()
+                .unwrap_or(0);
+            let slot = self.lane_offsets[m] + lane;
+            let start =
+                self.host_time[m].max(self.lane_free[slot]).max(dep_ready);
+            let done = match plan.mem {
+                Some((kind, _)) => {
+                    // Beats under the member's ELEN — the same formulas
+                    // `exec_load`/`exec_store` apply (unit-stride packs
+                    // `vl × SEW` bytes into ELEN beats; strided/indexed
+                    // pay one ELEN-wide access per element).
+                    let beats = match kind {
+                        BurstKind::Unit => (plan.timed_vl as u64
+                            * plan.sew_bytes as u64)
+                            .div_ceil(elen_bytes),
+                        BurstKind::Strided => plan.timed_vl as u64,
+                        BurstKind::Scalar => unreachable!(
+                            "vector plans never issue scalar bursts"
+                        ),
+                    };
+                    self.mem_bytes[m] += beats * elen_bytes;
+                    self.buses[m].schedule(start + exec, kind, beats)
+                }
+                None => start + exec,
+            };
+            self.lane_free[slot] = done;
+            self.lane_busy[slot] += done - start;
+            for r in dests.iter() {
+                self.reg_ready[base + r as usize] = done;
+            }
+            if plan.scalar_result.is_some() {
+                self.host_time[m] = done + config.timing.scalar_readback;
+            }
+        }
+        self.vector_instructions += 1;
+
+        if let Some(value) = plan.scalar_result {
+            let rd = match instr {
+                VecInstr::VsetVli { rd, .. } => Some(rd),
+                VecInstr::MvXs { rd, .. } => Some(rd),
+                _ => None,
+            };
+            if let Some(rd) = rd {
+                self.cpu.write_reg(rd, value);
+            }
+        }
+        Ok(())
+    }
+
+    /// One ledger per member: member clocks and bus stats, the shared
+    /// architectural counters, and the leader's unit stats with the
+    /// member's own AXI byte traffic patched in.
+    fn summaries(&self) -> Vec<RunSummary> {
+        (0..self.configs.len())
+            .map(|m| {
+                let lanes = self.lane_offsets[m]..self.lane_offsets[m + 1];
+                let drained = self.lane_free[lanes.clone()]
+                    .iter()
+                    .copied()
+                    .max()
+                    .unwrap_or(0);
+                RunSummary {
+                    cycles: self.host_time[m].max(drained),
+                    scalar_instructions: self.cpu.retired,
+                    vector_instructions: self.vector_instructions,
+                    lane_busy: self.lane_busy[lanes].to_vec(),
+                    lanes: self.configs[m].lanes,
+                    bus: self.buses[m].stats(),
+                    unit: UnitStats {
+                        mem_bytes: self.mem_bytes[m],
+                        ..self.arrow.stats()
+                    },
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::system::machine::Machine;
+    use crate::system::Session;
+    use crate::vector::VectorTiming;
+
+    const SAXPY: &str = r#"
+        .data
+        xs: .word 1, 2, 3, 4, 5, 6, 7, 8
+        ys: .word 10, 20, 30, 40, 50, 60, 70, 80
+        zs: .space 32
+        .text
+            li a2, 8
+            vsetvli t0, a2, e32,m1
+            la a0, xs
+            vle32.v v1, (a0)
+            la a0, ys
+            vle32.v v2, (a0)
+            vadd.vv v3, v1, v2
+            la a0, zs
+            vse32.v v3, (a0)
+            halt
+    "#;
+
+    fn batch_for(
+        src: &str,
+        configs: Vec<ArrowConfig>,
+    ) -> MachineBatch {
+        let program = assemble(src).unwrap();
+        let decoded = program
+            .text
+            .iter()
+            .map(|&w| crate::isa::decode(w).ok())
+            .collect();
+        MachineBatch::new(
+            program,
+            decoded,
+            configs,
+            ScalarTiming::default(),
+        )
+        .unwrap()
+    }
+
+    fn member_configs() -> Vec<ArrowConfig> {
+        let base = ArrowConfig::default();
+        vec![
+            base,
+            ArrowConfig { lanes: 4, ..base },
+            ArrowConfig { lanes: 1, elen_bits: 32, ..base },
+            ArrowConfig {
+                lanes: 8,
+                timing: VectorTiming {
+                    dispatch: 0,
+                    issue_overhead: 1,
+                    scalar_readback: 0,
+                    ..base.timing
+                },
+                ..base
+            },
+        ]
+    }
+
+    #[test]
+    fn batch_summaries_match_single_machines() {
+        let configs = member_configs();
+        let mut batch = batch_for(SAXPY, configs.clone());
+        let got = batch.run(10_000).unwrap();
+        assert_eq!(got.len(), configs.len());
+        for (config, summary) in configs.into_iter().zip(got) {
+            let session =
+                Session::new(assemble(SAXPY).unwrap(), config).unwrap();
+            let want = session.machine().run(10_000).unwrap();
+            assert_eq!(summary, want, "config {config:?}");
+        }
+    }
+
+    #[test]
+    fn batch_memory_image_matches_single_run() {
+        let mut batch = batch_for(SAXPY, member_configs());
+        batch.run(10_000).unwrap();
+        let mut single = Machine::with_defaults(assemble(SAXPY).unwrap());
+        single.run(10_000).unwrap();
+        let zs = batch.addr_of("zs");
+        assert_eq!(
+            batch.dram.read_i32_slice(zs, 8),
+            single.dram.read_i32_slice(single.addr_of("zs"), 8),
+        );
+    }
+
+    #[test]
+    fn mixed_vlen_members_rejected() {
+        let program = assemble(SAXPY).unwrap();
+        let decoded = program
+            .text
+            .iter()
+            .map(|&w| crate::isa::decode(w).ok())
+            .collect::<Vec<_>>();
+        let base = ArrowConfig::default();
+        let err = MachineBatch::new(
+            program,
+            decoded,
+            vec![base, ArrowConfig { vlen_bits: 512, ..base }],
+            ScalarTiming::default(),
+        )
+        .unwrap_err();
+        assert!(err.contains("VLEN"), "{err}");
+    }
+
+    #[test]
+    fn batch_budget_error_matches_single_machine() {
+        let src = ".text\nspin: j spin\n";
+        let mut batch = batch_for(src, vec![ArrowConfig::default()]);
+        let e = batch.run(10).unwrap_err();
+        assert!(matches!(
+            e,
+            MachineError::BudgetExhausted { executed: 10 }
+        ));
+    }
+}

@@ -88,7 +88,7 @@ impl RunSummary {
 /// groups plus the v0 mask), kept on the stack so dispatch performs no
 /// heap allocation.
 #[derive(Debug, Clone, Copy)]
-struct RegList {
+pub(crate) struct RegList {
     regs: [u8; 24],
     len: usize,
 }
@@ -109,9 +109,112 @@ impl RegList {
         }
     }
 
-    fn iter(&self) -> impl Iterator<Item = u8> + '_ {
+    pub(crate) fn iter(&self) -> impl Iterator<Item = u8> + '_ {
         self.regs[..self.len].iter().copied()
     }
+}
+
+/// Registers read by a vector instruction under the current `LMUL`
+/// (scoreboard sources).  Shared by [`Machine`] and the lockstep
+/// [`super::batch::MachineBatch`], whose members all follow the same
+/// architectural register traffic.
+pub(crate) fn vector_source_regs(lmul: u8, instr: &VecInstr) -> RegList {
+    use crate::isa::rvv::{AddrMode, MaskMode, VSrc2};
+    let group = |base: u8| base..base.saturating_add(lmul).min(32);
+    let mut regs = RegList::new();
+    match *instr {
+        VecInstr::VsetVli { .. } => {}
+        VecInstr::Load { mode, mask, .. } => {
+            if let AddrMode::Indexed { vs2 } = mode {
+                regs.extend(group(vs2.0));
+            }
+            if mask == MaskMode::Masked {
+                regs.push(0);
+            }
+        }
+        VecInstr::Store { vs3, mode, mask, .. } => {
+            regs.extend(group(vs3.0));
+            if let AddrMode::Indexed { vs2 } = mode {
+                regs.extend(group(vs2.0));
+            }
+            if mask == MaskMode::Masked {
+                regs.push(0);
+            }
+        }
+        VecInstr::Alu { vd: _, vs2, src2, mask, op } => {
+            if !(op == crate::isa::rvv::VAluOp::Merge
+                && mask == MaskMode::Unmasked)
+            {
+                regs.extend(group(vs2.0));
+            }
+            if let VSrc2::V(vs1) = src2 {
+                if op.is_reduction() {
+                    regs.push(vs1.0);
+                } else {
+                    regs.extend(group(vs1.0));
+                }
+            }
+            if mask == MaskMode::Masked {
+                regs.push(0);
+            }
+        }
+        VecInstr::MvXs { vs2, .. } => regs.push(vs2.0),
+        VecInstr::MvSx { vd, .. } => regs.push(vd.0), // RMW of elem 0
+    }
+    regs
+}
+
+/// Registers written by a vector instruction (scoreboard destinations).
+pub(crate) fn vector_dest_regs(lmul: u8, instr: &VecInstr) -> RegList {
+    let mut regs = RegList::new();
+    match instr.dest_vreg() {
+        Some(vd) if !matches!(instr, VecInstr::Store { .. }) => {
+            let hi = vd.0.saturating_add(lmul).min(32);
+            regs.extend(vd.0..hi);
+        }
+        _ => {}
+    }
+    regs
+}
+
+/// True when `instr` always advances the PC by 4: any vector
+/// instruction, or a scalar instruction that neither jumps, branches,
+/// nor halts.  This is the first-slot eligibility rule for
+/// superinstruction fusion — the pair is only taken when control flow
+/// provably reaches the second half.
+pub(crate) fn falls_through(instr: &Instr) -> bool {
+    use crate::isa::rv32::ScalarInstr;
+    match instr {
+        Instr::Vector(_) => true,
+        Instr::Scalar(s) => !matches!(
+            s,
+            ScalarInstr::Jal { .. }
+                | ScalarInstr::Jalr { .. }
+                | ScalarInstr::Branch { .. }
+                | ScalarInstr::Ecall
+        ),
+    }
+}
+
+/// Peephole superinstruction pass over a predecoded text section:
+/// `fused[i] = Some(instr at i+1)` whenever the instruction at `i`
+/// unconditionally falls through to a decodable `i+1`.  The run loop
+/// then executes the pair back to back, paying the loop-top work
+/// (budget/PC checks, cache fetch) once per pair — this covers the hot
+/// shapes named in the design notes: `vsetvli`+first vector op,
+/// vector-op+`bne` back-edge, and load+op.  Both halves execute exactly
+/// as they would unfused, so fusion is cycle-model-neutral by
+/// construction (pinned by `tests/sweep_parity.rs`).
+pub(crate) fn fuse_pairs(decoded: &[Option<Instr>]) -> Vec<Option<Instr>> {
+    let mut fused = vec![None; decoded.len()];
+    for i in 0..decoded.len().saturating_sub(1) {
+        if let (Some(first), Some(second)) = (&decoded[i], &decoded[i + 1]) {
+            if falls_through(first) {
+                fused[i] = Some(*second);
+            }
+        }
+    }
+    fused
 }
 
 /// The full system model.
@@ -124,6 +227,17 @@ pub struct Machine {
     /// Per-PC decoded-instruction cache (lazily filled; persists across
     /// `run` calls and can be seeded by a `Session`).
     decoded: Vec<Option<Instr>>,
+    /// Superinstruction side table: `fused[i]` carries the instruction
+    /// at `i+1` when the pair executes back to back (see [`fuse_pairs`]).
+    /// Empty unless installed by a `Session`.
+    fused: Vec<Option<Instr>>,
+    /// Sealed machines promise a fully-populated decode cache: a cache
+    /// miss then means the word is genuinely undecodable, and the run
+    /// loop faults without ever re-entering the decoder.
+    sealed: bool,
+    /// Words decoded lazily inside the run loop — 0 on the `Session`
+    /// fast path (asserted by `tests/zero_alloc.rs`).
+    lazy_decodes: u64,
     /// Absolute host-timeline position.
     host_time: u64,
     /// Absolute time each lane frees up.
@@ -173,10 +287,36 @@ impl Machine {
             bus,
             program,
             decoded,
+            fused: Vec::new(),
+            sealed: false,
+            lazy_decodes: 0,
             host_time: 0,
             reg_ready: [0; 32],
             vector_instructions: 0,
         }
+    }
+
+    /// Promise the decode cache is fully populated (every decodable word
+    /// is `Some`): the run loop stops decoding on miss and instead
+    /// faults, because a sealed miss can only be an undecodable word.
+    pub fn seal(&mut self) {
+        self.sealed = true;
+    }
+
+    /// Install a superinstruction table built by [`fuse_pairs`] over
+    /// this machine's decode cache.
+    pub(crate) fn install_fusion(&mut self, fused: Vec<Option<Instr>>) {
+        assert_eq!(
+            fused.len(),
+            self.decoded.len(),
+            "fusion table must cover the text section"
+        );
+        self.fused = fused;
+    }
+
+    /// Words the run loop decoded lazily (0 on the `Session` fast path).
+    pub fn lazy_decodes(&self) -> u64 {
+        self.lazy_decodes
     }
 
     /// Convenience: default paper configuration.
@@ -197,63 +337,11 @@ impl Machine {
 
     /// Registers read by a vector instruction (scoreboard sources).
     fn source_regs(&self, instr: &VecInstr) -> RegList {
-        use crate::isa::rvv::{AddrMode, MaskMode, VSrc2};
-        let lmul = self.arrow.vtype().lmul as u8;
-        let group = |base: u8| base..base.saturating_add(lmul).min(32);
-        let mut regs = RegList::new();
-        match *instr {
-            VecInstr::VsetVli { .. } => {}
-            VecInstr::Load { mode, mask, .. } => {
-                if let AddrMode::Indexed { vs2 } = mode {
-                    regs.extend(group(vs2.0));
-                }
-                if mask == MaskMode::Masked {
-                    regs.push(0);
-                }
-            }
-            VecInstr::Store { vs3, mode, mask, .. } => {
-                regs.extend(group(vs3.0));
-                if let AddrMode::Indexed { vs2 } = mode {
-                    regs.extend(group(vs2.0));
-                }
-                if mask == MaskMode::Masked {
-                    regs.push(0);
-                }
-            }
-            VecInstr::Alu { vd: _, vs2, src2, mask, op } => {
-                if !(op == crate::isa::rvv::VAluOp::Merge
-                    && mask == MaskMode::Unmasked)
-                {
-                    regs.extend(group(vs2.0));
-                }
-                if let VSrc2::V(vs1) = src2 {
-                    if op.is_reduction() {
-                        regs.push(vs1.0);
-                    } else {
-                        regs.extend(group(vs1.0));
-                    }
-                }
-                if mask == MaskMode::Masked {
-                    regs.push(0);
-                }
-            }
-            VecInstr::MvXs { vs2, .. } => regs.push(vs2.0),
-            VecInstr::MvSx { vd, .. } => regs.push(vd.0), // RMW of elem 0
-        }
-        regs
+        vector_source_regs(self.arrow.vtype().lmul as u8, instr)
     }
 
     fn dest_regs(&self, instr: &VecInstr) -> RegList {
-        let lmul = self.arrow.vtype().lmul as u8;
-        let mut regs = RegList::new();
-        match instr.dest_vreg() {
-            Some(vd) if !matches!(instr, VecInstr::Store { .. }) => {
-                let hi = vd.0.saturating_add(lmul).min(32);
-                regs.extend(vd.0..hi);
-            }
-            _ => {}
-        }
-        regs
+        vector_dest_regs(self.arrow.vtype().lmul as u8, instr)
     }
 
     /// Dispatch one vector instruction to Arrow; returns host-visible
@@ -341,30 +429,61 @@ impl Machine {
                     pc: self.cpu.pc,
                 }));
             }
-            // Decoded at most once per machine lifetime (a Session seeds
-            // the whole cache up front, amortising it across runs).
             let instr = match self.decoded[index] {
                 Some(i) => i,
                 None => {
+                    if self.sealed {
+                        // A sealed cache covers every decodable word, so
+                        // a miss here is an undecodable word: re-derive
+                        // the decode fault without repopulating.
+                        let e = decode(text[index]).expect_err(
+                            "sealed decode cache missing a decodable word",
+                        );
+                        return Err(MachineError::Cpu(CpuFault::Decode(e)));
+                    }
+                    // Decoded at most once per machine lifetime (a
+                    // Session seeds and seals the whole cache up front).
+                    self.lazy_decodes += 1;
                     let i = decode(text[index])
                         .map_err(|e| MachineError::Cpu(CpuFault::Decode(e)))?;
                     self.decoded[index] = Some(i);
                     i
                 }
             };
-            let before = self.cpu.cycles;
-            let event = self
-                .cpu
-                .step_instr(instr, &mut self.dram, &mut self.bus, self.host_time)
-                .map_err(MachineError::Cpu)?;
-            self.host_time += self.cpu.cycles - before;
-            match event {
-                StepEvent::Retired => {}
-                StepEvent::Halt => return Ok(self.summary()),
-                StepEvent::Vector { instr, rs1_value, rs2_value } => {
-                    self.dispatch_vector(instr, rs1_value, rs2_value)?;
-                    self.cpu.pc = self.cpu.pc.wrapping_add(4);
+            if self.step_one(instr)? {
+                return Ok(self.summary());
+            }
+            // Superinstruction: the first half provably fell through, so
+            // the second half's loop-top work reduces to the budget
+            // check — PC stays in range and the word is predecoded.
+            if let Some(second) = self.fused.get(index).copied().flatten() {
+                if executed >= max_instructions {
+                    return Err(MachineError::BudgetExhausted { executed });
                 }
+                executed += 1;
+                if self.step_one(second)? {
+                    return Ok(self.summary());
+                }
+            }
+        }
+    }
+
+    /// Execute one decoded instruction: architectural step, host-time
+    /// charge, vector dispatch.  Returns `true` on halt.
+    fn step_one(&mut self, instr: Instr) -> Result<bool, MachineError> {
+        let before = self.cpu.cycles;
+        let event = self
+            .cpu
+            .step_instr(instr, &mut self.dram, &mut self.bus, self.host_time)
+            .map_err(MachineError::Cpu)?;
+        self.host_time += self.cpu.cycles - before;
+        match event {
+            StepEvent::Retired => Ok(false),
+            StepEvent::Halt => Ok(true),
+            StepEvent::Vector { instr, rs1_value, rs2_value } => {
+                self.dispatch_vector(instr, rs1_value, rs2_value)?;
+                self.cpu.pc = self.cpu.pc.wrapping_add(4);
+                Ok(false)
             }
         }
     }

@@ -4,6 +4,9 @@
 //! * [`machine`] — the `Machine`: program loading, the host run loop,
 //!   vector dispatch over AXI with lane/scoreboard scheduling, and the
 //!   cycle ledgers every report is built from.
+//! * [`batch`] — the `MachineBatch`: N design points of one sweep
+//!   cohort executed in lockstep over a single decode stream, paying
+//!   architectural work once and replaying per-member timing.
 //! * [`session`] — the `Session`: program + config bound once (with the
 //!   text predecoded), then run against many workloads — the reuse seam
 //!   the benchmark runner and the sweep pool are built on.
@@ -13,10 +16,12 @@
 //! * [`describe`] — textual renderings of the architecture figures
 //!   (Figs 1-4) from the live configuration.
 
+pub mod batch;
 pub mod describe;
 pub mod machine;
 pub mod server;
 pub mod session;
 
+pub use batch::MachineBatch;
 pub use machine::{Machine, MachineError, RunSummary};
 pub use session::{Session, SessionRun};

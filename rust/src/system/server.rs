@@ -406,6 +406,11 @@ fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
     if let Some(s) = req.get("seed").and_then(Json::as_u64) {
         spec.seed = s;
     }
+    // Lockstep batch width: 0 (or absent) means auto; 1 disables
+    // batching — the same contract as the CLI `--batch-width` flag.
+    if let Some(w) = req.get("batch_width").and_then(Json::as_u64) {
+        spec.batch_width = (w > 0).then_some(w as usize);
+    }
     spec.analytic_limit = analytic_limit_from(req);
     let grid = spec.grid_len();
     if grid > MAX_SWEEP_GRID {
@@ -726,6 +731,9 @@ mod tests {
         // lanes [1, 2, 2]: one duplicated point answered from the cache.
         assert_eq!(r.get("unique_simulated").unwrap().as_u64(), Some(2));
         assert_eq!(r.get("cache_hits").unwrap().as_u64(), Some(1));
+        // The two unique lane variants share a cohort and ran lockstep.
+        assert_eq!(r.get("batched_points").unwrap().as_u64(), Some(2));
+        assert_eq!(r.get("batch_groups").unwrap().as_u64(), Some(1));
         // Duplicated points carry byte-identical results.
         assert_eq!(points[1].to_string(), points[2].to_string());
     }

@@ -16,7 +16,7 @@ use crate::isa::{decode, Instr};
 use crate::scalar::ScalarTiming;
 use crate::vector::ArrowConfig;
 
-use super::machine::{Machine, MachineError, RunSummary};
+use super::machine::{fuse_pairs, Machine, MachineError, RunSummary};
 
 /// A reusable execution context: program + configuration, decoded once.
 #[derive(Debug, Clone)]
@@ -27,6 +27,10 @@ pub struct Session {
     /// (exactly like the lazy path), so data words in `.text` or
     /// deliberately bad encodings keep their seed-time semantics.
     decoded: Vec<Option<Instr>>,
+    /// Superinstruction side table over `decoded` (see
+    /// [`fuse_pairs`](super::machine::fuse_pairs)) — computed once per
+    /// session, shared by every machine it stamps out.
+    fused: Vec<Option<Instr>>,
     config: ArrowConfig,
     timing: ScalarTiming,
 }
@@ -47,11 +51,13 @@ impl Session {
         config: ArrowConfig,
     ) -> Result<Session, String> {
         config.validate()?;
-        let decoded =
+        let decoded: Vec<Option<Instr>> =
             program.text.iter().map(|&w| decode(w).ok()).collect();
+        let fused = fuse_pairs(&decoded);
         Ok(Session {
             program,
             decoded,
+            fused,
             config,
             timing: ScalarTiming::default(),
         })
@@ -75,9 +81,11 @@ impl Session {
                 program.text.len()
             ));
         }
+        let fused = fuse_pairs(&decoded);
         Ok(Session {
             program,
             decoded,
+            fused,
             config,
             timing: ScalarTiming::default(),
         })
@@ -97,14 +105,30 @@ impl Session {
         &self.program
     }
 
-    /// Stamp out a fresh machine sharing the predecoded text.
+    /// Stamp out a fresh machine sharing the predecoded text.  The
+    /// machine is *sealed* — the session's decode cache covers every
+    /// decodable word, so the run loop never re-enters the decoder —
+    /// and carries the session's superinstruction table.
     pub fn machine(&self) -> Machine {
-        Machine::with_decoded(
+        let mut machine = Machine::with_decoded(
             self.program.clone(),
             self.decoded.clone(),
             self.config,
             self.timing,
-        )
+        );
+        machine.seal();
+        machine.install_fusion(self.fused.clone());
+        machine
+    }
+
+    /// The scalar host timing model this session stamps into machines.
+    pub fn scalar_timing(&self) -> ScalarTiming {
+        self.timing
+    }
+
+    /// The per-PC decode cache (shared with the lockstep batch path).
+    pub(crate) fn decoded(&self) -> &[Option<Instr>] {
+        &self.decoded
     }
 
     /// Run one workload: write each `(label, words)` input into DDR3,

@@ -28,4 +28,6 @@ pub mod unit;
 pub mod vrf;
 
 pub use config::{ArrowConfig, VectorTiming};
-pub use unit::{ArrowUnit, ExecError, ExecPlan, UnitStats, VectorEffect};
+pub use unit::{
+    exec_cycles_with, ArrowUnit, ExecError, ExecPlan, UnitStats, VectorEffect,
+};

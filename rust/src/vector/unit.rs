@@ -21,11 +21,18 @@ use crate::isa::rvv::{
 use crate::mem::{BurstKind, Dram};
 
 use super::alu;
-use super::config::ArrowConfig;
+use super::config::{ArrowConfig, VectorTiming};
 use super::offset;
 use super::vrf::Vrf;
 
 /// Resource booking for one executed vector instruction.
+///
+/// `lane`, `exec_cycles` and `mem` are already resolved against the
+/// executing unit's own config; `timed_vl` / `sew_bytes` / `lane_reg`
+/// carry the *inputs* of that resolution so a lockstep batch can replay
+/// the same instruction's cost against a different (lanes, ELEN,
+/// timing) design point without re-executing — see
+/// [`exec_cycles_with`] and `system::batch`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecPlan {
     /// Lane the controller dispatched to (by destination bank, §3.3).
@@ -37,6 +44,43 @@ pub struct ExecPlan {
     /// Result the host reads back (`vsetvli` -> vl, `vmv.x.s`).
     pub scalar_result: Option<u32>,
     pub category: OpCategory,
+    /// Element count the cycle cost was computed for (`vl` for data
+    /// ops, 1 for the scalar moves, 0 for config ops).
+    pub timed_vl: u32,
+    /// SEW in bytes at execution time.
+    pub sew_bytes: u32,
+    /// Register whose bank selected `lane` (`vd`, or `vs3`/`vs2` for
+    /// stores/`vmv.x.s`; 0 for config ops).
+    pub lane_reg: u8,
+}
+
+/// Execute-stage cycle cost of `vl` SEW elements under an arbitrary
+/// (vector timing, ELEN) pair — the same arithmetic as the unit's own
+/// internal cost function (pinned by test), exposed so the lockstep
+/// batch engine can charge one executed instruction against every batch
+/// member's design point.
+pub fn exec_cycles_with(
+    timing: &VectorTiming,
+    elen_bytes: u64,
+    category: OpCategory,
+    vl: u32,
+    sew_bytes: u32,
+) -> u64 {
+    let words = (vl as u64 * sew_bytes as u64).div_ceil(elen_bytes).max(1);
+    match category {
+        OpCategory::Config => 1,
+        OpCategory::Arith | OpCategory::MoveMerge => {
+            timing.issue_overhead + words.div_ceil(timing.alu_words_per_cycle)
+        }
+        OpCategory::Reduction => {
+            timing.issue_overhead
+                + words.div_ceil(timing.alu_words_per_cycle)
+                + timing.reduction_tail
+        }
+        // Memory ops: the lane is occupied for the pipeline overhead;
+        // transfer time is booked on the AXI port by the scheduler.
+        OpCategory::Load | OpCategory::Store => timing.issue_overhead,
+    }
 }
 
 /// Architectural side effects beyond the VRF (for tracing).
@@ -233,29 +277,14 @@ impl ArrowUnit {
         }
     }
 
-    /// ELEN-word passes the SIMD ALU needs for `vl` SEW elements.
-    fn word_passes(&self, vl: u32) -> u64 {
-        let active = vl as u64 * self.sew_bytes() as u64;
-        active.div_ceil(self.config.elen_bytes() as u64)
-    }
-
     fn exec_cycles_for(&self, category: OpCategory, vl: u32) -> u64 {
-        let t = self.config.timing;
-        let words = self.word_passes(vl).max(1);
-        match category {
-            OpCategory::Config => 1,
-            OpCategory::Arith | OpCategory::MoveMerge => {
-                t.issue_overhead + words.div_ceil(t.alu_words_per_cycle)
-            }
-            OpCategory::Reduction => {
-                t.issue_overhead
-                    + words.div_ceil(t.alu_words_per_cycle)
-                    + t.reduction_tail
-            }
-            // Memory ops: the lane is occupied for the pipeline overhead;
-            // transfer time is booked on the AXI port by the scheduler.
-            OpCategory::Load | OpCategory::Store => t.issue_overhead,
-        }
+        exec_cycles_with(
+            &self.config.timing,
+            self.config.elen_bytes() as u64,
+            category,
+            vl,
+            self.sew_bytes() as u32,
+        )
     }
 
     /// Execute one vector instruction.  `rs1_value`/`rs2_value` are the
@@ -292,6 +321,9 @@ impl ArrowUnit {
                     mem: None,
                     scalar_result: Some(self.vl),
                     category: OpCategory::Config,
+                    timed_vl: 0,
+                    sew_bytes: self.sew_bytes() as u32,
+                    lane_reg: 0,
                 })
             }
             VecInstr::Load { vd, width, mode, mask, .. } => {
@@ -322,6 +354,9 @@ impl ArrowUnit {
                     mem: None,
                     scalar_result: Some(v as u32),
                     category: OpCategory::MoveMerge,
+                    timed_vl: 1,
+                    sew_bytes: self.sew_bytes() as u32,
+                    lane_reg: vs2.0,
                 })
             }
             VecInstr::MvSx { vd, .. } => {
@@ -350,6 +385,9 @@ impl ArrowUnit {
                     mem: None,
                     scalar_result: None,
                     category: OpCategory::MoveMerge,
+                    timed_vl: 1,
+                    sew_bytes: sew_bytes as u32,
+                    lane_reg: vd.0,
                 })
             }
         }
@@ -423,6 +461,9 @@ impl ArrowUnit {
             mem: None,
             scalar_result: None,
             category: OpCategory::Arith,
+            timed_vl: self.vl,
+            sew_bytes: sew_bytes as u32,
+            lane_reg: vd.0,
         })
     }
 
@@ -475,6 +516,9 @@ impl ArrowUnit {
             mem: None,
             scalar_result: None,
             category: OpCategory::Arith,
+            timed_vl: self.vl,
+            sew_bytes: sew_bytes as u32,
+            lane_reg: vd.0,
         })
     }
 
@@ -545,6 +589,9 @@ impl ArrowUnit {
             mem: None,
             scalar_result: None,
             category: OpCategory::MoveMerge,
+            timed_vl: self.vl,
+            sew_bytes: sew_bytes as u32,
+            lane_reg: vd.0,
         })
     }
 
@@ -602,6 +649,9 @@ impl ArrowUnit {
             mem: None,
             scalar_result: None,
             category: OpCategory::Reduction,
+            timed_vl: self.vl,
+            sew_bytes: sew_bytes as u32,
+            lane_reg: vd.0,
         })
     }
 
@@ -688,6 +738,9 @@ impl ArrowUnit {
             mem: Some((kind, beats)),
             scalar_result: None,
             category: OpCategory::Load,
+            timed_vl: self.vl,
+            sew_bytes: sew_bytes as u32,
+            lane_reg: vd.0,
         })
     }
 
@@ -772,6 +825,9 @@ impl ArrowUnit {
             mem: Some((kind, beats)),
             scalar_result: None,
             category: OpCategory::Store,
+            timed_vl: self.vl,
+            sew_bytes: sew_bytes as u32,
+            lane_reg: vs3.0,
         })
     }
 
@@ -1217,6 +1273,82 @@ mod tests {
             &mut dram,
         );
         assert!(matches!(r, Err(ExecError::BadRegisterGroup { .. })));
+    }
+
+    /// The standalone cost function replayed from a plan's
+    /// (category, timed_vl, sew_bytes) reproduces the unit's own
+    /// booked `exec_cycles` under the unit's own config — the identity
+    /// the lockstep batch engine relies on to charge one executed
+    /// instruction against other design points.
+    #[test]
+    fn exec_cycles_with_replays_plan_costs() {
+        for (elen, lanes) in [(64u32, 2usize), (32, 4)] {
+            let config = ArrowConfig {
+                lanes,
+                elen_bits: elen,
+                ..Default::default()
+            };
+            let mut unit = ArrowUnit::new(config);
+            let mut dram = Dram::new();
+            dram.write_i32_slice(0x1000, &(0..8).collect::<Vec<_>>());
+            let vt = Vtype::new(32, 1).encode();
+            let instrs = [
+                VecInstr::VsetVli { rd: XReg(5), rs1: XReg(10), vtypei: vt },
+                VecInstr::Load {
+                    vd: VReg(4),
+                    rs1: XReg(10),
+                    width: VmemWidth::E32,
+                    mode: AddrMode::UnitStride,
+                    mask: MaskMode::Unmasked,
+                },
+                VecInstr::Alu {
+                    op: VAluOp::Add,
+                    vd: VReg(8),
+                    vs2: VReg(4),
+                    src2: VSrc2::V(VReg(4)),
+                    mask: MaskMode::Unmasked,
+                },
+                VecInstr::Alu {
+                    op: VAluOp::RedSum,
+                    vd: VReg(12),
+                    vs2: VReg(8),
+                    src2: VSrc2::V(VReg(4)),
+                    mask: MaskMode::Unmasked,
+                },
+                VecInstr::MvXs { rd: XReg(10), vs2: VReg(12) },
+                VecInstr::Store {
+                    vs3: VReg(8),
+                    rs1: XReg(10),
+                    width: VmemWidth::E32,
+                    mode: AddrMode::UnitStride,
+                    mask: MaskMode::Unmasked,
+                },
+            ];
+            for instr in instrs {
+                let plan =
+                    unit.execute(instr, 8, 0x1000, &mut dram).unwrap();
+                let replayed = exec_cycles_with(
+                    &config.timing,
+                    config.elen_bytes() as u64,
+                    plan.category,
+                    plan.timed_vl,
+                    plan.sew_bytes,
+                );
+                assert_eq!(
+                    replayed, plan.exec_cycles,
+                    "{instr:?} under elen={elen}"
+                );
+                assert_eq!(
+                    plan.lane,
+                    if plan.category == OpCategory::Config {
+                        0
+                    } else {
+                        config.lane_of(plan.lane_reg)
+                    },
+                    "{instr:?}"
+                );
+            }
+        }
     }
 
     /// Scratch buffers are reused across instructions of different

@@ -8,9 +8,9 @@
 use arrow_rvv::bench::profiles;
 use arrow_rvv::bench::runner::{run_benchmark, Mode};
 use arrow_rvv::bench::suite::Benchmark;
-use arrow_rvv::bench::sweep::{run_sweep, Provenance, SweepSpec};
+use arrow_rvv::bench::sweep::{report_json, run_sweep, Provenance, SweepSpec};
 use arrow_rvv::bench::{analytic, point_key};
-use arrow_rvv::system::Session;
+use arrow_rvv::system::{MachineBatch, Session};
 use arrow_rvv::vector::ArrowConfig;
 
 /// A 24-point grid (2 benchmarks x 1 profile x 2 modes x 3 lane counts
@@ -239,6 +239,184 @@ fn analytic_points_match_sequential_extrapolation() {
             b.outcome.as_ref().unwrap(),
             "{}",
             a.key
+        );
+    }
+}
+
+/// The lockstep batch engine is a pure optimisation: a sweep over a
+/// mixed grid (modes x lanes x VLENs x ELENs x timing variants, so
+/// cohorts of every width form) renders byte-identical point JSON with
+/// batching on (auto width) and off (`batch_width = 1`, the sequential
+/// reference path).
+#[test]
+fn batched_sweep_byte_identical_to_sequential_path() {
+    let spec = SweepSpec {
+        benchmarks: vec![Benchmark::VAdd, Benchmark::VDot, Benchmark::VRelu],
+        profiles: vec![profiles::TEST],
+        modes: vec![Mode::Scalar, Mode::Vector],
+        lanes: vec![1, 2, 4],
+        vlens: vec![128, 256],
+        elens: vec![32, 64],
+        timing: profiles::TIMING_VARIANTS.to_vec(),
+        seed: 13,
+        threads: 4,
+        ..Default::default()
+    };
+    let batched = run_sweep(&spec);
+    let sequential =
+        run_sweep(&SweepSpec { batch_width: Some(1), ..spec.clone() });
+    // The batched run genuinely batched (each vector-mode cohort spans
+    // lanes x ELEN x timing at one VLEN) and the reference genuinely
+    // did not.
+    assert!(batched.batched_points > 0, "{}", batched.batched_points);
+    assert!(batched.batch_groups > 0);
+    assert_eq!(sequential.batched_points, 0);
+    assert_eq!(sequential.batch_groups, 0);
+    assert_eq!(batched.unique_simulated, sequential.unique_simulated);
+    // Byte-identity over the full rendered point rows — cycles,
+    // ledgers, energy, provenance, everything.
+    assert_eq!(
+        report_json(&batched).get("points").unwrap().to_string(),
+        report_json(&sequential).get("points").unwrap().to_string()
+    );
+}
+
+/// Lockstep execution handles the awkward instruction classes too:
+/// masked ALU ops (`v0.t`), `vmerge`, mask-producing compares, and
+/// indexed (gather/scatter) memory accesses.  Every member of a mixed
+/// lanes/ELEN/timing batch must match its own solo [`Session`] run,
+/// ledger and memory image alike.
+#[test]
+fn lockstep_batch_matches_sessions_on_masked_and_indexed_ops() {
+    use arrow_rvv::asm::assemble;
+    use arrow_rvv::isa::decode;
+    use arrow_rvv::scalar::ScalarTiming;
+
+    let src = r#"
+        .data
+        idx: .word 28, 0, 20, 8, 4, 24, 12, 16
+        xs: .word -3, 7, -11, 19, -23, 2, -9, 31
+        ys: .space 32
+        zs: .space 32
+        .text
+            li a2, 8
+            vsetvli t0, a2, e32,m1
+            la a0, idx
+            vle32.v v2, (a0)
+            la a0, xs
+            vlxei32.v v1, (a0), v2      # gather xs[idx/4]
+            vmslt.vx v0, v1, zero       # mask = gathered < 0
+            vmerge.vxm v3, v1, 0, v0    # relu: negatives -> 0
+            vadd.vv v4, v1, v1, v0.t    # masked: double the negatives
+            la a0, ys
+            vse32.v v3, (a0)
+            la a0, zs
+            vsxei32.v v4, (a0), v2      # scatter back through idx
+            halt
+    "#;
+    let program = assemble(src).unwrap();
+    let decoded: Vec<_> =
+        program.text.iter().map(|&w| decode(w).ok()).collect();
+
+    // One cohort (VLEN 256, indexed on), every free axis exercised.
+    let variants = profiles::TIMING_VARIANTS;
+    let configs: Vec<ArrowConfig> = [
+        (1usize, 32u32, &variants[0]),
+        (1, 64, &variants[1]),
+        (2, 32, &variants[2]),
+        (2, 64, &variants[0]),
+        (4, 32, &variants[1]),
+        (4, 64, &variants[2]),
+    ]
+    .into_iter()
+    .map(|(lanes, elen_bits, variant)| {
+        variant.apply(ArrowConfig {
+            lanes,
+            elen_bits,
+            vlen_bits: 256,
+            indexed_mem: true,
+            ..Default::default()
+        })
+    })
+    .collect();
+
+    let mut batch = MachineBatch::new(
+        program.clone(),
+        decoded,
+        configs.clone(),
+        ScalarTiming::default(),
+    )
+    .unwrap();
+    let summaries = batch.run(100_000).unwrap();
+
+    // The shared architectural trace did what the program says: the
+    // gather permuted xs, the merge relu'd it, the masked add doubled
+    // only the negatives, the scatter permuted them back.
+    let ys = batch.dram.read_i32_slice(batch.addr_of("ys"), 8);
+    assert_eq!(ys, vec![31, 0, 2, 0, 7, 0, 19, 0]);
+    let zs = batch.dram.read_i32_slice(batch.addr_of("zs"), 8);
+    assert_eq!(zs, vec![-6, 0, -22, 0, -46, 0, -18, 0]);
+
+    for (config, summary) in configs.iter().zip(&summaries) {
+        let session = Session::new(program.clone(), *config).unwrap();
+        let mut solo = session.machine();
+        let solo_summary = solo.run(100_000).unwrap();
+        assert_eq!(summary, &solo_summary, "lanes={}", config.lanes);
+        assert_eq!(ys, solo.dram.read_i32_slice(solo.addr_of("ys"), 8));
+        assert_eq!(zs, solo.dram.read_i32_slice(solo.addr_of("zs"), 8));
+    }
+}
+
+/// Superinstruction fusion is cycle-model-neutral: a sealed, fused
+/// session machine reports the exact ledger of a lazy, unfused
+/// [`Machine`] over a branchy strip-mined loop — the code shape fusion
+/// targets (`vsetvli`+op and op+back-edge pairs every iteration).
+#[test]
+fn fusion_is_cycle_neutral_on_stripmined_loops() {
+    use arrow_rvv::asm::assemble;
+    use arrow_rvv::scalar::ScalarTiming;
+    use arrow_rvv::system::Machine;
+
+    let src = r#"
+        .data
+        xs: .word 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16
+        out: .space 64
+        .text
+            li a1, 16
+            la a3, xs
+            la a4, out
+        loop:
+            vsetvli t0, a1, e32,m1
+            vle32.v v1, (a3)
+            vadd.vv v2, v1, v1
+            vse32.v v2, (a4)
+            slli t1, t0, 2
+            add a3, a3, t1
+            add a4, a4, t1
+            sub a1, a1, t0
+            bnez a1, loop
+            halt
+    "#;
+    let program = assemble(src).unwrap();
+    for vlen_bits in [128u32, 256] {
+        let config = ArrowConfig { vlen_bits, ..Default::default() };
+        let fused =
+            Session::new(program.clone(), config).unwrap().run(
+                &[],
+                Some(("out", 16)),
+                100_000,
+            )
+            .unwrap();
+        let mut plain =
+            Machine::new(program.clone(), config, ScalarTiming::default());
+        let summary = plain.run(100_000).unwrap();
+        let out = plain.dram.read_i32_slice(plain.addr_of("out"), 16);
+        assert_eq!(fused.summary, summary, "vlen={vlen_bits}");
+        assert_eq!(fused.output, out);
+        assert_eq!(
+            out,
+            (1..=16).map(|x| 2 * x).collect::<Vec<i32>>(),
+            "vlen={vlen_bits}"
         );
     }
 }

@@ -1,0 +1,161 @@
+//! Decode-cache and allocation discipline for sealed sessions.
+//!
+//! `Session::machine()` seals the machine: the per-PC decode cache is
+//! fully populated at session build, so the run loop must never
+//! re-enter the decoder (`lazy_decodes() == 0`).  On top of that, the
+//! steady-state execute loop (unmasked ALU ops, unit-stride memory,
+//! scalar address arithmetic) holds the zero-allocation engine
+//! contract: running the same strip-mined loop for 16x more iterations
+//! must not grow the heap-allocation count, because every per-run
+//! allocation (machine stamp-out, DDR3 paging of the touched pages,
+//! the `RunSummary` ledger clone) is independent of the trip count.
+//!
+//! A counting global allocator turns that contract into a measured
+//! number.  The whole file is a single test function on purpose: the
+//! allocator counter is process-global, and a second test running on a
+//! sibling harness thread would pollute the measured windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use arrow_rvv::asm::assemble;
+use arrow_rvv::scalar::ScalarTiming;
+use arrow_rvv::system::{Machine, Session};
+use arrow_rvv::vector::ArrowConfig;
+
+/// Counts every heap allocation so the zero-allocation claim is a
+/// measured number, not an assertion.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// A strip-mined element-wise loop repeated `repeats` times over the
+/// same 16-element array.  Every repeat touches the same DDR3
+/// addresses, so the only thing that scales with `repeats` is executed
+/// instructions — exactly what the allocation-invariance check needs.
+fn strip_program(repeats: u32) -> String {
+    format!(
+        r#"
+        .data
+        xs: .word 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16
+        out: .space 64
+        .text
+            li a3, {repeats}
+        outer:
+            li a1, 16
+            la a0, xs
+            la a2, out
+        strip:
+            vsetvli t0, a1, e32,m1
+            vle32.v v1, (a0)
+            vadd.vv v2, v1, v1
+            vse32.v v2, (a2)
+            slli t1, t0, 2
+            add a0, a0, t1
+            add a2, a2, t1
+            sub a1, a1, t0
+            bnez a1, strip
+            addi a3, a3, -1
+            bnez a3, outer
+            halt
+    "#
+    )
+}
+
+#[test]
+fn sealed_sessions_run_decode_free_and_allocation_flat() {
+    let config = ArrowConfig::default();
+    let program = assemble(&strip_program(4)).unwrap();
+
+    // Control: a lazily-decoding machine re-enters the decoder at least
+    // once per distinct PC, so the leak detector below is known to be
+    // able to fire.
+    let mut lazy =
+        Machine::new(program.clone(), config, ScalarTiming::default());
+    lazy.run(1_000_000).unwrap();
+    assert!(
+        lazy.lazy_decodes() > 0,
+        "lazy control machine never exercised the decoder; the \
+         lazy_decodes counter is broken"
+    );
+
+    // Sealed machines: the session populated the whole decode cache up
+    // front, so the run loop never falls back to the decoder.
+    let short_session = Session::new(program, config).unwrap();
+    let long_session =
+        Session::new(assemble(&strip_program(64)).unwrap(), config).unwrap();
+    let mut short_machine = short_session.machine();
+    let mut long_machine = long_session.machine();
+
+    let before = allocations();
+    let short_summary = short_machine.run(1_000_000).unwrap();
+    let short_allocs = allocations() - before;
+
+    let before = allocations();
+    let long_summary = long_machine.run(1_000_000).unwrap();
+    let long_allocs = allocations() - before;
+
+    assert_eq!(
+        short_machine.lazy_decodes(),
+        0,
+        "sealed session machine re-entered the decoder"
+    );
+    assert_eq!(
+        long_machine.lazy_decodes(),
+        0,
+        "sealed session machine re-entered the decoder"
+    );
+
+    // Make sure the two runs actually differ by enough work for a
+    // per-instruction allocation to show up loudly.
+    let short_instrs = short_summary.scalar_instructions
+        + short_summary.vector_instructions;
+    let long_instrs =
+        long_summary.scalar_instructions + long_summary.vector_instructions;
+    assert!(
+        long_instrs > short_instrs + 400,
+        "long run executed {long_instrs} instructions vs {short_instrs}; \
+         not enough contrast to measure allocation invariance"
+    );
+
+    // The invariance itself: 16x the iterations, same allocation count
+    // (a tiny slack absorbs one-off amortised container growth — a
+    // per-instruction or per-iteration allocation would show up as
+    // hundreds).
+    let growth = long_allocs.saturating_sub(short_allocs);
+    assert!(
+        growth <= 8,
+        "steady-state run loop allocates: short run made {short_allocs} \
+         heap allocations, long run {long_allocs} (+{growth} across \
+         {} extra instructions)",
+        long_instrs - short_instrs
+    );
+}
