@@ -1228,13 +1228,47 @@ pub fn run_fleet(fs: &FleetSpec) -> Result<(), String> {
         .map_err(|e| format!("cluster: current_exe: {e}"))?;
     let mut members = Vec::with_capacity(fs.workers);
     let result = supervise(&exe, fs, &mut members);
-    // Unrecoverable exit: reap whatever was spawned rather than
-    // leaving orphans listening forever.
+    // Unrecoverable exit: drain the fleet rather than leaving orphans
+    // listening forever.  Graceful first — `{"cmd": "shutdown"}` lets a
+    // worker finish its in-flight requests — with kill as the backstop
+    // for workers that never answer or never exit.
     for m in &mut members {
+        if !m.dead {
+            request_shutdown(&m.addr);
+        }
+    }
+    let deadline = Instant::now() + SHUTDOWN_WAIT;
+    for m in &mut members {
+        while Instant::now() < deadline {
+            if matches!(m.child.try_wait(), Ok(Some(_))) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
         let _ = m.child.kill();
         let _ = m.child.wait();
     }
     result
+}
+
+/// How long `run_fleet` teardown waits for workers to drain after the
+/// shutdown request before falling back to kill.
+const SHUTDOWN_WAIT: Duration = Duration::from_secs(5);
+
+/// Best-effort `{"cmd": "shutdown"}` to a worker's loopback address.
+/// Any failure (connect refused, write error, no reply) is ignored —
+/// the caller's kill path covers it.
+fn request_shutdown(addr: &str) {
+    let Ok(stream) = TcpStream::connect(addr) else { return };
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut stream = stream;
+    if writeln!(stream, "{}", r#"{"cmd": "shutdown"}"#).is_err() {
+        return;
+    }
+    let _ = stream.flush();
+    let mut line = String::new();
+    let _ = BufReader::new(stream).read_line(&mut line);
 }
 
 /// [`run_fleet`]'s body, split out so every early `?` return funnels

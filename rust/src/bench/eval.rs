@@ -268,6 +268,131 @@ impl ProgramCache {
     }
 }
 
+/// Canonical identity of one *session*: everything [`Session`]
+/// construction depends on — the program group (benchmark, mode, size)
+/// plus the full [`ArrowConfig`].  Unlike [`point_key`] there is no
+/// profile or seed: sessions are workload-independent (data is loaded
+/// per run), so every seed of a hot design point shares one entry.
+fn session_key(
+    benchmark: Benchmark,
+    size: BenchSize,
+    mode: Mode,
+    config: &ArrowConfig,
+) -> String {
+    let t = &config.timing;
+    let m = &config.mem_timing;
+    format!(
+        "{}|{}|n={}|k={}|b={}|lanes={}|vlen={}|elen={}|im={}|vt={}.{}.{}.{}.{}|mt={}.{}.{}.{}",
+        benchmark.name(),
+        mode.name(),
+        size.n,
+        size.k,
+        size.batch,
+        config.lanes,
+        config.vlen_bits,
+        config.elen_bits,
+        u8::from(config.indexed_mem),
+        t.dispatch,
+        t.issue_overhead,
+        t.alu_words_per_cycle,
+        t.reduction_tail,
+        t.scalar_readback,
+        m.burst_setup,
+        m.beats_per_cycle,
+        m.strided_cycles_per_beat,
+        m.scalar_access,
+    )
+}
+
+/// Sealed sessions per design point, capped.  Building a [`Session`]
+/// clones the program + decode cache and recomputes the fusion table on
+/// *every* evaluation; on the serving path that build cost lands on the
+/// request. The pool keeps one `Arc<Session>` per (program group,
+/// config) so a hot point pays it once — subsequent requests stamp
+/// machines straight off the shared session.  `Session::run` takes
+/// `&self`, so concurrent requests share an entry safely.
+pub struct SessionPool {
+    map: Mutex<HashMap<String, Arc<Session>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    cap: usize,
+}
+
+/// Pool entry cap: a full lanes × VLEN × ELEN × timing product over the
+/// benchmark suite fits, while a hostile request stream cannot grow the
+/// pool (and its cloned programs) without bound.  Overflow sessions are
+/// built per call, exactly like the un-pooled path.
+pub const SESSION_POOL_CAP: usize = 512;
+
+impl Default for SessionPool {
+    fn default() -> SessionPool {
+        SessionPool {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            cap: SESSION_POOL_CAP,
+        }
+    }
+}
+
+impl SessionPool {
+    /// Fetch the sealed session for one design point, building (and —
+    /// below the cap — retaining) it on a miss.
+    pub fn session(
+        &self,
+        programs: &ProgramCache,
+        benchmark: Benchmark,
+        size: BenchSize,
+        mode: Mode,
+        config: ArrowConfig,
+    ) -> Result<Arc<Session>, String> {
+        let key = session_key(benchmark, size, mode, &config);
+        if let Some(s) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(s));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Build outside the lock; a racing builder at worst constructs
+        // the same deterministic session and the first insert wins.
+        let session =
+            Arc::new(programs.session(benchmark, size, mode, config)?);
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= self.cap && !map.contains_key(&key) {
+            return Ok(session);
+        }
+        Ok(Arc::clone(map.entry(key).or_insert(session)))
+    }
+
+    /// Sessions currently pooled.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered by a pooled session.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to build a session.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// The `{"pooled", "hits", "misses"}` object the server's `stats`
+    /// command reports.
+    pub fn stats_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("pooled", (self.len() as u64).into()),
+            ("hits", self.hits().into()),
+            ("misses", self.misses().into()),
+        ])
+    }
+}
+
 /// The tiered point evaluator: shared program cache + optional
 /// persistent result store.  Analytic routing is per-call policy (see
 /// [`Evaluator::evaluate`]) so one evaluator can serve callers with
@@ -275,6 +400,7 @@ impl ProgramCache {
 #[derive(Default)]
 pub struct Evaluator {
     programs: ProgramCache,
+    sessions: SessionPool,
     store: Option<ResultStore>,
     /// Result-store appends that failed (disk full, permissions…).
     /// Evaluation succeeds anyway, but callers surface the count so a
@@ -305,6 +431,27 @@ impl Evaluator {
 
     pub fn programs(&self) -> &ProgramCache {
         &self.programs
+    }
+
+    pub fn sessions(&self) -> &SessionPool {
+        &self.sessions
+    }
+
+    /// Pre-warm the session pool for one design point: build (and
+    /// retain) its sealed session without running anything, so the
+    /// first real request skips the build cost.  The server's `warm`
+    /// command fans this over a sweep grid.
+    pub fn warm_point(&self, point: &EvalPoint) -> Result<(), String> {
+        point.config.validate()?;
+        self.sessions
+            .session(
+                &self.programs,
+                point.benchmark,
+                point.size(),
+                point.mode,
+                point.config,
+            )
+            .map(|_| ())
     }
 
     /// Store appends that failed so far (see `store_put_failures`).
@@ -486,7 +633,8 @@ impl Evaluator {
             size,
             point.mode,
             &mut |fit_size| {
-                let session = self.programs.session(
+                let session = self.sessions.session(
+                    &self.programs,
                     point.benchmark,
                     fit_size,
                     point.mode,
@@ -525,7 +673,8 @@ impl Evaluator {
         seed: u64,
     ) -> Result<EvalOutcome, String> {
         let size = point.size();
-        let session = self.programs.session(
+        let session = self.sessions.session(
+            &self.programs,
             point.benchmark,
             size,
             point.mode,
@@ -704,6 +853,46 @@ mod tests {
             .evaluate(&test_point(Benchmark::VAdd, Mode::Scalar, 2), 1, None)
             .unwrap();
         assert_eq!(evaluator.programs().len(), 2);
+    }
+
+    #[test]
+    fn session_pool_reuses_sealed_sessions() {
+        let evaluator = Evaluator::new();
+        let point = test_point(Benchmark::VAdd, Mode::Vector, 2);
+        let first = evaluator.evaluate(&point, 1, None).unwrap();
+        assert_eq!(evaluator.sessions().len(), 1);
+        assert_eq!(evaluator.sessions().misses(), 1);
+        assert_eq!(evaluator.sessions().hits(), 0);
+        // A different seed is a different workload but the same
+        // session: the pool answers, and results stay byte-identical
+        // to a fresh evaluator.
+        let second = evaluator.evaluate(&point, 2, None).unwrap();
+        assert_eq!(evaluator.sessions().len(), 1);
+        assert_eq!(evaluator.sessions().hits(), 1);
+        let fresh = Evaluator::new();
+        assert_eq!(fresh.evaluate(&point, 1, None).unwrap(), first);
+        assert_eq!(fresh.evaluate(&point, 2, None).unwrap(), second);
+        // A different lane count is a different session.
+        let other = test_point(Benchmark::VAdd, Mode::Vector, 4);
+        evaluator.evaluate(&other, 1, None).unwrap();
+        assert_eq!(evaluator.sessions().len(), 2);
+    }
+
+    #[test]
+    fn warm_point_prebuilds_without_running() {
+        let evaluator = Evaluator::new();
+        let point = test_point(Benchmark::VMul, Mode::Vector, 2);
+        evaluator.warm_point(&point).unwrap();
+        assert_eq!(evaluator.sessions().len(), 1);
+        assert_eq!(evaluator.sessions().misses(), 1);
+        // The first real evaluation is a pool hit.
+        evaluator.evaluate(&point, 42, None).unwrap();
+        assert_eq!(evaluator.sessions().hits(), 1);
+        assert_eq!(evaluator.sessions().misses(), 1);
+        // Warming an invalid point is an error, not a poisoned pool.
+        let bad = test_point(Benchmark::VMul, Mode::Vector, 3);
+        assert!(evaluator.warm_point(&bad).is_err());
+        assert_eq!(evaluator.sessions().len(), 1);
     }
 
     #[test]

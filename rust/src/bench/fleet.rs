@@ -58,6 +58,13 @@ const RECONNECT_BACKOFF: Duration = Duration::from_secs(1);
 /// otherwise sustain forever.
 pub const MAX_MEMBER_FAILURES: u32 = 8;
 
+/// Heartbeat-reported executor queue depth at (or above) which a
+/// member is *saturated*: the coordinator stops claiming it for new
+/// dispatch threads until a later heartbeat reports the queue drained.
+/// Well below the server's default admission bound, so the coordinator
+/// backs off before the worker starts shedding load.
+pub const SATURATION_QUEUE_DEPTH: u64 = 32;
+
 /// Poison-recovering lock (same rationale as the cluster module: the
 /// table only holds plain data, so a panicked holder leaves it sound).
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -101,6 +108,11 @@ pub struct Member {
     pub in_flight: u64,
     /// Sweep (shard) requests the worker reported served so far.
     pub sweeps_served: u64,
+    /// Executor queue depth the worker reported at its last heartbeat —
+    /// the saturation signal [`Membership::claim_dispatchable`] reads.
+    pub queue_depth: u64,
+    /// Admission-control rejections the worker reported so far.
+    pub rejected: u64,
     pub state: MemberState,
     /// Pre-listed `--workers` member: never expires, never re-registers.
     pub is_static: bool,
@@ -126,6 +138,11 @@ pub struct Registration {
     pub max_batch: usize,
     pub in_flight: u64,
     pub sweeps_served: u64,
+    /// Bounded-executor queue depth at heartbeat time (0 for workers
+    /// predating the serving path — absent fields parse as zero).
+    pub queue_depth: u64,
+    /// Requests this worker has refused under admission control.
+    pub rejected: u64,
     pub ledger: Option<StoreStats>,
 }
 
@@ -176,6 +193,8 @@ impl Registration {
                 as usize,
             in_flight: load_u64("in_flight"),
             sweeps_served: load_u64("sweeps_served"),
+            queue_depth: load_u64("queue_depth"),
+            rejected: load_u64("rejected"),
             ledger: ledger_from(req),
         })
     }
@@ -241,6 +260,8 @@ impl Membership {
                 ledger: None,
                 in_flight: 0,
                 sweeps_served: 0,
+                queue_depth: 0,
+                rejected: 0,
                 state: MemberState::Joined,
                 is_static: false,
                 failures: 0,
@@ -252,6 +273,8 @@ impl Membership {
         member.ledger = reg.ledger;
         member.in_flight = reg.in_flight;
         member.sweeps_served = reg.sweeps_served;
+        member.queue_depth = reg.queue_depth;
+        member.rejected = reg.rejected;
         member.last_seen = Instant::now();
         // A failed or expired worker announcing again is re-admitted;
         // Joined/Active/Idle members just refresh their heartbeat.
@@ -278,6 +301,8 @@ impl Membership {
                 ledger,
                 in_flight: 0,
                 sweeps_served: 0,
+                queue_depth: 0,
+                rejected: 0,
                 state: MemberState::Joined,
                 is_static: true,
                 failures: 0,
@@ -331,12 +356,16 @@ impl Membership {
     /// claim generation.  The caller owes each claimed member a
     /// dispatch thread.  Members past their failure budget are never
     /// claimed again (a worker with a broken serve port must not
-    /// consume threads forever).
+    /// consume threads forever), and members whose last heartbeat
+    /// reported a saturated request queue are passed over *this* round:
+    /// dispatching at them would only earn `busy` rejections, and their
+    /// next heartbeat re-admits them the moment the queue drains.
     pub fn claim_dispatchable(&self) -> Vec<Member> {
         let mut claimed = Vec::new();
         for member in lock(&self.members).values_mut() {
             if matches!(member.state, MemberState::Joined | MemberState::Idle)
                 && member.failures < MAX_MEMBER_FAILURES
+                && member.queue_depth < SATURATION_QUEUE_DEPTH
             {
                 member.state = MemberState::Active;
                 member.generation = member.generation.wrapping_add(1);
@@ -527,6 +556,8 @@ mod tests {
             max_batch: 256,
             in_flight: 0,
             sweeps_served: 0,
+            queue_depth: 0,
+            rejected: 0,
             ledger: None,
         }
     }
@@ -632,11 +663,31 @@ mod tests {
     }
 
     #[test]
+    fn saturated_member_skipped_until_heartbeat_clears() {
+        let m = Membership::new(Duration::from_secs(60));
+        let version = env!("CARGO_PKG_VERSION");
+        let mut saturated = reg("10.0.0.6:4", version);
+        saturated.queue_depth = SATURATION_QUEUE_DEPTH;
+        m.register(&saturated).unwrap();
+        // Still a live member (health surfaces see it), never claimed.
+        assert_eq!(m.live_count(), 1);
+        assert!(m.claim_dispatchable().is_empty());
+        // The next heartbeat reports the queue drained: claimable again.
+        let mut drained = saturated.clone();
+        drained.queue_depth = 0;
+        m.register(&drained).unwrap();
+        let claimed = m.claim_dispatchable();
+        assert_eq!(claimed.len(), 1);
+        assert_eq!(claimed[0].addr, "10.0.0.6:4");
+    }
+
+    #[test]
     fn registration_parses_load_and_ledger() {
         let req = json::parse(&format!(
             r#"{{"cmd": "register", "addr": "h:1", "version": "{}",
                  "max_grid": 128, "max_batch": 8,
-                 "load": {{"in_flight": 2, "sweeps_served": 17}},
+                 "load": {{"in_flight": 2, "sweeps_served": 17,
+                          "queue_depth": 6, "rejected": 3}},
                  "ledger": {{"entries": 5, "bytes": 900, "superseded": 1}}}}"#,
             env!("CARGO_PKG_VERSION")
         ))
@@ -646,6 +697,8 @@ mod tests {
         assert_eq!(reg.max_batch, 8);
         assert_eq!(reg.in_flight, 2);
         assert_eq!(reg.sweeps_served, 17);
+        assert_eq!(reg.queue_depth, 6);
+        assert_eq!(reg.rejected, 3);
         let ledger = reg.ledger.unwrap();
         assert_eq!(ledger.entries, 5);
         assert_eq!(ledger.bytes, 900);

@@ -1,0 +1,391 @@
+//! Open-loop load generator for the serving path (`arrow loadgen`).
+//!
+//! Drives a running `arrow serve` at a *target* arrival rate rather
+//! than a closed request/response loop: request N is sent at its
+//! scheduled instant whether or not request N-1 has answered, so a slow
+//! or saturated server shows up as latency and `busy` rejections
+//! instead of silently throttling the generator.  That is the property
+//! the serving-path acceptance test needs — offered load is an input,
+//! achieved throughput is the measurement.
+//!
+//! * The arrival schedule ([`arrival_offsets`]) ramps linearly from 0
+//!   to the target QPS over `ramp_s` seconds (arrival *i* of the ramp
+//!   lands at `sqrt(2·ramp·i/qps)`, so `qps·ramp/2` requests fill the
+//!   ramp), then holds uniform `1/qps` spacing for `duration_s`.
+//! * Requests round-robin across `connections` pipelined connections;
+//!   every request carries a numeric `"id"` (the global schedule
+//!   index), so responses may arrive out of order and still match
+//!   their send timestamps.
+//! * Latency is measured client-side (send to response) into the same
+//!   fixed log-bucket [`Histogram`] the server uses, so the report's
+//!   `client_latency_us` and the server's `latency_us` quantiles are
+//!   directly comparable.
+//! * After the run, one extra connection fetches `{"cmd": "stats"}`
+//!   and embeds the server's own counters under `"server"` — a single
+//!   report carries both sides of the experiment.
+//!
+//! The report is printed as JSON and (by default) written to
+//! `BENCH_serve_latency.json` for CI artifact upload.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::histogram::Histogram;
+use crate::util::json::{self, Json};
+
+use super::profiles::Profile;
+use super::suite::Benchmark;
+
+/// What `arrow loadgen` drives and how hard.
+#[derive(Debug, Clone)]
+pub struct LoadgenSpec {
+    /// Server to load (`host:port` of a running `arrow serve`).
+    pub addr: String,
+    /// Target steady-state arrival rate, requests/second.
+    pub qps: f64,
+    /// Steady-state phase length, seconds.
+    pub duration_s: f64,
+    /// Linear ramp-up length, seconds (0 starts at full rate).
+    pub ramp_s: f64,
+    /// Pipelined connections the schedule round-robins across.
+    pub connections: usize,
+    /// Every Nth request is a `bench` instead of a `ping` (0 = never):
+    /// a cheap way to mix real simulator work into the stream.
+    pub bench_every: usize,
+    /// Benchmark name for the `bench` mix.
+    pub benchmark: String,
+    /// Profile name for the `bench` mix.
+    pub profile: String,
+    /// When > 0, every request is `{"cmd": "sleep"}` of this many ms —
+    /// a deterministic service time for saturation experiments.
+    pub sleep_ms: u64,
+    /// Where to write the JSON report (`None` = stdout only).
+    pub out: Option<PathBuf>,
+}
+
+impl Default for LoadgenSpec {
+    fn default() -> LoadgenSpec {
+        LoadgenSpec {
+            addr: "127.0.0.1:7676".into(),
+            qps: 200.0,
+            duration_s: 10.0,
+            ramp_s: 2.0,
+            connections: 4,
+            bench_every: 0,
+            benchmark: "vector_addition".into(),
+            profile: "test".into(),
+            sleep_ms: 0,
+            out: Some(PathBuf::from("BENCH_serve_latency.json")),
+        }
+    }
+}
+
+/// The open-loop arrival schedule: offsets from the run epoch at which
+/// each request is due.  Arrival rate ramps linearly from 0 to `qps`
+/// over `ramp_s` (so the ramp holds `qps·ramp_s/2` arrivals), then
+/// stays uniform at `1/qps` for `duration_s`.  Offsets are
+/// nondecreasing and the two phases join continuously at `ramp_s`.
+pub fn arrival_offsets(qps: f64, duration_s: f64, ramp_s: f64) -> Vec<Duration> {
+    if !(qps > 0.0) {
+        return Vec::new();
+    }
+    let ramp_count = (qps * ramp_s.max(0.0) / 2.0).floor() as usize;
+    let steady_count = (qps * duration_s.max(0.0)).floor() as usize;
+    let mut offsets = Vec::with_capacity(ramp_count + steady_count);
+    for i in 0..ramp_count {
+        // Inverse of the ramp's cumulative arrivals qps·t²/(2·ramp).
+        offsets.push(Duration::from_secs_f64(
+            (2.0 * ramp_s * i as f64 / qps).sqrt(),
+        ));
+    }
+    for j in 0..steady_count {
+        offsets.push(Duration::from_secs_f64(ramp_s + j as f64 / qps));
+    }
+    offsets
+}
+
+/// One request line (newline-terminated) for schedule slot `id`.
+fn request_line(spec: &LoadgenSpec, id: usize) -> String {
+    if spec.sleep_ms > 0 {
+        format!(
+            "{{\"cmd\": \"sleep\", \"ms\": {}, \"id\": {id}}}\n",
+            spec.sleep_ms
+        )
+    } else if spec.bench_every > 0 && id % spec.bench_every == 0 {
+        format!(
+            "{{\"cmd\": \"bench\", \"benchmark\": \"{}\", \
+             \"profile\": \"{}\", \"id\": {id}}}\n",
+            spec.benchmark, spec.profile
+        )
+    } else {
+        format!("{{\"cmd\": \"ping\", \"id\": {id}}}\n")
+    }
+}
+
+/// Per-connection tallies a reader thread hands back.
+#[derive(Debug, Default)]
+struct Tally {
+    received: u64,
+    ok: u64,
+    busy: u64,
+    errors: u64,
+}
+
+/// Fetch the server's own `{"cmd": "stats"}` view over a fresh
+/// connection (best-effort; `None` when the server is gone).
+fn fetch_stats(addr: &str) -> Option<Json> {
+    let mut stream = TcpStream::connect(addr).ok()?;
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    stream.write_all(b"{\"cmd\": \"stats\"}\n").ok()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).ok()?;
+    json::parse(line.trim()).ok()
+}
+
+/// Run the load, return the report.  The report is also written to
+/// `spec.out` when set.  Fields: `offered_qps`, `achieved_qps` (ok
+/// responses over wall time), `sent` / `received` / `ok` / `busy` /
+/// `errors`, `duration_s` (wall, including drain), `connections`,
+/// `client_latency_us` (histogram summary), and `server` (the
+/// post-run `stats` response, or null).
+pub fn run(spec: &LoadgenSpec) -> Result<Json, String> {
+    if !(spec.qps > 0.0) {
+        return Err("loadgen: --qps must be > 0".into());
+    }
+    if spec.connections == 0 {
+        return Err("loadgen: --connections must be >= 1".into());
+    }
+    if spec.bench_every > 0 {
+        Benchmark::by_name(&spec.benchmark)
+            .ok_or_else(|| format!("loadgen: unknown benchmark `{}`", spec.benchmark))?;
+        Profile::by_name(&spec.profile)
+            .ok_or_else(|| format!("loadgen: unknown profile `{}`", spec.profile))?;
+    }
+    let offsets = Arc::new(arrival_offsets(spec.qps, spec.duration_s, spec.ramp_s));
+    let total = offsets.len();
+    if total == 0 {
+        return Err(
+            "loadgen: empty schedule (qps x duration rounds to zero requests)"
+                .into(),
+        );
+    }
+    // Send instant per schedule slot, nanoseconds-from-epoch + 1 (0 is
+    // the never-sent sentinel).  Readers match responses back by id.
+    let send_ns: Arc<Vec<AtomicU64>> =
+        Arc::new((0..total).map(|_| AtomicU64::new(0)).collect());
+    let hist = Arc::new(Histogram::new());
+    let epoch = Instant::now();
+
+    let mut senders = Vec::with_capacity(spec.connections);
+    let mut readers = Vec::with_capacity(spec.connections);
+    for c in 0..spec.connections {
+        let stream = TcpStream::connect(&spec.addr)
+            .map_err(|e| format!("loadgen: connect {}: {e}", spec.addr))?;
+        stream.set_nodelay(true).ok();
+        let reader_stream = stream
+            .try_clone()
+            .map_err(|e| format!("loadgen: clone socket: {e}"))?;
+        reader_stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .ok();
+
+        let sspec = spec.clone();
+        let soffsets = Arc::clone(&offsets);
+        let ssend = Arc::clone(&send_ns);
+        let step = spec.connections;
+        senders.push(std::thread::spawn(move || -> u64 {
+            let mut stream = stream;
+            let mut sent = 0u64;
+            let mut i = c;
+            while i < total {
+                let due = soffsets[i];
+                let now = epoch.elapsed();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                // Open loop: when behind schedule, send immediately —
+                // never skip a slot, never wait for responses.
+                let line = request_line(&sspec, i);
+                ssend[i].store(
+                    epoch.elapsed().as_nanos() as u64 + 1,
+                    Ordering::Release,
+                );
+                if stream.write_all(line.as_bytes()).is_err() {
+                    break;
+                }
+                sent += 1;
+                i += step;
+            }
+            // EOF tells the server this connection is done submitting;
+            // in-flight responses still flow back on the other half.
+            let _ = stream.shutdown(Shutdown::Write);
+            sent
+        }));
+
+        let rsend = Arc::clone(&send_ns);
+        let rhist = Arc::clone(&hist);
+        readers.push(std::thread::spawn(move || -> Tally {
+            let mut reader = BufReader::new(reader_stream);
+            let mut line = String::new();
+            let mut tally = Tally::default();
+            loop {
+                line.clear();
+                match reader.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+                tally.received += 1;
+                let Ok(resp) = json::parse(line.trim()) else {
+                    tally.errors += 1;
+                    continue;
+                };
+                let is_ok =
+                    resp.get("ok").and_then(Json::as_bool).unwrap_or(false);
+                let is_busy =
+                    resp.get("busy").and_then(Json::as_bool).unwrap_or(false);
+                if is_busy {
+                    tally.busy += 1;
+                    continue;
+                }
+                if !is_ok {
+                    tally.errors += 1;
+                    continue;
+                }
+                tally.ok += 1;
+                let slot = resp
+                    .get("id")
+                    .and_then(Json::as_u64)
+                    .map(|v| v as usize)
+                    .filter(|v| *v < total);
+                if let Some(slot) = slot {
+                    let sent_at = rsend[slot].load(Ordering::Acquire);
+                    if sent_at > 0 {
+                        let now = epoch.elapsed().as_nanos() as u64 + 1;
+                        rhist.record_us(now.saturating_sub(sent_at) / 1_000);
+                    }
+                }
+            }
+            tally
+        }));
+    }
+
+    let mut sent = 0u64;
+    for s in senders {
+        sent += s.join().map_err(|_| "loadgen: sender panicked")?;
+    }
+    let mut totals = Tally::default();
+    for r in readers {
+        let t = r.join().map_err(|_| "loadgen: reader panicked")?;
+        totals.received += t.received;
+        totals.ok += t.ok;
+        totals.busy += t.busy;
+        totals.errors += t.errors;
+    }
+    let wall_s = epoch.elapsed().as_secs_f64();
+    let achieved_qps =
+        if wall_s > 0.0 { totals.ok as f64 / wall_s } else { 0.0 };
+    let server = fetch_stats(&spec.addr).unwrap_or(Json::Null);
+
+    let report = Json::obj(vec![
+        ("offered_qps", spec.qps.into()),
+        ("achieved_qps", achieved_qps.into()),
+        ("sent", sent.into()),
+        ("received", totals.received.into()),
+        ("ok", totals.ok.into()),
+        ("busy", totals.busy.into()),
+        ("errors", totals.errors.into()),
+        ("duration_s", wall_s.into()),
+        ("connections", (spec.connections as u64).into()),
+        ("client_latency_us", hist.summary_json()),
+        ("server", server),
+    ]);
+    if let Some(path) = &spec.out {
+        std::fs::write(path, format!("{report}\n"))
+            .map_err(|e| format!("loadgen: write {}: {e}", path.display()))?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramp_holds_half_qps_times_ramp_arrivals() {
+        let offsets = arrival_offsets(100.0, 1.0, 2.0);
+        // Ramp: 100·2/2 = 100 arrivals; steady: 100·1 = 100 arrivals.
+        assert_eq!(offsets.len(), 200);
+        // Every ramp arrival lands inside the ramp window, and the
+        // first steady arrival lands exactly at the ramp boundary.
+        assert!(offsets[99] < Duration::from_secs_f64(2.0));
+        assert_eq!(offsets[100], Duration::from_secs_f64(2.0));
+    }
+
+    #[test]
+    fn offsets_are_nondecreasing_and_join_continuously() {
+        let offsets = arrival_offsets(250.0, 2.0, 1.0);
+        for pair in offsets.windows(2) {
+            assert!(pair[0] <= pair[1], "{pair:?} out of order");
+        }
+        // The last ramp arrival approaches the boundary from below:
+        // rate is already ~qps there, so the gap is ~1/qps.
+        let ramp_count = 125;
+        let gap = offsets[ramp_count] - offsets[ramp_count - 1];
+        assert!(gap < Duration::from_secs_f64(2.5 / 250.0), "{gap:?}");
+    }
+
+    #[test]
+    fn steady_phase_is_uniform_at_one_over_qps() {
+        let offsets = arrival_offsets(200.0, 1.0, 0.0);
+        assert_eq!(offsets.len(), 200);
+        assert_eq!(offsets[0], Duration::ZERO);
+        let gap = offsets[1] - offsets[0];
+        assert!(
+            (gap.as_secs_f64() - 0.005).abs() < 1e-9,
+            "steady gap {gap:?} != 1/qps"
+        );
+    }
+
+    #[test]
+    fn zero_and_negative_rates_produce_empty_schedules() {
+        assert!(arrival_offsets(0.0, 10.0, 2.0).is_empty());
+        assert!(arrival_offsets(-5.0, 10.0, 2.0).is_empty());
+        assert!(arrival_offsets(f64::NAN, 10.0, 2.0).is_empty());
+    }
+
+    #[test]
+    fn request_mix_honours_sleep_and_bench_every() {
+        let mut spec = LoadgenSpec::default();
+        assert!(request_line(&spec, 0).contains("\"cmd\": \"ping\""));
+        assert!(request_line(&spec, 7).contains("\"id\": 7"));
+        spec.bench_every = 5;
+        assert!(request_line(&spec, 0).contains("\"cmd\": \"bench\""));
+        assert!(request_line(&spec, 3).contains("\"cmd\": \"ping\""));
+        assert!(request_line(&spec, 10).contains("\"cmd\": \"bench\""));
+        spec.sleep_ms = 20;
+        // Sleep overrides the mix entirely: deterministic service time.
+        assert!(request_line(&spec, 10).contains("\"cmd\": \"sleep\""));
+        assert!(request_line(&spec, 10).contains("\"ms\": 20"));
+        // Every line is one newline-terminated JSON object.
+        let line = request_line(&spec, 4);
+        assert!(line.ends_with('\n'));
+        assert!(json::parse(line.trim()).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_specs_before_connecting() {
+        let mut spec = LoadgenSpec { qps: 0.0, ..Default::default() };
+        assert!(run(&spec).unwrap_err().contains("--qps"));
+        spec.qps = 100.0;
+        spec.connections = 0;
+        assert!(run(&spec).unwrap_err().contains("--connections"));
+        spec.connections = 1;
+        spec.bench_every = 2;
+        spec.benchmark = "no_such_benchmark".into();
+        assert!(run(&spec).unwrap_err().contains("unknown benchmark"));
+    }
+}

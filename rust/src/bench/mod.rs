@@ -32,12 +32,17 @@
 //!   protocol (`arrow serve --join`), the coordinator's live
 //!   membership table with expiry, and the registry endpoint
 //!   (`arrow sweep --listen`) that lets workers join mid-sweep.
+//! * [`loadgen`] — an open-loop load generator for the serving path
+//!   (`arrow loadgen`): target-QPS arrival schedule with linear ramp,
+//!   pipelined connections, client-side latency histograms, and a
+//!   JSON report embedding the server's own `stats` view.
 
 pub mod analytic;
 pub mod cluster;
 pub mod cnn;
 pub mod eval;
 pub mod fleet;
+pub mod loadgen;
 pub mod profiles;
 pub mod runner;
 pub mod store;

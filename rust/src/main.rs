@@ -15,6 +15,10 @@
 //! arrow validate                      # simulator vs XLA golden artifacts
 //! arrow serve [--addr 127.0.0.1:7676] [--cache-dir DIR]
 //!             [--join host:port [--advertise host:port]]
+//!             [--workers N] [--queue-depth N]
+//! arrow loadgen [--addr host:port] [--qps N] [--duration SECS]
+//!               [--ramp SECS] [--connections N] [--bench-every N]
+//!               [--sleep-ms N] [--out FILE]
 //! arrow cluster --workers N [--cache-dir DIR] [--base-port P]
 //! arrow cache compact --cache-dir DIR [--dry-run]
 //! arrow --lanes 4 --vlen 512 ...      # design-time overrides
@@ -22,12 +26,14 @@
 
 use arrow_rvv::bench::cluster::{self, ClusterSpec, FleetSpec};
 use arrow_rvv::bench::fleet::{self, Membership};
+use arrow_rvv::bench::loadgen::{self, LoadgenSpec};
 use arrow_rvv::bench::runner::{run_benchmark, Mode};
 use arrow_rvv::bench::suite::{Benchmark, BENCHMARKS};
 use arrow_rvv::bench::sweep::{energy_total_j, report_json, run_sweep, SweepSpec};
 use arrow_rvv::bench::{store, Profile, TimingVariant, PROFILES};
 use arrow_rvv::energy::EnergyModel;
 use arrow_rvv::report;
+use arrow_rvv::system::executor::ExecutorOptions;
 use arrow_rvv::system::{describe, server};
 use arrow_rvv::vector::ArrowConfig;
 
@@ -59,10 +65,23 @@ COMMANDS:
   validate
   serve [--addr HOST:PORT] [--cache-dir DIR]
         [--join HOST:PORT [--advertise HOST:PORT]]
+        [--workers N] [--queue-depth N]
+  loadgen [--addr HOST:PORT] [--qps N] [--duration SECS] [--ramp SECS]
+          [--connections N] [--bench-every N] [--benchmark NAME]
+          [--profile NAME] [--sleep-ms N] [--out FILE | --no-out]
   cluster --workers N [--cache-dir DIR] [--base-port PORT]
           [--max-restarts N]
   cache compact --cache-dir DIR [--dry-run]
   help
+
+Serving: `arrow serve` answers newline-delimited JSON requests over a
+bounded worker pool — N pipelined requests per connection run
+concurrently, `{\"cmd\": \"stats\"}` reports p50/p99/p999 latency per
+command plus queue depth and rejection counters, `{\"cmd\": \"warm\"}`
+pre-builds sessions for a sweep cohort, and `{\"cmd\": \"shutdown\"}`
+(loopback-only, or SIGTERM) drains in-flight work before exit.
+`arrow loadgen` drives a server open-loop at a target QPS and writes
+BENCH_serve_latency.json with client and server percentiles.
 
 Distributed sweeps: `arrow sweep --workers a:1,b:2` shards the grid
 across running `arrow serve` workers and merges one report (dead
@@ -515,6 +534,13 @@ fn main() -> Result<()> {
                 args.opt("--addr").unwrap_or_else(|| "127.0.0.1:7676".into());
             let cache_dir = args.opt("--cache-dir");
             let advertise = args.opt("--advertise");
+            let mut exec = ExecutorOptions::default();
+            if let Some(w) = args.opt("--workers") {
+                exec.workers = w.parse()?;
+            }
+            if let Some(d) = args.opt("--queue-depth") {
+                exec.queue_depth = d.parse()?;
+            }
             let join = match args.opt("--join") {
                 Some(coordinator) => {
                     let mut join = server::JoinSpec::new(coordinator);
@@ -528,11 +554,58 @@ fn main() -> Result<()> {
                     None
                 }
             };
-            server::serve(
+            server::serve_opts(
                 &addr,
                 cache_dir.as_deref().map(std::path::Path::new),
                 join.as_ref(),
+                exec,
             )?;
+        }
+        "loadgen" => {
+            let mut spec = LoadgenSpec::default();
+            if let Some(a) = args.opt("--addr") {
+                spec.addr = a;
+            }
+            if let Some(q) = args.opt("--qps") {
+                spec.qps = q.parse()?;
+            }
+            if let Some(d) = args.opt("--duration") {
+                spec.duration_s = d.parse()?;
+            }
+            if let Some(r) = args.opt("--ramp") {
+                spec.ramp_s = r.parse()?;
+            }
+            if let Some(c) = args.opt("--connections") {
+                spec.connections = c.parse()?;
+            }
+            if let Some(n) = args.opt("--bench-every") {
+                spec.bench_every = n.parse()?;
+            }
+            if let Some(b) = args.opt("--benchmark") {
+                spec.benchmark = b;
+            }
+            if let Some(p) = args.opt("--profile") {
+                spec.profile = p;
+            }
+            if let Some(ms) = args.opt("--sleep-ms") {
+                spec.sleep_ms = ms.parse()?;
+            }
+            if let Some(out) = args.opt("--out") {
+                spec.out = Some(std::path::PathBuf::from(out));
+            }
+            if args.has("--no-out") {
+                spec.out = None;
+            }
+            eprintln!(
+                "loadgen: {} at {} req/s for {}s (+{}s ramp) over {} connection(s)",
+                spec.addr, spec.qps, spec.duration_s, spec.ramp_s,
+                spec.connections
+            );
+            let report = loadgen::run(&spec).map_err(|e| e.to_string())?;
+            if let Some(out) = &spec.out {
+                eprintln!("report written to {}", out.display());
+            }
+            println!("{report}");
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => return fail(format!("unknown command `{other}`\n{USAGE}")),

@@ -1,0 +1,415 @@
+//! Bounded worker-pool executor with admission control — the serving
+//! path's engine room.
+//!
+//! The job server used to spawn one thread per connection and run every
+//! request serially on it: load was unbounded (a connection flood = a
+//! thread flood) and latency was unmeasurable.  This executor inverts
+//! that: a fixed pool of worker threads drains a **bounded** queue, and
+//! a submission that finds the queue full is rejected *immediately* —
+//! the caller turns that into a structured `busy` error instead of
+//! silently queueing into memory.  Connections then become cheap
+//! reader/writer pairs that pipeline requests onto the shared pool.
+//!
+//! Three guarantees the serving tests pin:
+//!
+//! * **admission control**: at most `queue_depth` jobs wait; the
+//!   `queue_depth + workers + 1`-th concurrent submission is refused,
+//!   never buffered;
+//! * **panic isolation**: a panicking job is caught
+//!   ([`std::panic::catch_unwind`]); its worker survives to take the
+//!   next job, and unwinding runs the job's destructors — so drop
+//!   guards (in-flight counters) stay balanced;
+//! * **graceful drain**: [`Executor::shutdown`] closes admission, lets
+//!   queued and in-flight jobs finish (bounded by a deadline), and
+//!   joins the workers — the `{"cmd": "shutdown"}` / SIGTERM path.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// A unit of work: runs once on a pool worker.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Why a submission was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reject {
+    /// The bounded queue is at capacity: shed load *now*.
+    QueueFull { depth: usize },
+    /// The executor is draining for shutdown; no new work is admitted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::QueueFull { depth } => {
+                write!(f, "server busy: request queue full ({depth} waiting)")
+            }
+            Reject::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+/// Pool sizing.  `workers == 0` means one per available core.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecutorOptions {
+    pub workers: usize,
+    pub queue_depth: usize,
+}
+
+/// Default bound on waiting requests — deep enough to absorb bursts,
+/// shallow enough that queueing delay stays visible as backpressure
+/// instead of unbounded latency.
+pub const DEFAULT_QUEUE_DEPTH: usize = 128;
+
+impl Default for ExecutorOptions {
+    fn default() -> ExecutorOptions {
+        ExecutorOptions { workers: 0, queue_depth: DEFAULT_QUEUE_DEPTH }
+    }
+}
+
+impl ExecutorOptions {
+    /// The worker count this option resolves to.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+}
+
+struct State {
+    jobs: VecDeque<Job>,
+    /// Admission open?  Cleared by [`Executor::shutdown`].
+    open: bool,
+    /// Jobs currently executing on workers.
+    running: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for jobs (or the shutdown signal).
+    work: Condvar,
+    /// `shutdown` waits here for the queue to drain.
+    drained: Condvar,
+    queue_depth: usize,
+    served: AtomicU64,
+    rejected: AtomicU64,
+    panicked: AtomicU64,
+}
+
+/// Poison recovery: the state holds plain data, and a panicking *job*
+/// never unwinds while holding the lock (jobs run outside it).
+fn lock(shared: &Shared) -> MutexGuard<'_, State> {
+    shared.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The bounded worker pool.
+pub struct Executor {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Executor {
+    pub fn new(opts: ExecutorOptions) -> Executor {
+        let workers = opts.resolved_workers();
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                jobs: VecDeque::new(),
+                open: true,
+                running: 0,
+            }),
+            work: Condvar::new(),
+            drained: Condvar::new(),
+            queue_depth: opts.queue_depth.max(1),
+            served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Executor { shared, workers, handles: Mutex::new(handles) }
+    }
+
+    /// Admit one job, or refuse immediately.  Never blocks.
+    pub fn submit(
+        &self,
+        job: impl FnOnce() + Send + 'static,
+    ) -> Result<(), Reject> {
+        let mut state = lock(&self.shared);
+        if !state.open {
+            drop(state);
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(Reject::ShuttingDown);
+        }
+        if state.jobs.len() >= self.shared.queue_depth {
+            let depth = state.jobs.len();
+            drop(state);
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(Reject::QueueFull { depth });
+        }
+        state.jobs.push_back(Box::new(job));
+        drop(state);
+        self.shared.work.notify_one();
+        Ok(())
+    }
+
+    /// Jobs waiting in the queue right now.
+    pub fn queue_len(&self) -> usize {
+        lock(&self.shared).jobs.len()
+    }
+
+    /// The admission bound: jobs that may wait at once.
+    pub fn queue_cap(&self) -> usize {
+        self.shared.queue_depth
+    }
+
+    /// Jobs executing on workers right now.
+    pub fn running(&self) -> usize {
+        lock(&self.shared).running
+    }
+
+    /// Jobs completed (including panicked ones — they occupied a
+    /// worker and finished, just not cleanly).
+    pub fn served(&self) -> u64 {
+        self.shared.served.load(Ordering::Relaxed)
+    }
+
+    /// Submissions refused (queue full or shutting down).
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that panicked (caught; their workers survived).
+    pub fn panicked(&self) -> u64 {
+        self.shared.panicked.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    /// Close admission, wait up to `grace` for queued + in-flight jobs
+    /// to finish, then join the workers.  Returns `true` when the drain
+    /// completed; `false` means jobs were still running at the deadline
+    /// (the workers are left to finish detached — the process is
+    /// exiting anyway).
+    pub fn shutdown(&self, grace: Duration) -> bool {
+        let deadline = Instant::now() + grace;
+        let mut state = lock(&self.shared);
+        state.open = false;
+        // Wake every worker: with `open == false` an empty queue is an
+        // exit signal, not a wait.
+        self.shared.work.notify_all();
+        while !state.jobs.is_empty() || state.running > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (next, timeout) = self
+                .shared
+                .drained
+                .wait_timeout(state, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            state = next;
+            if timeout.timed_out()
+                && (!state.jobs.is_empty() || state.running > 0)
+            {
+                return false;
+            }
+        }
+        drop(state);
+        let handles = std::mem::take(&mut *lock_handles(&self.handles));
+        for h in handles {
+            let _ = h.join();
+        }
+        true
+    }
+}
+
+fn lock_handles(
+    m: &Mutex<Vec<std::thread::JoinHandle<()>>>,
+) -> MutexGuard<'_, Vec<std::thread::JoinHandle<()>>> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        // Close admission and wake the workers so their threads exit
+        // once the queue drains; don't block the dropping thread on a
+        // join (a hung job must not hang the drop).
+        lock(&self.shared).open = false;
+        self.shared.work.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut state = lock(shared);
+            loop {
+                if let Some(job) = state.jobs.pop_front() {
+                    state.running += 1;
+                    break job;
+                }
+                if !state.open {
+                    return;
+                }
+                state = shared
+                    .work
+                    .wait(state)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        // Run outside the lock; catch panics so one bad request cannot
+        // take a pool worker down.  Unwinding still runs the job's
+        // destructors, so drop-guarded counters stay balanced.
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if result.is_err() {
+            shared.panicked.fetch_add(1, Ordering::Relaxed);
+        }
+        shared.served.fetch_add(1, Ordering::Relaxed);
+        let state = lock(shared);
+        let mut state = state;
+        state.running -= 1;
+        let drained = state.jobs.is_empty() && state.running == 0;
+        drop(state);
+        if drained {
+            shared.drained.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc;
+
+    fn exec(workers: usize, depth: usize) -> Executor {
+        Executor::new(ExecutorOptions { workers, queue_depth: depth })
+    }
+
+    #[test]
+    fn runs_submitted_jobs() {
+        let e = exec(2, 16);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..8 {
+            let counter = Arc::clone(&counter);
+            let tx = tx.clone();
+            e.submit(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            })
+            .unwrap();
+        }
+        for _ in 0..8 {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+        assert!(e.shutdown(Duration::from_secs(5)));
+        assert_eq!(e.served(), 8);
+        assert_eq!(e.rejected(), 0);
+    }
+
+    #[test]
+    fn queue_full_rejects_immediately() {
+        let e = exec(1, 1);
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        // Occupy the single worker...
+        e.submit(move || {
+            started_tx.send(()).unwrap();
+            release_rx.recv().unwrap();
+        })
+        .unwrap();
+        started_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // ...fill the single queue slot...
+        e.submit(|| {}).unwrap();
+        // ...and the next submission is refused, not buffered.
+        let err = e.submit(|| {}).unwrap_err();
+        assert!(matches!(err, Reject::QueueFull { .. }), "{err:?}");
+        assert_eq!(e.rejected(), 1);
+        release_tx.send(()).unwrap();
+        assert!(e.shutdown(Duration::from_secs(5)));
+        assert_eq!(e.served(), 2);
+    }
+
+    /// Regression test for the `in_flight` counter leak: a panicking
+    /// job must (a) not kill its worker and (b) still run its drop
+    /// guards, so externally observed in-flight gauges return to zero.
+    #[test]
+    fn panicking_job_releases_guards_and_worker_survives() {
+        struct Guard(Arc<AtomicUsize>);
+        impl Drop for Guard {
+            fn drop(&mut self) {
+                self.0.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        let e = exec(1, 16);
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let gauge = Arc::clone(&in_flight);
+        e.submit(move || {
+            gauge.fetch_add(1, Ordering::SeqCst);
+            let _guard = Guard(gauge);
+            panic!("injected request panic");
+        })
+        .unwrap();
+        // The same (sole) worker must still take the next job.
+        let (tx, rx) = mpsc::channel();
+        e.submit(move || tx.send(()).unwrap()).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0, "guard leaked");
+        assert_eq!(e.panicked(), 1);
+        assert!(e.shutdown(Duration::from_secs(5)));
+        assert_eq!(e.served(), 2);
+        assert_eq!(e.running(), 0);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_then_refuses_new_ones() {
+        let e = exec(1, 16);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let counter = Arc::clone(&counter);
+            e.submit(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                counter.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        assert!(e.shutdown(Duration::from_secs(10)));
+        // Every queued job ran before the drain completed.
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+        assert_eq!(e.submit(|| {}).unwrap_err(), Reject::ShuttingDown);
+    }
+
+    #[test]
+    fn shutdown_deadline_reports_unfinished_work() {
+        let e = exec(1, 16);
+        let (tx, rx) = mpsc::channel::<()>();
+        e.submit(move || {
+            // Outlives the grace period below.
+            let _ = rx.recv_timeout(Duration::from_secs(5));
+        })
+        .unwrap();
+        assert!(!e.shutdown(Duration::from_millis(50)));
+        drop(tx);
+    }
+
+    #[test]
+    fn auto_worker_count_resolves_positive() {
+        assert!(ExecutorOptions::default().resolved_workers() >= 1);
+        let e = exec(0, 4);
+        assert!(e.worker_count() >= 1);
+        assert!(e.shutdown(Duration::from_secs(5)));
+    }
+}

@@ -10,14 +10,19 @@
 //! * [`session`] — the `Session`: program + config bound once (with the
 //!   text predecoded), then run against many workloads — the reuse seam
 //!   the benchmark runner and the sweep pool are built on.
-//! * [`server`] — an threaded TCP job server exposing the simulator as a
-//!   service: newline-delimited JSON requests to run benchmarks, fan out
-//!   design-space sweeps and fetch reports.
+//! * [`executor`] — the bounded worker-pool executor behind the serving
+//!   path: admission-controlled queue, panic-isolated workers, graceful
+//!   drain.
+//! * [`server`] — a TCP job server exposing the simulator as a service:
+//!   newline-delimited JSON requests, pipelined over the shared
+//!   executor, to run benchmarks, fan out design-space sweeps, pre-warm
+//!   sessions and fetch reports/stats.
 //! * [`describe`] — textual renderings of the architecture figures
 //!   (Figs 1-4) from the live configuration.
 
 pub mod batch;
 pub mod describe;
+pub mod executor;
 pub mod machine;
 pub mod server;
 pub mod session;

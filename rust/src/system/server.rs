@@ -1,8 +1,6 @@
 //! Job server: the simulator as a service.
 //!
-//! Line-delimited JSON over TCP, one thread per connection (the build is
-//! offline so there is no async runtime; the protocol and handlers are
-//! runtime-agnostic).  Requests:
+//! Line-delimited JSON over TCP.  Requests:
 //!
 //! ```json
 //! {"cmd": "ping"}
@@ -12,32 +10,62 @@
 //!  "modes": ["vector"], "lanes": [1, 2, 4], "vlens": [128, 256],
 //!  "elens": [32, 64], "timing": ["baseline", "burst-mem"]}
 //! {"cmd": "batch", "requests": [{"cmd": "ping"}, {"cmd": "bench", ...}]}
+//! {"cmd": "warm", "benchmarks": ["vector_addition"], "lanes": [1, 2]}
 //! {"cmd": "describe", "what": "datapath"}
 //! {"cmd": "list"}
+//! {"cmd": "stats"}
+//! {"cmd": "shutdown"}
 //! ```
 //!
-//! Responses are single-line JSON with `"ok": true/false`.  Every
-//! evaluation (`bench`, `sweep`, and both inside `batch`) goes through
-//! one process-wide [`Evaluator`] shared across all connections, so
-//! assembled programs — and, when the server is started with a cache
-//! directory, stored results — are reused across requests.  `batch`
-//! answers many requests in one round trip: its sub-requests run
-//! sequentially on the connection's thread against that same
-//! evaluator, which is what makes one-connection/many-workloads cheap.
+//! Responses are single-line JSON with `"ok": true/false`.
+//!
+//! **Execution model** (the high-throughput serving path): connections
+//! are cheap reader/writer pairs; every request is admitted to one
+//! process-wide bounded [`Executor`] pool, so N requests pipelined on
+//! one connection execute *concurrently* across the pool.  When the
+//! bounded queue is full the request is refused immediately with a
+//! structured `{"ok": false, "busy": true}` error — backpressure, not
+//! unbounded buffering.  Responses to requests that carry an `"id"`
+//! field are written the moment they complete with the id echoed
+//! (out-of-order completion allowed); responses to id-less requests are
+//! delivered strictly in request order, byte-identical to the old
+//! serial server.
+//!
+//! Every evaluation (`bench`, `sweep`, and both inside `batch`) goes
+//! through one process-wide [`Evaluator`] shared across all
+//! connections, so assembled programs, pooled sealed sessions
+//! (pre-warmable via `warm`) — and, when the server is started with a
+//! cache directory, stored results — are reused across requests.
+//!
+//! **Observability**: per-command latency histograms (measured from
+//! admission to completion, queue wait included) plus
+//! queue-depth/served/rejected counters, surfaced by `{"cmd": "stats"}`
+//! — answered on the connection thread, so stats stay readable even
+//! when the pool is saturated.  `arrow loadgen` drives this endpoint.
+//!
+//! **Shutdown**: `{"cmd": "shutdown"}` (loopback peers only) or SIGTERM
+//! stop accepting connections and drain queued + in-flight requests
+//! before the serve loop returns, so fleet supervisors can stop workers
+//! without killing them mid-request.
 //!
 //! Fleet integration: `sweep` responses carry `elapsed_ms` (measured
 //! wall-time, closing the coordinator's shard-cost feedback loop), the
-//! `shard` handshake advertises live `load` counters, and a server
-//! started with a [`JoinSpec`] (`arrow serve --join`) announces itself
-//! to a coordinator's registry via [`crate::bench::fleet`] and keeps
-//! heartbeating for as long as it lives.
+//! `shard` handshake advertises live `load` counters — now including
+//! queue depth and rejected requests, so the coordinator's cost model
+//! sees saturation — and a server started with a [`JoinSpec`] (`arrow
+//! serve --join`) announces itself to a coordinator's registry via
+//! [`crate::bench::fleet`] and keeps heartbeating for as long as it
+//! lives.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
 use crate::bench::fleet;
 use crate::bench::profiles::{self, TimingVariant};
@@ -46,10 +74,12 @@ use crate::bench::store::ResultStore;
 use crate::bench::suite::{Benchmark, BENCHMARKS};
 use crate::bench::sweep::{self, SweepSpec};
 use crate::bench::{EvalPoint, Evaluator, Profile};
+use crate::util::histogram::Histogram;
 use crate::util::json::{self, Json};
 use crate::vector::ArrowConfig;
 
 use super::describe;
+use super::executor::{Executor, ExecutorOptions, Reject};
 
 /// Upper bound on one request's sweep grid, to keep a single connection
 /// from monopolising the process.  Public because the cluster
@@ -61,21 +91,67 @@ pub const MAX_SWEEP_GRID: usize = 4096;
 /// the `shard` handshake; the coordinator chunks against it).
 pub const MAX_BATCH_REQUESTS: usize = 256;
 
-/// Live load counters for one server process, shared by every
-/// connection.  The `shard` handshake surfaces them to coordinators,
-/// and the `--join` announcer folds them into each registration
-/// heartbeat, so a fleet coordinator sees worker load without probing.
+/// Cap on one `sleep` request, so the load-test scaffold cannot park a
+/// pool worker indefinitely.
+pub const MAX_SLEEP_MS: u64 = 5_000;
+
+/// How long a draining server waits for queued + in-flight requests
+/// before giving up and exiting anyway.
+pub const SHUTDOWN_GRACE: Duration = Duration::from_secs(20);
+
+/// Accept-loop poll interval while watching for the drain flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Command kinds tracked by the per-command latency histograms.  The
+/// last entry is the catch-all for unknown commands.
+const KIND_NAMES: [&str; 11] = [
+    "ping", "bench", "sweep", "batch", "describe", "list", "shard",
+    "stats", "warm", "sleep", "other",
+];
+
+/// Histogram slot for a request's `cmd`.
+fn kind_of(cmd: Option<&str>) -> usize {
+    cmd.and_then(|c| KIND_NAMES.iter().position(|&k| k == c))
+        .unwrap_or(KIND_NAMES.len() - 1)
+}
+
+/// Live load counters and latency histograms for one server process,
+/// shared by every connection.  The `shard` handshake surfaces the
+/// counters to coordinators, the `--join` announcer folds them into
+/// each registration heartbeat (so a fleet coordinator sees worker
+/// saturation without probing), and `{"cmd": "stats"}` reports the
+/// whole thing including p50/p99/p999 per command.
 #[derive(Debug, Default)]
 pub struct ServerStats {
-    /// Requests currently being handled, across all connections.
+    /// Requests currently executing, across all connections.
     pub in_flight: AtomicUsize,
     /// Sweep requests (cluster shards) served since startup.
     pub sweeps_served: AtomicU64,
+    /// Requests completed (any command, success or error response).
+    pub served: AtomicU64,
+    /// Requests refused by admission control (queue full / draining).
+    pub rejected: AtomicU64,
+    /// Executor queue depth, mirrored at each admission/completion.
+    pub queue_depth: AtomicUsize,
+    /// Aggregate latency across every command.
+    latency_all: Histogram,
+    /// Per-command latency, indexed by [`kind_of`].
+    latency: [Histogram; KIND_NAMES.len()],
 }
 
 impl ServerStats {
-    /// The `{"in_flight": …, "sweeps_served": …}` object both the
-    /// handshake and the registration payload carry.
+    /// Record one completed request: admission-to-completion latency
+    /// (queue wait included) into the aggregate and per-command
+    /// histograms, plus the served counter.
+    pub fn record(&self, kind: usize, elapsed: Duration) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        self.latency_all.record(elapsed);
+        self.latency[kind.min(KIND_NAMES.len() - 1)].record(elapsed);
+    }
+
+    /// The load object both the handshake and the registration payload
+    /// carry.  `queue_depth`/`rejected` are the saturation signals the
+    /// fleet coordinator's costing reads.
     pub fn load_json(&self) -> Json {
         Json::obj(vec![
             (
@@ -86,7 +162,44 @@ impl ServerStats {
                 "sweeps_served",
                 self.sweeps_served.load(Ordering::Relaxed).into(),
             ),
+            (
+                "queue_depth",
+                (self.queue_depth.load(Ordering::Relaxed) as u64).into(),
+            ),
+            ("served", self.served.load(Ordering::Relaxed).into()),
+            ("rejected", self.rejected.load(Ordering::Relaxed).into()),
         ])
+    }
+
+    /// The `latency_us` object of the `stats` response: the aggregate
+    /// plus every command that has actually been seen.
+    fn latency_json(&self) -> Json {
+        let mut fields = vec![("all", self.latency_all.summary_json())];
+        for (i, name) in KIND_NAMES.iter().enumerate() {
+            if self.latency[i].count() > 0 {
+                fields.push((name, self.latency[i].summary_json()));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Balances `in_flight` by drop, so a panicking request handler cannot
+/// permanently inflate the load every heartbeat reports — the executor
+/// catches the panic, unwinding runs this guard's destructor, and the
+/// gauge returns to truth.
+struct InFlightGuard<'a>(&'a ServerStats);
+
+impl<'a> InFlightGuard<'a> {
+    fn new(stats: &'a ServerStats) -> InFlightGuard<'a> {
+        stats.in_flight.fetch_add(1, Ordering::Relaxed);
+        InFlightGuard(stats)
+    }
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -313,8 +426,76 @@ pub fn handle_request_with(
                 ("responses", Json::Arr(responses)),
             ])
         }
+        // Observability: counters plus p50/p99/p999 latency per
+        // command, straight off the process-wide histograms.  The
+        // connection layer answers this inline (never queued), so stats
+        // stay readable even when the pool is saturated.
+        Some("stats") => Json::obj(vec![
+            ("ok", true.into()),
+            (
+                "in_flight",
+                (stats.in_flight.load(Ordering::Relaxed) as u64).into(),
+            ),
+            (
+                "queue_depth",
+                (stats.queue_depth.load(Ordering::Relaxed) as u64).into(),
+            ),
+            ("served", stats.served.load(Ordering::Relaxed).into()),
+            ("rejected", stats.rejected.load(Ordering::Relaxed).into()),
+            (
+                "sweeps_served",
+                stats.sweeps_served.load(Ordering::Relaxed).into(),
+            ),
+            ("latency_us", stats.latency_json()),
+            ("sessions", evaluator.sessions().stats_json()),
+            ("programs", (evaluator.programs().len() as u64).into()),
+        ]),
+        // Pre-warm the session pool over a sweep-shaped grid: build the
+        // sealed sessions now so the first real request per point skips
+        // the build cost.  Accepts the same axes as `sweep` (and the
+        // same grid cap).
+        Some("warm") => match sweep_spec_from(req) {
+            Ok(spec) => {
+                let mut warmed = 0u64;
+                let mut errors = 0u64;
+                for (point, _key) in spec.expand() {
+                    match evaluator.warm_point(&point) {
+                        Ok(()) => warmed += 1,
+                        Err(_) => errors += 1,
+                    }
+                }
+                Json::obj(vec![
+                    ("ok", true.into()),
+                    ("warmed", warmed.into()),
+                    ("errors", errors.into()),
+                    ("sessions", evaluator.sessions().stats_json()),
+                ])
+            }
+            Err(e) => err_response(e),
+        },
+        // Occupy one pool worker for a bounded interval.  A load-test
+        // scaffold: it gives `arrow loadgen` (and the pipelining tests)
+        // a request with a *known* service time, so saturation and
+        // head-of-line behaviour are measurable deterministically.
+        Some("sleep") => {
+            let ms = req
+                .get("ms")
+                .and_then(Json::as_u64)
+                .unwrap_or(0)
+                .min(MAX_SLEEP_MS);
+            std::thread::sleep(Duration::from_millis(ms));
+            Json::obj(vec![("ok", true.into()), ("slept_ms", ms.into())])
+        }
+        // Real shutdowns are intercepted at the connection layer (they
+        // need the peer address and the listener's drain flag); reaching
+        // here means it was smuggled inside a batch or sent to the pure
+        // handler.
+        Some("shutdown") => err_response(
+            "shutdown must be a top-level request on a loopback connection",
+        ),
         other => err_response(format!(
-            "unknown cmd {other:?} (ping|list|shard|bench|sweep|batch|describe)"
+            "unknown cmd {other:?} \
+             (ping|list|shard|bench|sweep|batch|describe|stats|warm|sleep)"
         )),
     }
 }
@@ -445,26 +626,200 @@ fn config_from(req: &Json) -> ArrowConfig {
     c
 }
 
-fn handle_conn(stream: TcpStream, evaluator: &Evaluator, stats: &ServerStats) {
+/// Everything one server process shares across its connections.
+struct ServerCore {
+    evaluator: Evaluator,
+    stats: ServerStats,
+    executor: Executor,
+    /// Set by `{"cmd": "shutdown"}`; the accept loop polls it (and the
+    /// process-wide SIGTERM flag) and drains when either fires.
+    shutdown: AtomicBool,
+}
+
+impl ServerCore {
+    fn new(evaluator: Evaluator, exec: ExecutorOptions) -> ServerCore {
+        ServerCore {
+            evaluator,
+            stats: ServerStats::default(),
+            executor: Executor::new(exec),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Where a response goes: tagged requests (an `"id"` field) are written
+/// the moment they complete; untagged requests hold a sequence number
+/// and are delivered strictly in request order through the reorder
+/// buffer.
+#[derive(Debug, Clone, Copy)]
+enum Slot {
+    Ordered(u64),
+    Tagged,
+}
+
+/// Per-connection writer state: the stream plus the reorder buffer for
+/// in-order (untagged) responses.  Pool workers completing out of order
+/// park their rendered response in `pending`; whoever completes the
+/// next expected sequence flushes the run.
+struct ConnOut {
+    stream: TcpStream,
+    next_seq: u64,
+    pending: BTreeMap<u64, String>,
+}
+
+fn lock_out(out: &Mutex<ConnOut>) -> std::sync::MutexGuard<'_, ConnOut> {
+    out.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Deliver one response into its slot.  Write errors are swallowed: the
+/// client is gone, and the reader side of the connection will see EOF
+/// and wind down on its own.
+fn deliver(out: &Mutex<ConnOut>, slot: Slot, resp: &Json) {
+    let mut o = lock_out(out);
+    match slot {
+        Slot::Tagged => {
+            let _ = writeln!(o.stream, "{resp}");
+        }
+        Slot::Ordered(seq) => {
+            o.pending.insert(seq, resp.to_string());
+            loop {
+                let next = o.next_seq;
+                let Some(line) = o.pending.remove(&next) else { break };
+                o.next_seq += 1;
+                let _ = writeln!(o.stream, "{line}");
+            }
+        }
+    }
+}
+
+/// Echo the request's `"id"` into the response, so a pipelining client
+/// can match out-of-order completions.
+fn attach_id(resp: Json, id: Option<Json>) -> Json {
+    match (resp, id) {
+        (Json::Obj(mut m), Some(id)) => {
+            m.insert("id".to_string(), id);
+            Json::Obj(m)
+        }
+        (resp, _) => resp,
+    }
+}
+
+/// The structured admission-control rejection: `busy: true` is the
+/// machine-readable signal (clients retry/shed on it; the error string
+/// is for humans).
+fn busy_response(reject: &Reject) -> Json {
+    Json::obj(vec![
+        ("ok", false.into()),
+        ("busy", true.into()),
+        ("error", Json::Str(reject.to_string())),
+    ])
+}
+
+/// One connection: read lines, admit each request to the shared pool,
+/// deliver responses per [`Slot`] semantics.  The reader never executes
+/// requests itself (except `stats`/`shutdown`, which must stay
+/// responsive under saturation), so a slow request cannot stall
+/// admission of the ones pipelined behind it.
+fn handle_conn(stream: TcpStream, core: &Arc<ServerCore>) {
     let peer = stream.peer_addr().ok();
-    let mut writer = match stream.try_clone() {
+    let writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
+    let out = Arc::new(Mutex::new(ConnOut {
+        stream: writer,
+        next_seq: 0,
+        pending: BTreeMap::new(),
+    }));
     let reader = BufReader::new(stream);
+    let mut seq = 0u64;
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        stats.in_flight.fetch_add(1, Ordering::Relaxed);
-        let response = match json::parse(&line) {
-            Ok(req) => handle_request_with(&req, evaluator, stats),
-            Err(e) => err_response(format!("bad json: {e}")),
+        let req = match json::parse(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                deliver(
+                    &out,
+                    Slot::Ordered(seq),
+                    &err_response(format!("bad json: {e}")),
+                );
+                seq += 1;
+                continue;
+            }
         };
-        stats.in_flight.fetch_sub(1, Ordering::Relaxed);
-        if writeln!(writer, "{response}").is_err() {
-            break;
+        let id = req.get("id").cloned();
+        let slot = if id.is_some() {
+            Slot::Tagged
+        } else {
+            let s = Slot::Ordered(seq);
+            seq += 1;
+            s
+        };
+        let cmd = req.get("cmd").and_then(Json::as_str);
+        match cmd {
+            // Admin: flip the server-wide drain flag.  Loopback peers
+            // only — a worker's serve port is reachable from the whole
+            // fleet, and any remote being able to stop it would turn a
+            // typo into an outage.
+            Some("shutdown") => {
+                let resp = if peer.is_some_and(|p| p.ip().is_loopback()) {
+                    core.shutdown.store(true, Ordering::Release);
+                    Json::obj(vec![
+                        ("ok", true.into()),
+                        ("draining", true.into()),
+                    ])
+                } else {
+                    err_response(
+                        "shutdown is admin-only (loopback connections)",
+                    )
+                };
+                deliver(&out, slot, &attach_id(resp, id));
+                continue;
+            }
+            // Observability must not queue behind the load it is
+            // measuring: answer on the connection thread.
+            Some("stats") => {
+                let started = Instant::now();
+                let resp =
+                    handle_request_with(&req, &core.evaluator, &core.stats);
+                core.stats.record(kind_of(cmd), started.elapsed());
+                deliver(&out, slot, &attach_id(resp, id));
+                continue;
+            }
+            _ => {}
+        }
+        let kind = kind_of(cmd);
+        let core_job = Arc::clone(core);
+        let out_job = Arc::clone(&out);
+        let id_job = id.clone();
+        let admitted = Instant::now();
+        let submitted = core.executor.submit(move || {
+            let _guard = InFlightGuard::new(&core_job.stats);
+            core_job
+                .stats
+                .queue_depth
+                .store(core_job.executor.queue_len(), Ordering::Relaxed);
+            let resp = handle_request_with(
+                &req,
+                &core_job.evaluator,
+                &core_job.stats,
+            );
+            core_job.stats.record(kind, admitted.elapsed());
+            deliver(&out_job, slot, &attach_id(resp, id_job));
+        });
+        match submitted {
+            Ok(()) => {
+                core.stats
+                    .queue_depth
+                    .store(core.executor.queue_len(), Ordering::Relaxed);
+            }
+            Err(reject) => {
+                core.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                deliver(&out, slot, &attach_id(busy_response(&reject), id));
+            }
         }
     }
     if let Some(peer) = peer {
@@ -472,20 +827,65 @@ fn handle_conn(stream: TcpStream, evaluator: &Evaluator, stats: &ServerStats) {
     }
 }
 
-/// Serve forever on `addr` (e.g. `127.0.0.1:7676`), one thread per
-/// connection.  All connections share one [`Evaluator`]; passing a
+/// Process-wide SIGTERM flag (one per process, like the signal itself);
+/// the accept loop of every serving listener polls it.
+static SIGTERM_FLAG: AtomicBool = AtomicBool::new(false);
+
+fn sigterm_pending() -> bool {
+    SIGTERM_FLAG.load(Ordering::Acquire)
+}
+
+/// Install the SIGTERM handler (once).  Raw `signal(2)` FFI: the build
+/// is dependency-free, and all the handler does is set an atomic flag —
+/// async-signal-safe by construction.
+#[cfg(unix)]
+fn install_sigterm() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        extern "C" fn on_sigterm(_sig: i32) {
+            SIGTERM_FLAG.store(true, Ordering::Release);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGTERM: i32 = 15;
+        unsafe {
+            let _ = signal(SIGTERM, on_sigterm);
+        }
+    });
+}
+
+#[cfg(not(unix))]
+fn install_sigterm() {}
+
+/// Serve on `addr` (e.g. `127.0.0.1:7676`) with the default executor
+/// sizing.  All connections share one [`Evaluator`]; passing a
 /// `cache_dir` additionally backs it with the persistent result store
 /// (an unopenable store is reported and the server runs uncached).
 /// With a [`JoinSpec`] the worker also announces itself to a fleet
-/// coordinator and keeps heartbeating (`arrow serve --join`).
+/// coordinator and keeps heartbeating (`arrow serve --join`).  Returns
+/// after a graceful shutdown (`{"cmd": "shutdown"}` or SIGTERM) drains
+/// in-flight requests.
 pub fn serve(
     addr: &str,
     cache_dir: Option<&Path>,
     join: Option<&JoinSpec>,
 ) -> std::io::Result<()> {
+    serve_opts(addr, cache_dir, join, ExecutorOptions::default())
+}
+
+/// [`serve`] with explicit executor sizing (`arrow serve --workers N
+/// --queue-depth M`).
+pub fn serve_opts(
+    addr: &str,
+    cache_dir: Option<&Path>,
+    join: Option<&JoinSpec>,
+    exec: ExecutorOptions,
+) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("arrow simulator serving on {addr}");
-    serve_listener_with(listener, cache_dir, join)
+    serve_listener_opts(listener, cache_dir, join, exec)
 }
 
 /// [`serve`] on an already-bound listener.  The in-process worker
@@ -495,18 +895,31 @@ pub fn serve_listener(
     listener: TcpListener,
     cache_dir: Option<&Path>,
 ) -> std::io::Result<()> {
-    serve_listener_with(listener, cache_dir, None)
+    serve_listener_opts(listener, cache_dir, None, ExecutorOptions::default())
 }
 
-/// [`serve_listener`] with optional fleet membership: when `join` is
-/// set, a detached announcer registers this worker with the
-/// coordinator and re-registers every `join.interval` — each heartbeat
-/// carrying the live load counters and ledger stats — until the
-/// process exits or the coordinator refuses the registration.
+/// [`serve_listener`] with optional fleet membership.
 pub fn serve_listener_with(
     listener: TcpListener,
     cache_dir: Option<&Path>,
     join: Option<&JoinSpec>,
+) -> std::io::Result<()> {
+    serve_listener_opts(listener, cache_dir, join, ExecutorOptions::default())
+}
+
+/// The full serving path: bounded executor + pipelined connections +
+/// optional fleet membership (a detached announcer registers this
+/// worker with the coordinator and re-registers every `join.interval` —
+/// each heartbeat carrying the live load counters, queue depth and
+/// ledger stats — until the process exits or the coordinator refuses
+/// the registration).  Returns once a shutdown request or SIGTERM has
+/// been observed and the pool has drained (bounded by
+/// [`SHUTDOWN_GRACE`]).
+pub fn serve_listener_opts(
+    listener: TcpListener,
+    cache_dir: Option<&Path>,
+    join: Option<&JoinSpec>,
+    exec: ExecutorOptions,
 ) -> std::io::Result<()> {
     let mut evaluator = Evaluator::new();
     if let Some(dir) = cache_dir {
@@ -525,8 +938,12 @@ pub fn serve_listener_with(
             ),
         }
     }
-    let evaluator = Arc::new(evaluator);
-    let stats = Arc::new(ServerStats::default());
+    let core = Arc::new(ServerCore::new(evaluator, exec));
+    eprintln!(
+        "executor: {} workers, queue depth {}",
+        core.executor.worker_count(),
+        core.executor.queue_cap()
+    );
     if let Some(join) = join {
         let advertise = match &join.advertise {
             Some(a) => a.clone(),
@@ -536,27 +953,47 @@ pub fn serve_listener_with(
             "joining fleet at {} as {advertise}",
             join.coordinator
         );
-        let payload_eval = Arc::clone(&evaluator);
-        let payload_stats = Arc::clone(&stats);
+        let payload_core = Arc::clone(&core);
         fleet::announce(
             join.coordinator.clone(),
             join.interval,
             move || {
-                register_payload(&advertise, &payload_eval, &payload_stats)
+                register_payload(
+                    &advertise,
+                    &payload_core.evaluator,
+                    &payload_core.stats,
+                )
             },
         );
     }
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
-                let evaluator = Arc::clone(&evaluator);
-                let stats = Arc::clone(&stats);
-                std::thread::spawn(move || {
-                    handle_conn(s, &evaluator, &stats)
-                });
+    install_sigterm();
+    // Non-blocking accept so the loop can watch the drain flags; the
+    // streams themselves are flipped back to blocking.
+    listener.set_nonblocking(true)?;
+    loop {
+        if core.shutdown.load(Ordering::Acquire) || sigterm_pending() {
+            break;
+        }
+        match listener.accept() {
+            Ok((s, _)) => {
+                let _ = s.set_nonblocking(false);
+                let core = Arc::clone(&core);
+                std::thread::spawn(move || handle_conn(s, &core));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
             }
             Err(e) => eprintln!("accept: {e}"),
         }
+    }
+    eprintln!(
+        "draining: waiting up to {}s for in-flight requests",
+        SHUTDOWN_GRACE.as_secs()
+    );
+    if core.executor.shutdown(SHUTDOWN_GRACE) {
+        eprintln!("drained cleanly; exiting");
+    } else {
+        eprintln!("drain grace expired with requests still running");
     }
     Ok(())
 }
@@ -1020,11 +1457,16 @@ mod tests {
 
     #[test]
     fn end_to_end_over_tcp() {
+        let core = Arc::new(ServerCore::new(
+            Evaluator::new(),
+            ExecutorOptions { workers: 2, queue_depth: 8 },
+        ));
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
+        let conn_core = Arc::clone(&core);
         std::thread::spawn(move || {
             let (s, _) = listener.accept().unwrap();
-            handle_conn(s, &Evaluator::new(), &ServerStats::default());
+            handle_conn(s, &conn_core);
         });
         let mut client = TcpStream::connect(addr).unwrap();
         writeln!(client, r#"{{"cmd": "ping"}}"#).unwrap();
@@ -1034,5 +1476,138 @@ mod tests {
             .unwrap();
         let resp = json::parse(line.trim()).unwrap();
         assert_eq!(resp.get("pong"), Some(&Json::Bool(true)));
+        assert!(core.executor.shutdown(Duration::from_secs(5)));
+        assert_eq!(core.stats.served.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stats_command_reports_counters_latency_and_pools() {
+        let evaluator = Evaluator::new();
+        let stats = ServerStats::default();
+        // One completed request on the books.
+        stats.record(kind_of(Some("ping")), Duration::from_micros(250));
+        stats.queue_depth.store(3, Ordering::Relaxed);
+        stats.rejected.store(2, Ordering::Relaxed);
+        let r = handle_request_with(
+            &req(r#"{"cmd": "stats"}"#),
+            &evaluator,
+            &stats,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("served").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("rejected").unwrap().as_u64(), Some(2));
+        assert_eq!(r.get("queue_depth").unwrap().as_u64(), Some(3));
+        let lat = r.get("latency_us").unwrap();
+        let all = lat.get("all").unwrap();
+        assert_eq!(all.get("count").unwrap().as_u64(), Some(1));
+        assert!(all.get("p99_us").unwrap().as_u64().unwrap() >= 250);
+        // The ping histogram has samples, so it is reported; bench has
+        // none, so it is omitted.
+        assert!(lat.get("ping").is_some());
+        assert!(lat.get("bench").is_none());
+        let sessions = r.get("sessions").unwrap();
+        assert_eq!(sessions.get("pooled").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn warm_command_populates_session_pool() {
+        let evaluator = Evaluator::new();
+        let r = handle_request(
+            &req(r#"{"cmd": "warm", "benchmarks": ["vector_addition"],
+                     "profiles": ["test"], "modes": ["vector"],
+                     "lanes": [1, 2], "vlens": [256]}"#),
+            &evaluator,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("warmed").unwrap().as_u64(), Some(2));
+        assert_eq!(r.get("errors").unwrap().as_u64(), Some(0));
+        assert_eq!(evaluator.sessions().len(), 2);
+        // The first real evaluation of a warmed point is a pool hit.
+        let b = handle_request(
+            &req(r#"{"cmd": "bench", "benchmark": "vector_addition",
+                     "profile": "test", "mode": "vector", "lanes": 2}"#),
+            &evaluator,
+        );
+        assert_eq!(b.get("ok"), Some(&Json::Bool(true)), "{b}");
+        assert_eq!(evaluator.sessions().hits(), 1);
+        // Bad axes are request errors, same contract as sweep.
+        let bad = handle_request(
+            &req(r#"{"cmd": "warm", "benchmarks": ["sudoku"]}"#),
+            &evaluator,
+        );
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn sleep_command_sleeps_and_is_capped() {
+        let started = Instant::now();
+        let r = handle(r#"{"cmd": "sleep", "ms": 30}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("slept_ms").unwrap().as_u64(), Some(30));
+        assert!(started.elapsed() >= Duration::from_millis(30));
+        // The cap defangs hostile sleeps without erroring.
+        let r = handle(r#"{"cmd": "sleep", "ms": 86400000}"#);
+        assert_eq!(
+            r.get("slept_ms").unwrap().as_u64(),
+            Some(MAX_SLEEP_MS)
+        );
+    }
+
+    /// Regression test for the `in_flight` leak: a panicking handler
+    /// must still decrement the gauge (the drop guard runs during
+    /// unwind), so heartbeats never report phantom load forever.
+    #[test]
+    fn in_flight_guard_releases_on_panic() {
+        let stats = ServerStats::default();
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _guard = InFlightGuard::new(&stats);
+                assert_eq!(stats.in_flight.load(Ordering::Relaxed), 1);
+                panic!("injected handler panic");
+            }));
+        assert!(result.is_err());
+        assert_eq!(stats.in_flight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shutdown_rejected_outside_connection_layer() {
+        // Pure handler (and therefore batch envelopes): refused.
+        let r = handle(r#"{"cmd": "shutdown"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let r = handle(
+            r#"{"cmd": "batch", "requests": [{"cmd": "shutdown"}]}"#,
+        );
+        let sub = &r.get("responses").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sub.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn attach_id_echoes_any_json_value() {
+        let resp = Json::obj(vec![("ok", true.into())]);
+        let tagged = attach_id(resp.clone(), Some(Json::Str("a7".into())));
+        assert_eq!(tagged.get("id").unwrap().as_str(), Some("a7"));
+        let numeric = attach_id(resp.clone(), Some(7u64.into()));
+        assert_eq!(numeric.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(attach_id(resp, None).get("id"), None);
+    }
+
+    #[test]
+    fn busy_response_is_structured() {
+        let r = busy_response(&Reject::QueueFull { depth: 9 });
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("busy"), Some(&Json::Bool(true)));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("busy"));
+    }
+
+    #[test]
+    fn load_json_carries_saturation_signals() {
+        let stats = ServerStats::default();
+        stats.queue_depth.store(5, Ordering::Relaxed);
+        stats.rejected.store(11, Ordering::Relaxed);
+        stats.record(0, Duration::from_micros(10));
+        let l = stats.load_json();
+        assert_eq!(l.get("queue_depth").unwrap().as_u64(), Some(5));
+        assert_eq!(l.get("rejected").unwrap().as_u64(), Some(11));
+        assert_eq!(l.get("served").unwrap().as_u64(), Some(1));
     }
 }

@@ -1,0 +1,241 @@
+//! Fixed log-bucket latency histogram — lock-free, allocation-free,
+//! dependency-free.
+//!
+//! The serving path needs p50/p99/p999 without pulling in `hdrhistogram`
+//! (the build is offline).  This is the standard log-linear scheme: the
+//! value range is split into powers of two ("octaves"), each octave into
+//! [`SUB`] equal-width sub-buckets, so relative error is bounded by
+//! `1/SUB` (12.5%) at every magnitude.  Values are recorded in
+//! microseconds; with 256 buckets the range covers 1 µs up to ~4.7 hours
+//! before saturating into the last bucket.
+//!
+//! Recording is a single relaxed atomic increment, so one [`Histogram`]
+//! can be shared by every connection of the job server without a lock.
+//! Reads (percentiles, JSON) take a racy-but-monotone snapshot — exact
+//! enough for operational stats, never blocking the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::json::Json;
+
+/// Sub-buckets per power-of-two octave (relative error ≤ 1/SUB).
+const SUB: u64 = 8;
+const SUB_BITS: u32 = 3;
+
+/// Total bucket count: values 0..SUB one-per-bucket, then SUB buckets
+/// per octave.  Index 255 absorbs everything ≥ 2^34 µs.
+pub const BUCKETS: usize = 256;
+
+/// Bucket index for a value (microseconds).  Monotone in `v`.
+fn bucket_of(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as u64;
+    let octave = msb - SUB_BITS as u64;
+    let offset = (v >> (msb - SUB_BITS as u64)) - SUB;
+    ((octave * SUB + offset + SUB) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive upper edge of a bucket — percentiles report this, so a
+/// quantile is never *under*-reported by the bucketing error.
+fn bucket_ceil(idx: usize) -> u64 {
+    if idx < SUB as usize {
+        return idx as u64;
+    }
+    let octave = ((idx as u64) - SUB) / SUB;
+    let offset = ((idx as u64) - SUB) % SUB;
+    ((SUB + offset + 1) << octave) - 1
+}
+
+/// A concurrent log-bucket histogram of microsecond latencies.
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one latency.
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record one latency in microseconds.
+    pub fn record_us(&self, us: u64) {
+        self.counts[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded value, exact (not bucketed).
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Mean of recorded values, exact.
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// The value at quantile `q` in [0, 1]: the upper edge of the bucket
+    /// holding the ceil(q·n)-th smallest sample (conservative — a p99
+    /// is at most one bucket width above the true quantile, never
+    /// below).  Returns 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= rank {
+                // The max is exact; don't report a bucket edge past it.
+                return bucket_ceil(idx).min(self.max_us());
+            }
+        }
+        self.max_us()
+    }
+
+    /// The `{count, mean_us, p50_us, p90_us, p99_us, p999_us, max_us}`
+    /// object the `stats` command and the loadgen report both carry.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", self.count().into()),
+            ("mean_us", self.mean_us().into()),
+            ("p50_us", self.quantile_us(0.50).into()),
+            ("p90_us", self.quantile_us(0.90).into()),
+            ("p99_us", self.quantile_us(0.99).into()),
+            ("p999_us", self.quantile_us(0.999).into()),
+            ("max_us", self.max_us().into()),
+        ])
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Histogram {{ count: {}, p50: {}us, p99: {}us, max: {}us }}",
+            self.count(),
+            self.quantile_us(0.5),
+            self.quantile_us(0.99),
+            self.max_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_bounded() {
+        let mut last = 0usize;
+        for v in 0..100_000u64 {
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket_of({v}) = {b} < {last}");
+            assert!(b < BUCKETS);
+            // The bucket's ceiling bounds the value it holds.
+            assert!(bucket_ceil(b) >= v, "ceil({b}) < {v}");
+            last = b;
+        }
+        // Huge values saturate into the last bucket, no panic.
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        // Below SUB every value has its own bucket with zero error.
+        for v in 0..SUB {
+            assert_eq!(bucket_ceil(bucket_of(v)), v);
+        }
+    }
+
+    #[test]
+    fn quantiles_on_known_distribution() {
+        let h = Histogram::new();
+        // 1000 samples: 990 at ~100us, 10 at ~50000us.
+        for _ in 0..990 {
+            h.record_us(100);
+        }
+        for _ in 0..10 {
+            h.record_us(50_000);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max_us(), 50_000);
+        let p50 = h.quantile_us(0.50);
+        // 12.5% relative error bound.
+        assert!((100..=113).contains(&p50), "p50 = {p50}");
+        let p99 = h.quantile_us(0.99);
+        assert!((100..=113).contains(&p99), "p99 = {p99}");
+        // p99.9 lands in the tail.
+        let p999 = h.quantile_us(0.999);
+        assert!((50_000..=56_250).contains(&p999), "p999 = {p999}");
+        let mean = h.mean_us();
+        assert!((mean - 599.0).abs() < 1.0, "mean = {mean}");
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        let j = h.summary_json();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn quantile_never_exceeds_exact_max() {
+        let h = Histogram::new();
+        h.record_us(1_000_003);
+        // Bucket ceiling would overshoot; the exact max clamps it.
+        assert_eq!(h.quantile_us(1.0), 1_000_003);
+        assert_eq!(h.quantile_us(0.5), 1_000_003);
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let h = Histogram::new();
+        for v in 1..=100 {
+            h.record_us(v);
+        }
+        let j = h.summary_json();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(100));
+        assert!(j.get("p50_us").unwrap().as_u64().unwrap() >= 50);
+        assert!(
+            j.get("p99_us").unwrap().as_u64().unwrap()
+                <= j.get("max_us").unwrap().as_u64().unwrap()
+        );
+    }
+}

@@ -6,9 +6,12 @@
 //!   and the job-server protocol);
 //! * [`bencher`] — a criterion-style measurement harness for the `cargo
 //!   bench` targets (warm-up, repeated timing, mean/σ reporting);
+//! * [`histogram`] — a fixed log-bucket concurrent latency histogram
+//!   (the serving path's p50/p99/p999 source);
 //! * [`rng`] — a seeded SplitMix64 generator powering the in-tree
 //!   property tests and workload generation.
 
 pub mod bencher;
+pub mod histogram;
 pub mod json;
 pub mod rng;

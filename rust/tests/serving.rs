@@ -1,0 +1,248 @@
+//! The high-throughput serving path, end to end over real sockets:
+//! pipelined requests on one connection answer concurrently yet
+//! deliver byte-for-byte what a serial connection sees; a tagged ping
+//! overtakes a slow request instead of head-of-line blocking behind
+//! it; a full queue answers a structured `busy` rejection immediately;
+//! a loopback `shutdown` drains in-flight work before the serve loop
+//! returns; and the open-loop load generator drives a live server and
+//! reports matching client/server counters.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use arrow_rvv::bench::loadgen::{self, LoadgenSpec};
+use arrow_rvv::system::executor::ExecutorOptions;
+use arrow_rvv::system::server;
+use arrow_rvv::util::json::{self, Json};
+
+/// Serve on port 0 with explicit executor sizing; the server thread is
+/// leaked unless the test shuts it down (process exit reaps it).
+fn spawn_server(exec: ExecutorOptions) -> (String, thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = thread::spawn(move || {
+        let _ = server::serve_listener_opts(listener, None, None, exec);
+    });
+    (addr, handle)
+}
+
+fn connect(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.is_empty(), "server closed the connection early");
+    line
+}
+
+/// Ask a server to drain and exit, so tests that join the serve thread
+/// (and CI runners) never leak a listener.
+fn shutdown(addr: &str) {
+    let (mut stream, mut reader) = connect(addr);
+    writeln!(stream, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    let resp = json::parse(read_response(&mut reader).trim()).unwrap();
+    assert_eq!(resp.get("draining"), Some(&Json::Bool(true)), "{resp}");
+}
+
+/// Untagged requests pipelined in one burst deliver exactly the bytes
+/// a serial send-one-read-one connection gets, in the same order —
+/// including error responses for unknown commands and malformed JSON,
+/// which must hold their place in the reorder buffer like any other
+/// response.
+#[test]
+fn pipelined_untagged_responses_match_sequential_byte_for_byte() {
+    let (addr, handle) =
+        spawn_server(ExecutorOptions { workers: 4, queue_depth: 32 });
+    let requests = [
+        r#"{"cmd": "ping"}"#,
+        r#"{"cmd": "list"}"#,
+        r#"{"cmd": "no_such_command"}"#,
+        "this is not json",
+        r#"{"cmd": "ping"}"#,
+        r#"{"cmd": "list"}"#,
+    ];
+
+    // Serial baseline: one request on the wire at a time.
+    let (mut stream, mut reader) = connect(&addr);
+    let mut serial = Vec::new();
+    for req in &requests {
+        writeln!(stream, "{req}").unwrap();
+        serial.push(read_response(&mut reader));
+    }
+    drop(stream);
+
+    // Pipelined: the whole burst in one write, then read everything.
+    let (mut stream, mut reader) = connect(&addr);
+    let burst: String =
+        requests.iter().map(|r| format!("{r}\n")).collect();
+    stream.write_all(burst.as_bytes()).unwrap();
+    let pipelined: Vec<String> =
+        (0..requests.len()).map(|_| read_response(&mut reader)).collect();
+
+    assert_eq!(serial, pipelined);
+    drop(stream);
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+/// A tagged ping submitted behind a slow request answers first: with
+/// more than one pool worker there is no head-of-line blocking on a
+/// connection, which is the whole point of pipelining.
+#[test]
+fn tagged_ping_overtakes_a_slow_sleep() {
+    let (addr, handle) =
+        spawn_server(ExecutorOptions { workers: 2, queue_depth: 8 });
+    let (mut stream, mut reader) = connect(&addr);
+    writeln!(stream, r#"{{"cmd": "sleep", "ms": 800, "id": 1}}"#).unwrap();
+    writeln!(stream, r#"{{"cmd": "ping", "id": 2}}"#).unwrap();
+
+    let started = Instant::now();
+    let first = json::parse(read_response(&mut reader).trim()).unwrap();
+    assert_eq!(
+        first.get("id").and_then(Json::as_u64),
+        Some(2),
+        "ping should not wait behind the sleep: {first}"
+    );
+    assert!(
+        started.elapsed() < Duration::from_millis(700),
+        "ping was head-of-line blocked for {:?}",
+        started.elapsed()
+    );
+    let second = json::parse(read_response(&mut reader).trim()).unwrap();
+    assert_eq!(second.get("id").and_then(Json::as_u64), Some(1));
+    assert_eq!(second.get("slept_ms").and_then(Json::as_u64), Some(800));
+    drop(stream);
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+/// When the queue is full, submission answers an immediate structured
+/// `busy` rejection (with the request's id echoed) instead of blocking
+/// the connection, and the server's `rejected` counter records it.
+#[test]
+fn queue_full_answers_structured_busy() {
+    let (addr, handle) =
+        spawn_server(ExecutorOptions { workers: 1, queue_depth: 1 });
+    let (mut stream, mut reader) = connect(&addr);
+    // One fills the worker, one fills the queue, two must be refused.
+    // The pause lets the lone worker dequeue the first sleep, so the
+    // reject set is deterministic: {2, 3}.
+    writeln!(stream, r#"{{"cmd": "sleep", "ms": 600, "id": 0}}"#).unwrap();
+    thread::sleep(Duration::from_millis(150));
+    for id in 1..4 {
+        writeln!(stream, r#"{{"cmd": "sleep", "ms": 600, "id": {id}}}"#)
+            .unwrap();
+    }
+    let mut busy = Vec::new();
+    let mut served = 0;
+    for _ in 0..4 {
+        let resp = json::parse(read_response(&mut reader).trim()).unwrap();
+        if resp.get("busy").and_then(Json::as_bool) == Some(true) {
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp}");
+            let error = resp.get("error").and_then(Json::as_str).unwrap();
+            assert!(error.contains("queue full"), "{error}");
+            busy.push(resp.get("id").and_then(Json::as_u64).unwrap());
+        } else {
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+            served += 1;
+        }
+    }
+    assert_eq!(busy, vec![2, 3], "the overflow requests get the busy");
+    assert_eq!(served, 2);
+
+    // `stats` is answered inline on the connection thread, so the
+    // saturation counters stay observable even while the pool is busy.
+    writeln!(stream, r#"{{"cmd": "stats"}}"#).unwrap();
+    let stats = json::parse(read_response(&mut reader).trim()).unwrap();
+    assert_eq!(stats.get("rejected").and_then(Json::as_u64), Some(2));
+    drop(stream);
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+/// A loopback `shutdown` acknowledges with `draining`, lets in-flight
+/// work finish (the sleep's response still arrives), and the serve
+/// loop returns — the graceful path `run_fleet` teardown and SIGTERM
+/// both ride on.
+#[test]
+fn shutdown_drains_in_flight_work_then_serve_returns() {
+    let (addr, handle) =
+        spawn_server(ExecutorOptions { workers: 2, queue_depth: 8 });
+    let (mut stream, mut reader) = connect(&addr);
+    writeln!(stream, r#"{{"cmd": "sleep", "ms": 400, "id": 7}}"#).unwrap();
+    writeln!(stream, r#"{{"cmd": "shutdown"}}"#).unwrap();
+
+    let ack = json::parse(read_response(&mut reader).trim()).unwrap();
+    assert_eq!(ack.get("draining"), Some(&Json::Bool(true)), "{ack}");
+    // The in-flight sleep is drained, not dropped.
+    let slept = json::parse(read_response(&mut reader).trim()).unwrap();
+    assert_eq!(slept.get("id").and_then(Json::as_u64), Some(7));
+    assert_eq!(slept.get("ok"), Some(&Json::Bool(true)), "{slept}");
+    drop(stream);
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !handle.is_finished() {
+        assert!(
+            Instant::now() < deadline,
+            "serve loop never returned after shutdown"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+    handle.join().unwrap();
+}
+
+/// The open-loop generator against a live server: every scheduled
+/// request is sent, answered ok, measured client-side, and the report
+/// embeds the server's own matching counters.
+#[test]
+fn loadgen_drives_a_live_server_and_reports_both_sides() {
+    let (addr, handle) =
+        spawn_server(ExecutorOptions { workers: 4, queue_depth: 64 });
+    let out = std::env::temp_dir().join(format!(
+        "BENCH_serve_latency_test_{}.json",
+        std::process::id()
+    ));
+    let spec = LoadgenSpec {
+        addr: addr.clone(),
+        qps: 400.0,
+        duration_s: 0.5,
+        ramp_s: 0.0,
+        connections: 2,
+        out: Some(out.clone()),
+        ..Default::default()
+    };
+    let report = loadgen::run(&spec).unwrap();
+
+    let sent = report.get("sent").and_then(Json::as_u64).unwrap();
+    assert_eq!(sent, 200, "400 qps x 0.5 s");
+    assert_eq!(report.get("received").and_then(Json::as_u64), Some(sent));
+    assert_eq!(report.get("ok").and_then(Json::as_u64), Some(sent));
+    assert_eq!(report.get("busy").and_then(Json::as_u64), Some(0));
+    assert_eq!(report.get("errors").and_then(Json::as_u64), Some(0));
+    let latency = report.get("client_latency_us").unwrap();
+    assert_eq!(latency.get("count").and_then(Json::as_u64), Some(sent));
+    assert!(
+        latency.get("p99_us").and_then(Json::as_u64).unwrap() > 0,
+        "{latency}"
+    );
+    // The embedded server view counts at least our requests.
+    let server_stats = report.get("server").unwrap();
+    assert!(
+        server_stats.get("served").and_then(Json::as_u64).unwrap() >= sent,
+        "{server_stats}"
+    );
+
+    // The report on disk is the same JSON object.
+    let disk = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(json::parse(disk.trim()).unwrap(), report);
+    std::fs::remove_file(&out).ok();
+    shutdown(&addr);
+    handle.join().unwrap();
+}
