@@ -75,6 +75,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
+use crate::obs::{metrics, trace};
 use crate::system::machine::RunSummary;
 use crate::system::server::MAX_SWEEP_GRID;
 use crate::util::json::{self, Json};
@@ -576,7 +577,17 @@ impl ShardQueue {
             self.cursor += points;
             self.shards.push(shard);
             self.done.push(false);
-            out.push(self.shards.len() - 1);
+            let index = self.shards.len() - 1;
+            metrics::SHARDS_CARVED.inc();
+            trace::instant(
+                "cluster",
+                "shard_carved",
+                &[
+                    ("shard", trace::Arg::U64(index as u64)),
+                    ("points", trace::Arg::U64(points as u64)),
+                ],
+            );
+            out.push(index);
         }
         out
     }
@@ -584,6 +595,12 @@ impl ShardQueue {
     /// Push unacknowledged shards back, preserving their order.
     fn requeue(&mut self, pending: &[usize]) {
         for &i in pending.iter().rev() {
+            metrics::SHARDS_REQUEUED.inc();
+            trace::instant(
+                "cluster",
+                "shard_requeued",
+                &[("shard", trace::Arg::U64(i as u64))],
+            );
             self.requeued.push_front(i);
         }
     }
@@ -833,6 +850,15 @@ impl Dispatch<'_> {
                                 s[widx].batch_groups +=
                                     shard_count("batch_groups");
                             }
+                            metrics::SHARDS_MERGED.inc();
+                            trace::instant(
+                                "cluster",
+                                "shard_merged",
+                                &[
+                                    ("shard", trace::Arg::U64(si as u64)),
+                                    ("worker", trace::Arg::Str(&conn.addr)),
+                                ],
+                            );
                             merged.set(idx + 1);
                         }
                         Err(e) => {
@@ -847,6 +873,8 @@ impl Dispatch<'_> {
                 }
                 Ok(())
             };
+            metrics::SHARDS_DISPATCHED.add(batch.len() as u64);
+            let dispatch_span = trace::begin();
             // A panic anywhere in the round trip (simulator or
             // protocol bug) is contained like any other worker
             // failure: requeue the unmerged suffix of the batch —
@@ -854,9 +882,26 @@ impl Dispatch<'_> {
             // per-worker shard counts still sum to the total — and
             // retire this worker; the survivors or the local fallback
             // finish the sweep.
-            match std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let round_trip = std::panic::catch_unwind(AssertUnwindSafe(|| {
                 process(&mut conn)
-            })) {
+            }));
+            // One "X" span per shard of the batch: same start/duration
+            // (the envelope is one round trip), distinguished by the
+            // shard arg so the report's per-worker timeline lines up.
+            if trace::enabled() {
+                for &si in &batch {
+                    trace::complete(
+                        "cluster",
+                        "shard_dispatched",
+                        dispatch_span,
+                        &[
+                            ("shard", trace::Arg::U64(si as u64)),
+                            ("worker", trace::Arg::Str(addr)),
+                        ],
+                    );
+                }
+            }
+            match round_trip {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => return retire(e),
                 Err(_) => {
@@ -959,7 +1004,8 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
         let mut fleetless_since: Option<Instant> = None;
         loop {
             for expired in membership.expire_stale() {
-                eprintln!(
+                crate::obs_warn!(
+                    "cluster",
                     "cluster: worker {expired} heartbeat expired; draining"
                 );
             }
@@ -1066,6 +1112,12 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
             }
         }
         for i in local {
+            metrics::SHARDS_FALLBACK.inc();
+            trace::instant(
+                "cluster",
+                "shard_fallback",
+                &[("shard", trace::Arg::U64(i as u64))],
+            );
             let partial = sweep::run_sweep_with(&queue.shards[i], &evaluator);
             if let Some(e) = partial.store_error {
                 store_errors.push(e);
@@ -1305,12 +1357,19 @@ fn supervise(
             match m.child.try_wait() {
                 Ok(None) => {}
                 Ok(Some(status)) => {
-                    eprintln!("cluster: worker {} exited ({status})", m.addr);
+                    crate::obs_warn!(
+                        "cluster",
+                        "cluster: worker {} exited ({status})",
+                        m.addr
+                    );
                     if m.restarts < fs.max_restarts {
                         m.restarts += 1;
-                        eprintln!(
+                        crate::obs_info!(
+                            "cluster",
                             "cluster: respawning {} (restart {}/{})",
-                            m.addr, m.restarts, fs.max_restarts
+                            m.addr,
+                            m.restarts,
+                            fs.max_restarts
                         );
                         // Any respawn failure — spawn error, or a
                         // child that never becomes ready (port stolen
@@ -1325,7 +1384,8 @@ fn supervise(
                             Ok(child) => {
                                 m.child = child;
                                 if wait_ready(&m.addr).is_err() {
-                                    eprintln!(
+                                    crate::obs_error!(
+                                        "cluster",
                                         "cluster: abandoning {} (respawn \
                                          never became ready)",
                                         m.addr
@@ -1336,7 +1396,8 @@ fn supervise(
                                 }
                             }
                             Err(e) => {
-                                eprintln!(
+                                crate::obs_error!(
+                                    "cluster",
                                     "cluster: abandoning {}: {e}",
                                     m.addr
                                 );
@@ -1344,7 +1405,8 @@ fn supervise(
                             }
                         }
                     } else {
-                        eprintln!(
+                        crate::obs_error!(
+                            "cluster",
                             "cluster: abandoning {} (restart budget spent)",
                             m.addr
                         );
@@ -1352,7 +1414,11 @@ fn supervise(
                     }
                 }
                 Err(e) => {
-                    eprintln!("cluster: worker {}: {e}", m.addr);
+                    crate::obs_error!(
+                        "cluster",
+                        "cluster: worker {}: {e}",
+                        m.addr
+                    );
                     m.dead = true;
                 }
             }

@@ -30,8 +30,11 @@ use std::sync::{Arc, Mutex};
 
 use crate::asm::{assemble, Program};
 use crate::isa::{decode, Instr};
+use crate::obs::{metrics, trace};
 use crate::scalar::ScalarTiming;
-use crate::system::machine::RunSummary;
+use crate::system::machine::{
+    scale_attribution, CycleAttribution, RunSummary,
+};
 use crate::system::{MachineBatch, Session};
 use crate::vector::ArrowConfig;
 
@@ -349,9 +352,11 @@ impl SessionPool {
         let key = session_key(benchmark, size, mode, &config);
         if let Some(s) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            metrics::SESSION_POOL_HITS.inc();
             return Ok(Arc::clone(s));
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        metrics::SESSION_POOL_MISSES.inc();
         // Build outside the lock; a racing builder at worst constructs
         // the same deterministic session and the first insert wins.
         let session =
@@ -481,6 +486,35 @@ impl Evaluator {
         seed: u64,
         analytic_limit: Option<u64>,
     ) -> EvalResult {
+        let span = trace::begin();
+        let result = self.evaluate_inner(point, seed, analytic_limit);
+        if trace::enabled() {
+            let tier = match &result {
+                Ok(o) => o.provenance.name(),
+                Err(_) => "error",
+            };
+            trace::complete(
+                "eval",
+                "eval",
+                span,
+                &[
+                    ("tier", trace::Arg::Str(tier)),
+                    (
+                        "benchmark",
+                        trace::Arg::Str(point.benchmark.name()),
+                    ),
+                ],
+            );
+        }
+        result
+    }
+
+    fn evaluate_inner(
+        &self,
+        point: &EvalPoint,
+        seed: u64,
+        analytic_limit: Option<u64>,
+    ) -> EvalResult {
         point.config.validate()?;
         let key = point.key(seed);
         let analytic_allowed = self.analytic_allowed(point, analytic_limit);
@@ -580,6 +614,27 @@ impl Evaluator {
                 }
             }
         }
+        // One instant per point with its serving tier — the batch path's
+        // counterpart of `evaluate`'s per-call span.
+        if trace::enabled() {
+            for (point, r) in points.iter().zip(&results) {
+                let tier = match r {
+                    Some(Ok(o)) => o.provenance.name(),
+                    _ => "error",
+                };
+                trace::instant(
+                    "eval",
+                    "eval_tier",
+                    &[
+                        ("tier", trace::Arg::Str(tier)),
+                        (
+                            "benchmark",
+                            trace::Arg::Str(point.benchmark.name()),
+                        ),
+                    ],
+                );
+            }
+        }
         BatchEval {
             results: results
                 .into_iter()
@@ -616,6 +671,7 @@ impl Evaluator {
     ) -> Option<EvalOutcome> {
         let hit = self.store.as_ref()?.get(key)?;
         if hit.origin != Provenance::Analytic || analytic_allowed {
+            metrics::EVAL_STORE_HITS.inc();
             Some(hit)
         } else {
             None
@@ -628,6 +684,10 @@ impl Evaluator {
     /// count).
     fn extrapolate(&self, point: &EvalPoint) -> Result<EvalOutcome, String> {
         let size = point.size();
+        // The last (largest) fit run's breakdown is the best available
+        // shape estimate; scaled pro-rata it keeps the sum-equals-cycles
+        // invariant on the extrapolated summary.
+        let mut fit_attr = CycleAttribution::default();
         let cycles = analytic::extrapolate_with(
             point.benchmark,
             size,
@@ -648,10 +708,14 @@ impl Evaluator {
                     point.mode,
                     &workload,
                 )
-                .map(|r| r.cycles)
+                .map(|r| {
+                    fit_attr = r.summary.attribution;
+                    r.cycles
+                })
                 .map_err(|e| e.to_string())
             },
         )?;
+        metrics::EVAL_ANALYTIC.inc();
         Ok(EvalOutcome {
             cycles,
             verified: false,
@@ -659,6 +723,7 @@ impl Evaluator {
                 cycles,
                 lanes: point.config.lanes,
                 lane_busy: vec![0; point.config.lanes],
+                attribution: scale_attribution(&fit_attr, cycles),
                 ..Default::default()
             },
             provenance: Provenance::Analytic,
@@ -689,6 +754,7 @@ impl Evaluator {
             &workload,
         )
         .map_err(|e| e.to_string())?;
+        metrics::EVAL_SIMULATED.inc();
         Ok(EvalOutcome {
             cycles: r.cycles,
             verified: r.verified,
@@ -748,6 +814,7 @@ impl Evaluator {
             workload.expected.len(),
         );
         let verified = output == workload.expected;
+        metrics::EVAL_SIMULATED.add(members.len() as u64);
         summaries
             .into_iter()
             .map(|summary| {

@@ -37,6 +37,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
+use crate::obs::{metrics, trace};
 use crate::util::json::{self, Json};
 
 use super::store::StoreStats;
@@ -253,6 +254,7 @@ impl Membership {
             ));
         }
         let mut members = lock(&self.members);
+        let newly_inserted = !members.contains_key(&reg.addr);
         let member =
             members.entry(reg.addr.clone()).or_insert_with(|| Member {
                 addr: reg.addr.clone(),
@@ -278,9 +280,18 @@ impl Membership {
         member.last_seen = Instant::now();
         // A failed or expired worker announcing again is re-admitted;
         // Joined/Active/Idle members just refresh their heartbeat.
-        if matches!(member.state, MemberState::Failed | MemberState::Expired)
-        {
+        let readmitted =
+            matches!(member.state, MemberState::Failed | MemberState::Expired);
+        if readmitted {
             member.state = MemberState::Joined;
+        }
+        if newly_inserted || readmitted {
+            metrics::FLEET_JOINS.inc();
+            trace::instant(
+                "fleet",
+                "member_joined",
+                &[("worker", trace::Arg::Str(&reg.addr))],
+            );
         }
         Ok(self.expiry)
     }
@@ -328,6 +339,12 @@ impl Membership {
                 && member.last_seen.elapsed() > self.expiry
             {
                 member.state = MemberState::Expired;
+                metrics::FLEET_EXPIRED.inc();
+                trace::instant(
+                    "fleet",
+                    "member_expired",
+                    &[("worker", trace::Arg::Str(&member.addr))],
+                );
                 expired.push(member.addr.clone());
             }
         }
@@ -390,6 +407,12 @@ impl Membership {
     pub fn mark_failed(&self, addr: &str) {
         if let Some(m) = lock(&self.members).get_mut(addr) {
             m.failures = m.failures.saturating_add(1);
+            metrics::FLEET_FAILED.inc();
+            trace::instant(
+                "fleet",
+                "member_failed",
+                &[("worker", trace::Arg::Str(addr))],
+            );
             if m.state != MemberState::Expired {
                 m.state = MemberState::Failed;
             }
@@ -524,7 +547,8 @@ pub fn announce(
                             if r.get("ok").and_then(Json::as_bool)
                                 == Some(false)
                             {
-                                eprintln!(
+                                crate::obs_warn!(
+                                    "fleet",
                                     "fleet: registration refused by {}: {}",
                                     coordinator,
                                     r.get("error")

@@ -30,7 +30,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -180,6 +180,42 @@ pub fn run(spec: &LoadgenSpec) -> Result<Json, String> {
     let hist = Arc::new(Histogram::new());
     let epoch = Instant::now();
 
+    // Live interval stats: readers record into `interval` alongside the
+    // run-wide histogram; a monitor thread drains it every two seconds
+    // via `snapshot_reset` and reports the window at debug level
+    // (`ARROW_LOG=debug`), so a long run can be watched without
+    // perturbing the default byte-for-byte output.
+    let interval = Arc::new(Histogram::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let interval = Arc::clone(&interval);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            'monitor: loop {
+                // Sleep the 2s window in short slices so the join at
+                // the end of the run returns promptly.
+                for _ in 0..20 {
+                    if stop.load(Ordering::Acquire) {
+                        break 'monitor;
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+                let window = interval.snapshot_reset();
+                if window.count() > 0 {
+                    crate::obs_debug!(
+                        "loadgen",
+                        "loadgen: t={:.0}s ok={} p50={}us p99={}us max={}us",
+                        epoch.elapsed().as_secs_f64(),
+                        window.count(),
+                        window.quantile_us(0.5),
+                        window.quantile_us(0.99),
+                        window.max_us()
+                    );
+                }
+            }
+        })
+    };
+
     let mut senders = Vec::with_capacity(spec.connections);
     let mut readers = Vec::with_capacity(spec.connections);
     for c in 0..spec.connections {
@@ -228,6 +264,7 @@ pub fn run(spec: &LoadgenSpec) -> Result<Json, String> {
 
         let rsend = Arc::clone(&send_ns);
         let rhist = Arc::clone(&hist);
+        let rinterval = Arc::clone(&interval);
         readers.push(std::thread::spawn(move || -> Tally {
             let mut reader = BufReader::new(reader_stream);
             let mut line = String::new();
@@ -265,7 +302,9 @@ pub fn run(spec: &LoadgenSpec) -> Result<Json, String> {
                     let sent_at = rsend[slot].load(Ordering::Acquire);
                     if sent_at > 0 {
                         let now = epoch.elapsed().as_nanos() as u64 + 1;
-                        rhist.record_us(now.saturating_sub(sent_at) / 1_000);
+                        let us = now.saturating_sub(sent_at) / 1_000;
+                        rhist.record_us(us);
+                        rinterval.record_us(us);
                     }
                 }
             }
@@ -286,6 +325,8 @@ pub fn run(spec: &LoadgenSpec) -> Result<Json, String> {
         totals.errors += t.errors;
     }
     let wall_s = epoch.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Release);
+    let _ = monitor.join();
     let achieved_qps =
         if wall_s > 0.0 { totals.ok as f64 / wall_s } else { 0.0 };
     let server = fetch_stats(&spec.addr).unwrap_or(Json::Null);

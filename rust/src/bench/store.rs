@@ -497,6 +497,20 @@ pub(crate) fn summary_json(s: &RunSummary) -> Json {
                 ("mem_bytes", s.unit.mem_bytes.into()),
             ]),
         ),
+        ("cycles_by_category", attribution_json(&s.attribution)),
+    ])
+}
+
+/// Serialize a [`CycleAttribution`] (the four categories sum exactly to
+/// the run's `cycles` — consumers may assert on it).
+pub(crate) fn attribution_json(
+    a: &crate::system::machine::CycleAttribution,
+) -> Json {
+    Json::obj(vec![
+        ("scalar", a.scalar.into()),
+        ("dispatch_stall", a.dispatch_stall.into()),
+        ("vec_alu", a.vec_alu.into()),
+        ("vec_mem", a.vec_mem.into()),
     ])
 }
 
@@ -549,6 +563,18 @@ pub(crate) fn parse_summary(j: &Json) -> Option<RunSummary> {
             moves: u64_field(unit, "moves")?,
             elements_processed: u64_field(unit, "elements_processed")?,
             mem_bytes: u64_field(unit, "mem_bytes")?,
+        },
+        // Required: a record without the breakdown (pre-attribution
+        // ledger line) is treated as unparseable and re-evaluated, so
+        // every served summary upholds the sum-equals-cycles invariant.
+        attribution: {
+            let a = j.get("cycles_by_category")?;
+            crate::system::machine::CycleAttribution {
+                scalar: u64_field(a, "scalar")?,
+                dispatch_stall: u64_field(a, "dispatch_stall")?,
+                vec_alu: u64_field(a, "vec_alu")?,
+                vec_mem: u64_field(a, "vec_mem")?,
+            }
         },
     })
 }
@@ -619,6 +645,12 @@ mod tests {
                     moves: 11,
                     elements_processed: 12,
                     mem_bytes: 13,
+                },
+                attribution: crate::system::machine::CycleAttribution {
+                    scalar: 6000,
+                    dispatch_stall: 345,
+                    vec_alu: 4000,
+                    vec_mem: 2000,
                 },
             },
             provenance: Provenance::Simulated,

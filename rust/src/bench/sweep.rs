@@ -669,6 +669,13 @@ fn point_json(p: &SweepPoint) -> Json {
                 "vector_instructions",
                 o.summary.vector_instructions.into(),
             ));
+            // Per-category cycle breakdown; the four fields sum exactly
+            // to `cycles` (surfaced top-level so consumers don't have to
+            // dig into the full ledger).
+            fields.push((
+                "cycles_by_category",
+                super::store::attribution_json(&o.summary.attribution),
+            ));
             // The whole cycle ledger rides along, so a cluster
             // coordinator merging this response reconstructs the exact
             // in-memory outcome, not just the headline counters.
@@ -695,10 +702,24 @@ pub fn energy_total_j(report: &SweepReport) -> f64 {
 /// Render the whole report as one JSON object (the `arrow sweep` CLI
 /// output and the job-server response body).
 pub fn report_json(report: &SweepReport) -> Json {
+    // Report-level attribution is summed from the points right here, so
+    // cluster merges (which reassemble the same points) total
+    // identically without any extra wire fields.
+    let mut total_attr =
+        crate::system::machine::CycleAttribution::default();
+    for p in &report.points {
+        if let Ok(o) = &p.outcome {
+            total_attr.accumulate(&o.summary.attribution);
+        }
+    }
     let mut fields = vec![
         (
             "points",
             Json::Arr(report.points.iter().map(point_json).collect()),
+        ),
+        (
+            "cycles_by_category",
+            super::store::attribution_json(&total_attr),
         ),
         ("grid", (report.points.len() as u64).into()),
         ("unique_simulated", (report.unique_simulated as u64).into()),

@@ -24,12 +24,17 @@
 //!   Table-1 data profiles, the analytic large-profile extrapolation, and
 //!   the tiered point evaluator (shared program cache, persistent result
 //!   store, analytic routing) every evaluation path goes through.
+//! * [`obs`] — observability: the span/event trace recorder
+//!   (`--trace-out`, Chrome trace-event JSONL), the Prometheus metrics
+//!   registry behind `{"cmd": "metrics"}`, and leveled `ARROW_LOG`
+//!   stderr logging.
 //! * [`runtime`] — XLA/PJRT oracle: loads `artifacts/*.hlo.txt` lowered
 //!   from the JAX/Pallas golden models and validates simulator results.
 //! * [`report`] — renderers for the paper's Tables 2/3/4 and summaries.
 
 pub mod asm;
 pub mod bench;
+pub mod obs;
 pub mod util;
 pub mod energy;
 pub mod isa;

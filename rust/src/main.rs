@@ -21,8 +21,16 @@
 //!               [--sleep-ms N] [--out FILE]
 //! arrow cluster --workers N [--cache-dir DIR] [--base-port P]
 //! arrow cache compact --cache-dir DIR [--dry-run]
+//! arrow trace report FILE             # render a --trace-out capture
 //! arrow --lanes 4 --vlen 512 ...      # design-time overrides
 //! ```
+//!
+//! `--trace-out FILE` (accepted by `sweep`, `serve` and `cluster`)
+//! records a Chrome-trace-event JSONL flight recording of the run —
+//! evaluator tier decisions, executor queue waits, shard lifecycle and
+//! fleet membership — loadable in Perfetto or rendered offline with
+//! `arrow trace report`.  `ARROW_LOG=off|error|warn|info|debug`
+//! controls diagnostic verbosity (default `info`).
 
 use arrow_rvv::bench::cluster::{self, ClusterSpec, FleetSpec};
 use arrow_rvv::bench::fleet::{self, Membership};
@@ -60,18 +68,19 @@ COMMANDS:
         [--cache-dir DIR] [--batch-width N]
         [--analytic-limit N | --no-analytic]
         [--workers HOST:PORT,... [--shard-points N] [--shard-cost N]]
-        [--listen HOST:PORT [--join-grace-ms N]]
+        [--listen HOST:PORT [--join-grace-ms N]] [--trace-out FILE]
   describe <datapath|write-enable|simd-alu|system>
   validate
   serve [--addr HOST:PORT] [--cache-dir DIR]
         [--join HOST:PORT [--advertise HOST:PORT]]
-        [--workers N] [--queue-depth N]
+        [--workers N] [--queue-depth N] [--trace-out FILE]
   loadgen [--addr HOST:PORT] [--qps N] [--duration SECS] [--ramp SECS]
           [--connections N] [--bench-every N] [--benchmark NAME]
           [--profile NAME] [--sleep-ms N] [--out FILE | --no-out]
   cluster --workers N [--cache-dir DIR] [--base-port PORT]
-          [--max-restarts N]
+          [--max-restarts N] [--trace-out FILE]
   cache compact --cache-dir DIR [--dry-run]
+  trace report FILE
   help
 
 Serving: `arrow serve` answers newline-delimited JSON requests over a
@@ -93,6 +102,14 @@ moment they appear, even mid-sweep, so a sweep may start with zero
 workers and still run fleet-wide.  Shard sizes adapt to measured
 worker throughput.  `arrow cluster --workers N --cache-dir DIR`
 spawns and supervises a local worker fleet sharing one result store.
+
+Observability: `--trace-out FILE` (sweep, serve, cluster) records a
+Chrome-trace-event flight recording — evaluator tier decisions,
+executor queue waits, shard lifecycle, fleet membership — that loads
+in Perfetto and renders offline via `arrow trace report FILE`.
+`{\"cmd\": \"metrics\"}` against a running server returns Prometheus
+text exposition.  `ARROW_LOG=off|error|warn|info|debug` sets
+diagnostic verbosity (default info).
 ";
 
 /// Tiny argument cursor (clap is unavailable offline).
@@ -214,6 +231,14 @@ fn main() -> Result<()> {
     let config =
         ArrowConfig { lanes, vlen_bits: vlen, ..Default::default() };
     config.validate()?;
+
+    // Accepted by any command (documented for sweep/serve/cluster):
+    // start the flight recorder before the command body so every span
+    // and instant the run emits lands in the file.
+    if let Some(path) = args.opt("--trace-out") {
+        arrow_rvv::obs::trace::enable(std::path::Path::new(&path))
+            .map_err(|e| format!("--trace-out {path}: {e}"))?;
+    }
 
     let Some(cmd) = args.next() else {
         print!("{USAGE}");
@@ -512,6 +537,25 @@ fn main() -> Result<()> {
                 }
                 other => {
                     return fail(format!("unknown cache action `{other}`"))
+                }
+            }
+        }
+        "trace" => {
+            let action = args.next().ok_or("trace: which action? (report)")?;
+            match action.as_str() {
+                "report" => {
+                    let file = args
+                        .next()
+                        .ok_or("trace report: FILE (a --trace-out capture) required")?;
+                    let content = std::fs::read_to_string(&file)
+                        .map_err(|e| format!("trace report {file}: {e}"))?;
+                    let rendered =
+                        arrow_rvv::obs::trace::render_report(&content)
+                            .map_err(|e| e.to_string())?;
+                    print!("{rendered}");
+                }
+                other => {
+                    return fail(format!("unknown trace action `{other}`"))
                 }
             }
         }

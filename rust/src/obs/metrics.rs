@@ -1,0 +1,242 @@
+//! Static metrics registry + Prometheus text exposition.
+//!
+//! Counters and gauges are `static`s with relaxed atomics — recording
+//! is one `fetch_add`, never a lock, never an allocation, so hot paths
+//! (evaluator tiers, session pool, shard dispatch) bump them
+//! unconditionally.  The registry is the fixed [`COUNTERS`] array; the
+//! server's `{"cmd": "metrics"}` renders it together with its own live
+//! `ServerStats` via the `render_*` helpers below.
+//!
+//! Naming convention: `arrow_<subsystem>_<what>` with the Prometheus
+//! `_total` suffix on counters and base units in the name (`_us` for
+//! microseconds — the in-tree histograms record µs, and the exposition
+//! keeps them exact instead of converting to floating seconds).
+
+use std::fmt::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::histogram::Histogram;
+
+/// A monotonically increasing counter.
+#[derive(Debug)]
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str, help: &'static str) -> Counter {
+        Counter { name, help, value: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+// --- Registry --------------------------------------------------------------
+// Evaluator tiers (absorbing the counters `SweepReport` tallies per
+// request into process-lifetime totals).
+pub static EVAL_STORE_HITS: Counter = Counter::new(
+    "arrow_eval_store_hits_total",
+    "Points answered from the persistent result store",
+);
+pub static EVAL_ANALYTIC: Counter = Counter::new(
+    "arrow_eval_analytic_total",
+    "Points answered by analytic extrapolation",
+);
+pub static EVAL_SIMULATED: Counter = Counter::new(
+    "arrow_eval_simulated_total",
+    "Points answered by full simulation",
+);
+// Session pool.
+pub static SESSION_POOL_HITS: Counter = Counter::new(
+    "arrow_session_pool_hits_total",
+    "Session lookups answered by a pooled sealed session",
+);
+pub static SESSION_POOL_MISSES: Counter = Counter::new(
+    "arrow_session_pool_misses_total",
+    "Session lookups that had to build a session",
+);
+// Cluster shard lifecycle.
+pub static SHARDS_CARVED: Counter = Counter::new(
+    "arrow_cluster_shards_carved_total",
+    "Shards carved from the sweep grid",
+);
+pub static SHARDS_DISPATCHED: Counter = Counter::new(
+    "arrow_cluster_shards_dispatched_total",
+    "Shards dispatched to a worker",
+);
+pub static SHARDS_MERGED: Counter = Counter::new(
+    "arrow_cluster_shards_merged_total",
+    "Shards merged from worker responses",
+);
+pub static SHARDS_REQUEUED: Counter = Counter::new(
+    "arrow_cluster_shards_requeued_total",
+    "Shards returned to the queue after a dispatch failure",
+);
+pub static SHARDS_FALLBACK: Counter = Counter::new(
+    "arrow_cluster_shards_fallback_total",
+    "Shards evaluated by the coordinator's local fallback",
+);
+// Fleet membership.
+pub static FLEET_JOINS: Counter = Counter::new(
+    "arrow_fleet_joins_total",
+    "Workers admitted to the membership table",
+);
+pub static FLEET_EXPIRED: Counter = Counter::new(
+    "arrow_fleet_expired_total",
+    "Workers expired for missing heartbeats",
+);
+pub static FLEET_FAILED: Counter = Counter::new(
+    "arrow_fleet_failed_total",
+    "Worker failures recorded by the coordinator",
+);
+
+/// Every registered counter, in exposition order.
+pub static COUNTERS: [&Counter; 13] = [
+    &EVAL_STORE_HITS,
+    &EVAL_ANALYTIC,
+    &EVAL_SIMULATED,
+    &SESSION_POOL_HITS,
+    &SESSION_POOL_MISSES,
+    &SHARDS_CARVED,
+    &SHARDS_DISPATCHED,
+    &SHARDS_MERGED,
+    &SHARDS_REQUEUED,
+    &SHARDS_FALLBACK,
+    &FLEET_JOINS,
+    &FLEET_EXPIRED,
+    &FLEET_FAILED,
+];
+
+// --- Prometheus text rendering ---------------------------------------------
+
+/// Append one `# HELP`/`# TYPE`/sample triple for a counter value.
+pub fn render_counter(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    value: u64,
+) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Append one gauge sample.
+pub fn render_gauge(out: &mut String, name: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Append every registered counter.
+pub fn render_registry(out: &mut String) {
+    for c in COUNTERS {
+        render_counter(out, c.name, c.help, c.get());
+    }
+}
+
+/// Append one histogram as a Prometheus summary: quantile series plus
+/// `_sum`/`_count`, all in microseconds.  `labels` ride every sample
+/// (e.g. `kind="sweep"`).
+pub fn render_histogram(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    labels: &[(&str, &str)],
+    h: &Histogram,
+    typed: bool,
+) {
+    let label_str = |extra: Option<(&str, String)>| {
+        let mut parts: Vec<String> = labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{v}\""))
+            .collect();
+        if let Some((k, v)) = extra {
+            parts.push(format!("{k}=\"{v}\""));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    };
+    if typed {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} summary");
+    }
+    for (q, label) in
+        [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")]
+    {
+        let _ = writeln!(
+            out,
+            "{name}{} {}",
+            label_str(Some(("quantile", label.to_string()))),
+            h.quantile_us(q)
+        );
+    }
+    let _ = writeln!(out, "{name}_sum{} {}", label_str(None), h.sum_us());
+    let _ =
+        writeln!(out, "{name}_count{} {}", label_str(None), h.count());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_register_and_render() {
+        let before = SHARDS_CARVED.get();
+        SHARDS_CARVED.inc();
+        SHARDS_CARVED.add(2);
+        assert_eq!(SHARDS_CARVED.get(), before + 3);
+        let mut out = String::new();
+        render_registry(&mut out);
+        for c in COUNTERS {
+            assert!(out.contains(c.name()), "{} missing", c.name());
+            assert!(
+                out.contains(&format!("# TYPE {} counter", c.name())),
+                "{} untyped",
+                c.name()
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_renders_as_summary() {
+        let h = Histogram::new();
+        h.record_us(100);
+        h.record_us(200);
+        let mut out = String::new();
+        render_histogram(
+            &mut out,
+            "arrow_test_latency_us",
+            "test",
+            &[("kind", "sweep")],
+            &h,
+            true,
+        );
+        assert!(out.contains("# TYPE arrow_test_latency_us summary"));
+        assert!(out
+            .contains("arrow_test_latency_us{kind=\"sweep\",quantile=\"0.99\"}"));
+        assert!(out.contains("arrow_test_latency_us_sum{kind=\"sweep\"} 300"));
+        assert!(out.contains("arrow_test_latency_us_count{kind=\"sweep\"} 2"));
+    }
+}

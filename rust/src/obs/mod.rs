@@ -1,0 +1,180 @@
+//! Observability: the flight recorder every subsystem reports through.
+//!
+//! * [`trace`] — process-wide span/event recorder draining to a
+//!   torn-line-safe Chrome-trace JSONL sink (`--trace-out FILE`), plus
+//!   the `arrow trace report` renderer.
+//! * [`metrics`] — static registry of named counters rendered as
+//!   Prometheus text by the server's `{"cmd": "metrics"}`.
+//! * leveled logging (this module) — the replacement for the ad-hoc
+//!   `eprintln!` call sites in the cluster/fleet/server: same stderr
+//!   text by default, but filterable via the `ARROW_LOG` environment
+//!   variable (`off|error|warn|info|debug`, default `info`), and
+//!   mirrored into the trace as instant events when recording.
+//!
+//! Everything here is built for a zero-cost off-switch: a disabled
+//! recorder is one relaxed atomic load, a suppressed log level is one
+//! relaxed load + compare, and counters are single `fetch_add`s.
+
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Sentinel for "ARROW_LOG=off": no level reaches it.
+const LOG_OFF: u8 = 4;
+/// "Not initialised yet" — forces one env read, then caches.
+const LOG_UNSET: u8 = u8::MAX;
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(LOG_UNSET);
+
+fn parse_level(s: &str) -> u8 {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" => LOG_OFF,
+        "error" => Level::Error as u8,
+        "warn" | "warning" => Level::Warn as u8,
+        "debug" | "trace" => Level::Debug as u8,
+        _ => Level::Info as u8,
+    }
+}
+
+fn max_level() -> u8 {
+    let cached = MAX_LEVEL.load(Ordering::Relaxed);
+    if cached != LOG_UNSET {
+        return cached;
+    }
+    let level = match std::env::var("ARROW_LOG") {
+        Ok(v) => parse_level(&v),
+        Err(_) => Level::Info as u8,
+    };
+    MAX_LEVEL.store(level, Ordering::Relaxed);
+    level
+}
+
+/// Override the `ARROW_LOG` filter programmatically (tests; `None`
+/// re-reads the environment on the next log call).
+pub fn set_log_level(level: Option<Level>) {
+    MAX_LEVEL.store(
+        level.map_or(LOG_UNSET, |l| l as u8),
+        Ordering::Relaxed,
+    );
+}
+
+/// Would a message at `level` be emitted?  Call sites that need to
+/// format something expensive can guard on this.
+#[inline]
+pub fn log_enabled(level: Level) -> bool {
+    (level as u8) <= max_level()
+}
+
+/// Emit one log line to stderr (subject to the `ARROW_LOG` filter).
+/// The text is exactly the `eprintln!` it replaced — CI smoke greps and
+/// operator muscle memory keep working — and, when the trace recorder
+/// is on, the line is mirrored as an instant event under the `log`
+/// category so traces are self-narrating.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments) {
+    if !log_enabled(level) {
+        return;
+    }
+    if trace::enabled() {
+        let text = args.to_string();
+        trace::instant(
+            "log",
+            target,
+            &[
+                ("level", trace::Arg::Str(level.name())),
+                ("message", trace::Arg::Str(&text)),
+            ],
+        );
+        eprintln!("{text}");
+    } else {
+        eprintln!("{args}");
+    }
+}
+
+#[macro_export]
+macro_rules! obs_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log(
+            $crate::obs::Level::Error,
+            $target,
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! obs_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log(
+            $crate::obs::Level::Warn,
+            $target,
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! obs_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log(
+            $crate::obs::Level::Info,
+            $target,
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! obs_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log(
+            $crate::obs::Level::Debug,
+            $target,
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_filtering() {
+        assert_eq!(parse_level("off"), LOG_OFF);
+        assert_eq!(parse_level("ERROR"), Level::Error as u8);
+        assert_eq!(parse_level("warn"), Level::Warn as u8);
+        assert_eq!(parse_level("debug"), Level::Debug as u8);
+        // Unknown values default to info rather than silencing logs.
+        assert_eq!(parse_level("verbose"), Level::Info as u8);
+
+        set_log_level(Some(Level::Warn));
+        assert!(log_enabled(Level::Error));
+        assert!(log_enabled(Level::Warn));
+        assert!(!log_enabled(Level::Info));
+        assert!(!log_enabled(Level::Debug));
+        set_log_level(Some(Level::Info));
+        assert!(log_enabled(Level::Info));
+        set_log_level(None);
+    }
+}

@@ -1,0 +1,471 @@
+//! Process-wide flight recorder: spans and instant events drained to a
+//! torn-line-safe JSON-lines sink in Chrome trace-event format.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **The disabled path costs nothing.**  Every public entry point
+//!    checks one relaxed atomic before doing anything else — no clock
+//!    read, no formatting, no allocation.  `tests/zero_alloc.rs` pins
+//!    this: the sealed-session hot loop stays allocation-flat with the
+//!    recorder linked in but off.
+//! 2. **Lines are never torn.**  Each event is formatted into a
+//!    thread-local buffer and written with a single `write_all` under
+//!    the sink mutex, so concurrent recorders interleave whole lines —
+//!    a trace file is valid JSONL however many threads raced on it.
+//! 3. **The output opens in standard tooling.**  Events use the Chrome
+//!    trace-event "JSON array format": the sink starts with `[` and
+//!    every line is one complete event object followed by a comma.
+//!    Chrome/Perfetto tolerate the missing `]`, and the in-tree
+//!    renderer ([`render_report`]) parses the same file line by line.
+//!
+//! Timestamps are microseconds from a process-wide monotonic epoch
+//! pinned the first time the recorder is enabled; `"ph": "X"` complete
+//! events carry `ts` + `dur`, `"ph": "i"` instants carry `ts` only.
+//! `tid` is a small per-thread ordinal (threads are unnamed), `pid` is
+//! the real process id.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::util::histogram::Histogram;
+use crate::util::json::{self, Json};
+
+/// Fast-path switch: every entry point loads this (relaxed) first and
+/// bails before touching the clock, the buffer, or the sink.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The open trace file.  Held only for the duration of one line write.
+static SINK: Mutex<Option<File>> = Mutex::new(None);
+
+/// Monotonic epoch all timestamps are relative to (pinned at first
+/// [`enable`]).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros().min(u64::MAX as u128) as u64
+}
+
+/// Small per-thread ordinal used as the Chrome `tid`.
+fn thread_ordinal() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+fn lock_sink() -> std::sync::MutexGuard<'static, Option<File>> {
+    SINK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Is the recorder on?  Call sites that must *format* an argument (e.g.
+/// a worker address) guard on this so the disabled path never allocates.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Open `path` (truncating) and start recording.  The file begins with
+/// the Chrome array opener so the finished trace loads directly in
+/// `chrome://tracing` / Perfetto.
+pub fn enable(path: &Path) -> std::io::Result<()> {
+    let mut file = File::create(path)?;
+    file.write_all(b"[\n")?;
+    epoch(); // pin t=0 no later than the first event
+    *lock_sink() = Some(file);
+    ENABLED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Stop recording and close the sink.  Safe to call when not enabled.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+    *lock_sink() = None;
+}
+
+/// One typed event argument — borrowed, stack-only, so argument lists
+/// live entirely at the call site.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    Str(&'a str),
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+}
+
+/// An open span: the start timestamp captured by [`begin`].  With the
+/// recorder disabled it is a sentinel and [`complete`] ignores it.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    start_us: u64,
+}
+
+/// Sentinel for "recorder was off at begin" — never a real timestamp.
+const DISABLED_SPAN: u64 = u64::MAX;
+
+/// Capture a span start.  Free (no clock read) when disabled.
+#[inline]
+pub fn begin() -> Span {
+    if !enabled() {
+        return Span { start_us: DISABLED_SPAN };
+    }
+    Span { start_us: now_us() }
+}
+
+/// Close `span` as a `"ph": "X"` complete event.
+pub fn complete(cat: &str, name: &str, span: Span, args: &[(&str, Arg)]) {
+    if !enabled() || span.start_us == DISABLED_SPAN {
+        return;
+    }
+    let end = now_us();
+    emit(
+        "X",
+        cat,
+        name,
+        span.start_us,
+        Some(end.saturating_sub(span.start_us)),
+        args,
+    );
+}
+
+/// Record a `"ph": "i"` instant event.
+pub fn instant(cat: &str, name: &str, args: &[(&str, Arg)]) {
+    if !enabled() {
+        return;
+    }
+    emit("i", cat, name, now_us(), None, args);
+}
+
+/// Append a JSON string literal (with escaping) to `out`.
+fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Format one event into the thread-local line buffer and write it with
+/// a single `write_all` — the torn-line-safety contract.
+fn emit(
+    ph: &str,
+    cat: &str,
+    name: &str,
+    ts: u64,
+    dur: Option<u64>,
+    args: &[(&str, Arg)],
+) {
+    thread_local! {
+        static BUF: RefCell<String> = const { RefCell::new(String::new()) };
+    }
+    BUF.with(|buf| {
+        let mut line = buf.borrow_mut();
+        line.clear();
+        line.push_str("{\"ph\":\"");
+        line.push_str(ph);
+        line.push_str("\",\"pid\":");
+        line.push_str(&std::process::id().to_string());
+        line.push_str(",\"tid\":");
+        line.push_str(&thread_ordinal().to_string());
+        line.push_str(",\"ts\":");
+        line.push_str(&ts.to_string());
+        if let Some(dur) = dur {
+            line.push_str(",\"dur\":");
+            line.push_str(&dur.to_string());
+        }
+        if ph == "i" {
+            // Instant scope: thread.
+            line.push_str(",\"s\":\"t\"");
+        }
+        line.push_str(",\"cat\":");
+        push_json_str(&mut line, cat);
+        line.push_str(",\"name\":");
+        push_json_str(&mut line, name);
+        line.push_str(",\"args\":{");
+        for (i, (key, value)) in args.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            push_json_str(&mut line, key);
+            line.push(':');
+            match value {
+                Arg::Str(s) => push_json_str(&mut line, s),
+                Arg::U64(n) => line.push_str(&n.to_string()),
+                Arg::I64(n) => line.push_str(&n.to_string()),
+                Arg::F64(x) => line.push_str(&format!("{x}")),
+                Arg::Bool(b) => {
+                    line.push_str(if *b { "true" } else { "false" })
+                }
+            }
+        }
+        line.push_str("}},\n");
+        let mut sink = lock_sink();
+        if let Some(file) = sink.as_mut() {
+            let _ = file.write_all(line.as_bytes());
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Trace rendering: `arrow trace report FILE`.
+
+/// One parsed trace event (only the fields the renderer consumes).
+struct Event {
+    ph: String,
+    tid: u64,
+    ts: u64,
+    dur: u64,
+    name: String,
+    args: Json,
+}
+
+/// Parse the trace file body: skip the array opener, strip trailing
+/// commas, reject anything that is not a complete event object (a torn
+/// line would surface here as a hard error).
+fn parse_events(content: &str) -> Result<Vec<Event>, String> {
+    let mut events = Vec::new();
+    for (lineno, raw) in content.lines().enumerate() {
+        let line = raw.trim().trim_end_matches(',');
+        if line.is_empty() || line == "[" || line == "]" {
+            continue;
+        }
+        let j = json::parse(line)
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let field_u64 = |k: &str| j.get(k).and_then(Json::as_u64);
+        let field_str = |k: &str| {
+            j.get(k).and_then(Json::as_str).map(str::to_string)
+        };
+        events.push(Event {
+            ph: field_str("ph").ok_or_else(|| {
+                format!("line {}: event without ph", lineno + 1)
+            })?,
+            tid: field_u64("tid").unwrap_or(0),
+            ts: field_u64("ts").unwrap_or(0),
+            dur: field_u64("dur").unwrap_or(0),
+            name: field_str("name").unwrap_or_default(),
+            args: j.get("args").cloned().unwrap_or(Json::obj(vec![])),
+        });
+    }
+    Ok(events)
+}
+
+/// Terminal state of one shard as reconstructed from its event stream.
+#[derive(Default)]
+struct ShardLife {
+    points: u64,
+    dispatches: Vec<String>,
+    requeues: u64,
+    merged_by: Option<String>,
+    fallback: bool,
+}
+
+/// Reconstruct a human-readable report from a trace file: per-worker
+/// shard timeline, evaluator tier mix, and the executor queue-wait
+/// waterfall.  Returns an error for unparseable (torn) input.
+pub fn render_report(content: &str) -> Result<String, String> {
+    use std::fmt::Write as _;
+    let events = parse_events(content)?;
+    let mut out = String::new();
+    let _ = writeln!(out, "trace: {} events", events.len());
+
+    // --- Cluster shard lifecycle -----------------------------------
+    let mut shards: BTreeMap<u64, ShardLife> = BTreeMap::new();
+    let mut worker_timeline: BTreeMap<String, Vec<(u64, u64, u64)>> =
+        BTreeMap::new();
+    for e in &events {
+        let shard = e.args.get("shard").and_then(Json::as_u64);
+        let worker = e
+            .args
+            .get("worker")
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        match e.name.as_str() {
+            "shard_carved" => {
+                let s = shards.entry(shard.unwrap_or(0)).or_default();
+                s.points =
+                    e.args.get("points").and_then(Json::as_u64).unwrap_or(0);
+            }
+            "shard_dispatched" => {
+                let s = shards.entry(shard.unwrap_or(0)).or_default();
+                let w = worker.unwrap_or_default();
+                s.dispatches.push(w.clone());
+                worker_timeline.entry(w).or_default().push((
+                    e.ts,
+                    e.dur,
+                    shard.unwrap_or(0),
+                ));
+            }
+            "shard_merged" => {
+                shards.entry(shard.unwrap_or(0)).or_default().merged_by =
+                    Some(worker.unwrap_or_default());
+            }
+            "shard_requeued" => {
+                shards.entry(shard.unwrap_or(0)).or_default().requeues += 1;
+            }
+            "shard_fallback" => {
+                shards.entry(shard.unwrap_or(0)).or_default().fallback =
+                    true;
+            }
+            _ => {}
+        }
+    }
+    if !shards.is_empty() {
+        let carved = shards.len();
+        let merged =
+            shards.values().filter(|s| s.merged_by.is_some()).count();
+        let fallback = shards.values().filter(|s| s.fallback).count();
+        let requeues: u64 = shards.values().map(|s| s.requeues).sum();
+        let incomplete: Vec<u64> = shards
+            .iter()
+            .filter(|(_, s)| s.merged_by.is_none() && !s.fallback)
+            .map(|(&i, _)| i)
+            .collect();
+        let _ = writeln!(out, "\nshard lifecycle ({carved} carved)");
+        let _ = writeln!(
+            out,
+            "  merged: {merged}  local-fallback: {fallback}  \
+             requeues: {requeues}  incomplete: {}",
+            incomplete.len()
+        );
+        for i in &incomplete {
+            let _ = writeln!(out, "  INCOMPLETE shard {i}");
+        }
+        for (shard, s) in &shards {
+            let terminal = match (&s.merged_by, s.fallback) {
+                (Some(w), _) => format!("merged by {w}"),
+                (None, true) => "local fallback".to_string(),
+                (None, false) => "INCOMPLETE".to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "  shard {shard:>4}  {:>5} pts  dispatches {}  \
+                 requeues {}  -> {terminal}",
+                s.points,
+                s.dispatches.len(),
+                s.requeues,
+            );
+        }
+        if !worker_timeline.is_empty() {
+            let _ = writeln!(out, "\nper-worker shard timeline");
+            for (worker, mut slots) in worker_timeline {
+                slots.sort_unstable();
+                let busy: u64 = slots.iter().map(|&(_, d, _)| d).sum();
+                let _ = writeln!(
+                    out,
+                    "  {worker}: {} dispatches, {:.1} ms busy",
+                    slots.len(),
+                    busy as f64 / 1e3
+                );
+                for (ts, dur, shard) in slots {
+                    let _ = writeln!(
+                        out,
+                        "    t+{:>9.3} ms  shard {shard:>4}  {:>9.3} ms",
+                        ts as f64 / 1e3,
+                        dur as f64 / 1e3
+                    );
+                }
+            }
+        }
+    }
+
+    // --- Evaluator tier mix ----------------------------------------
+    let mut tiers: BTreeMap<String, u64> = BTreeMap::new();
+    for e in &events {
+        if e.name == "eval" || e.name == "eval_tier" {
+            if let Some(t) = e.args.get("tier").and_then(Json::as_str) {
+                *tiers.entry(t.to_string()).or_default() += 1;
+            }
+        }
+    }
+    if !tiers.is_empty() {
+        let total: u64 = tiers.values().sum();
+        let _ = writeln!(out, "\nevaluator tier mix ({total} points)");
+        for (tier, n) in &tiers {
+            let _ = writeln!(
+                out,
+                "  {tier:<10} {n:>8}  {:>5.1}%",
+                *n as f64 * 100.0 / total as f64
+            );
+        }
+    }
+
+    // --- Executor queue-wait waterfall -----------------------------
+    let waits = Histogram::new();
+    let mut max_wait = 0u64;
+    for e in &events {
+        if e.ph == "X" && e.name == "queue_wait" {
+            waits.record_us(e.dur);
+            max_wait = max_wait.max(e.dur);
+        }
+    }
+    if waits.count() > 0 {
+        let _ = writeln!(
+            out,
+            "\nexecutor queue wait ({} requests)",
+            waits.count()
+        );
+        for (label, q) in
+            [("p50", 0.50), ("p90", 0.90), ("p99", 0.99), ("max", 1.0)]
+        {
+            let us = waits.quantile_us(q);
+            let bar_cells = if max_wait == 0 {
+                0
+            } else {
+                (us.saturating_mul(40) / max_wait.max(1)) as usize
+            };
+            let _ = writeln!(
+                out,
+                "  {label:<4} {us:>9} us  |{}",
+                "#".repeat(bar_cells.min(40))
+            );
+        }
+    }
+
+    // --- Fleet membership ------------------------------------------
+    let mut members: BTreeMap<String, u64> = BTreeMap::new();
+    for e in &events {
+        if e.name.starts_with("member_") {
+            *members.entry(e.name.clone()).or_default() += 1;
+        }
+    }
+    if !members.is_empty() {
+        let _ = writeln!(out, "\nfleet membership transitions");
+        for (name, n) in &members {
+            let _ = writeln!(out, "  {name:<16} {n}");
+        }
+    }
+    // Span sanity: a well-formed trace never has a span ending in the
+    // future of the file's own clock domain.
+    let horizon = events.iter().map(|e| e.ts + e.dur).max().unwrap_or(0);
+    let _ = writeln!(
+        out,
+        "\ntrace horizon: {:.3} ms across {} threads",
+        horizon as f64 / 1e3,
+        events
+            .iter()
+            .map(|e| e.tid)
+            .collect::<std::collections::BTreeSet<_>>()
+            .len()
+    );
+    Ok(out)
+}

@@ -41,8 +41,8 @@ use crate::vector::unit::UnitStats;
 use crate::vector::{exec_cycles_with, ArrowConfig, ArrowUnit};
 
 use super::machine::{
-    fuse_pairs, vector_dest_regs, vector_source_regs, MachineError,
-    RunSummary,
+    attribution_with_tail, fuse_pairs, vector_dest_regs,
+    vector_source_regs, CycleAttribution, MachineError, RunSummary,
 };
 
 /// N lockstep design points sharing one architectural execution.
@@ -73,6 +73,12 @@ pub struct MachineBatch {
     lane_free: Vec<u64>,
     lane_busy: Vec<u64>,
     lane_offsets: Vec<usize>,
+    /// Per-member host-attributed cycle breakdown (sums to the member's
+    /// `host_time`) plus vector execute/transfer totals — the same state
+    /// the single machine keeps, so summaries stay byte-identical.
+    attr: Vec<CycleAttribution>,
+    vec_alu_total: Vec<u64>,
+    vec_mem_total: Vec<u64>,
 }
 
 impl MachineBatch {
@@ -142,6 +148,9 @@ impl MachineBatch {
             lane_free: vec![0; total_lanes],
             lane_busy: vec![0; total_lanes],
             lane_offsets,
+            attr: vec![CycleAttribution::default(); n],
+            vec_alu_total: vec![0; n],
+            vec_mem_total: vec![0; n],
             configs,
         })
     }
@@ -226,18 +235,26 @@ impl MachineBatch {
         let (event, cost) = self.cpu.step_instr_arch(instr, &mut self.dram);
         match cost {
             ScalarCost::Fixed(c) => {
-                for t in &mut self.host_time {
+                for (t, a) in
+                    self.host_time.iter_mut().zip(self.attr.iter_mut())
+                {
                     *t += c;
+                    a.scalar += c;
                 }
             }
             ScalarCost::Mem => {
                 // One scalar AXI access per member, against the member's
                 // own bus state — identical to `Cpu::step_instr`'s
                 // charge of `schedule(now) - now` on top of `now`.
-                for (t, bus) in
-                    self.host_time.iter_mut().zip(self.buses.iter_mut())
+                for ((t, bus), a) in self
+                    .host_time
+                    .iter_mut()
+                    .zip(self.buses.iter_mut())
+                    .zip(self.attr.iter_mut())
                 {
-                    *t = bus.schedule(*t, BurstKind::Scalar, 1);
+                    let done = bus.schedule(*t, BurstKind::Scalar, 1);
+                    a.scalar += done - *t;
+                    *t = done;
                 }
             }
         }
@@ -267,8 +284,14 @@ impl MachineBatch {
         let sources = vector_source_regs(lmul, &instr);
         let dests = vector_dest_regs(lmul, &instr);
 
-        for (t, config) in self.host_time.iter_mut().zip(&self.configs) {
+        for ((t, config), a) in self
+            .host_time
+            .iter_mut()
+            .zip(&self.configs)
+            .zip(self.attr.iter_mut())
+        {
             *t += config.timing.dispatch;
+            a.dispatch_stall += config.timing.dispatch;
         }
         let plan = self
             .arrow
@@ -319,12 +342,21 @@ impl MachineBatch {
                 }
                 None => start + exec,
             };
+            let mem_cycles = done - (start + exec);
+            self.vec_alu_total[m] += exec;
+            self.vec_mem_total[m] += mem_cycles;
             self.lane_free[slot] = done;
             self.lane_busy[slot] += done - start;
             for r in dests.iter() {
                 self.reg_ready[base + r as usize] = done;
             }
             if plan.scalar_result.is_some() {
+                // Same exact decomposition as the single machine's
+                // blocking-readback jump.
+                self.attr[m].dispatch_stall += (start - self.host_time[m])
+                    + config.timing.scalar_readback;
+                self.attr[m].vec_alu += exec;
+                self.attr[m].vec_mem += mem_cycles;
                 self.host_time[m] = done + config.timing.scalar_readback;
             }
         }
@@ -366,6 +398,13 @@ impl MachineBatch {
                         mem_bytes: self.mem_bytes[m],
                         ..self.arrow.stats()
                     },
+                    attribution: attribution_with_tail(
+                        self.attr[m],
+                        self.host_time[m],
+                        drained,
+                        self.vec_alu_total[m],
+                        self.vec_mem_total[m],
+                    ),
                 }
             })
             .collect()

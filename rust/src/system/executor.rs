@@ -142,6 +142,33 @@ impl Executor {
         &self,
         job: impl FnOnce() + Send + 'static,
     ) -> Result<(), Reject> {
+        // With the trace recorder on, wrap the job so the flight
+        // recorder sees queue-wait (admission → worker pickup) and
+        // service time as separate spans.  Off, the job is boxed as-is:
+        // the hot path pays one relaxed load.
+        if crate::obs::trace::enabled() {
+            let queued = crate::obs::trace::begin();
+            return self.submit_boxed(Box::new(move || {
+                crate::obs::trace::complete(
+                    "executor",
+                    "queue_wait",
+                    queued,
+                    &[],
+                );
+                let service = crate::obs::trace::begin();
+                job();
+                crate::obs::trace::complete(
+                    "executor",
+                    "service",
+                    service,
+                    &[],
+                );
+            }));
+        }
+        self.submit_boxed(Box::new(job))
+    }
+
+    fn submit_boxed(&self, job: Job) -> Result<(), Reject> {
         let mut state = lock(&self.shared);
         if !state.open {
             drop(state);
@@ -154,7 +181,7 @@ impl Executor {
             self.shared.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(Reject::QueueFull { depth });
         }
-        state.jobs.push_back(Box::new(job));
+        state.jobs.push_back(job);
         drop(state);
         self.shared.work.notify_one();
         Ok(())

@@ -51,6 +51,117 @@ impl std::fmt::Display for MachineError {
 
 impl std::error::Error for MachineError {}
 
+/// Where a run's end-to-end cycles went, by category.  The four fields
+/// always sum *exactly* to [`RunSummary::cycles`] — the invariant the
+/// sweep's `cycles_by_category` JSON relies on:
+///
+/// * `scalar` — host cycles executing scalar instructions (including
+///   scalar AXI waits charged inside the scalar core's cycle model);
+/// * `dispatch_stall` — host-side vector overhead: the per-instruction
+///   `dispatch` charge, plus lane/scoreboard waits and the
+///   `scalar_readback` latency around blocking readbacks;
+/// * `vec_alu` — vector execute time on the host-visible timeline
+///   (blocking waits + the end-of-run lane drain's execute share);
+/// * `vec_mem` — vector AXI transfer time on the host-visible timeline
+///   (blocking waits + the drain's memory share).
+///
+/// The end-of-run drain (lanes finishing after the host halts) cannot
+/// be decomposed per instruction — it is split pro-rata between
+/// `vec_alu` and `vec_mem` by the run's accumulated execute vs transfer
+/// cycles, with the integer remainder assigned so the sum stays exact.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleAttribution {
+    pub scalar: u64,
+    pub dispatch_stall: u64,
+    pub vec_alu: u64,
+    pub vec_mem: u64,
+}
+
+impl CycleAttribution {
+    /// Sum of every category (equals the run's total cycles).
+    pub fn total(&self) -> u64 {
+        self.scalar + self.dispatch_stall + self.vec_alu + self.vec_mem
+    }
+
+    /// Accumulate another attribution (sweep-report aggregation).
+    pub fn accumulate(&mut self, other: &CycleAttribution) {
+        self.scalar += other.scalar;
+        self.dispatch_stall += other.dispatch_stall;
+        self.vec_alu += other.vec_alu;
+        self.vec_mem += other.vec_mem;
+    }
+}
+
+/// Close an attribution over the end-of-run drain: `host` is the
+/// host-attributed total accumulated so far (== sum of `attr`), and the
+/// tail `max(drained, host) - host` is split pro-rata by the run's
+/// vector execute/transfer cycle totals.  Shared verbatim by `Machine`
+/// and `MachineBatch` so the lockstep parity tests cover attribution
+/// byte-for-byte.
+pub(crate) fn attribution_with_tail(
+    mut attr: CycleAttribution,
+    host: u64,
+    drained: u64,
+    vec_alu_total: u64,
+    vec_mem_total: u64,
+) -> CycleAttribution {
+    let tail = drained.saturating_sub(host);
+    if tail == 0 {
+        return attr;
+    }
+    let span = vec_alu_total + vec_mem_total;
+    if span == 0 {
+        // A drain without vector work cannot happen (lanes only advance
+        // on dispatch), but stay total-exact if it ever does.
+        attr.dispatch_stall += tail;
+        return attr;
+    }
+    let alu_share =
+        ((tail as u128 * vec_alu_total as u128) / span as u128) as u64;
+    attr.vec_alu += alu_share;
+    attr.vec_mem += tail - alu_share;
+    attr
+}
+
+/// Rescale `base` so its categories keep their proportions but sum to
+/// exactly `cycles` — the analytic tier's attribution, derived from its
+/// largest exact fit-size run.  The rounding remainder lands in the
+/// largest category so the sum stays exact.
+pub(crate) fn scale_attribution(
+    base: &CycleAttribution,
+    cycles: u64,
+) -> CycleAttribution {
+    let total = base.total();
+    if total == 0 {
+        // No fit run to apportion from: everything is "scalar" in the
+        // degenerate case (keeps the sum invariant).
+        return CycleAttribution { scalar: cycles, ..Default::default() };
+    }
+    let part = |c: u64| ((c as u128 * cycles as u128) / total as u128) as u64;
+    let mut scaled = CycleAttribution {
+        scalar: part(base.scalar),
+        dispatch_stall: part(base.dispatch_stall),
+        vec_alu: part(base.vec_alu),
+        vec_mem: part(base.vec_mem),
+    };
+    let remainder = cycles - scaled.total();
+    let slots = [
+        (base.scalar, 0u8),
+        (base.dispatch_stall, 1),
+        (base.vec_alu, 2),
+        (base.vec_mem, 3),
+    ];
+    // Deterministic largest-bucket pick (first wins ties).
+    let largest = slots.iter().max_by_key(|&&(v, i)| (v, u8::MAX - i));
+    match largest.map(|&(_, i)| i) {
+        Some(1) => scaled.dispatch_stall += remainder,
+        Some(2) => scaled.vec_alu += remainder,
+        Some(3) => scaled.vec_mem += remainder,
+        _ => scaled.scalar += remainder,
+    }
+    scaled
+}
+
 /// Ledger of one completed run.
 ///
 /// Lane accounting is sized by the configured lane count — a 16- or
@@ -67,6 +178,8 @@ pub struct RunSummary {
     pub lanes: usize,
     pub bus: BusStats,
     pub unit: UnitStats,
+    /// Per-category breakdown; sums exactly to `cycles`.
+    pub attribution: CycleAttribution,
 }
 
 impl RunSummary {
@@ -248,6 +361,13 @@ pub struct Machine {
     /// completes (no chaining — consumers wait for full completion).
     reg_ready: [u64; 32],
     vector_instructions: u64,
+    /// Host-attributed cycle breakdown; always sums to `host_time`.
+    attr: CycleAttribution,
+    /// Run totals of vector execute / memory-transfer cycles (all
+    /// dispatches, blocking or not) — the pro-rata basis for splitting
+    /// the end-of-run lane drain.
+    vec_alu_total: u64,
+    vec_mem_total: u64,
 }
 
 impl Machine {
@@ -293,6 +413,9 @@ impl Machine {
             host_time: 0,
             reg_ready: [0; 32],
             vector_instructions: 0,
+            attr: CycleAttribution::default(),
+            vec_alu_total: 0,
+            vec_mem_total: 0,
         }
     }
 
@@ -358,6 +481,7 @@ impl Machine {
         let dests = self.dest_regs(&instr);
 
         self.host_time += timing.dispatch;
+        self.attr.dispatch_stall += timing.dispatch;
         let plan = self
             .arrow
             .execute(instr, rs1_value, rs2_value, &mut self.dram)
@@ -381,6 +505,9 @@ impl Machine {
             }
             None => start + plan.exec_cycles,
         };
+        let mem_cycles = done - (start + plan.exec_cycles);
+        self.vec_alu_total += plan.exec_cycles;
+        self.vec_mem_total += mem_cycles;
         self.lane_free[plan.lane] = done;
         self.lane_busy[plan.lane] += done - start;
         for r in dests.iter() {
@@ -398,6 +525,13 @@ impl Machine {
             if let Some(rd) = rd {
                 self.cpu.write_reg(rd, value);
             }
+            // Decompose the host-time jump exactly: lane/scoreboard wait
+            // and the readback latency are dispatch overhead; the rest is
+            // the instruction's own execute + transfer time.
+            self.attr.dispatch_stall +=
+                (start - self.host_time) + timing.scalar_readback;
+            self.attr.vec_alu += plan.exec_cycles;
+            self.attr.vec_mem += mem_cycles;
             self.host_time = done + timing.scalar_readback;
         }
         Ok(())
@@ -477,6 +611,7 @@ impl Machine {
             .step_instr(instr, &mut self.dram, &mut self.bus, self.host_time)
             .map_err(MachineError::Cpu)?;
         self.host_time += self.cpu.cycles - before;
+        self.attr.scalar += self.cpu.cycles - before;
         match event {
             StepEvent::Retired => Ok(false),
             StepEvent::Halt => Ok(true),
@@ -500,6 +635,13 @@ impl Machine {
             lanes: self.arrow.config().lanes,
             bus: self.bus.stats(),
             unit: self.arrow.stats(),
+            attribution: attribution_with_tail(
+                self.attr,
+                self.host_time,
+                drained,
+                self.vec_alu_total,
+                self.vec_mem_total,
+            ),
         }
     }
 }
@@ -522,6 +664,9 @@ mod tests {
         assert_eq!(m.cpu.regs[12], 12);
         assert_eq!(s.vector_instructions, 0);
         assert!(s.cycles > 0);
+        // Pure-scalar run: everything lands in the scalar category.
+        assert_eq!(s.attribution.scalar, s.cycles);
+        assert_eq!(s.attribution.total(), s.cycles);
     }
 
     #[test]
@@ -554,6 +699,56 @@ mod tests {
         assert_eq!(s.vector_instructions, 5);
         // vsetvli wrote vl=8 into t0
         assert_eq!(m.cpu.regs[5], 8);
+        // The attribution decomposes end-to-end cycles exactly, and a
+        // loaded/stored vector run exercises every category.
+        assert_eq!(s.attribution.total(), s.cycles);
+        assert!(s.attribution.scalar > 0);
+        assert!(s.attribution.dispatch_stall > 0);
+        assert!(s.attribution.vec_alu > 0);
+        assert!(s.attribution.vec_mem > 0);
+    }
+
+    #[test]
+    fn attribution_tail_split_is_exact() {
+        let base = CycleAttribution {
+            scalar: 10,
+            dispatch_stall: 5,
+            vec_alu: 0,
+            vec_mem: 0,
+        };
+        // Tail of 10 split 7:3 between alu and mem by run totals.
+        let a = attribution_with_tail(base, 15, 25, 7, 3);
+        assert_eq!(a.total(), 25);
+        assert_eq!(a.vec_alu, 7);
+        assert_eq!(a.vec_mem, 3);
+        // No tail: unchanged.
+        let b = attribution_with_tail(base, 15, 15, 7, 3);
+        assert_eq!(b, base);
+        // No vector work at all: tail parks in dispatch_stall.
+        let c = attribution_with_tail(base, 15, 20, 0, 0);
+        assert_eq!(c.total(), 20);
+        assert_eq!(c.dispatch_stall, 10);
+        // Odd split still sums exactly.
+        let d = attribution_with_tail(base, 15, 22, 1, 2);
+        assert_eq!(d.total(), 22);
+    }
+
+    #[test]
+    fn attribution_scaling_preserves_sum() {
+        let base = CycleAttribution {
+            scalar: 3,
+            dispatch_stall: 5,
+            vec_alu: 11,
+            vec_mem: 2,
+        };
+        for cycles in [0u64, 1, 7, 21, 1_000_003] {
+            let s = scale_attribution(&base, cycles);
+            assert_eq!(s.total(), cycles, "cycles={cycles}");
+        }
+        // Degenerate zero base: all scalar, still exact.
+        let z = scale_attribution(&CycleAttribution::default(), 42);
+        assert_eq!(z.scalar, 42);
+        assert_eq!(z.total(), 42);
     }
 
     #[test]

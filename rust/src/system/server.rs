@@ -14,6 +14,7 @@
 //! {"cmd": "describe", "what": "datapath"}
 //! {"cmd": "list"}
 //! {"cmd": "stats"}
+//! {"cmd": "metrics"}
 //! {"cmd": "shutdown"}
 //! ```
 //!
@@ -137,6 +138,10 @@ pub struct ServerStats {
     latency_all: Histogram,
     /// Per-command latency, indexed by [`kind_of`].
     latency: [Histogram; KIND_NAMES.len()],
+    /// Interval window: drained (snapshot-and-reset) by each `stats`
+    /// request, so pollers see per-window latency instead of only
+    /// since-startup aggregates.
+    latency_window: Histogram,
 }
 
 impl ServerStats {
@@ -146,6 +151,7 @@ impl ServerStats {
     pub fn record(&self, kind: usize, elapsed: Duration) {
         self.served.fetch_add(1, Ordering::Relaxed);
         self.latency_all.record(elapsed);
+        self.latency_window.record(elapsed);
         self.latency[kind.min(KIND_NAMES.len() - 1)].record(elapsed);
     }
 
@@ -182,6 +188,80 @@ impl ServerStats {
         }
         Json::obj(fields)
     }
+}
+
+/// Render the whole process as Prometheus text (the `{"cmd": "metrics"}`
+/// body): the static [`metrics`](crate::obs::metrics) registry plus the
+/// server's own live counters, gauges, and latency summaries.
+fn metrics_text(evaluator: &Evaluator, stats: &ServerStats) -> String {
+    use crate::obs::metrics;
+    let mut out = String::new();
+    metrics::render_registry(&mut out);
+    metrics::render_counter(
+        &mut out,
+        "arrow_requests_served_total",
+        "Requests completed (any command, success or error response)",
+        stats.served.load(Ordering::Relaxed),
+    );
+    metrics::render_counter(
+        &mut out,
+        "arrow_requests_rejected_total",
+        "Requests refused by admission control",
+        stats.rejected.load(Ordering::Relaxed),
+    );
+    metrics::render_counter(
+        &mut out,
+        "arrow_sweeps_served_total",
+        "Sweep requests (cluster shards) served",
+        stats.sweeps_served.load(Ordering::Relaxed),
+    );
+    metrics::render_gauge(
+        &mut out,
+        "arrow_requests_in_flight",
+        "Requests executing right now",
+        stats.in_flight.load(Ordering::Relaxed) as u64,
+    );
+    metrics::render_gauge(
+        &mut out,
+        "arrow_executor_queue_depth",
+        "Jobs waiting in the bounded executor queue",
+        stats.queue_depth.load(Ordering::Relaxed) as u64,
+    );
+    metrics::render_gauge(
+        &mut out,
+        "arrow_session_pool_size",
+        "Sealed sessions currently pooled",
+        evaluator.sessions().len() as u64,
+    );
+    metrics::render_gauge(
+        &mut out,
+        "arrow_programs_cached",
+        "Assembled programs in the shared program cache",
+        evaluator.programs().len() as u64,
+    );
+    let mut typed = true;
+    metrics::render_histogram(
+        &mut out,
+        "arrow_request_latency_us",
+        "Request latency, admission to completion, microseconds",
+        &[("kind", "all")],
+        &stats.latency_all,
+        typed,
+    );
+    typed = false;
+    for (i, name) in KIND_NAMES.iter().enumerate() {
+        if stats.latency[i].count() > 0 {
+            metrics::render_histogram(
+                &mut out,
+                "arrow_request_latency_us",
+                "",
+                &[("kind", name)],
+                &stats.latency[i],
+                typed,
+            );
+        }
+    }
+    out
 }
 
 /// Balances `in_flight` by drop, so a panicking request handler cannot
@@ -447,8 +527,24 @@ pub fn handle_request_with(
                 stats.sweeps_served.load(Ordering::Relaxed).into(),
             ),
             ("latency_us", stats.latency_json()),
+            // Interval window: everything recorded since the previous
+            // `stats` call, then reset — loadgen and pollers get
+            // per-window percentiles without tracking deltas.
+            (
+                "latency_window_us",
+                stats.latency_window.snapshot_reset().summary_json(),
+            ),
             ("sessions", evaluator.sessions().stats_json()),
             ("programs", (evaluator.programs().len() as u64).into()),
+        ]),
+        // Prometheus text exposition: the static obs registry plus this
+        // server's live counters/gauges/latency summaries, carried as
+        // the `body` string of a normal JSON response.  Answered inline
+        // at the connection layer like `stats`.
+        Some("metrics") => Json::obj(vec![
+            ("ok", true.into()),
+            ("content_type", "text/plain; version=0.0.4".into()),
+            ("body", metrics_text(evaluator, stats).into()),
         ]),
         // Pre-warm the session pool over a sweep-shaped grid: build the
         // sealed sessions now so the first real request per point skips
@@ -495,7 +591,7 @@ pub fn handle_request_with(
         ),
         other => err_response(format!(
             "unknown cmd {other:?} \
-             (ping|list|shard|bench|sweep|batch|describe|stats|warm|sleep)"
+             (ping|list|shard|bench|sweep|batch|describe|stats|metrics|warm|sleep)"
         )),
     }
 }
@@ -781,7 +877,7 @@ fn handle_conn(stream: TcpStream, core: &Arc<ServerCore>) {
             }
             // Observability must not queue behind the load it is
             // measuring: answer on the connection thread.
-            Some("stats") => {
+            Some("stats") | Some("metrics") => {
                 let started = Instant::now();
                 let resp =
                     handle_request_with(&req, &core.evaluator, &core.stats);
@@ -823,7 +919,7 @@ fn handle_conn(stream: TcpStream, core: &Arc<ServerCore>) {
         }
     }
     if let Some(peer) = peer {
-        eprintln!("connection from {peer} closed");
+        crate::obs_info!("server", "connection from {peer} closed");
     }
 }
 
@@ -884,7 +980,7 @@ pub fn serve_opts(
     exec: ExecutorOptions,
 ) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
-    eprintln!("arrow simulator serving on {addr}");
+    crate::obs_info!("server", "arrow simulator serving on {addr}");
     serve_listener_opts(listener, cache_dir, join, exec)
 }
 
@@ -925,21 +1021,24 @@ pub fn serve_listener_opts(
     if let Some(dir) = cache_dir {
         match ResultStore::open(dir) {
             Ok(store) => {
-                eprintln!(
+                crate::obs_info!(
+                    "server",
                     "result store at {} ({} entries)",
                     store.path().display(),
                     store.len()
                 );
                 evaluator.attach_store(store);
             }
-            Err(e) => eprintln!(
+            Err(e) => crate::obs_warn!(
+                "server",
                 "cache dir {}: {e} (serving uncached)",
                 dir.display()
             ),
         }
     }
     let core = Arc::new(ServerCore::new(evaluator, exec));
-    eprintln!(
+    crate::obs_info!(
+        "server",
         "executor: {} workers, queue depth {}",
         core.executor.worker_count(),
         core.executor.queue_cap()
@@ -949,7 +1048,8 @@ pub fn serve_listener_opts(
             Some(a) => a.clone(),
             None => listener.local_addr()?.to_string(),
         };
-        eprintln!(
+        crate::obs_info!(
+            "server",
             "joining fleet at {} as {advertise}",
             join.coordinator
         );
@@ -983,17 +1083,21 @@ pub fn serve_listener_opts(
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(ACCEPT_POLL);
             }
-            Err(e) => eprintln!("accept: {e}"),
+            Err(e) => crate::obs_error!("server", "accept: {e}"),
         }
     }
-    eprintln!(
+    crate::obs_info!(
+        "server",
         "draining: waiting up to {}s for in-flight requests",
         SHUTDOWN_GRACE.as_secs()
     );
     if core.executor.shutdown(SHUTDOWN_GRACE) {
-        eprintln!("drained cleanly; exiting");
+        crate::obs_info!("server", "drained cleanly; exiting");
     } else {
-        eprintln!("drain grace expired with requests still running");
+        crate::obs_warn!(
+            "server",
+            "drain grace expired with requests still running"
+        );
     }
     Ok(())
 }
@@ -1507,6 +1611,55 @@ mod tests {
         assert!(lat.get("bench").is_none());
         let sessions = r.get("sessions").unwrap();
         assert_eq!(sessions.get("pooled").unwrap().as_u64(), Some(0));
+        // The interval window drains on read: first stats call sees the
+        // recorded sample, the next sees an empty window.
+        let w = r.get("latency_window_us").unwrap();
+        assert_eq!(w.get("count").unwrap().as_u64(), Some(1));
+        let r2 = handle_request_with(
+            &req(r#"{"cmd": "stats"}"#),
+            &evaluator,
+            &stats,
+        );
+        let w2 = r2.get("latency_window_us").unwrap();
+        assert_eq!(w2.get("count").unwrap().as_u64(), Some(0));
+        // The since-startup aggregate is untouched by window drains.
+        let all2 = r2.get("latency_us").unwrap().get("all").unwrap();
+        assert_eq!(all2.get("count").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn metrics_command_renders_prometheus_text() {
+        let evaluator = Evaluator::new();
+        let stats = ServerStats::default();
+        stats.record(kind_of(Some("sweep")), Duration::from_micros(900));
+        let r = handle_request_with(
+            &req(r#"{"cmd": "metrics"}"#),
+            &evaluator,
+            &stats,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(
+            r.get("content_type").unwrap().as_str(),
+            Some("text/plain; version=0.0.4")
+        );
+        let body = r.get("body").unwrap().as_str().unwrap();
+        assert!(body.contains("# TYPE arrow_requests_served_total counter"));
+        assert!(body.contains("arrow_requests_served_total 1"));
+        assert!(body.contains("# TYPE arrow_request_latency_us summary"));
+        assert!(body
+            .contains("arrow_request_latency_us{kind=\"sweep\",quantile="));
+        assert!(body.contains("arrow_eval_simulated_total"));
+        // Every non-comment line is `name[{labels}] value` — the shape a
+        // Prometheus text parser accepts.
+        for line in body.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (name, value) =
+                line.rsplit_once(' ').expect("sample line");
+            assert!(!name.is_empty(), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+        }
     }
 
     #[test]

@@ -90,6 +90,50 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of recorded values in microseconds, exact (the Prometheus
+    /// summary's `_sum` series).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Fold another histogram's samples into this one.  Bucket layout is
+    /// identical by construction, so merging is per-bucket addition and
+    /// the quantile error bound (≤ 1/SUB relative) is unchanged.
+    pub fn merge(&self, other: &Histogram) {
+        for (mine, theirs) in self.counts.iter().zip(other.counts.iter()) {
+            let c = theirs.load(Ordering::Relaxed);
+            if c > 0 {
+                mine.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us
+            .fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Drain this histogram into a fresh snapshot: every bucket (and the
+    /// count/sum/max) is atomically swapped to zero, and the removed
+    /// samples are returned as a new histogram.  Interval reporting
+    /// (`stats` windows, loadgen progress) calls this once per window;
+    /// concurrent recorders lose nothing — a racing `record_us` lands
+    /// either in the snapshot or in the next window.
+    pub fn snapshot_reset(&self) -> Histogram {
+        let snap = Histogram::new();
+        for (mine, out) in self.counts.iter().zip(snap.counts.iter()) {
+            out.store(mine.swap(0, Ordering::Relaxed), Ordering::Relaxed);
+        }
+        snap.count
+            .store(self.count.swap(0, Ordering::Relaxed), Ordering::Relaxed);
+        snap.sum_us
+            .store(self.sum_us.swap(0, Ordering::Relaxed), Ordering::Relaxed);
+        snap.max_us
+            .store(self.max_us.swap(0, Ordering::Relaxed), Ordering::Relaxed);
+        snap
+    }
+
     /// Largest recorded value, exact (not bucketed).
     pub fn max_us(&self) -> u64 {
         self.max_us.load(Ordering::Relaxed)
@@ -222,6 +266,73 @@ mod tests {
         // Bucket ceiling would overshoot; the exact max clamps it.
         assert_eq!(h.quantile_us(1.0), 1_000_003);
         assert_eq!(h.quantile_us(0.5), 1_000_003);
+    }
+
+    /// Property: merging K shard histograms reports every quantile
+    /// within the log-bucket error bound (≤ 12.5% relative, i.e. the
+    /// reported value is in `[exact, exact·9/8]`) of the exact quantile
+    /// over the pooled samples.
+    #[test]
+    fn merged_quantiles_within_error_bound() {
+        let mut rng = crate::util::rng::Rng::new(0x4157_0915);
+        for trial in 0..20 {
+            let shards: Vec<Histogram> =
+                (0..4).map(|_| Histogram::new()).collect();
+            let mut all: Vec<u64> = Vec::new();
+            let n = rng.range_usize(50, 400);
+            for _ in 0..n {
+                // Mixed magnitudes: sub-µs exact range, mid, heavy tail.
+                let v = match rng.range_usize(0, 3) {
+                    0 => rng.next_u64() % 8,
+                    1 => 50 + rng.next_u64() % 10_000,
+                    _ => 100_000 + rng.next_u64() % 10_000_000,
+                };
+                shards[rng.range_usize(0, shards.len())].record_us(v);
+                all.push(v);
+            }
+            let merged = Histogram::new();
+            for s in &shards {
+                merged.merge(s);
+            }
+            assert_eq!(merged.count(), all.len() as u64);
+            assert_eq!(
+                merged.sum_us(),
+                all.iter().sum::<u64>(),
+                "trial {trial}"
+            );
+            all.sort_unstable();
+            for q in [0.5, 0.9, 0.99, 1.0] {
+                let rank =
+                    ((q * all.len() as f64).ceil() as usize).max(1) - 1;
+                let exact = all[rank];
+                let got = merged.quantile_us(q);
+                assert!(
+                    got >= exact && got <= exact + exact / 8 + 1,
+                    "trial {trial} q={q}: exact {exact}, got {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_reset_drains_the_window() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record_us(v);
+        }
+        let window = h.snapshot_reset();
+        assert_eq!(window.count(), 3);
+        assert_eq!(window.sum_us(), 60);
+        assert_eq!(window.max_us(), 30);
+        // The live histogram is empty again…
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_us(), 0);
+        assert_eq!(h.quantile_us(0.99), 0);
+        // …and keeps recording into the next window.
+        h.record_us(7);
+        assert_eq!(h.count(), 1);
+        let next = h.snapshot_reset();
+        assert_eq!(next.sum_us(), 7);
     }
 
     #[test]

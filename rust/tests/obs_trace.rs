@@ -1,0 +1,247 @@
+//! Flight-recorder integration tests: concurrent sink validity, span
+//! nesting, trace-report rendering, and the per-point cycle-attribution
+//! exact-sum invariant.
+//!
+//! The recorder sink is process-global, so every test that enables it
+//! — or runs machinery that would record into an enabled sink (sweeps
+//! emit evaluator events) — serialises on one lock.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use arrow_rvv::bench::runner::Mode;
+use arrow_rvv::bench::suite::Benchmark;
+use arrow_rvv::bench::sweep::{run_sweep, SweepSpec};
+use arrow_rvv::obs::trace::{self, Arg};
+use arrow_rvv::util::json::{self, Json};
+
+static RECORDER: Mutex<()> = Mutex::new(());
+
+fn recorder_lock() -> MutexGuard<'static, ()> {
+    RECORDER.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+const TRICKY: &str = "quote\" backslash\\ tab\t newline\n";
+
+#[test]
+fn concurrent_recorders_emit_valid_jsonl_with_nested_spans() {
+    let _guard = recorder_lock();
+    let path = std::env::temp_dir()
+        .join(format!("arrow_obs_trace_{}.json", std::process::id()));
+    trace::enable(&path).unwrap();
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            scope.spawn(move || {
+                for i in 0..50u64 {
+                    let outer = trace::begin();
+                    trace::instant(
+                        "test",
+                        "probe",
+                        &[
+                            ("thread", Arg::U64(t)),
+                            ("tricky", Arg::Str(TRICKY)),
+                        ],
+                    );
+                    let inner = trace::begin();
+                    trace::complete(
+                        "test",
+                        "inner",
+                        inner,
+                        &[("i", Arg::U64(i))],
+                    );
+                    trace::complete(
+                        "test",
+                        "outer",
+                        outer,
+                        &[("ok", Arg::Bool(true))],
+                    );
+                }
+            });
+        }
+    });
+    trace::disable();
+    let content = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    // Every line is one complete JSON event: 8 threads x 50 rounds x
+    // 3 events, however the threads raced on the sink.
+    let mut events = Vec::new();
+    for line in content.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if line.is_empty() || line == "[" {
+            continue;
+        }
+        events.push(json::parse(line).unwrap_or_else(|e| {
+            panic!("torn or invalid trace line `{line}`: {e}")
+        }));
+    }
+    assert_eq!(events.len(), 8 * 50 * 3);
+
+    // String escaping round-trips through the sink.
+    let tricky_back = events
+        .iter()
+        .find_map(|e| e.get("args")?.get("tricky")?.as_str())
+        .expect("no probe event with the tricky arg");
+    assert_eq!(tricky_back, TRICKY);
+
+    // Span nesting: per thread, the k-th inner span lies within the
+    // k-th outer span (each thread emits its events in order, and the
+    // sink preserves each thread's subsequence).
+    let mut by_tid: std::collections::BTreeMap<u64, (Vec<(u64, u64)>, Vec<(u64, u64)>)> =
+        std::collections::BTreeMap::new();
+    for e in &events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let tid = e.get("tid").and_then(Json::as_u64).unwrap();
+        let ts = e.get("ts").and_then(Json::as_u64).unwrap();
+        let dur = e.get("dur").and_then(Json::as_u64).unwrap();
+        let entry = by_tid.entry(tid).or_default();
+        match e.get("name").and_then(Json::as_str) {
+            Some("inner") => entry.0.push((ts, dur)),
+            Some("outer") => entry.1.push((ts, dur)),
+            other => panic!("unexpected X event {other:?}"),
+        }
+    }
+    assert_eq!(by_tid.len(), 8, "expected one tid per thread");
+    for (tid, (inners, outers)) in &by_tid {
+        assert_eq!(inners.len(), 50, "tid {tid}");
+        assert_eq!(outers.len(), 50, "tid {tid}");
+        for (k, (&(its, idur), &(ots, odur))) in
+            inners.iter().zip(outers).enumerate()
+        {
+            assert!(
+                ots <= its && its + idur <= ots + odur,
+                "tid {tid} round {k}: inner [{its}, {}] escapes \
+                 outer [{ots}, {}]",
+                its + idur,
+                ots + odur
+            );
+        }
+    }
+
+    // The offline renderer accepts the real file.
+    let report = trace::render_report(&content).unwrap();
+    assert!(report.contains("trace: 1200 events"), "{report}");
+}
+
+/// Synthetic trace exercising every section of the renderer.
+fn synthetic_trace() -> String {
+    let lines = [
+        r#"{"ph":"i","pid":1,"tid":1,"ts":100,"s":"t","cat":"cluster","name":"shard_carved","args":{"shard":0,"points":8}}"#,
+        r#"{"ph":"i","pid":1,"tid":1,"ts":110,"s":"t","cat":"cluster","name":"shard_carved","args":{"shard":1,"points":4}}"#,
+        r#"{"ph":"i","pid":1,"tid":2,"ts":120,"s":"t","cat":"fleet","name":"member_joined","args":{"worker":"w1"}}"#,
+        r#"{"ph":"X","pid":1,"tid":2,"ts":200,"dur":500,"cat":"cluster","name":"shard_dispatched","args":{"shard":0,"worker":"w1"}}"#,
+        r#"{"ph":"i","pid":1,"tid":2,"ts":700,"s":"t","cat":"cluster","name":"shard_merged","args":{"shard":0,"worker":"w1"}}"#,
+        r#"{"ph":"X","pid":1,"tid":3,"ts":250,"dur":100,"cat":"cluster","name":"shard_dispatched","args":{"shard":1,"worker":"w2"}}"#,
+        r#"{"ph":"i","pid":1,"tid":3,"ts":360,"s":"t","cat":"cluster","name":"shard_requeued","args":{"shard":1}}"#,
+        r#"{"ph":"i","pid":1,"tid":1,"ts":400,"s":"t","cat":"fleet","name":"member_failed","args":{"worker":"w2"}}"#,
+        r#"{"ph":"i","pid":1,"tid":1,"ts":800,"s":"t","cat":"cluster","name":"shard_fallback","args":{"shard":1}}"#,
+        r#"{"ph":"X","pid":1,"tid":4,"ts":210,"dur":40,"cat":"eval","name":"eval","args":{"tier":"simulated","benchmark":"vector_addition"}}"#,
+        r#"{"ph":"X","pid":1,"tid":4,"ts":260,"dur":5,"cat":"eval","name":"eval","args":{"tier":"analytic","benchmark":"vector_addition"}}"#,
+        r#"{"ph":"i","pid":1,"tid":4,"ts":270,"s":"t","cat":"eval","name":"eval_tier","args":{"tier":"cached","benchmark":"matrix_multiplication"}}"#,
+        r#"{"ph":"X","pid":1,"tid":5,"ts":300,"dur":12,"cat":"executor","name":"queue_wait","args":{}}"#,
+        r#"{"ph":"X","pid":1,"tid":5,"ts":320,"dur":90,"cat":"executor","name":"queue_wait","args":{}}"#,
+    ];
+    let mut out = String::from("[\n");
+    for l in lines {
+        out.push_str(l);
+        out.push_str(",\n");
+    }
+    out
+}
+
+#[test]
+fn render_report_reconstructs_the_shard_lifecycle() {
+    let report = trace::render_report(&synthetic_trace()).unwrap();
+    assert!(report.contains("trace: 14 events"), "{report}");
+    assert!(report.contains("shard lifecycle (2 carved)"), "{report}");
+    assert!(
+        report.contains(
+            "merged: 1  local-fallback: 1  requeues: 1  incomplete: 0"
+        ),
+        "{report}"
+    );
+    assert!(report.contains("merged by w1"), "{report}");
+    assert!(report.contains("local fallback"), "{report}");
+    assert!(!report.contains("INCOMPLETE"), "{report}");
+    assert!(report.contains("per-worker shard timeline"), "{report}");
+    assert!(report.contains("w1: 1 dispatches"), "{report}");
+    assert!(report.contains("evaluator tier mix (3 points)"), "{report}");
+    assert!(report.contains("simulated"), "{report}");
+    assert!(report.contains("analytic"), "{report}");
+    assert!(report.contains("cached"), "{report}");
+    assert!(report.contains("executor queue wait (2 requests)"), "{report}");
+    assert!(report.contains("fleet membership transitions"), "{report}");
+    assert!(report.contains("member_joined"), "{report}");
+    assert!(report.contains("member_failed"), "{report}");
+    assert!(report.contains("trace horizon"), "{report}");
+}
+
+#[test]
+fn render_report_flags_incomplete_shards_and_torn_input() {
+    // A shard that was carved and dispatched but never merged nor fell
+    // back is a coordinator bug the report must surface loudly.
+    let content = "[\n\
+        {\"ph\":\"i\",\"tid\":1,\"ts\":1,\"cat\":\"cluster\",\
+         \"name\":\"shard_carved\",\"args\":{\"shard\":0,\"points\":2}},\n\
+        {\"ph\":\"X\",\"tid\":1,\"ts\":2,\"dur\":3,\"cat\":\"cluster\",\
+         \"name\":\"shard_dispatched\",\"args\":{\"shard\":0,\"worker\":\"w\"}},\n";
+    let report = trace::render_report(content).unwrap();
+    assert!(report.contains("incomplete: 1"), "{report}");
+    assert!(report.contains("INCOMPLETE shard 0"), "{report}");
+
+    // A torn line (interrupted writer) is a hard parse error, not a
+    // silently shortened report.
+    let torn = "[\n{\"ph\":\"i\",\"tid\":1,\"ts\":1,\"cat\":\"c\",\"na\n";
+    let err = trace::render_report(torn).unwrap_err();
+    assert!(err.contains("line 2"), "{err}");
+}
+
+#[test]
+fn sweep_attribution_sums_exactly_to_cycles_across_tiers() {
+    let _guard = recorder_lock();
+    let vadd = Benchmark::by_name("vector_addition").unwrap();
+
+    // Simulated tier (both modes; lanes 1 and 2 share a cohort, so the
+    // lockstep batch path contributes points too).
+    let mut spec = SweepSpec {
+        benchmarks: vec![vadd],
+        modes: vec![Mode::Scalar, Mode::Vector],
+        lanes: vec![1, 2],
+        vlens: vec![128],
+        threads: 1,
+        ..Default::default()
+    };
+    let simulated = run_sweep(&spec);
+    assert!(simulated.unique_simulated > 0);
+
+    // Analytic tier: an extrapolated point carries the fit point's
+    // attribution scaled to its estimated cycle count — the sum
+    // invariant must survive the scaling.
+    spec.modes = vec![Mode::Vector];
+    spec.analytic_limit = Some(1);
+    let analytic = run_sweep(&spec);
+    assert!(
+        analytic.analytic > 0,
+        "analytic_limit 1 produced no analytic points; the scaled \
+         attribution path went untested"
+    );
+
+    let mut checked = 0usize;
+    for p in simulated.points.iter().chain(&analytic.points) {
+        let o = p.outcome.as_ref().unwrap_or_else(|e| {
+            panic!("point {} failed: {e}", p.key)
+        });
+        assert_eq!(o.cycles, o.summary.cycles, "point {}", p.key);
+        assert_eq!(
+            o.summary.attribution.total(),
+            o.summary.cycles,
+            "point {}: cycles_by_category {:?} does not sum to the \
+             point's total cycles",
+            p.key,
+            o.summary.attribution
+        );
+        checked += 1;
+    }
+    assert!(checked >= 6, "only {checked} points checked");
+}

@@ -158,4 +158,34 @@ fn sealed_sessions_run_decode_free_and_allocation_flat() {
          {} extra instructions)",
         long_instrs - short_instrs
     );
+
+    // The disabled flight recorder holds the same contract: span
+    // begin/complete, instants and counter bumps on the hot path must
+    // be free when no `--trace-out` sink is installed.  (Same test
+    // function as above on purpose — the allocator counter is
+    // process-global.)
+    assert!(!arrow_rvv::obs::trace::enabled());
+    let before = allocations();
+    for i in 0..10_000u64 {
+        let span = arrow_rvv::obs::trace::begin();
+        arrow_rvv::obs::metrics::EVAL_SIMULATED.inc();
+        arrow_rvv::obs::trace::complete(
+            "eval",
+            "eval",
+            span,
+            &[("tier", arrow_rvv::obs::trace::Arg::U64(i))],
+        );
+        arrow_rvv::obs::trace::instant(
+            "cluster",
+            "shard_carved",
+            &[("shard", arrow_rvv::obs::trace::Arg::U64(i))],
+        );
+    }
+    let disabled_allocs = allocations() - before;
+    assert_eq!(
+        disabled_allocs, 0,
+        "disabled trace recorder allocated {disabled_allocs} times over \
+         10k span/instant/counter rounds; the compiled-out path must be \
+         allocation-free"
+    );
 }
