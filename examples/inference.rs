@@ -1,75 +1,95 @@
-//! End-to-end edge ML inference — the full three-layer stack in one run.
+//! End-to-end model inference — a built-in multi-kernel model run as
+//! one first-class workload.
 //!
-//! 1. the tiny integer CNN (conv -> ReLU -> maxpool -> dense -> ReLU ->
-//!    dense) defined in JAX/Pallas (python/compile/model.py) was
-//!    AOT-lowered to `artifacts/cnn.hlo.txt` at build time;
-//! 2. this driver executes that artifact via PJRT (the golden model),
-//! 3. runs the same network as an RVV v0.9 program on the simulated
-//!    MicroBlaze+Arrow system (scalar baseline AND vectorized),
-//! 4. checks all three agree bit-exactly and reports the paper's headline
-//!    metrics (cycles, speedup, energy) for a batch of requests.
+//! `ModelSession` assembles every layer of the `tinycnn` built-in
+//! (conv -> ReLU -> maxpool -> dense) through the shared program cache
+//! once, then serves a batch of requests: each run executes the stages
+//! back-to-back, handing every layer's *simulated* output tensor
+//! forward as the next layer's activation, and the per-layer
+//! sub-ledgers sum exactly to the end-to-end totals.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example inference
+//! cargo run --release --example inference
 //! ```
 
-use arrow_rvv::bench::cnn::{run_cnn, CnnWorkload, CLASSES};
+use arrow_rvv::bench::eval::SessionPool;
+use arrow_rvv::bench::models::ModelId;
+use arrow_rvv::bench::runner::{Mode, DEFAULT_BUDGET};
+use arrow_rvv::bench::ProgramCache;
 use arrow_rvv::energy::EnergyModel;
-use arrow_rvv::runtime::Oracle;
+use arrow_rvv::system::ModelSession;
 use arrow_rvv::vector::ArrowConfig;
 
 fn main() {
     let config = ArrowConfig::default();
     let energy = EnergyModel::default();
-    let batch = 8;
+    let model = ModelId::TinyCnn;
+    let batch = 8u64;
 
-    let mut oracle = match Oracle::open_default() {
-        Ok(o) => Some(o),
-        Err(e) => {
-            eprintln!(
-                "WARNING: XLA oracle unavailable ({e}); validating against the Rust reference only"
-            );
-            None
-        }
-    };
+    // Build once: all stage programs assemble through one shared cache,
+    // so the whole batch pays the session-construction cost once.
+    let programs = ProgramCache::new();
+    let sessions = SessionPool::default();
+    let vector = ModelSession::build(
+        model, Mode::Vector, config, &programs, &sessions,
+    )
+    .expect("vector session");
+    let scalar = ModelSession::build(
+        model, Mode::Scalar, config, &programs, &sessions,
+    )
+    .expect("scalar session");
 
-    println!("serving a batch of {batch} inference requests on Arrow\n");
+    println!(
+        "serving {batch} inference requests on {} ({} layers)\n",
+        model.qualified_name(),
+        model.stages().len()
+    );
     let (mut scalar_cycles, mut vector_cycles) = (0u64, 0u64);
     for req in 0..batch {
-        let w = CnnWorkload::generate(1000 + req);
-        let expected = w.expected_logits();
+        let seed = 1000 + req;
+        let rv = vector.run(seed, DEFAULT_BUDGET).expect("vector run");
+        let rs = scalar.run(seed, DEFAULT_BUDGET).expect("scalar run");
+        assert!(rv.verified, "request {req}: vectorized mismatch");
+        assert!(rs.verified, "request {req}: scalar mismatch");
+        assert_eq!(rv.output, rs.output, "modes must agree bit-exactly");
+        assert_eq!(rv.output, model.workload(seed).expected);
 
-        // L1/L2 golden model via XLA/PJRT.
-        if let Some(o) = oracle.as_mut() {
-            let golden = o
-                .run_i32("cnn", &w.oracle_inputs())
-                .expect("cnn artifact executes");
-            assert_eq!(
-                golden[0], expected,
-                "XLA golden model disagrees with reference"
-            );
-        }
-
-        // L3: the simulated system, both variants.
-        let (logits_v, sv) = run_cnn(true, &w, config).expect("vector run");
-        let (logits_s, ss) = run_cnn(false, &w, config).expect("scalar run");
-        assert_eq!(logits_v, expected, "request {req}: vectorized mismatch");
-        assert_eq!(logits_s, expected, "request {req}: scalar mismatch");
-
-        let class = logits_v
+        let class = rv
+            .output
             .iter()
             .enumerate()
             .max_by_key(|(_, &v)| v)
             .map(|(i, _)| i)
             .unwrap();
         println!(
-            "request {req}: class {class:>2}/{CLASSES}   scalar {:>9} cy   vector {:>8} cy   speedup {:>5.1}x",
-            ss.cycles,
-            sv.cycles,
-            ss.cycles as f64 / sv.cycles as f64
+            "request {req}: class {class:>2}/{}   scalar {:>9} cy   \
+             vector {:>8} cy   speedup {:>5.1}x",
+            rv.output.len(),
+            rs.summary.cycles,
+            rv.summary.cycles,
+            rs.summary.cycles as f64 / rv.summary.cycles as f64
         );
-        scalar_cycles += ss.cycles;
-        vector_cycles += sv.cycles;
+        scalar_cycles += rs.summary.cycles;
+        vector_cycles += rv.summary.cycles;
+
+        // Per-layer attribution for the first request: where the
+        // model's cycles actually go, layer by layer.
+        if req == 0 {
+            let total: u64 = rv.stages.iter().map(|s| s.cycles).sum();
+            assert_eq!(total, rv.summary.cycles, "sub-ledgers must sum");
+            println!("  per-layer (vectorized):");
+            for st in &rv.stages {
+                println!(
+                    "    {:<6} {:>8} cy ({:>4.1}%)  {:>6} vec instr  \
+                     {:>8} B moved",
+                    st.name,
+                    st.cycles,
+                    100.0 * st.cycles as f64 / total as f64,
+                    st.vector_instructions,
+                    st.mem_bytes
+                );
+            }
+        }
     }
 
     let speedup = scalar_cycles as f64 / vector_cycles as f64;
@@ -92,5 +112,8 @@ fn main() {
         "  throughput: {:.0} inferences/s (vectorized)",
         batch as f64 / energy.time_s(vector_cycles)
     );
-    println!("\ninference end-to-end OK — all three layers agree bit-exactly");
+    println!(
+        "\ninference end-to-end OK — every layer verified against the \
+         composed oracle"
+    );
 }

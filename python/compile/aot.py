@@ -9,23 +9,30 @@ Usage:  python -m compile.aot --out-dir ../artifacts
 
 Emits one `<name>.hlo.txt` per artifact plus `manifest.json` describing
 input/output shapes and dtypes, which `rust/src/runtime/` reads to drive
-PJRT execution.  Python runs exactly once, at build time.
+PJRT execution.  `--models-out FILE` additionally emits the versioned
+model-program manifest (`programs.MODEL_PROGRAMS`): the small CNN and
+its siblings as ordered kernel-stage chains, the same chains the Rust
+built-in model registry hand-writes so the default build needs no
+Python.  With `--models-only` that is all that runs — pure stdlib, no
+jax — so the manifest can be regenerated anywhere.  Python runs exactly
+once, at build time.
 """
 
 import argparse
 import json
 import os
 
-import jax
-import jax.numpy as jnp
-from jax._src.lib import xla_client as xc
+from . import programs
 
-from . import model as M
+# jax and the model graphs are imported lazily so `--models-only` works
+# without the ML stack installed.
 
 
 def to_hlo_text(lowered) -> str:
     """StableHLO -> XlaComputation -> HLO text (return_tuple so the Rust
     side can uniformly unwrap a 1-tuple)."""
+    from jax._src.lib import xla_client as xc
+
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=True
@@ -34,6 +41,8 @@ def to_hlo_text(lowered) -> str:
 
 
 def _dtype_name(dt) -> str:
+    import jax.numpy as jnp
+
     return jnp.dtype(dt).name  # e.g. "int32"
 
 
@@ -51,6 +60,10 @@ def build_artifact_list():
     scaled 64x64 conv — see DESIGN.md §6 on why large profiles are
     analytic-only).
     """
+    import jax.numpy as jnp
+
+    from . import model as M
+
     dtype = jnp.int32
     arts = []
 
@@ -77,8 +90,19 @@ def build_artifact_list():
 
 
 def lower_artifact(fn, specs) -> str:
+    import jax
+
     lowered = jax.jit(fn).lower(*specs)
     return to_hlo_text(lowered)
+
+
+def write_model_manifest(path: str) -> None:
+    """Emit the versioned model-program manifest (pure stdlib)."""
+    with open(path, "w") as f:
+        json.dump(programs.manifest(), f, indent=2, sort_keys=True)
+        f.write("\n")
+    n = len(programs.MODEL_PROGRAMS)
+    print(f"wrote {n} model program(s) -> {path}")
 
 
 def main() -> None:
@@ -87,7 +111,24 @@ def main() -> None:
     p.add_argument(
         "--only", default=None, help="comma-separated artifact names"
     )
+    p.add_argument(
+        "--models-out",
+        default=None,
+        help="also write the versioned model-program manifest here",
+    )
+    p.add_argument(
+        "--models-only",
+        action="store_true",
+        help="emit only the model manifest (no jax required)",
+    )
     args = p.parse_args()
+    if args.models_out:
+        write_model_manifest(args.models_out)
+    if args.models_only:
+        return
+
+    import jax
+
     os.makedirs(args.out_dir, exist_ok=True)
 
     only = set(args.only.split(",")) if args.only else None

@@ -1,0 +1,209 @@
+"""Golden-output fixtures for the built-in models (pure stdlib).
+
+Bit-exact Python mirror of the Rust model workload generator
+(`rust/src/bench/models.rs` / `suite.rs`): the same 64-bit LCG stream,
+the same draw order (activation first, then every stage's parameters in
+stage order), and the same wrapping-i32 kernel semantics as
+`kernels/ref.py` — re-implemented here on plain ints so the fixtures can
+be regenerated without jax.  The emitted files are checked in under
+`rust/tests/golden/` and asserted bit-exact against `ModelSession`
+output by `rust/tests/model_workloads.rs`, so a drift in either
+generator fails the Rust test suite without any Python at test time.
+
+    python3 -m compile.golden_models --out-dir ../rust/tests/golden
+"""
+
+import argparse
+import json
+import os
+
+from . import programs
+
+MASK64 = (1 << 64) - 1
+MASK32 = (1 << 32) - 1
+
+#: Rust: `seed ^ 0x0DE1_u64.rotate_left(17)` — the model stream's seed
+#: mix, disjoint from the kernel stream's `0xA770` mix.
+MODEL_SEED_MIX = ((0x0DE1 << 17) | (0x0DE1 >> (64 - 17))) & MASK64
+
+#: Fixture seeds: DEFAULT first (what the tests assert), plus one more
+#: to catch a generator that only matches at a single seed.
+SEEDS = (42, 7)
+
+FORMAT = "arrow-model-golden"
+VERSION = 1
+
+
+def wrap_i32(x):
+    """Two's-complement wraparound to i32 — RVV SEW=32 semantics."""
+    x &= MASK32
+    return x - (1 << 32) if x >= (1 << 31) else x
+
+
+class Lcg:
+    """The suite's workload LCG.  `(state >> 33)` is at most 31 bits, so
+    the Rust `as i32` cast never truncates or flips sign."""
+
+    def __init__(self, state):
+        self.state = state & MASK64
+
+    def next(self):
+        self.state = (
+            self.state * 6364136223846793005 + 1442695040888963407
+        ) & MASK64
+        return ((self.state >> 33) % 101) - 50
+
+    def gen(self, n):
+        return [self.next() for _ in range(n)]
+
+
+# --- kernel oracles (wrapping-i32 mirror of suite.rs / ref.py) -------------
+
+def vadd(a, b, size):
+    return [wrap_i32(x + y) for x, y in zip(a, b)]
+
+
+def vmul(a, b, size):
+    return [wrap_i32(x * y) for x, y in zip(a, b)]
+
+
+def relu(a, size):
+    return [max(x, 0) for x in a]
+
+
+def matmul(a, b, size):
+    n = size["n"]
+    out = []
+    for i in range(n):
+        for j in range(n):
+            acc = sum(a[i * n + k] * b[k * n + j] for k in range(n))
+            out.append(wrap_i32(acc))
+    return out
+
+
+def maxpool(a, size):
+    n = size["n"]
+    h = n // 2
+    return [
+        max(
+            a[2 * i * n + 2 * j],
+            a[2 * i * n + 2 * j + 1],
+            a[(2 * i + 1) * n + 2 * j],
+            a[(2 * i + 1) * n + 2 * j + 1],
+        )
+        for i in range(h)
+        for j in range(h)
+    ]
+
+
+def conv2d(a, w, size):
+    n, k, b = size["n"], size["k"], size["batch"]
+    o = n - k + 1
+    out = []
+    for im in range(b):
+        for i in range(o):
+            for j in range(o):
+                acc = sum(
+                    w[r * k + c] * a[im * n * n + (i + r) * n + j + c]
+                    for r in range(k)
+                    for c in range(k)
+                )
+                out.append(wrap_i32(acc))
+    return out
+
+
+#: kernel ref -> (input_len, param_len, oracle).  Param draws mirror
+#: `Benchmark::param_inputs` (vadd/vmul/matmul draw a second operand,
+#: conv2d draws its weights, relu/maxpool draw nothing).
+KERNELS = {
+    "vadd": (
+        lambda s: s["n"],
+        lambda s: s["n"],
+        lambda a, p, s: vadd(a, p, s),
+    ),
+    "vmul": (
+        lambda s: s["n"],
+        lambda s: s["n"],
+        lambda a, p, s: vmul(a, p, s),
+    ),
+    "relu": (
+        lambda s: s["n"],
+        lambda s: 0,
+        lambda a, p, s: relu(a, s),
+    ),
+    "matmul": (
+        lambda s: s["n"] * s["n"],
+        lambda s: s["n"] * s["n"],
+        lambda a, p, s: matmul(a, p, s),
+    ),
+    "maxpool": (
+        lambda s: s["n"] * s["n"],
+        lambda s: 0,
+        lambda a, p, s: maxpool(a, s),
+    ),
+    "conv2d": (
+        lambda s: s["batch"] * s["n"] * s["n"],
+        lambda s: s["k"] * s["k"],
+        lambda a, p, s: conv2d(a, p, s),
+    ),
+}
+
+
+def model_golden(name, seed):
+    """Generate one model's fixture: input, per-stage expected tensors,
+    and the final output, in the exact Rust draw order."""
+    stages = programs.MODEL_PROGRAMS[name]["stages"]
+    lcg = Lcg(seed ^ MODEL_SEED_MIX)
+    first_in, _, _ = KERNELS[stages[0]["kernel"]]
+    activation = lcg.gen(first_in(stages[0]["size"]))
+    model_input = list(activation)
+    # All parameters are drawn before any oracle runs — the stream order
+    # `ModelId::workload` pins.
+    params = [
+        lcg.gen(KERNELS[st["kernel"]][1](st["size"])) for st in stages
+    ]
+    out_stages = []
+    for st, p in zip(stages, params):
+        _, _, oracle = KERNELS[st["kernel"]]
+        activation = oracle(activation, p, st["size"])
+        out_stages.append(
+            {
+                "name": st["name"],
+                "kernel": st["kernel"],
+                "expected": activation,
+            }
+        )
+    return {
+        "format": FORMAT,
+        "version": VERSION,
+        "model": name,
+        "seed": seed,
+        "input": model_input,
+        "stages": out_stages,
+        "expected": activation,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../rust/tests/golden")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name in programs.MODEL_PROGRAMS:
+        fixture = [model_golden(name, seed) for seed in SEEDS]
+        path = os.path.join(args.out_dir, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(fixture, f, separators=(",", ":"))
+            f.write("\n")
+        print(f"wrote {path} ({len(fixture)} seed(s))")
+
+    mpath = os.path.join(args.out_dir, "model_programs.json")
+    with open(mpath, "w") as f:
+        json.dump(programs.manifest(), f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Versioned model-program definitions: ordered kernel stages per model.
+
+This is the interchange format between the Python AOT pipeline and the
+Rust simulator's built-in model registry (`rust/src/bench/models.rs`).
+A *model program* is an ordered list of stages; each stage references
+one benchmark kernel (by its `model.BENCH_OPS` name) at a fixed size.
+The chaining contract is structural: every kernel takes its activation
+as the first input and stage k's activation length equals stage k-1's
+output length.
+
+Deliberately pure stdlib — no jax — so the manifest can be emitted (and
+diffed against the Rust registry) on machines without the ML stack:
+
+    python3 -m compile.aot --models-out models.json --models-only
+
+`FORMAT`/`VERSION` are bumped together with the Rust-side parser in
+`rust/tests/model_workloads.rs`, which pins the checked-in manifest
+(`rust/tests/golden/model_programs.json`) against the registry.
+"""
+
+FORMAT = "arrow-model-program"
+VERSION = 1
+
+# CNN geometry, mirroring model.py's constants (kept literal here so the
+# module stays importable without jax): 18x18 -conv3x3-> 16x16 -> relu
+# -> pool -> 8x8 -fc-> logits, every dimension divisible by the SEW=32
+# strip width.
+CNN_IMAGE = 18
+CNN_KERNEL = 3
+CNN_CONV_OUT = CNN_IMAGE - CNN_KERNEL + 1          # 16
+CNN_POOLED = CNN_CONV_OUT // 2                     # 8
+
+
+def _stage(name, kernel, n, k=0, batch=0):
+    return {
+        "name": name,
+        "kernel": kernel,
+        "size": {"n": n, "k": k, "batch": batch},
+    }
+
+
+#: name -> ordered stage list.  Kernel refs are `model.BENCH_OPS` keys;
+#: sizes use the Rust `BenchSize` convention (n = vector length / matrix
+#: dim / image dim, k = conv kernel, batch = conv batch).
+MODEL_PROGRAMS = {
+    "tinycnn": {
+        "description": "small CNN: conv 18x18/3x3 -> relu 256 -> "
+                       "maxpool 16x16 -> matmul 8x8",
+        "stages": [
+            _stage("conv", "conv2d", CNN_IMAGE, k=CNN_KERNEL, batch=1),
+            _stage("relu", "relu", CNN_CONV_OUT * CNN_CONV_OUT),
+            _stage("pool", "maxpool", CNN_CONV_OUT),
+            _stage("fc", "matmul", CNN_POOLED),
+        ],
+    },
+    "mlp": {
+        "description": "two-layer perceptron: matmul 16x16 -> relu 256 "
+                       "-> matmul 16x16",
+        "stages": [
+            _stage("fc1", "matmul", 16),
+            _stage("relu", "relu", 256),
+            _stage("fc2", "matmul", 16),
+        ],
+    },
+    "vecchain": {
+        "description": "element-wise chain: vadd 128 -> vmul 128 -> "
+                       "relu 128",
+        "stages": [
+            _stage("add", "vadd", 128),
+            _stage("mul", "vmul", 128),
+            _stage("relu", "relu", 128),
+        ],
+    },
+}
+
+
+def manifest():
+    """The versioned model-program manifest, ready to serialize."""
+    return {
+        "format": FORMAT,
+        "version": VERSION,
+        "models": MODEL_PROGRAMS,
+    }

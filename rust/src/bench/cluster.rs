@@ -82,7 +82,6 @@ use crate::util::json::{self, Json};
 
 use super::eval::{EvalOutcome, EvalPoint, EvalResult, Evaluator, Provenance};
 use super::fleet::{self, MemberCaps, Membership};
-use super::runner;
 use super::store::{ResultStore, StoreStats};
 use super::sweep::{self, SweepPoint, SweepReport, SweepSpec};
 
@@ -376,6 +375,15 @@ fn shard_request(shard: &SweepSpec) -> Json {
         ),
         ("seed", shard.seed.into()),
     ];
+    // Model workloads ride the wire as their own axis field; omitted
+    // entirely for kernel-only shards so those requests stay
+    // byte-identical to the pre-model protocol.
+    if !shard.models.is_empty() {
+        fields.push((
+            "models",
+            Json::Arr(shard.models.iter().map(|m| m.name().into()).collect()),
+        ));
+    }
     match shard.analytic_limit {
         Some(limit) => fields.push(("analytic_limit", limit.into())),
         None => fields.push(("no_analytic", true.into())),
@@ -408,6 +416,10 @@ fn point_result_from_json(p: &Json) -> Result<EvalResult, String> {
         .get("summary")
         .and_then(super::store::parse_summary)
         .ok_or("shard point missing `summary`")?;
+    // Absent for kernel points; model points carry their per-stage
+    // sub-ledgers, which must merge intact or not at all.
+    let stages = super::store::parse_stages(p.get("stages"))
+        .ok_or("shard point carries malformed `stages`")?;
     Ok(Ok(EvalOutcome {
         cycles: p
             .get("cycles")
@@ -418,6 +430,7 @@ fn point_result_from_json(p: &Json) -> Result<EvalResult, String> {
             .and_then(Json::as_bool)
             .ok_or("shard point missing `verified`")?,
         summary,
+        stages,
         provenance: tier("provenance")?,
         origin: tier("origin")?,
     }))
@@ -816,13 +829,7 @@ impl Dispatch<'_> {
                             let est = expected.iter().fold(
                                 0u64,
                                 |acc, (p, _)| {
-                                    acc.saturating_add(
-                                        runner::estimated_instructions(
-                                            p.benchmark,
-                                            p.size(),
-                                            p.mode,
-                                        ),
-                                    )
+                                    acc.saturating_add(p.estimated_cost())
                                 },
                             );
                             let elapsed = sub
@@ -1662,5 +1669,78 @@ mod tests {
                 .to_string(),
             sweep::report_json(&local).get("points").unwrap().to_string()
         );
+    }
+
+    /// Model workloads distribute like kernels: a 2-worker cluster
+    /// sweep of a mixed kernel+model grid merges byte-identical to a
+    /// local run, per-stage sub-ledgers intact through the wire.
+    #[test]
+    fn model_points_cluster_merge_matches_local() {
+        use crate::bench::models::ModelId;
+        use crate::system::server;
+
+        let spawn = || {
+            let listener =
+                std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            std::thread::spawn(move || {
+                let _ = server::serve_listener(listener, None);
+            });
+            addr
+        };
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd],
+            models: vec![ModelId::VecChain],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![256],
+            seed: 13,
+            threads: 1,
+            ..Default::default()
+        };
+        // The wire request names the model axis.
+        let req = shard_request(&spec);
+        let models: Vec<&str> = req
+            .get("models")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|m| m.as_str().unwrap())
+            .collect();
+        assert_eq!(models, vec!["vecchain"]);
+
+        let local = sweep::run_sweep(&spec);
+        let mut cs = ClusterSpec::new(spec, vec![spawn(), spawn()]);
+        cs.shard_points = 1; // every point its own shard: both workers used
+        cs.shards_per_batch = 1;
+        let cluster = run_cluster(&cs).unwrap();
+        assert_eq!(cluster.local_shards, 0, "{:?}", cluster.workers);
+        let merged = sweep::report_json(&cluster.report);
+        assert_eq!(
+            merged.get("points").unwrap().to_string(),
+            sweep::report_json(&local).get("points").unwrap().to_string()
+        );
+        // The merged model rows still carry stage ledgers that sum to
+        // their end-to-end cycles.
+        let rows = merged.get("points").unwrap().as_arr().unwrap();
+        let model_rows: Vec<_> = rows
+            .iter()
+            .filter(|r| {
+                r.get("benchmark").unwrap().as_str()
+                    == Some("model:vecchain")
+            })
+            .collect();
+        assert_eq!(model_rows.len(), 2);
+        for row in model_rows {
+            let total = row.get("cycles").unwrap().as_u64().unwrap();
+            let stages = row.get("stages").unwrap().as_arr().unwrap();
+            let sum: u64 = stages
+                .iter()
+                .map(|s| s.get("cycles").unwrap().as_u64().unwrap())
+                .sum();
+            assert_eq!(sum, total);
+        }
     }
 }

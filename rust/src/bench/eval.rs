@@ -35,10 +35,12 @@ use crate::scalar::ScalarTiming;
 use crate::system::machine::{
     scale_attribution, CycleAttribution, RunSummary,
 };
+use crate::system::model::{ModelSession, StageLedger};
 use crate::system::{MachineBatch, Session};
 use crate::vector::ArrowConfig;
 
 use super::analytic;
+use super::models::{workload_names, ModelId};
 use super::profiles::{Profile, TimingVariant};
 use super::runner::{bench_source, run_on_session, Mode, DEFAULT_BUDGET};
 use super::store::ResultStore;
@@ -86,6 +88,10 @@ pub struct EvalOutcome {
     /// `cycles`/`lanes` populated — instruction and bus counters need a
     /// real run.
     pub summary: RunSummary,
+    /// Per-stage sub-ledgers for model workloads (empty for kernels).
+    /// Field-wise, these sum exactly to `summary` — the invariant the
+    /// model path is built on.
+    pub stages: Vec<StageLedger>,
     /// Tier that answered *this* evaluation.
     pub provenance: Provenance,
     /// Tier that originally computed the number: equals `provenance`
@@ -95,18 +101,58 @@ pub struct EvalOutcome {
     pub origin: Provenance,
 }
 
+/// The workload axis of a design point: a single suite kernel, or a
+/// whole multi-kernel model run end-to-end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    Kernel(Benchmark),
+    Model(ModelId),
+}
+
+impl WorkloadKind {
+    /// Canonical name: the kernel's suite name, or `model:<name>` — the
+    /// first segment of the point key, so model keys can never collide
+    /// with kernel keys.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Kernel(b) => b.name(),
+            WorkloadKind::Model(m) => m.qualified_name(),
+        }
+    }
+
+    /// Parse a workload name: any suite kernel name, a `model:<name>`,
+    /// or a bare built-in model name.
+    pub fn by_name(name: &str) -> Option<WorkloadKind> {
+        if let Some(b) = Benchmark::by_name(name) {
+            return Some(WorkloadKind::Kernel(b));
+        }
+        ModelId::by_name(name).map(WorkloadKind::Model)
+    }
+
+    /// Parse with an error message that lists every valid name —
+    /// kernels *and* models — instead of a bare "unknown benchmark".
+    pub fn parse(name: &str) -> Result<WorkloadKind, String> {
+        WorkloadKind::by_name(name).ok_or_else(|| {
+            format!("unknown workload {name:?}; valid: {}", workload_names())
+        })
+    }
+}
+
 /// What one point produced: an outcome, or a per-point error.
 pub type EvalResult = Result<EvalOutcome, String>;
 
 /// Canonical identity of one evaluated point.  Everything that can
-/// change the result is folded in: benchmark, profile, mode, the full
-/// [`ArrowConfig`] (lanes / VLEN / ELEN, indexed-memory support, and
-/// both timing models — timing ablations must never collide) and the
-/// workload seed.  This is the key for the in-request dedup cache
-/// *and* the persistent store, so two sweeps differing in any of these
-/// can never serve each other's results.
-pub fn point_key(
-    benchmark: Benchmark,
+/// change the result is folded in: the workload's canonical name,
+/// profile, mode, the full [`ArrowConfig`] (lanes / VLEN / ELEN,
+/// indexed-memory support, and both timing models — timing ablations
+/// must never collide) and the workload seed.  This is the key for the
+/// in-request dedup cache *and* the persistent store, so two sweeps
+/// differing in any of these can never serve each other's results.
+/// Kernel keys are byte-identical to the pre-model format (stores carry
+/// over); model keys lead with `model:<name>`, disjoint from every
+/// kernel name.
+fn keyed(
+    label: &str,
     profile: &Profile,
     mode: Mode,
     config: &ArrowConfig,
@@ -115,8 +161,7 @@ pub fn point_key(
     let t = &config.timing;
     let m = &config.mem_timing;
     format!(
-        "{}|{}|{}|lanes={}|vlen={}|elen={}|im={}|vt={}.{}.{}.{}.{}|mt={}.{}.{}.{}|seed={seed}",
-        benchmark.name(),
+        "{label}|{}|{}|lanes={}|vlen={}|elen={}|im={}|vt={}.{}.{}.{}.{}|mt={}.{}.{}.{}|seed={seed}",
         profile.name,
         mode.name(),
         config.lanes,
@@ -135,11 +180,26 @@ pub fn point_key(
     )
 }
 
-/// One design point for the evaluator: a benchmark instance (via its
-/// profile) plus the Arrow configuration to run it on.
+/// Canonical point key for a kernel workload (see [`keyed`]).
+pub fn point_key(
+    benchmark: Benchmark,
+    profile: &Profile,
+    mode: Mode,
+    config: &ArrowConfig,
+    seed: u64,
+) -> String {
+    keyed(benchmark.name(), profile, mode, config, seed)
+}
+
+/// One design point for the evaluator: a workload instance (kernel via
+/// its profile, or a whole model) plus the Arrow configuration to run
+/// it on.
 #[derive(Debug, Clone)]
 pub struct EvalPoint {
-    pub benchmark: Benchmark,
+    pub workload: WorkloadKind,
+    /// Data profile — sizes kernel workloads; model stages carry their
+    /// own fixed sizes, but the profile still names the run and stays
+    /// folded into the key.
     pub profile: Profile,
     pub mode: Mode,
     pub config: ArrowConfig,
@@ -152,7 +212,7 @@ impl EvalPoint {
     /// [`ArrowConfig`], so every sweep axis is canonically folded into
     /// [`EvalPoint::key`].
     pub fn from_axes(
-        benchmark: Benchmark,
+        workload: WorkloadKind,
         profile: Profile,
         mode: Mode,
         lanes: usize,
@@ -161,7 +221,7 @@ impl EvalPoint {
         variant: &TimingVariant,
     ) -> EvalPoint {
         EvalPoint {
-            benchmark,
+            workload,
             profile,
             mode,
             config: variant.apply(ArrowConfig {
@@ -173,26 +233,66 @@ impl EvalPoint {
         }
     }
 
+    /// The kernel benchmark when this point is a kernel workload.
+    pub fn kernel(&self) -> Option<Benchmark> {
+        match self.workload {
+            WorkloadKind::Kernel(b) => Some(b),
+            WorkloadKind::Model(_) => None,
+        }
+    }
+
+    /// The kernel's profile-sized instance.  Model stages carry fixed
+    /// per-stage sizes instead — callers must branch on the workload
+    /// before asking.
     pub fn size(&self) -> BenchSize {
-        self.benchmark.size(&self.profile)
+        match self.workload {
+            WorkloadKind::Kernel(b) => b.size(&self.profile),
+            WorkloadKind::Model(_) => {
+                unreachable!("model points size per stage, not per point")
+            }
+        }
     }
 
     pub fn key(&self, seed: u64) -> String {
-        point_key(self.benchmark, &self.profile, self.mode, &self.config, seed)
+        keyed(
+            self.workload.name(),
+            &self.profile,
+            self.mode,
+            &self.config,
+            seed,
+        )
+    }
+
+    /// Estimated instruction cost — the scheduling weight for analytic
+    /// routing, shard carving and dispatch ordering.  Kernel points use
+    /// the per-benchmark closed forms; models sum them over stages.
+    pub fn estimated_cost(&self) -> u64 {
+        match self.workload {
+            WorkloadKind::Kernel(b) => super::runner::estimated_instructions(
+                b,
+                b.size(&self.profile),
+                self.mode,
+            ),
+            WorkloadKind::Model(m) => m.estimated_instructions(self.mode),
+        }
     }
 
     /// Lockstep-cohort identity: points that agree on all of these
     /// follow one architectural trace (same program, same `vl` per
     /// iteration, same memory image) and may share a single
     /// [`MachineBatch`] run — lanes, ELEN and timing are free axes.
-    pub fn cohort(&self) -> (Benchmark, Mode, BenchSize, u32, bool) {
-        (
-            self.benchmark,
+    /// Model points return `None`: a model run switches programs at
+    /// every stage boundary, so there is no single shared decode stream
+    /// to lockstep over — they always take the per-point path.
+    pub fn cohort(&self) -> Option<(Benchmark, Mode, BenchSize, u32, bool)> {
+        let b = self.kernel()?;
+        Some((
+            b,
             self.mode,
             self.size(),
             self.config.vlen_bits,
             self.config.indexed_mem,
-        )
+        ))
     }
 }
 
@@ -443,20 +543,32 @@ impl Evaluator {
     }
 
     /// Pre-warm the session pool for one design point: build (and
-    /// retain) its sealed session without running anything, so the
-    /// first real request skips the build cost.  The server's `warm`
-    /// command fans this over a sweep grid.
+    /// retain) its sealed session — every stage's, for a model —
+    /// without running anything, so the first real request skips the
+    /// build cost.  The server's `warm` command fans this over a sweep
+    /// grid.
     pub fn warm_point(&self, point: &EvalPoint) -> Result<(), String> {
         point.config.validate()?;
-        self.sessions
-            .session(
-                &self.programs,
-                point.benchmark,
-                point.size(),
+        match point.workload {
+            WorkloadKind::Kernel(b) => self
+                .sessions
+                .session(
+                    &self.programs,
+                    b,
+                    point.size(),
+                    point.mode,
+                    point.config,
+                )
+                .map(|_| ()),
+            WorkloadKind::Model(m) => ModelSession::build(
+                m,
                 point.mode,
                 point.config,
+                &self.programs,
+                &self.sessions,
             )
-            .map(|_| ())
+            .map(|_| ()),
+        }
     }
 
     /// Store appends that failed so far (see `store_put_failures`).
@@ -501,7 +613,7 @@ impl Evaluator {
                     ("tier", trace::Arg::Str(tier)),
                     (
                         "benchmark",
-                        trace::Arg::Str(point.benchmark.name()),
+                        trace::Arg::Str(point.workload.name()),
                     ),
                 ],
             );
@@ -578,8 +690,23 @@ impl Evaluator {
             (Benchmark, Mode, BenchSize, u32, bool),
             Vec<usize>,
         > = HashMap::new();
+        let mut singles: Vec<usize> = Vec::new();
         for &i in &pending {
-            cohorts.entry(points[i].cohort()).or_default().push(i);
+            match points[i].cohort() {
+                Some(c) => cohorts.entry(c).or_default().push(i),
+                // Model points never lockstep (no shared decode
+                // stream): always the per-point path, so the local,
+                // batched and cluster answers are trivially identical.
+                None => singles.push(i),
+            }
+        }
+        for &i in &singles {
+            let point = &points[i];
+            let r = self.simulate(point, seed);
+            if let Ok(outcome) = &r {
+                self.store_outcome(&point.key(seed), outcome);
+            }
+            results[i] = Some(r);
         }
         // Deterministic group order (HashMap iteration is not).
         let mut cohorts: Vec<Vec<usize>> = cohorts.into_values().collect();
@@ -629,7 +756,7 @@ impl Evaluator {
                         ("tier", trace::Arg::Str(tier)),
                         (
                             "benchmark",
-                            trace::Arg::Str(point.benchmark.name()),
+                            trace::Arg::Str(point.workload.name()),
                         ),
                     ],
                 );
@@ -650,13 +777,26 @@ impl Evaluator {
         point: &EvalPoint,
         analytic_limit: Option<u64>,
     ) -> bool {
-        analytic_limit.is_some_and(|limit| {
-            analytic::should_extrapolate(
-                point.benchmark,
+        analytic_limit.is_some_and(|limit| match point.workload {
+            WorkloadKind::Kernel(b) => analytic::should_extrapolate(
+                b,
                 point.size(),
                 point.mode,
                 limit,
-            )
+            ),
+            // A model extrapolates per stage, so *every* stage must be
+            // fit-valid at its size; one unaligned layer forces the
+            // whole model down the exact path.
+            WorkloadKind::Model(m) => {
+                point.estimated_cost() > limit
+                    && m.stages().iter().all(|st| {
+                        analytic::extrapolation_valid(
+                            st.benchmark,
+                            point.mode,
+                            st.size,
+                        )
+                    })
+            }
         })
     }
 
@@ -681,29 +821,86 @@ impl Evaluator {
     /// Analytic tier.  Fit-size simulations run through the shared
     /// program cache too (seed 1, matching `analytic::cycles_at` — the
     /// cycle ledger is data-independent, so any seed gives the same
-    /// count).
+    /// count).  Models extrapolate stage by stage; the per-stage
+    /// estimates become the outcome's sub-ledgers and their sum is the
+    /// model estimate, so the sub-ledgers-sum-to-total invariant holds
+    /// on this tier too.
     fn extrapolate(&self, point: &EvalPoint) -> Result<EvalOutcome, String> {
-        let size = point.size();
+        let (cycles, attribution, stages) = match point.workload {
+            WorkloadKind::Kernel(b) => {
+                let (cycles, attr) =
+                    self.extrapolate_kernel(b, point.size(), point)?;
+                (cycles, attr, Vec::new())
+            }
+            WorkloadKind::Model(m) => {
+                let mut total = 0u64;
+                let mut attribution = CycleAttribution::default();
+                let mut stages = Vec::with_capacity(m.stages().len());
+                for st in m.stages() {
+                    let (cycles, attr) = self.extrapolate_kernel(
+                        st.benchmark,
+                        st.size,
+                        point,
+                    )?;
+                    total += cycles;
+                    attribution.accumulate(&attr);
+                    stages.push(StageLedger {
+                        name: st.name.to_string(),
+                        cycles,
+                        scalar_instructions: 0,
+                        vector_instructions: 0,
+                        mem_bytes: 0,
+                        attribution: attr,
+                    });
+                }
+                (total, attribution, stages)
+            }
+        };
+        metrics::EVAL_ANALYTIC.inc();
+        Ok(EvalOutcome {
+            cycles,
+            verified: false,
+            summary: RunSummary {
+                cycles,
+                lanes: point.config.lanes,
+                lane_busy: vec![0; point.config.lanes],
+                attribution,
+                ..Default::default()
+            },
+            stages,
+            provenance: Provenance::Analytic,
+            origin: Provenance::Analytic,
+        })
+    }
+
+    /// One kernel's analytic estimate at `size`: extrapolated cycles
+    /// plus the fit-shaped attribution scaled to them (sum == cycles).
+    fn extrapolate_kernel(
+        &self,
+        benchmark: Benchmark,
+        size: BenchSize,
+        point: &EvalPoint,
+    ) -> Result<(u64, CycleAttribution), String> {
         // The last (largest) fit run's breakdown is the best available
         // shape estimate; scaled pro-rata it keeps the sum-equals-cycles
         // invariant on the extrapolated summary.
         let mut fit_attr = CycleAttribution::default();
         let cycles = analytic::extrapolate_with(
-            point.benchmark,
+            benchmark,
             size,
             point.mode,
             &mut |fit_size| {
                 let session = self.sessions.session(
                     &self.programs,
-                    point.benchmark,
+                    benchmark,
                     fit_size,
                     point.mode,
                     point.config,
                 )?;
-                let workload = point.benchmark.workload(fit_size, 1);
+                let workload = benchmark.workload(fit_size, 1);
                 run_on_session(
                     &session,
-                    point.benchmark,
+                    benchmark,
                     fit_size,
                     point.mode,
                     &workload,
@@ -715,50 +912,68 @@ impl Evaluator {
                 .map_err(|e| e.to_string())
             },
         )?;
-        metrics::EVAL_ANALYTIC.inc();
-        Ok(EvalOutcome {
-            cycles,
-            verified: false,
-            summary: RunSummary {
-                cycles,
-                lanes: point.config.lanes,
-                lane_busy: vec![0; point.config.lanes],
-                attribution: scale_attribution(&fit_attr, cycles),
-                ..Default::default()
-            },
-            provenance: Provenance::Analytic,
-            origin: Provenance::Analytic,
-        })
+        Ok((cycles, scale_attribution(&fit_attr, cycles)))
     }
 
-    /// Simulation tier, scalar path: one session, one machine.
+    /// Simulation tier, scalar path: one session, one machine — or, for
+    /// a model point, every stage back-to-back through a
+    /// [`ModelSession`] with the output tensor handed forward in
+    /// simulated DRAM.
     fn simulate(
         &self,
         point: &EvalPoint,
         seed: u64,
     ) -> Result<EvalOutcome, String> {
+        let b = match point.workload {
+            WorkloadKind::Kernel(b) => b,
+            WorkloadKind::Model(m) => {
+                return self.simulate_model(m, point, seed)
+            }
+        };
         let size = point.size();
         let session = self.sessions.session(
             &self.programs,
-            point.benchmark,
+            b,
             size,
             point.mode,
             point.config,
         )?;
-        let workload = point.benchmark.workload(size, seed);
-        let r = run_on_session(
-            &session,
-            point.benchmark,
-            size,
-            point.mode,
-            &workload,
-        )
-        .map_err(|e| e.to_string())?;
+        let workload = b.workload(size, seed);
+        let r = run_on_session(&session, b, size, point.mode, &workload)
+            .map_err(|e| e.to_string())?;
         metrics::EVAL_SIMULATED.inc();
         Ok(EvalOutcome {
             cycles: r.cycles,
             verified: r.verified,
             summary: r.summary,
+            stages: Vec::new(),
+            provenance: Provenance::Simulated,
+            origin: Provenance::Simulated,
+        })
+    }
+
+    /// Model simulation: build (or fetch — every stage session goes
+    /// through the shared pool) the model session and run end-to-end.
+    fn simulate_model(
+        &self,
+        model: ModelId,
+        point: &EvalPoint,
+        seed: u64,
+    ) -> Result<EvalOutcome, String> {
+        let ms = ModelSession::build(
+            model,
+            point.mode,
+            point.config,
+            &self.programs,
+            &self.sessions,
+        )?;
+        let run = ms.run(seed, DEFAULT_BUDGET).map_err(|e| e.to_string())?;
+        metrics::EVAL_SIMULATED.inc();
+        Ok(EvalOutcome {
+            cycles: run.summary.cycles,
+            verified: run.verified,
+            summary: run.summary,
+            stages: run.stages,
             provenance: Provenance::Simulated,
             origin: Provenance::Simulated,
         })
@@ -776,9 +991,12 @@ impl Evaluator {
         seed: u64,
     ) -> Vec<EvalResult> {
         let lead = &points[members[0]];
+        // Lockstep chunks only form from `Some`-cohort (kernel) points.
+        let benchmark =
+            lead.kernel().expect("lockstep cohorts are kernel-only");
         let size = lead.size();
         let prepared =
-            match self.programs.prepared(lead.benchmark, size, lead.mode) {
+            match self.programs.prepared(benchmark, size, lead.mode) {
                 Ok(p) => p,
                 Err(e) => {
                     return members.iter().map(|_| Err(e.clone())).collect()
@@ -797,7 +1015,7 @@ impl Evaluator {
                 return members.iter().map(|_| Err(e.clone())).collect()
             }
         };
-        let workload = lead.benchmark.workload(size, seed);
+        let workload = benchmark.workload(size, seed);
         for (label, data) in &workload.inputs {
             let addr = batch.addr_of(label);
             batch.dram.write_i32_slice(addr, data);
@@ -822,6 +1040,7 @@ impl Evaluator {
                     cycles: summary.cycles,
                     verified,
                     summary,
+                    stages: Vec::new(),
                     provenance: Provenance::Simulated,
                     origin: Provenance::Simulated,
                 })
@@ -880,7 +1099,16 @@ mod tests {
         lanes: usize,
     ) -> EvalPoint {
         EvalPoint {
-            benchmark,
+            workload: WorkloadKind::Kernel(benchmark),
+            profile: profiles::TEST,
+            mode,
+            config: ArrowConfig { lanes, ..Default::default() },
+        }
+    }
+
+    fn model_point(model: ModelId, mode: Mode, lanes: usize) -> EvalPoint {
+        EvalPoint {
+            workload: WorkloadKind::Model(model),
             profile: profiles::TEST,
             mode,
             config: ArrowConfig { lanes, ..Default::default() },
@@ -894,7 +1122,7 @@ mod tests {
         let got = evaluator.evaluate(&point, 42, None).unwrap();
         assert_eq!(got.provenance, Provenance::Simulated);
         let want = run_benchmark(
-            point.benchmark,
+            point.kernel().unwrap(),
             point.size(),
             point.mode,
             point.config,
@@ -972,7 +1200,7 @@ mod tests {
         assert_eq!(got.origin, Provenance::Analytic);
         assert!(!got.verified);
         let want = analytic::extrapolate(
-            point.benchmark,
+            point.kernel().unwrap(),
             point.size(),
             point.mode,
             point.config,
@@ -1063,5 +1291,142 @@ mod tests {
         assert_eq!(upgraded.origin, Provenance::Simulated);
         assert_eq!(upgraded.cycles, exact.cycles);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn workload_names_parse_and_keys_stay_disjoint() {
+        assert_eq!(
+            WorkloadKind::by_name("vector_addition"),
+            Some(WorkloadKind::Kernel(Benchmark::VAdd))
+        );
+        assert_eq!(
+            WorkloadKind::by_name("model:tinycnn"),
+            Some(WorkloadKind::Model(ModelId::TinyCnn))
+        );
+        assert_eq!(
+            WorkloadKind::by_name("mlp"),
+            Some(WorkloadKind::Model(ModelId::Mlp))
+        );
+        let err = WorkloadKind::parse("nonesuch").unwrap_err();
+        assert!(err.contains("vector_addition"), "{err}");
+        assert!(err.contains("model:tinycnn"), "{err}");
+        // Kernel keys keep the pre-model byte format; model keys are
+        // prefixed so the two namespaces can never collide in a store.
+        let kp = test_point(Benchmark::VAdd, Mode::Vector, 2);
+        assert_eq!(
+            kp.key(5),
+            point_key(
+                Benchmark::VAdd,
+                &profiles::TEST,
+                Mode::Vector,
+                &kp.config,
+                5
+            )
+        );
+        let mp = model_point(ModelId::TinyCnn, Mode::Vector, 2);
+        assert!(mp.key(5).starts_with("model:tinycnn|"), "{}", mp.key(5));
+    }
+
+    #[test]
+    fn model_point_simulates_with_exact_stage_ledgers() {
+        let evaluator = Evaluator::new();
+        let point = model_point(ModelId::TinyCnn, Mode::Vector, 2);
+        let got = evaluator.evaluate(&point, 11, None).unwrap();
+        assert_eq!(got.provenance, Provenance::Simulated);
+        assert!(got.verified);
+        assert_eq!(got.stages.len(), ModelId::TinyCnn.stages().len());
+        let mut cycles = 0u64;
+        let mut attr = CycleAttribution::default();
+        for st in &got.stages {
+            cycles += st.cycles;
+            attr.accumulate(&st.attribution);
+        }
+        assert_eq!(cycles, got.cycles);
+        assert_eq!(attr, got.summary.attribution);
+        assert_eq!(got.summary.attribution.total(), got.cycles);
+        // One program per distinct (stage kernel, mode, size) group.
+        assert_eq!(evaluator.programs().len(), 4);
+    }
+
+    #[test]
+    fn model_store_roundtrip_preserves_stages() {
+        let dir = tmp_dir("model-store");
+        let point = model_point(ModelId::VecChain, Mode::Vector, 2);
+        let first = {
+            let evaluator = Evaluator::with_store_dir(&dir).unwrap();
+            evaluator.evaluate(&point, 3, None).unwrap()
+        };
+        assert_eq!(first.provenance, Provenance::Simulated);
+        let evaluator = Evaluator::with_store_dir(&dir).unwrap();
+        let hit = evaluator.evaluate(&point, 3, None).unwrap();
+        assert_eq!(hit.provenance, Provenance::Cached);
+        assert_eq!(hit.origin, Provenance::Simulated);
+        assert_eq!(hit.cycles, first.cycles);
+        assert_eq!(hit.summary, first.summary);
+        assert_eq!(hit.stages, first.stages);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn model_analytic_routing_respects_stage_validity() {
+        let evaluator = Evaluator::new();
+        // vecchain: every stage strip-aligned in vector mode → analytic
+        // at a zero limit, with per-stage estimate ledgers that sum to
+        // the model estimate.
+        let chain = model_point(ModelId::VecChain, Mode::Vector, 2);
+        let est = evaluator.evaluate(&chain, 4, Some(0)).unwrap();
+        assert_eq!(est.provenance, Provenance::Analytic);
+        assert!(!est.verified);
+        assert_eq!(est.stages.len(), 3);
+        let sum: u64 = est.stages.iter().map(|s| s.cycles).sum();
+        assert_eq!(sum, est.cycles);
+        assert_eq!(est.summary.attribution.total(), est.cycles);
+        // The fit passes through the exactly-simulated stage sizes, so
+        // the estimate equals the end-to-end simulation here.
+        let sim = evaluator.evaluate(&chain, 4, None).unwrap();
+        assert_eq!(est.cycles, sim.cycles);
+        // tinycnn has strip-unaligned stages (pool 16, fc 8) in vector
+        // mode: the whole model must refuse the analytic tier.
+        let cnn = model_point(ModelId::TinyCnn, Mode::Vector, 2);
+        let got = evaluator.evaluate(&cnn, 4, Some(0)).unwrap();
+        assert_eq!(got.provenance, Provenance::Simulated);
+    }
+
+    #[test]
+    fn batch_routes_models_through_per_point_path() {
+        let evaluator = Evaluator::new();
+        let points = vec![
+            test_point(Benchmark::VAdd, Mode::Vector, 1),
+            model_point(ModelId::VecChain, Mode::Vector, 2),
+            test_point(Benchmark::VAdd, Mode::Vector, 2),
+            model_point(ModelId::Mlp, Mode::Vector, 2),
+        ];
+        let batch = evaluator.evaluate_batch(&points, 6, None, None);
+        // The two VAdd points lockstep; both models stay singles.
+        assert_eq!(batch.batched_points, 2);
+        assert_eq!(batch.batch_groups, 1);
+        let sequential = Evaluator::new();
+        for (point, got) in points.iter().zip(&batch.results) {
+            let want = sequential.evaluate(point, 6, None).unwrap();
+            assert_eq!(got.as_ref().unwrap(), &want, "{}", point.key(6));
+        }
+        // Width 1 changes nothing for models.
+        let narrow = evaluator.evaluate_batch(&points, 6, None, Some(1));
+        assert_eq!(narrow.batched_points, 0);
+        assert_eq!(narrow.results, batch.results);
+    }
+
+    #[test]
+    fn warm_point_builds_every_model_stage() {
+        let evaluator = Evaluator::new();
+        let point = model_point(ModelId::TinyCnn, Mode::Vector, 2);
+        evaluator.warm_point(&point).unwrap();
+        // Four stages, four distinct (kernel, mode, size) sessions.
+        assert_eq!(evaluator.sessions().len(), 4);
+        assert_eq!(evaluator.sessions().misses(), 4);
+        // The real evaluation reuses all of them.
+        evaluator.evaluate(&point, 1, None).unwrap();
+        assert_eq!(evaluator.sessions().hits(), 4);
+        assert_eq!(evaluator.sessions().misses(), 4);
     }
 }

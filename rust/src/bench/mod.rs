@@ -9,6 +9,9 @@
 //!   scaled-down profiles for fast functional testing and the registry
 //!   of named timing variants (the sweep grid's timing axis).
 //! * [`suite`] — the assembly generators and expected-result oracles.
+//! * [`models`] — built-in multi-kernel models: ordered stage chains
+//!   over the suite (tinycnn, mlp, vecchain) evaluated end-to-end as
+//!   one workload through `system::model::ModelSession`.
 //! * [`runner`] — assemble + load + simulate + verify one benchmark.
 //! * [`analytic`] — the cycle-count extrapolation for profiles too large
 //!   to step instruction-by-instruction (DESIGN.md §6): per-benchmark
@@ -43,6 +46,7 @@ pub mod cnn;
 pub mod eval;
 pub mod fleet;
 pub mod loadgen;
+pub mod models;
 pub mod profiles;
 pub mod runner;
 pub mod store;
@@ -53,7 +57,9 @@ pub use cluster::{run_cluster, run_fleet, ClusterReport, ClusterSpec, FleetSpec}
 pub use fleet::{Member, MemberState, Membership, Registration};
 pub use eval::{
     point_key, EvalOutcome, EvalPoint, Evaluator, ProgramCache, Provenance,
+    WorkloadKind,
 };
+pub use models::{ModelId, MODELS};
 pub use profiles::{
     ConvShape, Profile, TimingVariant, PROFILES, TIMING_VARIANTS,
 };

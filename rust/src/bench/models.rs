@@ -1,0 +1,336 @@
+//! Built-in multi-kernel models: ordered chains of suite benchmarks
+//! evaluated end-to-end as one workload.
+//!
+//! A model is an ordered list of *stages*; each stage is one of the nine
+//! suite benchmarks at a fixed [`BenchSize`].  The chaining contract is
+//! structural: every benchmark takes its activation as the first input
+//! (`in_a`) and writes its result to `out`, and stage `k`'s activation
+//! length equals stage `k-1`'s output length (pinned by a test over the
+//! whole registry).  Non-activation inputs (weights, second operands)
+//! are per-stage parameters drawn from the model's own seed stream.
+//!
+//! The three built-ins mirror `python/compile/model.py`'s small-CNN
+//! shape at sizes the simulator steps in milliseconds, so the default
+//! build needs no Python: the AOT pipeline emits the same stage chains
+//! as a versioned model manifest (`aot.py --models`), and the golden
+//! fixtures under `rust/tests/golden/` pin the two against each other.
+
+use super::runner::{estimated_instructions, Mode};
+use super::suite::{gen, BenchSize, Benchmark, Workload, BENCHMARKS};
+
+/// One of the built-in models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    /// conv → relu → maxpool → matmul: the `python/compile` small CNN's
+    /// layer chain at test scale.
+    TinyCnn,
+    /// matmul → relu → matmul: a two-layer perceptron on a 16×16
+    /// activation.
+    Mlp,
+    /// vadd → vmul → relu: a pure element-wise chain (residual-add,
+    /// scale, activation).
+    VecChain,
+}
+
+/// Registry of every built-in model, in canonical order.
+pub const MODELS: [ModelId; 3] =
+    [ModelId::TinyCnn, ModelId::Mlp, ModelId::VecChain];
+
+/// One layer of a model: a suite benchmark at a fixed size.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelStage {
+    /// Layer name (`conv`, `relu`, …) — used in stage ledgers, trace
+    /// spans and the per-layer report table.
+    pub name: &'static str,
+    pub benchmark: Benchmark,
+    pub size: BenchSize,
+}
+
+/// Static definition of one model.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelDef {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub stages: &'static [ModelStage],
+}
+
+const fn vec_size(n: usize) -> BenchSize {
+    BenchSize { n, k: 0, batch: 0 }
+}
+
+static TINYCNN: ModelDef = ModelDef {
+    name: "tinycnn",
+    description: "small CNN: conv 18x18/3x3 -> relu 256 -> maxpool 16x16 \
+                  -> matmul 8x8",
+    stages: &[
+        ModelStage {
+            name: "conv",
+            benchmark: Benchmark::Conv2d,
+            size: BenchSize { n: 18, k: 3, batch: 1 },
+        },
+        ModelStage {
+            name: "relu",
+            benchmark: Benchmark::VRelu,
+            size: vec_size(256),
+        },
+        ModelStage {
+            name: "pool",
+            benchmark: Benchmark::MaxPool,
+            size: vec_size(16),
+        },
+        ModelStage {
+            name: "fc",
+            benchmark: Benchmark::MatMul,
+            size: vec_size(8),
+        },
+    ],
+};
+
+static MLP: ModelDef = ModelDef {
+    name: "mlp",
+    description: "two-layer perceptron: matmul 16x16 -> relu 256 -> \
+                  matmul 16x16",
+    stages: &[
+        ModelStage {
+            name: "fc1",
+            benchmark: Benchmark::MatMul,
+            size: vec_size(16),
+        },
+        ModelStage {
+            name: "relu",
+            benchmark: Benchmark::VRelu,
+            size: vec_size(256),
+        },
+        ModelStage {
+            name: "fc2",
+            benchmark: Benchmark::MatMul,
+            size: vec_size(16),
+        },
+    ],
+};
+
+static VECCHAIN: ModelDef = ModelDef {
+    name: "vecchain",
+    description: "element-wise chain: vadd 128 -> vmul 128 -> relu 128",
+    stages: &[
+        ModelStage {
+            name: "add",
+            benchmark: Benchmark::VAdd,
+            size: vec_size(128),
+        },
+        ModelStage {
+            name: "mul",
+            benchmark: Benchmark::VMul,
+            size: vec_size(128),
+        },
+        ModelStage {
+            name: "relu",
+            benchmark: Benchmark::VRelu,
+            size: vec_size(128),
+        },
+    ],
+};
+
+/// Deterministic workload for a whole model: the activation tensor plus
+/// every stage's parameters drawn from one seed stream, and per-stage
+/// expected tensors composed by chaining each stage's oracle.
+#[derive(Debug, Clone)]
+pub struct ModelWorkload {
+    /// Per-stage workloads: stage `k`'s `in_a` is stage `k-1`'s
+    /// expected output (oracle-composed).
+    pub stages: Vec<Workload>,
+    /// The final stage's expected output — the model's result tensor.
+    pub expected: Vec<i32>,
+}
+
+impl ModelId {
+    pub fn name(&self) -> &'static str {
+        self.def().name
+    }
+
+    /// Namespaced workload name (`model:tinycnn`) — the first segment
+    /// of model point keys, disjoint from every kernel name by the
+    /// `model:` prefix.
+    pub fn qualified_name(&self) -> &'static str {
+        match self {
+            ModelId::TinyCnn => "model:tinycnn",
+            ModelId::Mlp => "model:mlp",
+            ModelId::VecChain => "model:vecchain",
+        }
+    }
+
+    /// Accepts the bare model name or its `model:`-qualified form.
+    pub fn by_name(name: &str) -> Option<ModelId> {
+        let bare = name.strip_prefix("model:").unwrap_or(name);
+        MODELS.iter().copied().find(|m| m.name() == bare)
+    }
+
+    pub fn def(&self) -> &'static ModelDef {
+        match self {
+            ModelId::TinyCnn => &TINYCNN,
+            ModelId::Mlp => &MLP,
+            ModelId::VecChain => &VECCHAIN,
+        }
+    }
+
+    pub fn stages(&self) -> &'static [ModelStage] {
+        self.def().stages
+    }
+
+    /// Element count of the model's input activation.
+    pub fn input_len(&self) -> usize {
+        let first = &self.stages()[0];
+        first.benchmark.input_len(first.size)
+    }
+
+    /// Element count of the model's output tensor.
+    pub fn output_len(&self) -> usize {
+        let last = self.stages().last().unwrap();
+        last.benchmark.output_len(last.size)
+    }
+
+    /// Estimated instruction total across all stages — the model's
+    /// scheduling cost for analytic routing and shard carving.
+    pub fn estimated_instructions(&self, mode: Mode) -> u64 {
+        self.stages()
+            .iter()
+            .fold(0u64, |acc, st| {
+                acc.saturating_add(estimated_instructions(
+                    st.benchmark,
+                    st.size,
+                    mode,
+                ))
+            })
+    }
+
+    /// Generate the model workload: one LCG stream (model-specific seed
+    /// mix, disjoint from the kernel stream's) yields the input
+    /// activation first, then each stage's parameters in stage order;
+    /// expected tensors are composed by chaining stage oracles.
+    pub fn workload(&self, seed: u64) -> ModelWorkload {
+        let mut seed = seed ^ 0x0DE1_u64.rotate_left(17);
+        let mut activation = gen(self.input_len(), &mut seed);
+        let params: Vec<Vec<(&'static str, Vec<i32>)>> = self
+            .stages()
+            .iter()
+            .map(|st| st.benchmark.param_inputs(st.size, &mut seed))
+            .collect();
+        let mut stages = Vec::with_capacity(self.stages().len());
+        for (st, p) in self.stages().iter().zip(params) {
+            let mut inputs = vec![("in_a", activation)];
+            inputs.extend(p);
+            let expected = st.benchmark.oracle(st.size, &inputs);
+            activation = expected.clone();
+            stages.push(Workload { inputs, expected, result_label: "out" });
+        }
+        ModelWorkload { stages, expected: activation }
+    }
+}
+
+/// Every valid workload name — the nine kernels then the models in
+/// registry order — for "unknown workload" error messages that tell the
+/// caller what *would* parse.
+pub fn workload_names() -> String {
+    let mut names: Vec<&'static str> =
+        BENCHMARKS.iter().map(|b| b.name()).collect();
+    names.extend(MODELS.iter().map(|m| m.qualified_name()));
+    names.join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_roundtrip() {
+        for m in MODELS {
+            assert_eq!(ModelId::by_name(m.name()), Some(m));
+            assert_eq!(ModelId::by_name(m.qualified_name()), Some(m));
+            assert!(
+                m.qualified_name().starts_with("model:"),
+                "{} must be namespaced",
+                m.name()
+            );
+            // Model names can never shadow a kernel name.
+            assert_eq!(Benchmark::by_name(m.qualified_name()), None);
+        }
+        assert_eq!(ModelId::by_name("nope"), None);
+        let names = workload_names();
+        assert!(names.contains("vector_addition"));
+        assert!(names.contains("model:tinycnn"));
+    }
+
+    #[test]
+    fn stage_shapes_chain() {
+        // Stage k's activation length must equal stage k-1's output
+        // length for every registered model — the structural contract
+        // ModelSession's DRAM hand-off relies on.
+        for m in MODELS {
+            let stages = m.stages();
+            assert!(!stages.is_empty());
+            for pair in stages.windows(2) {
+                assert_eq!(
+                    pair[0].benchmark.output_len(pair[0].size),
+                    pair[1].benchmark.input_len(pair[1].size),
+                    "{}: {} -> {} shape mismatch",
+                    m.name(),
+                    pair[0].name,
+                    pair[1].name,
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn workload_composes_and_is_deterministic() {
+        for m in MODELS {
+            let w = m.workload(42);
+            assert_eq!(w.stages.len(), m.stages().len());
+            assert_eq!(w.expected.len(), m.output_len());
+            assert_eq!(w.stages.last().unwrap().expected, w.expected);
+            // Chained: each stage's in_a is the previous expected.
+            for pair in w.stages.windows(2) {
+                assert_eq!(pair[1].inputs[0].1, pair[0].expected);
+            }
+            // Per-stage expected tensors match the stage oracle run on
+            // the chained inputs.
+            for (st, sw) in m.stages().iter().zip(&w.stages) {
+                assert_eq!(
+                    st.benchmark.oracle(st.size, &sw.inputs),
+                    sw.expected,
+                    "{} stage {}",
+                    m.name(),
+                    st.name
+                );
+            }
+            assert_eq!(m.workload(42).expected, w.expected);
+            assert_ne!(m.workload(43).stages[0].inputs[0].1, w.stages[0].inputs[0].1);
+        }
+    }
+
+    #[test]
+    fn model_seed_stream_disjoint_from_kernel_stream() {
+        // Same raw seed, different mix: the vecchain activation must not
+        // equal the VAdd kernel workload's activation.
+        let mw = ModelId::VecChain.workload(7);
+        let kw = Benchmark::VAdd.workload(vec_size(128), 7);
+        assert_ne!(mw.stages[0].inputs[0].1, kw.inputs[0].1);
+    }
+
+    #[test]
+    fn estimated_cost_sums_stages() {
+        for m in MODELS {
+            for mode in [Mode::Scalar, Mode::Vector] {
+                let want: u64 = m
+                    .stages()
+                    .iter()
+                    .map(|st| {
+                        estimated_instructions(st.benchmark, st.size, mode)
+                    })
+                    .sum();
+                assert_eq!(m.estimated_instructions(mode), want);
+                assert!(want > 0);
+            }
+        }
+    }
+}

@@ -26,6 +26,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::system::machine::RunSummary;
+use crate::system::model::StageLedger;
 use crate::util::json::{self, Json};
 
 use super::eval::{EvalOutcome, Provenance};
@@ -515,7 +516,7 @@ pub(crate) fn attribution_json(
 }
 
 fn record_json(key: &str, outcome: &EvalOutcome, version: &str) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("v", version.into()),
         ("key", key.into()),
         ("cycles", outcome.cycles.into()),
@@ -524,7 +525,58 @@ fn record_json(key: &str, outcome: &EvalOutcome, version: &str) -> Json {
         // their origin and only the in-memory `provenance` says Cached.
         ("provenance", outcome.origin.name().into()),
         ("summary", summary_json(&outcome.summary)),
-    ])
+    ];
+    // Only model outcomes carry stage sub-ledgers; kernel records stay
+    // byte-identical to the pre-model format.
+    if !outcome.stages.is_empty() {
+        fields.push(("stages", stages_json(&outcome.stages)));
+    }
+    Json::obj(fields)
+}
+
+/// Serialize model stage sub-ledgers (shared with the sweep wire
+/// format: the cluster ships per-stage ledgers back byte-exactly).
+pub(crate) fn stages_json(stages: &[StageLedger]) -> Json {
+    Json::Arr(
+        stages
+            .iter()
+            .map(|st| {
+                Json::obj(vec![
+                    ("name", st.name.as_str().into()),
+                    ("cycles", st.cycles.into()),
+                    ("scalar_instructions", st.scalar_instructions.into()),
+                    ("vector_instructions", st.vector_instructions.into()),
+                    ("mem_bytes", st.mem_bytes.into()),
+                    ("cycles_by_category", attribution_json(&st.attribution)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Inverse of [`stages_json`].  A missing `stages` field is an empty
+/// list (every kernel record); a malformed one poisons the record.
+pub(crate) fn parse_stages(j: Option<&Json>) -> Option<Vec<StageLedger>> {
+    let Some(j) = j else { return Some(Vec::new()) };
+    j.as_arr()?
+        .iter()
+        .map(|st| {
+            let a = st.get("cycles_by_category")?;
+            Some(StageLedger {
+                name: st.get("name")?.as_str()?.to_string(),
+                cycles: u64_field(st, "cycles")?,
+                scalar_instructions: u64_field(st, "scalar_instructions")?,
+                vector_instructions: u64_field(st, "vector_instructions")?,
+                mem_bytes: u64_field(st, "mem_bytes")?,
+                attribution: crate::system::machine::CycleAttribution {
+                    scalar: u64_field(a, "scalar")?,
+                    dispatch_stall: u64_field(a, "dispatch_stall")?,
+                    vec_alu: u64_field(a, "vec_alu")?,
+                    vec_mem: u64_field(a, "vec_mem")?,
+                },
+            })
+        })
+        .collect()
 }
 
 fn u64_field(j: &Json, key: &str) -> Option<u64> {
@@ -597,6 +649,7 @@ fn parse_record(line: &str, version: &str) -> Option<(String, EvalOutcome)> {
         cycles: u64_field(&j, "cycles")?,
         verified: j.get("verified")?.as_bool()?,
         summary: parse_summary(j.get("summary")?)?,
+        stages: parse_stages(j.get("stages"))?,
         provenance: origin,
         origin,
     };
@@ -653,9 +706,61 @@ mod tests {
                     vec_mem: 2000,
                 },
             },
+            stages: Vec::new(),
             provenance: Provenance::Simulated,
             origin: Provenance::Simulated,
         }
+    }
+
+    fn sample_model_outcome() -> EvalOutcome {
+        let mut outcome = sample_outcome();
+        outcome.stages = vec![
+            StageLedger {
+                name: "conv".to_string(),
+                cycles: 8000,
+                scalar_instructions: 40,
+                vector_instructions: 50,
+                mem_bytes: 9,
+                attribution: crate::system::machine::CycleAttribution {
+                    scalar: 4000,
+                    dispatch_stall: 200,
+                    vec_alu: 2500,
+                    vec_mem: 1300,
+                },
+            },
+            StageLedger {
+                name: "relu".to_string(),
+                cycles: 4345,
+                scalar_instructions: 27,
+                vector_instructions: 39,
+                mem_bytes: 4,
+                attribution: crate::system::machine::CycleAttribution {
+                    scalar: 2000,
+                    dispatch_stall: 145,
+                    vec_alu: 1500,
+                    vec_mem: 700,
+                },
+            },
+        ];
+        outcome
+    }
+
+    #[test]
+    fn model_stage_ledgers_roundtrip() {
+        let dir = tmp_dir("stages");
+        let outcome = sample_model_outcome();
+        {
+            let store = ResultStore::open(&dir).unwrap();
+            store.put("m1", &outcome).unwrap();
+            assert_eq!(store.get("m1").unwrap().stages, outcome.stages);
+        }
+        // Across a re-open: stages survive the disk roundtrip exactly,
+        // and kernel records (no stages field) parse to an empty list.
+        let store = ResultStore::open(&dir).unwrap();
+        assert_eq!(store.get("m1").unwrap().stages, outcome.stages);
+        store.put("k1", &sample_outcome()).unwrap();
+        assert!(store.get("k1").unwrap().stages.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -64,7 +64,10 @@ fn lcg(seed: &mut u64) -> i32 {
     ((*seed >> 33) as i32 % 101) - 50
 }
 
-fn gen(len: usize, seed: &mut u64) -> Vec<i32> {
+/// Draw `len` workload values from the LCG stream.  `pub(crate)` so
+/// model workloads ([`super::models`]) can draw their activation and
+/// per-stage parameters from one stream in a pinned order.
+pub(crate) fn gen(len: usize, seed: &mut u64) -> Vec<i32> {
     (0..len).map(|_| lcg(seed)).collect()
 }
 
@@ -149,64 +152,93 @@ impl Benchmark {
         }
     }
 
-    /// Generate inputs + expected output (wrapping i32 semantics).
-    pub fn workload(&self, s: BenchSize, seed: u64) -> Workload {
-        let mut seed = seed ^ 0xA770_u64.rotate_left(17);
+    /// Element count of the activation input (`in_a`) — every benchmark
+    /// takes its activation as the first input, which is what lets a
+    /// model chain one stage's output into the next stage's `in_a`.
+    pub fn input_len(&self, s: BenchSize) -> usize {
         match self {
-            Benchmark::VAdd | Benchmark::VMul | Benchmark::MatAdd => {
-                let len = if *self == Benchmark::MatAdd { s.n * s.n } else { s.n };
-                let a = gen(len, &mut seed);
-                let b = gen(len, &mut seed);
-                let expected = a
-                    .iter()
-                    .zip(&b)
-                    .map(|(&x, &y)| {
-                        if *self == Benchmark::VMul {
-                            x.wrapping_mul(y)
-                        } else {
-                            x.wrapping_add(y)
-                        }
-                    })
-                    .collect();
-                Workload {
-                    inputs: vec![("in_a", a), ("in_b", b)],
-                    expected,
-                    result_label: "out",
-                }
+            Benchmark::VAdd
+            | Benchmark::VMul
+            | Benchmark::VDot
+            | Benchmark::VMaxReduce
+            | Benchmark::VRelu => s.n,
+            Benchmark::MatAdd | Benchmark::MatMul | Benchmark::MaxPool => {
+                s.n * s.n
+            }
+            Benchmark::Conv2d => s.batch * s.n * s.n,
+        }
+    }
+
+    /// Element count of the result (`out`).
+    pub fn output_len(&self, s: BenchSize) -> usize {
+        match self {
+            Benchmark::VAdd | Benchmark::VMul | Benchmark::VRelu => s.n,
+            Benchmark::VDot | Benchmark::VMaxReduce => 1,
+            Benchmark::MatAdd | Benchmark::MatMul => s.n * s.n,
+            Benchmark::MaxPool => (s.n / 2) * (s.n / 2),
+            Benchmark::Conv2d => {
+                let o = s.n - s.k + 1;
+                s.batch * o * o
+            }
+        }
+    }
+
+    /// Generate the non-activation parameter inputs (weights, second
+    /// operands), drawn from `seed` in exactly the order [`workload`]
+    /// draws them after the activation — the model workload generator
+    /// relies on that order to stay byte-compatible.
+    ///
+    /// [`workload`]: Benchmark::workload
+    pub fn param_inputs(
+        &self,
+        s: BenchSize,
+        seed: &mut u64,
+    ) -> Vec<(&'static str, Vec<i32>)> {
+        match self {
+            Benchmark::VAdd | Benchmark::VMul | Benchmark::VDot => {
+                vec![("in_b", gen(s.n, seed))]
+            }
+            Benchmark::MatAdd | Benchmark::MatMul => {
+                vec![("in_b", gen(s.n * s.n, seed))]
+            }
+            Benchmark::VMaxReduce | Benchmark::VRelu | Benchmark::MaxPool => {
+                vec![]
+            }
+            Benchmark::Conv2d => vec![("wt", gen(s.k * s.k, seed))],
+        }
+    }
+
+    /// Expected output for arbitrary inputs (wrapping i32 semantics) —
+    /// the reference oracle, factored out of [`workload`] so model
+    /// workloads can run it on *chained* activations instead of
+    /// freshly generated ones.
+    ///
+    /// [`workload`]: Benchmark::workload
+    pub fn oracle(
+        &self,
+        s: BenchSize,
+        inputs: &[(&'static str, Vec<i32>)],
+    ) -> Vec<i32> {
+        let a = &inputs[0].1;
+        match self {
+            Benchmark::VAdd | Benchmark::MatAdd => {
+                let b = &inputs[1].1;
+                a.iter().zip(b).map(|(&x, &y)| x.wrapping_add(y)).collect()
+            }
+            Benchmark::VMul => {
+                let b = &inputs[1].1;
+                a.iter().zip(b).map(|(&x, &y)| x.wrapping_mul(y)).collect()
             }
             Benchmark::VDot => {
-                let a = gen(s.n, &mut seed);
-                let b = gen(s.n, &mut seed);
-                let acc = a.iter().zip(&b).fold(0i32, |acc, (&x, &y)| {
+                let b = &inputs[1].1;
+                vec![a.iter().zip(b).fold(0i32, |acc, (&x, &y)| {
                     acc.wrapping_add(x.wrapping_mul(y))
-                });
-                Workload {
-                    inputs: vec![("in_a", a), ("in_b", b)],
-                    expected: vec![acc],
-                    result_label: "out",
-                }
+                })]
             }
-            Benchmark::VMaxReduce => {
-                let a = gen(s.n, &mut seed);
-                let m = *a.iter().max().unwrap();
-                Workload {
-                    inputs: vec![("in_a", a)],
-                    expected: vec![m],
-                    result_label: "out",
-                }
-            }
-            Benchmark::VRelu => {
-                let a = gen(s.n, &mut seed);
-                let expected = a.iter().map(|&x| x.max(0)).collect();
-                Workload {
-                    inputs: vec![("in_a", a)],
-                    expected,
-                    result_label: "out",
-                }
-            }
+            Benchmark::VMaxReduce => vec![*a.iter().max().unwrap()],
+            Benchmark::VRelu => a.iter().map(|&x| x.max(0)).collect(),
             Benchmark::MatMul => {
-                let a = gen(s.n * s.n, &mut seed);
-                let b = gen(s.n * s.n, &mut seed);
+                let b = &inputs[1].1;
                 let n = s.n;
                 let mut expected = vec![0i32; n * n];
                 for i in 0..n {
@@ -218,14 +250,9 @@ impl Benchmark {
                         }
                     }
                 }
-                Workload {
-                    inputs: vec![("in_a", a), ("in_b", b)],
-                    expected,
-                    result_label: "out",
-                }
+                expected
             }
             Benchmark::MaxPool => {
-                let a = gen(s.n * s.n, &mut seed);
                 let n = s.n;
                 let h = n / 2;
                 let mut expected = vec![0i32; h * h];
@@ -237,16 +264,11 @@ impl Benchmark {
                             .max(a[(2 * i + 1) * n + 2 * j + 1]);
                     }
                 }
-                Workload {
-                    inputs: vec![("in_a", a)],
-                    expected,
-                    result_label: "out",
-                }
+                expected
             }
             Benchmark::Conv2d => {
                 let (n, k, b) = (s.n, s.k, s.batch);
-                let x = gen(b * n * n, &mut seed);
-                let w = gen(k * k, &mut seed);
+                let w = &inputs[1].1;
                 let o = n - k + 1;
                 let mut expected = vec![0i32; b * o * o];
                 for im in 0..b {
@@ -257,7 +279,7 @@ impl Benchmark {
                                 for c in 0..k {
                                     acc = acc.wrapping_add(
                                         w[r * k + c].wrapping_mul(
-                                            x[im * n * n + (i + r) * n + j + c],
+                                            a[im * n * n + (i + r) * n + j + c],
                                         ),
                                     );
                                 }
@@ -266,13 +288,19 @@ impl Benchmark {
                         }
                     }
                 }
-                Workload {
-                    inputs: vec![("in_a", x), ("wt", w)],
-                    expected,
-                    result_label: "out",
-                }
+                expected
             }
         }
+    }
+
+    /// Generate inputs + expected output (wrapping i32 semantics).
+    pub fn workload(&self, s: BenchSize, seed: u64) -> Workload {
+        let mut seed = seed ^ 0xA770_u64.rotate_left(17);
+        let mut inputs =
+            vec![("in_a", gen(self.input_len(s), &mut seed))];
+        inputs.extend(self.param_inputs(s, &mut seed));
+        let expected = self.oracle(s, &inputs);
+        Workload { inputs, expected, result_label: "out" }
     }
 
     /// Scalar (RV32IM-only) assembly.
@@ -987,6 +1015,25 @@ mod tests {
         let w = Benchmark::VDot
             .workload(BenchSize { n: 64, k: 0, batch: 0 }, 1);
         assert_eq!(w.expected.len(), 1);
+    }
+
+    #[test]
+    fn oracle_factoring_matches_workload() {
+        // The factored input-shape / oracle seams must agree with the
+        // composed workload for every benchmark — model chaining relies
+        // on exactly this.
+        for b in BENCHMARKS {
+            let s = if b == Benchmark::Conv2d {
+                BenchSize { n: 8, k: 3, batch: 2 }
+            } else {
+                BenchSize { n: 16, k: 0, batch: 0 }
+            };
+            let w = b.workload(s, 11);
+            assert_eq!(w.inputs[0].0, "in_a", "{}", b.name());
+            assert_eq!(w.inputs[0].1.len(), b.input_len(s), "{}", b.name());
+            assert_eq!(w.expected.len(), b.output_len(s), "{}", b.name());
+            assert_eq!(b.oracle(s, &w.inputs), w.expected, "{}", b.name());
+        }
     }
 
     #[test]

@@ -39,7 +39,8 @@ use crate::energy::EnergyModel;
 use crate::util::json::Json;
 
 use super::analytic;
-use super::eval::{EvalPoint, Evaluator, DEFAULT_BATCH_WIDTH};
+use super::eval::{EvalPoint, Evaluator, WorkloadKind, DEFAULT_BATCH_WIDTH};
+use super::models::ModelId;
 use super::profiles::{self, Profile, TimingVariant};
 use super::runner::{self, Mode};
 use super::store::ResultStore;
@@ -50,10 +51,16 @@ pub use super::eval::{point_key, EvalOutcome as SweepOutcome, Provenance};
 /// What one grid point produced: an outcome, or a per-point error.
 pub type PointResult = super::eval::EvalResult;
 
-/// The grid to sweep: the cartesian product of every field.
+/// The grid to sweep: the cartesian product of every field.  The
+/// workload axis is the concatenation `benchmarks ++ models` — kernels
+/// first, then whole models, in the order given.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
     pub benchmarks: Vec<Benchmark>,
+    /// Built-in models swept end-to-end alongside the kernels (`arrow
+    /// sweep --models tinycnn`).  Appended after `benchmarks` on the
+    /// workload axis; empty by default.
+    pub models: Vec<ModelId>,
     pub profiles: Vec<Profile>,
     pub modes: Vec<Mode>,
     pub lanes: Vec<usize>,
@@ -86,6 +93,7 @@ impl Default for SweepSpec {
     fn default() -> Self {
         SweepSpec {
             benchmarks: BENCHMARKS.to_vec(),
+            models: Vec::new(),
             profiles: vec![profiles::TEST],
             modes: vec![Mode::Vector],
             lanes: vec![2],
@@ -105,7 +113,8 @@ impl Default for SweepSpec {
 pub const MAX_SWEEP_THREADS: usize = 64;
 
 /// Number of cartesian axes in a [`SweepSpec`] grid, outermost first:
-/// benchmarks, profiles, modes, lanes, VLENs, ELENs, timing variants.
+/// workloads (benchmarks ++ models), profiles, modes, lanes, VLENs,
+/// ELENs, timing variants.
 const AXES: usize = 7;
 
 /// One shard of the grid: a half-open index range per axis.  Only the
@@ -116,7 +125,7 @@ type AxisRanges = [(usize, usize); AXES];
 impl SweepSpec {
     fn axis_lens(&self) -> [usize; AXES] {
         [
-            self.benchmarks.len(),
+            self.benchmarks.len() + self.models.len(),
             self.profiles.len(),
             self.modes.len(),
             self.lanes.len(),
@@ -124,6 +133,16 @@ impl SweepSpec {
             self.elens.len(),
             self.timing.len(),
         ]
+    }
+
+    /// The workload at index `i` of the concatenated workload axis:
+    /// kernels first, then models.
+    fn workload_at(&self, i: usize) -> WorkloadKind {
+        if i < self.benchmarks.len() {
+            WorkloadKind::Kernel(self.benchmarks[i])
+        } else {
+            WorkloadKind::Model(self.models[i - self.benchmarks.len()])
+        }
     }
 
     /// Number of grid points (before deduplication).  Saturates rather
@@ -135,14 +154,16 @@ impl SweepSpec {
     }
 
     /// Expand the cartesian grid in its canonical deterministic order
-    /// (benchmarks, then profiles, modes, lanes, VLENs, ELENs, timing
-    /// variants — outermost first), pairing every point with its
-    /// canonical key.  This order is the report order of [`run_sweep`]
-    /// and the contract [`partition`](SweepSpec::partition) preserves.
+    /// (workloads — benchmarks then models — then profiles, modes,
+    /// lanes, VLENs, ELENs, timing variants — outermost first), pairing
+    /// every point with its canonical key.  This order is the report
+    /// order of [`run_sweep`] and the contract
+    /// [`partition`](SweepSpec::partition) preserves.
     pub fn expand(&self) -> Vec<(EvalPoint, String)> {
         let mut grid: Vec<(EvalPoint, String)> =
             Vec::with_capacity(self.grid_len());
-        for &benchmark in &self.benchmarks {
+        for wi in 0..self.benchmarks.len() + self.models.len() {
+            let workload = self.workload_at(wi);
             for profile in &self.profiles {
                 for &mode in &self.modes {
                     for &lanes in &self.lanes {
@@ -150,7 +171,7 @@ impl SweepSpec {
                             for &elen_bits in &self.elens {
                                 for variant in &self.timing {
                                     let point = EvalPoint::from_axes(
-                                        benchmark, *profile, mode, lanes,
+                                        workload, *profile, mode, lanes,
                                         vlen_bits, elen_bits, variant,
                                     );
                                     let key = point.key(self.seed);
@@ -165,10 +186,17 @@ impl SweepSpec {
         grid
     }
 
-    /// The sub-spec selecting `ranges` of this spec's axes.
+    /// The sub-spec selecting `ranges` of this spec's axes.  Axis 0 is
+    /// the `benchmarks ++ models` concatenation, so its range splits
+    /// across the two vectors.
     fn slice(&self, r: &AxisRanges) -> SweepSpec {
+        let nb = self.benchmarks.len();
+        let (ws, we) = r[0];
         SweepSpec {
-            benchmarks: self.benchmarks[r[0].0..r[0].1].to_vec(),
+            benchmarks: self.benchmarks[ws.min(nb)..we.min(nb)].to_vec(),
+            models: self.models
+                [ws.saturating_sub(nb)..we.saturating_sub(nb)]
+                .to_vec(),
             profiles: self.profiles[r[1].0..r[1].1].to_vec(),
             modes: self.modes[r[2].0..r[2].1].to_vec(),
             lanes: self.lanes[r[3].0..r[3].1].to_vec(),
@@ -180,16 +208,22 @@ impl SweepSpec {
     }
 
     /// Estimated evaluation cost of one grid point.  Depends only on
-    /// the benchmark instance (benchmark × profile) and mode — never on
+    /// the workload instance (workload × profile) and mode — never on
     /// lanes/VLEN/ELEN/timing, which only reshape the same instruction
     /// stream — so a whole inner block shares one per-point cost.
-    fn point_cost(&self, bi: usize, pi: usize, mi: usize) -> u64 {
-        let b = self.benchmarks[bi];
-        runner::estimated_instructions(
-            b,
-            b.size(&self.profiles[pi]),
-            self.modes[mi],
-        )
+    fn point_cost(&self, wi: usize, pi: usize, mi: usize) -> u64 {
+        match self.workload_at(wi) {
+            WorkloadKind::Kernel(b) => runner::estimated_instructions(
+                b,
+                b.size(&self.profiles[pi]),
+                self.modes[mi],
+            ),
+            // Model stages size themselves; the profile axis does not
+            // change a model's cost.
+            WorkloadKind::Model(m) => {
+                m.estimated_instructions(self.modes[mi])
+            }
+        }
     }
 
     /// Points contributed by one value at `level` (the product of all
@@ -387,7 +421,7 @@ impl SweepSpec {
 /// dedup cache, so duplicated grid entries stay byte-identical).
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
-    pub benchmark: Benchmark,
+    pub workload: WorkloadKind,
     pub profile: &'static str,
     pub mode: Mode,
     pub lanes: usize,
@@ -411,7 +445,7 @@ impl SweepPoint {
         outcome: PointResult,
     ) -> SweepPoint {
         SweepPoint {
-            benchmark: point.benchmark,
+            workload: point.workload,
             profile: point.profile.name,
             mode: point.mode,
             lanes: point.config.lanes,
@@ -630,7 +664,9 @@ pub fn point_energy_j(mode: Mode, cycles: u64) -> f64 {
 
 fn point_json(p: &SweepPoint) -> Json {
     let mut fields = vec![
-        ("benchmark", p.benchmark.name().into()),
+        // Field keeps its historical name; model points carry their
+        // `model:<name>` qualified name here.
+        ("benchmark", p.workload.name().into()),
         ("profile", p.profile.into()),
         ("mode", p.mode.name().into()),
         ("lanes", (p.lanes as u64).into()),
@@ -680,6 +716,15 @@ fn point_json(p: &SweepPoint) -> Json {
             // coordinator merging this response reconstructs the exact
             // in-memory outcome, not just the headline counters.
             fields.push(("summary", super::store::summary_json(&o.summary)));
+            // Model points also ship their per-stage sub-ledgers (sum
+            // exactly to the totals above); kernel rows stay
+            // byte-identical to the pre-model format.
+            if !o.stages.is_empty() {
+                fields.push((
+                    "stages",
+                    super::store::stages_json(&o.stages),
+                ));
+            }
         }
         Err(e) => {
             fields.push(("ok", false.into()));
@@ -740,7 +785,7 @@ pub fn report_json(report: &SweepReport) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bench::runner::{estimated_instructions, run_benchmark};
+    use crate::bench::runner::run_benchmark;
     use crate::vector::ArrowConfig;
 
     fn small_spec() -> SweepSpec {
@@ -775,9 +820,12 @@ mod tests {
                 vlen_bits: p.vlen_bits,
                 ..Default::default()
             };
-            let size = p.benchmark.size(&profiles::TEST);
+            let WorkloadKind::Kernel(benchmark) = p.workload else {
+                panic!("kernel-only spec produced a model point");
+            };
+            let size = benchmark.size(&profiles::TEST);
             let seq =
-                run_benchmark(p.benchmark, size, p.mode, config, spec.seed)
+                run_benchmark(benchmark, size, p.mode, config, spec.seed)
                     .unwrap();
             let got = p.outcome.as_ref().unwrap();
             assert_eq!(got.provenance, Provenance::Simulated, "{}", p.key);
@@ -1033,9 +1081,7 @@ mod tests {
             let cost: u64 = shard
                 .expand()
                 .iter()
-                .map(|(p, _)| {
-                    estimated_instructions(p.benchmark, p.size(), p.mode)
-                })
+                .map(|(p, _)| p.estimated_cost())
                 .fold(0u64, |acc, c| acc.saturating_add(c));
             assert!(
                 cost <= max_cost || n == 1,
@@ -1185,5 +1231,113 @@ mod tests {
         // Round-trips through the serializer.
         let reparsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(reparsed.get("grid").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn models_append_to_the_workload_axis() {
+        let spec = SweepSpec {
+            benchmarks: vec![Benchmark::VAdd, Benchmark::VDot],
+            models: vec![ModelId::VecChain, ModelId::Mlp],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![256],
+            seed: 3,
+            ..Default::default()
+        };
+        assert_eq!(spec.grid_len(), 4 * 2);
+        let grid = spec.expand();
+        let names: Vec<&str> =
+            grid.iter().map(|(p, _)| p.workload.name()).collect();
+        // Kernels first, then models, each spanning its lane block.
+        assert_eq!(
+            names,
+            [
+                "vector_addition",
+                "vector_addition",
+                "vector_dot_product",
+                "vector_dot_product",
+                "model:vecchain",
+                "model:vecchain",
+                "model:mlp",
+                "model:mlp",
+            ]
+        );
+        // Model keys carry the qualified workload label up front.
+        let (_, key) = &grid[4];
+        assert!(key.starts_with("model:vecchain|test|vector|"), "{key}");
+        // Partitioning a mixed kernel+model grid still tiles exactly:
+        // the axis-0 range splits across the two vectors.
+        let full: Vec<String> =
+            grid.into_iter().map(|(_, k)| k).collect();
+        for max in [1, 2, 3, 5, 100] {
+            let concat: Vec<String> = spec
+                .partition(max)
+                .iter()
+                .flat_map(|s| s.expand().into_iter().map(|(_, k)| k))
+                .collect();
+            assert_eq!(concat, full, "max={max}");
+        }
+    }
+
+    #[test]
+    fn model_points_sweep_end_to_end_with_stage_ledgers() {
+        let spec = SweepSpec {
+            benchmarks: vec![],
+            models: vec![ModelId::VecChain],
+            profiles: vec![profiles::TEST],
+            modes: vec![Mode::Vector],
+            lanes: vec![1, 2],
+            vlens: vec![256],
+            seed: 11,
+            threads: 2,
+            ..Default::default()
+        };
+        let report = run_sweep(&spec);
+        assert_eq!(report.points.len(), 2);
+        // Models never join lockstep cohorts.
+        assert_eq!(report.batched_points, 0);
+        for p in &report.points {
+            let o = p.outcome.as_ref().unwrap();
+            assert_eq!(o.provenance, Provenance::Simulated);
+            assert!(o.verified, "{}", p.key);
+            // Per-stage sub-ledgers ride along and sum exactly.
+            assert_eq!(o.stages.len(), 3);
+            let stage_cycles: u64 =
+                o.stages.iter().map(|s| s.cycles).sum();
+            assert_eq!(stage_cycles, o.cycles, "{}", p.key);
+        }
+        // Auto batch width and forced width-1 agree byte-for-byte:
+        // model points take the per-point path either way.
+        let sequential = run_sweep(&SweepSpec {
+            batch_width: Some(1),
+            threads: 1,
+            ..spec.clone()
+        });
+        for (a, b) in report.points.iter().zip(&sequential.points) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(
+                a.outcome.as_ref().unwrap(),
+                b.outcome.as_ref().unwrap()
+            );
+        }
+        // The JSON report carries the stages for model rows.
+        let j = report_json(&report);
+        let rows = j.get("points").unwrap().as_arr().unwrap();
+        for row in rows {
+            assert_eq!(
+                row.get("benchmark").unwrap().as_str(),
+                Some("model:vecchain")
+            );
+            let stages = row.get("stages").unwrap().as_arr().unwrap();
+            assert_eq!(stages.len(), 3);
+            assert_eq!(
+                stages[0].get("name").unwrap().as_str(),
+                Some("add")
+            );
+            assert!(
+                stages[0].get("cycles").unwrap().as_u64().unwrap() > 0
+            );
+        }
     }
 }

@@ -3,7 +3,9 @@
 //! ```text
 //! arrow report table2|table3|table4 [--profiles small,medium,large] [--summary]
 //! arrow bench --benchmark vector_addition --profile small --mode vector
-//! arrow sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
+//! arrow model list|describe NAME|run NAME [--mode scalar|vector] [--seed N]
+//! arrow sweep [--benchmarks LIST] [--models LIST]
+//!             [--profiles LIST] [--modes LIST]
 //!             [--grid-lanes 1,2,4] [--grid-vlens 128,256,512]
 //!             [--elens 32,64] [--timing baseline,burst-mem]
 //!             [--threads N] [--seed N] [--cache-dir DIR]
@@ -33,16 +35,18 @@
 //! controls diagnostic verbosity (default `info`).
 
 use arrow_rvv::bench::cluster::{self, ClusterSpec, FleetSpec};
+use arrow_rvv::bench::eval::SessionPool;
 use arrow_rvv::bench::fleet::{self, Membership};
 use arrow_rvv::bench::loadgen::{self, LoadgenSpec};
-use arrow_rvv::bench::runner::{run_benchmark, Mode};
+use arrow_rvv::bench::models::{workload_names, ModelId, MODELS};
+use arrow_rvv::bench::runner::{run_benchmark, Mode, DEFAULT_BUDGET};
 use arrow_rvv::bench::suite::{Benchmark, BENCHMARKS};
 use arrow_rvv::bench::sweep::{energy_total_j, report_json, run_sweep, SweepSpec};
-use arrow_rvv::bench::{store, Profile, TimingVariant, PROFILES};
+use arrow_rvv::bench::{store, Profile, ProgramCache, TimingVariant, PROFILES};
 use arrow_rvv::energy::EnergyModel;
 use arrow_rvv::report;
 use arrow_rvv::system::executor::ExecutorOptions;
-use arrow_rvv::system::{describe, server};
+use arrow_rvv::system::{describe, server, ModelSession};
 use arrow_rvv::vector::ArrowConfig;
 
 /// CLI error type: everything is reported as a message (the build is
@@ -62,7 +66,11 @@ USAGE:
 COMMANDS:
   report <table2|table3|table4> [--profiles LIST] [--summary]
   bench --benchmark NAME [--profile NAME] [--mode scalar|vector]
-  sweep [--benchmarks LIST] [--profiles LIST] [--modes LIST]
+  model list
+  model describe NAME
+  model run NAME [--mode scalar|vector] [--seed N]
+  sweep [--benchmarks LIST] [--models LIST]
+        [--profiles LIST] [--modes LIST]
         [--grid-lanes LIST] [--grid-vlens LIST] [--elens LIST]
         [--timing LIST] [--threads N] [--seed N]
         [--cache-dir DIR] [--batch-width N]
@@ -82,6 +90,13 @@ COMMANDS:
   cache compact --cache-dir DIR [--dry-run]
   trace report FILE
   help
+
+Models: the built-in multi-kernel models (tinycnn, mlp, vecchain) run
+every stage back-to-back through one shared program cache — `arrow
+model run tinycnn` prints an end-to-end ledger plus per-stage
+sub-ledgers that sum exactly to it, and `arrow sweep --models
+tinycnn` sweeps models across the same design grid as kernels
+(model-only when `--benchmarks` is not given explicitly).
 
 Serving: `arrow serve` answers newline-delimited JSON requests over a
 bounded worker pool — N pipelined requests per connection run
@@ -289,10 +304,18 @@ fn main() -> Result<()> {
                 .opt("--benchmark")
                 .ok_or("bench: --benchmark required")?;
             let b = Benchmark::by_name(&bname).ok_or_else(|| {
-                format!(
-                    "unknown benchmark `{bname}`; one of: {}",
-                    BENCHMARKS.map(|b| b.name()).join(", ")
-                )
+                if ModelId::by_name(&bname).is_some() {
+                    format!(
+                        "`{bname}` is a model; run it with \
+                         `arrow model run {bname}` or \
+                         `arrow sweep --models {bname}`"
+                    )
+                } else {
+                    format!(
+                        "unknown benchmark `{bname}`; valid workloads: {}",
+                        workload_names()
+                    )
+                }
             })?;
             let pname =
                 args.opt("--profile").unwrap_or_else(|| "small".into());
@@ -327,13 +350,166 @@ fn main() -> Result<()> {
             };
             println!("energy    : {j:.3e} J");
         }
+        "model" => {
+            let action = args
+                .next()
+                .ok_or("model: which action? (list|describe|run)")?;
+            match action.as_str() {
+                "list" => {
+                    for m in MODELS {
+                        let chain: Vec<&str> = m
+                            .stages()
+                            .iter()
+                            .map(|s| s.benchmark.name())
+                            .collect();
+                        println!(
+                            "{:<16} {} stage(s): {}  (~{} vector instr)",
+                            m.qualified_name(),
+                            m.stages().len(),
+                            chain.join(" -> "),
+                            m.estimated_instructions(Mode::Vector)
+                        );
+                    }
+                }
+                "describe" => {
+                    let name =
+                        args.next().ok_or("model describe: NAME required")?;
+                    let m = ModelId::by_name(&name).ok_or_else(|| {
+                        format!(
+                            "unknown model `{name}`; valid workloads: {}",
+                            workload_names()
+                        )
+                    })?;
+                    println!("model   : {}", m.qualified_name());
+                    println!("about   : {}", m.def().description);
+                    println!(
+                        "tensors : {} in -> {} out (i32)",
+                        m.input_len(),
+                        m.output_len()
+                    );
+                    println!(
+                        "estimate: ~{} scalar / ~{} vector instructions",
+                        m.estimated_instructions(Mode::Scalar),
+                        m.estimated_instructions(Mode::Vector)
+                    );
+                    println!(
+                        "{:<8} {:<24} {:>6} {:>6} {:>6}",
+                        "stage", "benchmark", "n", "k", "out"
+                    );
+                    for st in m.stages() {
+                        println!(
+                            "{:<8} {:<24} {:>6} {:>6} {:>6}",
+                            st.name,
+                            st.benchmark.name(),
+                            st.size.n,
+                            st.size.k,
+                            st.benchmark.output_len(st.size)
+                        );
+                    }
+                }
+                "run" => {
+                    let name =
+                        args.next().ok_or("model run: NAME required")?;
+                    let m = ModelId::by_name(&name).ok_or_else(|| {
+                        format!(
+                            "unknown model `{name}`; valid workloads: {}",
+                            workload_names()
+                        )
+                    })?;
+                    let mode = match args
+                        .opt("--mode")
+                        .unwrap_or_else(|| "vector".into())
+                        .as_str()
+                    {
+                        "scalar" => Mode::Scalar,
+                        "vector" => Mode::Vector,
+                        other => return fail(format!("mode `{other}`?")),
+                    };
+                    let seed: u64 = args
+                        .opt("--seed")
+                        .map(|v| v.parse())
+                        .transpose()?
+                        .unwrap_or(42);
+                    let programs = ProgramCache::new();
+                    let sessions = SessionPool::default();
+                    let session = ModelSession::build(
+                        m, mode, config, &programs, &sessions,
+                    )?;
+                    let run = session
+                        .run(seed, DEFAULT_BUDGET)
+                        .map_err(|e| e.to_string())?;
+                    println!(
+                        "model     : {} ({})",
+                        m.qualified_name(),
+                        mode.name()
+                    );
+                    println!(
+                        "{:<8} {:>10} {:>10} {:>10} {:>10}  cycles by category",
+                        "stage", "cycles", "scalar", "vector", "mem B"
+                    );
+                    for st in &run.stages {
+                        let a = &st.attribution;
+                        println!(
+                            "{:<8} {:>10} {:>10} {:>10} {:>10}  \
+                             sc {} / stall {} / valu {} / vmem {}",
+                            st.name,
+                            st.cycles,
+                            st.scalar_instructions,
+                            st.vector_instructions,
+                            st.mem_bytes,
+                            a.scalar,
+                            a.dispatch_stall,
+                            a.vec_alu,
+                            a.vec_mem,
+                        );
+                    }
+                    println!(
+                        "{:<8} {:>10} {:>10} {:>10}",
+                        "total",
+                        run.summary.cycles,
+                        run.summary.scalar_instructions,
+                        run.summary.vector_instructions
+                    );
+                    println!("verified  : {}", run.verified);
+                    let e = EnergyModel::default();
+                    let j = match mode {
+                        Mode::Scalar => e.scalar_energy_j(run.summary.cycles),
+                        Mode::Vector => e.vector_energy_j(run.summary.cycles),
+                    };
+                    println!("energy    : {j:.3e} J");
+                }
+                other => {
+                    return fail(format!("unknown model action `{other}`"))
+                }
+            }
+        }
         "sweep" => {
             let mut spec = SweepSpec::default();
-            if let Some(list) = args.opt("--benchmarks") {
-                spec.benchmarks =
-                    parse_list(&list, "benchmark", |name| {
-                        Benchmark::by_name(name).ok_or("unknown benchmark")
-                    })?;
+            let benchmarks = args.opt("--benchmarks");
+            if let Some(list) = &benchmarks {
+                spec.benchmarks = parse_list(list, "benchmark", |name| {
+                    Benchmark::by_name(name).ok_or_else(|| {
+                        format!(
+                            "unknown benchmark; valid workloads: {}",
+                            workload_names()
+                        )
+                    })
+                })?;
+            }
+            if let Some(list) = args.opt("--models") {
+                spec.models = parse_list(&list, "model", |name| {
+                    ModelId::by_name(name).ok_or_else(|| {
+                        format!(
+                            "unknown model; valid workloads: {}",
+                            workload_names()
+                        )
+                    })
+                })?;
+                // `--models` alone means a model-only sweep; kernels
+                // still join in when `--benchmarks` is explicit.
+                if benchmarks.is_none() {
+                    spec.benchmarks.clear();
+                }
             }
             if let Some(list) = args.opt("--profiles") {
                 spec.profiles = parse_profiles(&list)?;
@@ -705,7 +881,7 @@ fn validate(config: ArrowConfig) -> Result<()> {
 /// get it instead of failing to link.
 #[cfg(not(feature = "pjrt"))]
 fn validate(_config: ArrowConfig) -> Result<()> {
-    let _ = &PROFILES; // same imports with or without the feature
+    let _ = (&PROFILES, &BENCHMARKS); // same imports either way
     fail(
         "the XLA/PJRT oracle is not compiled in; \
          rebuild with `cargo run --features pjrt -- validate`",

@@ -409,6 +409,69 @@ pub fn render_report(content: &str) -> Result<String, String> {
         }
     }
 
+    // --- Model per-layer latency/energy ----------------------------
+    // `model_stage` complete-spans carry the layer's ledger (cycles,
+    // bytes) and mode; the table preserves stage order (first-seen) and
+    // sums over repeated runs.  Energy uses the Table 2 power model.
+    #[derive(Default)]
+    struct LayerAgg {
+        runs: u64,
+        wall_us: u64,
+        cycles: u64,
+        bytes: u64,
+        energy_j: f64,
+    }
+    let power = crate::energy::EnergyModel::default();
+    let mut layers: Vec<((String, String), LayerAgg)> = Vec::new();
+    for e in &events {
+        if e.ph != "X" || e.name != "model_stage" {
+            continue;
+        }
+        let field = |k: &str| {
+            e.args.get(k).and_then(Json::as_str).unwrap_or("?").to_string()
+        };
+        let cycles =
+            e.args.get("cycles").and_then(Json::as_u64).unwrap_or(0);
+        let key = (field("model"), field("stage"));
+        let i = match layers.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                layers.push((key, LayerAgg::default()));
+                layers.len() - 1
+            }
+        };
+        let agg = &mut layers[i].1;
+        agg.runs += 1;
+        agg.wall_us += e.dur;
+        agg.cycles += cycles;
+        agg.bytes += e.args.get("bytes").and_then(Json::as_u64).unwrap_or(0);
+        agg.energy_j += match field("mode").as_str() {
+            "scalar" => power.scalar_energy_j(cycles),
+            _ => power.vector_energy_j(cycles),
+        };
+    }
+    if !layers.is_empty() {
+        let _ = writeln!(out, "\nmodel layers (summed over runs)");
+        let _ = writeln!(
+            out,
+            "  {:<10} {:<8} {:>5} {:>12} {:>10} {:>10} {:>11}",
+            "model", "stage", "runs", "cycles", "bytes", "wall ms",
+            "energy J"
+        );
+        for ((model, stage), a) in &layers {
+            let _ = writeln!(
+                out,
+                "  {model:<10} {stage:<8} {:>5} {:>12} {:>10} {:>10.3} \
+                 {:>11.3e}",
+                a.runs,
+                a.cycles,
+                a.bytes,
+                a.wall_us as f64 / 1e3,
+                a.energy_j
+            );
+        }
+    }
+
     // --- Executor queue-wait waterfall -----------------------------
     let waits = Histogram::new();
     let mut max_wait = 0u64;

@@ -183,6 +183,39 @@ pub struct RunSummary {
 }
 
 impl RunSummary {
+    /// Fold another run's ledger into this one, field-wise — the
+    /// multi-stage model path sums per-stage summaries into an
+    /// end-to-end total, so stage sub-ledgers add up to the model ledger
+    /// exactly, by construction.  Counters and per-category attribution
+    /// add; per-lane busy cycles add lane-wise (growing to the wider
+    /// lane count if the stages differ).
+    pub fn accumulate(&mut self, other: &RunSummary) {
+        self.cycles += other.cycles;
+        self.scalar_instructions += other.scalar_instructions;
+        self.vector_instructions += other.vector_instructions;
+        if other.lane_busy.len() > self.lane_busy.len() {
+            self.lane_busy.resize(other.lane_busy.len(), 0);
+        }
+        for (mine, theirs) in self.lane_busy.iter_mut().zip(&other.lane_busy) {
+            *mine += theirs;
+        }
+        self.lanes = self.lanes.max(other.lanes);
+        self.bus.transactions += other.bus.transactions;
+        self.bus.beats += other.bus.beats;
+        self.bus.busy_cycles += other.bus.busy_cycles;
+        self.bus.contention_cycles += other.bus.contention_cycles;
+        self.unit.instructions += other.unit.instructions;
+        self.unit.config_ops += other.unit.config_ops;
+        self.unit.loads += other.unit.loads;
+        self.unit.stores += other.unit.stores;
+        self.unit.arith_ops += other.unit.arith_ops;
+        self.unit.reductions += other.unit.reductions;
+        self.unit.moves += other.unit.moves;
+        self.unit.elements_processed += other.unit.elements_processed;
+        self.unit.mem_bytes += other.unit.mem_bytes;
+        self.attribution.accumulate(&other.attribution);
+    }
+
     /// Fraction of the run each lane was occupied.  Out-of-range lanes
     /// report 0 rather than panicking.
     pub fn lane_utilisation(&self, lane: usize) -> f64 {

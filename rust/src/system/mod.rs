@@ -10,6 +10,10 @@
 //! * [`session`] — the `Session`: program + config bound once (with the
 //!   text predecoded), then run against many workloads — the reuse seam
 //!   the benchmark runner and the sweep pool are built on.
+//! * [`model`] — the `ModelSession`: a whole multi-kernel model (conv →
+//!   relu → pool → matmul …) built once through the shared program
+//!   cache, then run end-to-end with per-stage sub-ledgers that sum
+//!   exactly to the model totals.
 //! * [`executor`] — the bounded worker-pool executor behind the serving
 //!   path: admission-controlled queue, panic-isolated workers, graceful
 //!   drain.
@@ -24,9 +28,11 @@ pub mod batch;
 pub mod describe;
 pub mod executor;
 pub mod machine;
+pub mod model;
 pub mod server;
 pub mod session;
 
 pub use batch::MachineBatch;
 pub use machine::{Machine, MachineError, RunSummary};
+pub use model::{ModelRun, ModelSession, StageLedger};
 pub use session::{Session, SessionRun};

@@ -1,0 +1,265 @@
+//! `ModelSession` — build once, run a whole model many times.
+//!
+//! The multi-kernel analogue of [`Session`](super::session::Session): a
+//! model session assembles every stage of one built-in model
+//! ([`ModelId`]) through the shared [`ProgramCache`]/[`SessionPool`] up
+//! front, then each [`ModelSession::run`] executes the stages
+//! back-to-back, handing each stage's *simulated* output tensor forward
+//! as the next stage's activation — the inter-stage tensors live in
+//! simulated DRAM exactly as the hardware would stage them, and a wrong
+//! result in layer `k` propagates into layer `k+1` rather than being
+//! papered over by the oracle.
+//!
+//! Stage boundaries are synchronization points: the vector unit drains
+//! and the ledger closes before the next layer launches (each stage runs
+//! its own kernel program, so there is no cross-layer instruction
+//! overlap to model).  End-to-end totals are therefore the field-wise
+//! sum of the per-stage ledgers — [`RunSummary::accumulate`] — which
+//! makes the headline invariant (`cycles_by_category` sub-ledgers sum
+//! exactly to the model totals) true by construction, and pinned by
+//! tests anyway.
+
+use std::sync::Arc;
+
+use crate::bench::eval::{ProgramCache, SessionPool};
+use crate::bench::models::ModelId;
+use crate::bench::runner::Mode;
+use crate::obs::trace;
+use crate::vector::ArrowConfig;
+
+use super::machine::{CycleAttribution, MachineError, RunSummary};
+use super::session::Session;
+
+/// Per-layer slice of a model run's ledger.  The model totals are the
+/// field-wise sum of these — see [`ModelRun`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageLedger {
+    /// Layer name from the model definition (`conv`, `relu`, …).
+    pub name: String,
+    pub cycles: u64,
+    pub scalar_instructions: u64,
+    pub vector_instructions: u64,
+    /// Bytes the vector unit moved over AXI during this layer.
+    pub mem_bytes: u64,
+    /// Per-category cycle split for this layer; sums to `cycles`.
+    pub attribution: CycleAttribution,
+}
+
+/// Outcome of one end-to-end model run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelRun {
+    /// End-to-end ledger: the field-wise sum of every stage's
+    /// [`RunSummary`].
+    pub summary: RunSummary,
+    /// Per-layer sub-ledgers, in stage order.
+    pub stages: Vec<StageLedger>,
+    /// The final layer's output tensor, read back from simulated DRAM.
+    pub output: Vec<i32>,
+    /// Every stage's simulated output matched the composed oracle.
+    pub verified: bool,
+}
+
+/// A reusable multi-stage execution context: one sealed [`Session`] per
+/// layer, assembled once through the shared caches.
+#[derive(Clone)]
+pub struct ModelSession {
+    model: ModelId,
+    mode: Mode,
+    stages: Vec<Arc<Session>>,
+}
+
+impl ModelSession {
+    /// Assemble every stage of `model` at this design point.  All
+    /// programs go through the shared [`ProgramCache`] (assemble and
+    /// decode once per (kernel, mode, size)) and the sealed sessions
+    /// through the shared [`SessionPool`], so fleet-wide model sweeps
+    /// pay the build cost once per design point, not once per run.
+    pub fn build(
+        model: ModelId,
+        mode: Mode,
+        config: ArrowConfig,
+        programs: &ProgramCache,
+        sessions: &SessionPool,
+    ) -> Result<ModelSession, String> {
+        let stages = model
+            .stages()
+            .iter()
+            .map(|st| {
+                sessions
+                    .session(programs, st.benchmark, st.size, mode, config)
+                    .map_err(|e| {
+                        format!(
+                            "model {} stage {}: {e}",
+                            model.name(),
+                            st.name
+                        )
+                    })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ModelSession { model, mode, stages })
+    }
+
+    pub fn model(&self) -> ModelId {
+        self.model
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Run the whole model on the deterministic workload for `seed`.
+    ///
+    /// Stage `k+1`'s activation is stage `k`'s *simulated* output; each
+    /// stage is verified against the composed oracle as it completes.
+    /// `budget` bounds each stage's instruction count (a stage that
+    /// exhausts it returns that stage's [`MachineError`]).
+    pub fn run(
+        &self,
+        seed: u64,
+        budget: u64,
+    ) -> Result<ModelRun, MachineError> {
+        let workload = self.model.workload(seed);
+        let defs = self.model.stages();
+        let mut summary = RunSummary::default();
+        let mut ledgers = Vec::with_capacity(self.stages.len());
+        let mut verified = true;
+        // The model's input tensor; thereafter the previous stage's
+        // simulated output.
+        let mut activation = workload.stages[0].inputs[0].1.clone();
+        for ((session, st), sw) in
+            self.stages.iter().zip(defs).zip(&workload.stages)
+        {
+            let mut inputs: Vec<(&str, &[i32])> =
+                vec![("in_a", activation.as_slice())];
+            inputs.extend(
+                sw.inputs[1..]
+                    .iter()
+                    .map(|(label, data)| (*label, data.as_slice())),
+            );
+            let span = trace::begin();
+            let run = session.run(
+                &inputs,
+                Some((sw.result_label, sw.expected.len())),
+                budget,
+            )?;
+            trace::complete(
+                "model",
+                "model_stage",
+                span,
+                &[
+                    ("model", trace::Arg::Str(self.model.name())),
+                    ("stage", trace::Arg::Str(st.name)),
+                    ("benchmark", trace::Arg::Str(st.benchmark.name())),
+                    ("mode", trace::Arg::Str(self.mode.name())),
+                    ("cycles", trace::Arg::U64(run.summary.cycles)),
+                    ("bytes", trace::Arg::U64(run.summary.unit.mem_bytes)),
+                ],
+            );
+            verified &= run.output == sw.expected;
+            ledgers.push(StageLedger {
+                name: st.name.to_string(),
+                cycles: run.summary.cycles,
+                scalar_instructions: run.summary.scalar_instructions,
+                vector_instructions: run.summary.vector_instructions,
+                mem_bytes: run.summary.unit.mem_bytes,
+                attribution: run.summary.attribution,
+            });
+            summary.accumulate(&run.summary);
+            activation = run.output;
+        }
+        Ok(ModelRun { summary, stages: ledgers, output: activation, verified })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::models::MODELS;
+    use crate::bench::runner::DEFAULT_BUDGET;
+
+    fn run_model(model: ModelId, mode: Mode) -> ModelRun {
+        let programs = ProgramCache::new();
+        let sessions = SessionPool::default();
+        let ms = ModelSession::build(
+            model,
+            mode,
+            ArrowConfig::default(),
+            &programs,
+            &sessions,
+        )
+        .unwrap();
+        ms.run(3, DEFAULT_BUDGET).unwrap()
+    }
+
+    #[test]
+    fn every_model_runs_verified_both_modes() {
+        for m in MODELS {
+            for mode in [Mode::Scalar, Mode::Vector] {
+                let run = run_model(m, mode);
+                assert!(run.verified, "{} {:?}", m.name(), mode);
+                assert_eq!(
+                    run.output,
+                    m.workload(3).expected,
+                    "{} {:?}",
+                    m.name(),
+                    mode
+                );
+                assert_eq!(run.stages.len(), m.stages().len());
+            }
+        }
+    }
+
+    #[test]
+    fn stage_ledgers_sum_exactly_to_totals() {
+        for m in MODELS {
+            let run = run_model(m, Mode::Vector);
+            let mut cycles = 0u64;
+            let mut scalar = 0u64;
+            let mut vector = 0u64;
+            let mut bytes = 0u64;
+            let mut attr = CycleAttribution::default();
+            for st in &run.stages {
+                cycles += st.cycles;
+                scalar += st.scalar_instructions;
+                vector += st.vector_instructions;
+                bytes += st.mem_bytes;
+                attr.accumulate(&st.attribution);
+                assert_eq!(
+                    st.attribution.total(),
+                    st.cycles,
+                    "{} stage {} attribution must close",
+                    m.name(),
+                    st.name
+                );
+            }
+            assert_eq!(cycles, run.summary.cycles, "{}", m.name());
+            assert_eq!(scalar, run.summary.scalar_instructions);
+            assert_eq!(vector, run.summary.vector_instructions);
+            assert_eq!(bytes, run.summary.unit.mem_bytes);
+            assert_eq!(attr, run.summary.attribution);
+            assert_eq!(run.summary.attribution.total(), run.summary.cycles);
+        }
+    }
+
+    #[test]
+    fn runs_are_deterministic_and_reusable() {
+        let programs = ProgramCache::new();
+        let sessions = SessionPool::default();
+        let ms = ModelSession::build(
+            ModelId::VecChain,
+            Mode::Vector,
+            ArrowConfig::default(),
+            &programs,
+            &sessions,
+        )
+        .unwrap();
+        let a = ms.run(9, DEFAULT_BUDGET).unwrap();
+        let b = ms.run(9, DEFAULT_BUDGET).unwrap();
+        assert_eq!(a, b);
+        let c = ms.run(10, DEFAULT_BUDGET).unwrap();
+        assert_ne!(a.output, c.output);
+        // Three stages, one (kernel, mode, size) each → three cached
+        // programs, reused across runs.
+        assert_eq!(programs.len(), 3);
+    }
+}

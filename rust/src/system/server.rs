@@ -69,12 +69,13 @@ use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::bench::fleet;
+use crate::bench::models::{workload_names, ModelId, MODELS};
 use crate::bench::profiles::{self, TimingVariant};
 use crate::bench::runner::Mode;
 use crate::bench::store::ResultStore;
 use crate::bench::suite::{Benchmark, BENCHMARKS};
 use crate::bench::sweep::{self, SweepSpec};
-use crate::bench::{EvalPoint, Evaluator, Profile};
+use crate::bench::{EvalPoint, Evaluator, Profile, WorkloadKind};
 use crate::util::histogram::Histogram;
 use crate::util::json::{self, Json};
 use crate::vector::ArrowConfig;
@@ -374,6 +375,10 @@ pub fn handle_request_with(
                 ),
             ),
             (
+                "models",
+                Json::Arr(MODELS.iter().map(|m| m.name().into()).collect()),
+            ),
+            (
                 "profiles",
                 Json::Arr(
                     profiles::ALL.iter().map(|p| p.name.into()).collect(),
@@ -407,12 +412,21 @@ pub fn handle_request_with(
             Json::obj(vec![("ok", true.into()), ("text", text.into())])
         }
         Some("bench") => {
-            let Some(b) = req
+            // Kernel name, `model:<name>`, or bare model name — one
+            // axis.  Unknown names list everything that would parse.
+            let workload = match req
                 .get("benchmark")
                 .and_then(Json::as_str)
-                .and_then(Benchmark::by_name)
-            else {
-                return err_response("unknown benchmark");
+                .map(WorkloadKind::parse)
+            {
+                Some(Ok(w)) => w,
+                Some(Err(e)) => return err_response(e),
+                None => {
+                    return err_response(format!(
+                        "missing `benchmark`; valid workloads: {}",
+                        workload_names()
+                    ))
+                }
             };
             let Some(p) = req
                 .get("profile")
@@ -427,29 +441,39 @@ pub fn handle_request_with(
             };
             let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(42);
             let point = EvalPoint {
-                benchmark: b,
+                workload,
                 profile: p,
                 mode,
                 config: config_from(req),
             };
             match evaluator.evaluate(&point, seed, analytic_limit_from(req)) {
-                Ok(o) => Json::obj(vec![
-                    ("ok", true.into()),
-                    ("benchmark", b.name().into()),
-                    ("mode", mode.name().into()),
-                    ("cycles", o.cycles.into()),
-                    ("verified", o.verified.into()),
-                    ("provenance", o.provenance.name().into()),
-                    ("origin", o.origin.name().into()),
-                    (
-                        "scalar_instructions",
-                        o.summary.scalar_instructions.into(),
-                    ),
-                    (
-                        "vector_instructions",
-                        o.summary.vector_instructions.into(),
-                    ),
-                ]),
+                Ok(o) => {
+                    let mut fields = vec![
+                        ("ok", true.into()),
+                        ("benchmark", workload.name().into()),
+                        ("mode", mode.name().into()),
+                        ("cycles", o.cycles.into()),
+                        ("verified", o.verified.into()),
+                        ("provenance", o.provenance.name().into()),
+                        ("origin", o.origin.name().into()),
+                        (
+                            "scalar_instructions",
+                            o.summary.scalar_instructions.into(),
+                        ),
+                        (
+                            "vector_instructions",
+                            o.summary.vector_instructions.into(),
+                        ),
+                    ];
+                    // Model runs ship their per-stage sub-ledgers.
+                    if !o.stages.is_empty() {
+                        fields.push((
+                            "stages",
+                            crate::bench::store::stages_json(&o.stages),
+                        ));
+                    }
+                    Json::obj(fields)
+                }
                 Err(e) => err_response(e),
             }
         }
@@ -603,7 +627,7 @@ fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
         req: &Json,
         key: &str,
         lookup: impl Fn(&str) -> Option<T>,
-        kind: &str,
+        unknown: impl Fn(&str) -> String,
     ) -> Result<Option<Vec<T>>, String> {
         let Some(v) = req.get(key) else { return Ok(None) };
         let arr = v
@@ -614,10 +638,7 @@ fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
             let name = item
                 .as_str()
                 .ok_or_else(|| format!("`{key}` must be an array of names"))?;
-            out.push(
-                lookup(name)
-                    .ok_or_else(|| format!("unknown {kind} `{name}`"))?,
-            );
+            out.push(lookup(name).ok_or_else(|| unknown(name))?);
         }
         if out.is_empty() {
             return Err(format!("`{key}` must not be empty"));
@@ -654,13 +675,40 @@ fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
     }
 
     let mut spec = SweepSpec::default();
-    if let Some(b) = named_list(req, "benchmarks", Benchmark::by_name, "benchmark")? {
+    // Unknown workload names list everything that would parse —
+    // kernels and models — instead of a bare "unknown benchmark".
+    let unknown_workload = |kind: &str| {
+        move |name: &str| {
+            format!(
+                "unknown {kind} `{name}`; valid workloads: {}",
+                workload_names()
+            )
+        }
+    };
+    if let Some(b) = named_list(
+        req,
+        "benchmarks",
+        Benchmark::by_name,
+        unknown_workload("benchmark"),
+    )? {
         spec.benchmarks = b;
     }
-    if let Some(p) = named_list(req, "profiles", Profile::by_name, "profile")? {
+    if let Some(m) = named_list(
+        req,
+        "models",
+        ModelId::by_name,
+        unknown_workload("model"),
+    )? {
+        spec.models = m;
+    }
+    if let Some(p) = named_list(req, "profiles", Profile::by_name, |n| {
+        format!("unknown profile `{n}`")
+    })? {
         spec.profiles = p;
     }
-    if let Some(m) = named_list(req, "modes", Mode::by_name, "mode")? {
+    if let Some(m) = named_list(req, "modes", Mode::by_name, |n| {
+        format!("unknown mode `{n}`")
+    })? {
         spec.modes = m;
     }
     if let Some(l) = num_list(req, "lanes")? {
@@ -673,7 +721,9 @@ fn sweep_spec_from(req: &Json) -> Result<SweepSpec, String> {
         spec.elens = e;
     }
     if let Some(t) =
-        named_list(req, "timing", TimingVariant::by_name, "timing variant")?
+        named_list(req, "timing", TimingVariant::by_name, |n| {
+            format!("unknown timing variant `{n}`")
+        })?
     {
         spec.timing = t;
     }
@@ -1227,15 +1277,95 @@ mod tests {
     }
 
     #[test]
-    fn unknown_benchmark_rejected() {
+    fn unknown_benchmark_rejected_with_valid_names() {
         let r = handle(
             r#"{"cmd": "bench", "benchmark": "quicksort", "profile": "test"}"#,
         );
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
-        assert_eq!(
-            r.get("error").unwrap().as_str(),
-            Some("unknown benchmark")
+        // The error tells the caller what *would* parse: every kernel
+        // and every model, not a bare "unknown benchmark".
+        let msg = r.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("quicksort"), "{msg}");
+        assert!(msg.contains("vector_addition"), "{msg}");
+        assert!(msg.contains("model:tinycnn"), "{msg}");
+        // Same contract on the sweep axes, both fields.
+        for body in [
+            r#"{"cmd": "sweep", "benchmarks": ["quicksort"]}"#,
+            r#"{"cmd": "sweep", "models": ["resnet"]}"#,
+        ] {
+            let r = handle(body);
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{body}");
+            let msg = r.get("error").unwrap().as_str().unwrap();
+            assert!(msg.contains("model:tinycnn"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn bench_runs_a_model_end_to_end() {
+        let r = handle(
+            r#"{"cmd": "bench", "benchmark": "model:vecchain",
+                "profile": "test", "mode": "vector"}"#,
         );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(
+            r.get("benchmark").unwrap().as_str(),
+            Some("model:vecchain")
+        );
+        assert_eq!(r.get("verified"), Some(&Json::Bool(true)));
+        let total = r.get("cycles").unwrap().as_u64().unwrap();
+        assert!(total > 0);
+        // The per-stage sub-ledgers ride the response and sum exactly.
+        let stages = r.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 3);
+        let sum: u64 = stages
+            .iter()
+            .map(|s| s.get("cycles").unwrap().as_u64().unwrap())
+            .sum();
+        assert_eq!(sum, total);
+        // Bare model names parse too.
+        let bare = handle(
+            r#"{"cmd": "bench", "benchmark": "vecchain",
+                "profile": "test", "mode": "vector"}"#,
+        );
+        assert_eq!(bare.get("ok"), Some(&Json::Bool(true)), "{bare}");
+    }
+
+    #[test]
+    fn sweep_accepts_models_axis() {
+        let r = handle(
+            r#"{"cmd": "sweep", "benchmarks": ["vector_addition"],
+                "models": ["vecchain"], "profiles": ["test"],
+                "modes": ["vector"], "lanes": [2], "vlens": [256],
+                "threads": 1}"#,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let points = r.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 2);
+        assert_eq!(
+            points[0].get("benchmark").unwrap().as_str(),
+            Some("vector_addition")
+        );
+        assert_eq!(
+            points[1].get("benchmark").unwrap().as_str(),
+            Some("model:vecchain")
+        );
+        assert!(points[1].get("stages").unwrap().as_arr().unwrap().len() > 0);
+        // Kernel rows carry no stages field at all.
+        assert_eq!(points[0].get("stages"), None);
+    }
+
+    #[test]
+    fn list_advertises_models() {
+        let r = handle(r#"{"cmd": "list"}"#);
+        let names: Vec<&str> = r
+            .get("models")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|m| m.as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["tinycnn", "mlp", "vecchain"]);
     }
 
     #[test]

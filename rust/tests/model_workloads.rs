@@ -1,0 +1,284 @@
+//! End-to-end model workloads: golden-output regression against the
+//! checked-in Python-generated fixtures (no Python at test time), the
+//! versioned model-program manifest pinned against the built-in
+//! registry, and sweep parity — a model point must come out
+//! byte-identical whether evaluated locally (auto or sequential batch
+//! width) or merged from a worker fleet, and must come from the store
+//! on a repeated cached sweep.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+
+use arrow_rvv::bench::cluster::{run_cluster, ClusterSpec};
+use arrow_rvv::bench::eval::SessionPool;
+use arrow_rvv::bench::models::{ModelId, MODELS};
+use arrow_rvv::bench::runner::{Mode, DEFAULT_BUDGET};
+use arrow_rvv::bench::sweep::{report_json, run_sweep, SweepSpec};
+use arrow_rvv::bench::ProgramCache;
+use arrow_rvv::bench::suite::Benchmark;
+use arrow_rvv::system::{server, ModelSession};
+use arrow_rvv::util::json::{self, Json};
+use arrow_rvv::vector::ArrowConfig;
+
+fn golden_path(file: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(file)
+}
+
+fn load_golden(file: &str) -> Json {
+    let content = std::fs::read_to_string(golden_path(file))
+        .unwrap_or_else(|e| panic!("fixture {file}: {e}"));
+    json::parse(&content).unwrap_or_else(|e| panic!("fixture {file}: {e}"))
+}
+
+fn int_vec(j: &Json) -> Vec<i32> {
+    j.as_arr()
+        .expect("tensor must be an array")
+        .iter()
+        .map(|v| v.as_f64().expect("tensor element must be a number") as i32)
+        .collect()
+}
+
+/// The `model.BENCH_OPS` key the Python AOT pipeline uses for each
+/// suite benchmark — the manifest's per-stage kernel refs.
+fn kernel_ref(b: Benchmark) -> &'static str {
+    match b {
+        Benchmark::VAdd => "vadd",
+        Benchmark::VMul => "vmul",
+        Benchmark::VDot => "dot",
+        Benchmark::VMaxReduce => "max_reduce",
+        Benchmark::VRelu => "relu",
+        Benchmark::MatAdd => "matadd",
+        Benchmark::MatMul => "matmul",
+        Benchmark::MaxPool => "maxpool",
+        Benchmark::Conv2d => "conv2d",
+    }
+}
+
+/// Every checked-in fixture tensor matches the simulator bit-exactly:
+/// the workload generator (input + composed per-stage oracles) and the
+/// simulated `ModelSession` output both agree with the Python mirror,
+/// at every fixture seed, in both modes.
+#[test]
+fn golden_fixtures_pin_model_session_output() {
+    let programs = ProgramCache::new();
+    let sessions = SessionPool::default();
+    for m in MODELS {
+        let fixtures = load_golden(&format!("{}.json", m.name()));
+        let fixtures = fixtures.as_arr().expect("fixture file is an array");
+        assert!(!fixtures.is_empty(), "{}: empty fixture", m.name());
+        for fx in fixtures {
+            assert_eq!(
+                fx.get("format").and_then(Json::as_str),
+                Some("arrow-model-golden")
+            );
+            assert_eq!(fx.get("version").and_then(Json::as_u64), Some(1));
+            let seed = fx.get("seed").and_then(Json::as_u64).unwrap();
+            let expected = int_vec(fx.get("expected").unwrap());
+
+            // The Rust workload generator agrees with the Python mirror
+            // stream-for-stream: same input draw, same composed oracle
+            // tensor after every stage.
+            let w = m.workload(seed);
+            assert_eq!(
+                w.stages[0].inputs[0].1,
+                int_vec(fx.get("input").unwrap()),
+                "{} seed {seed}: input draw drifted",
+                m.name()
+            );
+            let fx_stages = fx.get("stages").unwrap().as_arr().unwrap();
+            assert_eq!(fx_stages.len(), m.stages().len());
+            for (k, (st, fx_st)) in
+                m.stages().iter().zip(fx_stages).enumerate()
+            {
+                assert_eq!(
+                    fx_st.get("name").and_then(Json::as_str),
+                    Some(st.name)
+                );
+                assert_eq!(
+                    w.stages[k].expected,
+                    int_vec(fx_st.get("expected").unwrap()),
+                    "{} seed {seed} stage {}: oracle drifted",
+                    m.name(),
+                    st.name
+                );
+            }
+            assert_eq!(w.expected, expected);
+
+            // And the simulated end-to-end run reproduces the fixture
+            // bit-exactly in both modes.
+            for mode in [Mode::Scalar, Mode::Vector] {
+                let ms = ModelSession::build(
+                    m,
+                    mode,
+                    ArrowConfig::default(),
+                    &programs,
+                    &sessions,
+                )
+                .unwrap();
+                let run = ms.run(seed, DEFAULT_BUDGET).unwrap();
+                assert!(run.verified, "{} seed {seed} {mode:?}", m.name());
+                assert_eq!(
+                    run.output,
+                    expected,
+                    "{} seed {seed} {mode:?}: simulated output != fixture",
+                    m.name()
+                );
+            }
+        }
+    }
+}
+
+/// The versioned model-program manifest the Python AOT pipeline emits
+/// (`aot.py --models-out`, checked in) describes exactly the stage
+/// chains the Rust built-in registry hand-writes.
+#[test]
+fn model_program_manifest_matches_builtin_registry() {
+    let manifest = load_golden("model_programs.json");
+    assert_eq!(
+        manifest.get("format").and_then(Json::as_str),
+        Some("arrow-model-program")
+    );
+    assert_eq!(manifest.get("version").and_then(Json::as_u64), Some(1));
+    let models = manifest.get("models").unwrap();
+    let listed = models.as_obj().unwrap();
+    assert_eq!(listed.len(), MODELS.len());
+    for m in MODELS {
+        let program = models
+            .get(m.name())
+            .unwrap_or_else(|| panic!("{} missing from manifest", m.name()));
+        assert_eq!(
+            program.get("description").and_then(Json::as_str),
+            Some(m.def().description),
+            "{}",
+            m.name()
+        );
+        let stages = program.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), m.stages().len(), "{}", m.name());
+        for (st, js) in m.stages().iter().zip(stages) {
+            assert_eq!(js.get("name").and_then(Json::as_str), Some(st.name));
+            assert_eq!(
+                js.get("kernel").and_then(Json::as_str),
+                Some(kernel_ref(st.benchmark)),
+                "{} stage {}",
+                m.name(),
+                st.name
+            );
+            let size = js.get("size").unwrap();
+            let field = |k: &str| size.get(k).and_then(Json::as_u64).unwrap();
+            assert_eq!(field("n") as usize, st.size.n);
+            assert_eq!(field("k") as usize, st.size.k);
+            assert_eq!(field("batch") as usize, st.size.batch);
+        }
+    }
+}
+
+fn model_spec() -> SweepSpec {
+    SweepSpec {
+        benchmarks: vec![],
+        models: vec![ModelId::VecChain, ModelId::Mlp],
+        modes: vec![Mode::Vector],
+        lanes: vec![1, 2],
+        vlens: vec![128],
+        seed: 11,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+fn points_json(report: &arrow_rvv::bench::SweepReport) -> String {
+    report_json(report).get("points").unwrap().to_string()
+}
+
+fn spawn_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let _ = server::serve_listener(listener, None);
+    });
+    addr
+}
+
+/// A model point comes out byte-identical from every evaluation path:
+/// local auto batch width, explicit sequential width, and a two-worker
+/// cluster merge.
+#[test]
+fn model_sweep_parity_across_local_batched_and_cluster() {
+    let spec = model_spec();
+    let auto = run_sweep(&spec);
+    assert_eq!(auto.points.len(), spec.grid_len());
+    assert!(auto.points.iter().all(|p| p.outcome.is_ok()));
+
+    let sequential =
+        SweepSpec { batch_width: Some(1), ..spec.clone() };
+    let sequential = run_sweep(&sequential);
+    assert_eq!(points_json(&auto), points_json(&sequential));
+
+    let workers = vec![spawn_worker(), spawn_worker()];
+    let mut cs = ClusterSpec::new(spec, workers);
+    cs.shard_points = 1;
+    cs.shards_per_batch = 1;
+    let cluster = run_cluster(&cs).unwrap();
+    assert_eq!(cluster.local_shards, 0, "no fallback on a healthy fleet");
+    assert_eq!(points_json(&auto), points_json(&cluster.report));
+
+    // Every merged model row still carries its per-stage sub-ledgers,
+    // and they sum exactly to the row's cycle total.
+    for p in report_json(&cluster.report)
+        .get("points")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+    {
+        let stages = p.get("stages").unwrap().as_arr().unwrap();
+        assert!(!stages.is_empty());
+        let sum: u64 = stages
+            .iter()
+            .map(|s| s.get("cycles").and_then(Json::as_u64).unwrap())
+            .sum();
+        assert_eq!(Some(sum), p.get("cycles").and_then(Json::as_u64));
+    }
+}
+
+fn tmp_dir() -> PathBuf {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "arrow-model-sweep-{}-{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A repeated `--cache-dir` model sweep answers entirely from the
+/// result store: zero points re-simulated on the second pass.
+#[test]
+fn repeated_cached_model_sweep_simulates_nothing() {
+    let dir = tmp_dir();
+    let spec =
+        SweepSpec { cache_dir: Some(dir.clone()), ..model_spec() };
+
+    let first = run_sweep(&spec);
+    assert!(first.store_error.is_none(), "{:?}", first.store_error);
+    assert_eq!(first.unique_simulated, spec.grid_len());
+    assert_eq!(first.store_hits, 0);
+
+    let second = run_sweep(&spec);
+    assert!(second.store_error.is_none(), "{:?}", second.store_error);
+    assert_eq!(second.unique_simulated, 0, "model points were re-simulated");
+    assert_eq!(second.store_hits, spec.grid_len());
+    assert_eq!(points_json(&first), points_json(&second));
+
+    // Stage sub-ledgers survive the store round-trip too.
+    for p in &second.points {
+        let o = p.outcome.as_ref().unwrap();
+        assert!(!o.stages.is_empty(), "{}: stages lost in store", p.key);
+        let sum: u64 = o.stages.iter().map(|s| s.cycles).sum();
+        assert_eq!(sum, o.cycles, "{}", p.key);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -141,6 +141,9 @@ fn synthetic_trace() -> String {
         r#"{"ph":"i","pid":1,"tid":4,"ts":270,"s":"t","cat":"eval","name":"eval_tier","args":{"tier":"cached","benchmark":"matrix_multiplication"}}"#,
         r#"{"ph":"X","pid":1,"tid":5,"ts":300,"dur":12,"cat":"executor","name":"queue_wait","args":{}}"#,
         r#"{"ph":"X","pid":1,"tid":5,"ts":320,"dur":90,"cat":"executor","name":"queue_wait","args":{}}"#,
+        r#"{"ph":"X","pid":1,"tid":6,"ts":400,"dur":30,"cat":"model","name":"model_stage","args":{"model":"vecchain","stage":"add","benchmark":"vector_addition","mode":"vector","cycles":1200,"bytes":2048}}"#,
+        r#"{"ph":"X","pid":1,"tid":6,"ts":440,"dur":20,"cat":"model","name":"model_stage","args":{"model":"vecchain","stage":"mul","benchmark":"vector_multiplication","mode":"vector","cycles":900,"bytes":2048}}"#,
+        r#"{"ph":"X","pid":1,"tid":6,"ts":470,"dur":25,"cat":"model","name":"model_stage","args":{"model":"vecchain","stage":"add","benchmark":"vector_addition","mode":"vector","cycles":1200,"bytes":2048}}"#,
     ];
     let mut out = String::from("[\n");
     for l in lines {
@@ -153,7 +156,7 @@ fn synthetic_trace() -> String {
 #[test]
 fn render_report_reconstructs_the_shard_lifecycle() {
     let report = trace::render_report(&synthetic_trace()).unwrap();
-    assert!(report.contains("trace: 14 events"), "{report}");
+    assert!(report.contains("trace: 17 events"), "{report}");
     assert!(report.contains("shard lifecycle (2 carved)"), "{report}");
     assert!(
         report.contains(
@@ -175,6 +178,61 @@ fn render_report_reconstructs_the_shard_lifecycle() {
     assert!(report.contains("member_joined"), "{report}");
     assert!(report.contains("member_failed"), "{report}");
     assert!(report.contains("trace horizon"), "{report}");
+    // Model layer table: stage order preserved (add before mul), the
+    // two `add` spans summed into one row.
+    assert!(report.contains("model layers (summed over runs)"), "{report}");
+    assert!(report.contains("vecchain   add"), "{report}");
+    assert!(report.contains("vecchain   mul"), "{report}");
+    assert!(report.contains("2400"), "add cycles not summed: {report}");
+    let add_at = report.find("vecchain   add").unwrap();
+    let mul_at = report.find("vecchain   mul").unwrap();
+    assert!(add_at < mul_at, "stage order lost: {report}");
+}
+
+#[test]
+fn model_runs_land_per_layer_rows_in_the_trace_report() {
+    use arrow_rvv::bench::eval::SessionPool;
+    use arrow_rvv::bench::models::ModelId;
+    use arrow_rvv::bench::runner::DEFAULT_BUDGET;
+    use arrow_rvv::bench::ProgramCache;
+    use arrow_rvv::system::ModelSession;
+    use arrow_rvv::vector::ArrowConfig;
+
+    let _guard = recorder_lock();
+    let path = std::env::temp_dir().join(format!(
+        "arrow_obs_trace_model_{}.json",
+        std::process::id()
+    ));
+    trace::enable(&path).unwrap();
+    let programs = ProgramCache::new();
+    let sessions = SessionPool::default();
+    let ms = ModelSession::build(
+        ModelId::VecChain,
+        Mode::Vector,
+        ArrowConfig::default(),
+        &programs,
+        &sessions,
+    )
+    .unwrap();
+    let run = ms.run(7, DEFAULT_BUDGET).unwrap();
+    assert!(run.verified);
+    trace::disable();
+    let content = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let report = trace::render_report(&content).unwrap();
+    assert!(report.contains("model layers"), "{report}");
+    for (stage, ledger) in ["add", "mul", "relu"].iter().zip(&run.stages) {
+        assert!(
+            report.contains(&format!("vecchain   {stage}")),
+            "missing layer {stage}: {report}"
+        );
+        assert!(
+            report.contains(&ledger.cycles.to_string()),
+            "layer {stage} cycles {} not in report: {report}",
+            ledger.cycles
+        );
+    }
 }
 
 #[test]
