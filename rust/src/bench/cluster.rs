@@ -210,6 +210,12 @@ pub struct WorkerStats {
     pub batched_points: u64,
     /// Lockstep batches it launched across those shards.
     pub batch_groups: u64,
+    /// Dispatch weight at its most recent claim (see
+    /// [`super::fleet::Member::dispatch_weight`]): `1.0` for an
+    /// unloaded member, lower when heartbeats reported queued work,
+    /// requests in flight, or fresh admission-control rejections.
+    /// Per-batch shard counts were scaled by this value.
+    pub weight: f64,
 }
 
 /// A merged cluster sweep: the report plus distribution provenance.
@@ -665,6 +671,7 @@ fn stat_index(
         est_cost: 0,
         batched_points: 0,
         batch_groups: 0,
+        weight: 1.0,
     });
     s.len() - 1
 }
@@ -688,7 +695,12 @@ impl Dispatch<'_> {
     /// claim supersedes this thread (`generation` went stale — the
     /// member expired and re-registered mid-batch, and its successor
     /// thread serves it now).
-    fn run(&self, addr: &str, widx: usize, generation: u64) {
+    ///
+    /// `weight` is the member's dispatch weight at claim time: batch
+    /// sizes are scaled by it, so a member that heartbeated load gets
+    /// proportionally smaller batches instead of the full
+    /// `shards_per_batch` firehose.
+    fn run(&self, addr: &str, widx: usize, generation: u64, weight: f64) {
         let retire = |e: String| {
             self.membership.mark_failed(addr);
             lock(self.stats)[widx].error = Some(e);
@@ -717,6 +729,7 @@ impl Dispatch<'_> {
             }
             // A member on its second life starts clean.
             s[widx].error = None;
+            s[widx].weight = weight;
         }
         {
             // Every future carve fits the smallest grid cap any member
@@ -725,7 +738,13 @@ impl Dispatch<'_> {
             let mut q = lock(self.queue);
             q.max_points = q.max_points.min(info.max_grid.max(1));
         }
-        let batch_cap = self.shards_per_batch.clamp(1, info.max_batch.max(1));
+        // Load-weighted batch size: the configured shards-per-batch
+        // scaled by the member's claim-time weight (an unloaded member
+        // gets the full batch, a member near the saturation cutoff gets
+        // close to one shard at a time), inside the advertised cap.
+        let weighted =
+            ((self.shards_per_batch as f64 * weight).round() as usize).max(1);
+        let batch_cap = weighted.clamp(1, info.max_batch.max(1));
         loop {
             // A worker whose heartbeats stopped is drained like a dead
             // one: no new batches, and whatever it was mid-way through
@@ -1033,6 +1052,7 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
                     let active = &active;
                     let addr = member.addr.clone();
                     let generation = member.generation;
+                    let weight = member.dispatch_weight();
                     scope.spawn(move || {
                         // The dispatch body contains its own panics;
                         // this outer guard guarantees an escaped one
@@ -1042,7 +1062,7 @@ pub fn run_cluster(cs: &ClusterSpec) -> Result<ClusterReport, String> {
                         // fleet forever and the join-grace fallback
                         // would never fire).
                         if std::panic::catch_unwind(AssertUnwindSafe(
-                            || dispatch.run(&addr, widx, generation),
+                            || dispatch.run(&addr, widx, generation, weight),
                         ))
                         .is_err()
                         {

@@ -25,7 +25,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::asm::{assemble, Program};
@@ -382,15 +382,25 @@ fn session_key(
     mode: Mode,
     config: &ArrowConfig,
 ) -> String {
-    let t = &config.timing;
-    let m = &config.mem_timing;
     format!(
-        "{}|{}|n={}|k={}|b={}|lanes={}|vlen={}|elen={}|im={}|vt={}.{}.{}.{}.{}|mt={}.{}.{}.{}",
+        "{}|{}|n={}|k={}|b={}|{}",
         benchmark.name(),
         mode.name(),
         size.n,
         size.k,
         size.batch,
+        config_fingerprint(config),
+    )
+}
+
+/// The config half of a session key: every [`ArrowConfig`] field that
+/// [`Session`] construction observes, shared between the per-stage
+/// [`session_key`] and the whole-model [`model_session_key`].
+fn config_fingerprint(config: &ArrowConfig) -> String {
+    let t = &config.timing;
+    let m = &config.mem_timing;
+    format!(
+        "lanes={}|vlen={}|elen={}|im={}|vt={}.{}.{}.{}.{}|mt={}.{}.{}.{}",
         config.lanes,
         config.vlen_bits,
         config.elen_bits,
@@ -407,6 +417,23 @@ fn session_key(
     )
 }
 
+/// Canonical identity of one [`ModelSession`]: model, mode, config.
+/// Stage sizes are derived from the model, so — like [`session_key`] —
+/// there is no seed: every request against a hot model point shares
+/// one assembled pipeline.
+fn model_session_key(
+    model: ModelId,
+    mode: Mode,
+    config: &ArrowConfig,
+) -> String {
+    format!(
+        "model:{}|{}|{}",
+        model.name(),
+        mode.name(),
+        config_fingerprint(config),
+    )
+}
+
 /// Sealed sessions per design point, capped.  Building a [`Session`]
 /// clones the program + decode cache and recomputes the fusion table on
 /// *every* evaluation; on the serving path that build cost lands on the
@@ -418,13 +445,18 @@ pub struct SessionPool {
     map: Mutex<HashMap<String, Arc<Session>>>,
     hits: AtomicU64,
     misses: AtomicU64,
-    cap: usize,
+    /// Retention target — atomic so the serving autoscaler can resize a
+    /// shared pool without a write lock (see
+    /// [`SessionPool::set_cap`]).
+    cap: AtomicUsize,
 }
 
-/// Pool entry cap: a full lanes × VLEN × ELEN × timing product over the
-/// benchmark suite fits, while a hostile request stream cannot grow the
-/// pool (and its cloned programs) without bound.  Overflow sessions are
-/// built per call, exactly like the un-pooled path.
+/// Default pool entry cap: a full lanes × VLEN × ELEN × timing product
+/// over the benchmark suite fits, while a hostile request stream cannot
+/// grow the pool (and its cloned programs) without bound.  Overflow
+/// sessions are built per call, exactly like the un-pooled path.  The
+/// serving autoscaler retargets the cap at runtime, bounded above by
+/// this value.
 pub const SESSION_POOL_CAP: usize = 512;
 
 impl Default for SessionPool {
@@ -433,7 +465,7 @@ impl Default for SessionPool {
             map: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
-            cap: SESSION_POOL_CAP,
+            cap: AtomicUsize::new(SESSION_POOL_CAP),
         }
     }
 }
@@ -462,10 +494,32 @@ impl SessionPool {
         let session =
             Arc::new(programs.session(benchmark, size, mode, config)?);
         let mut map = self.map.lock().unwrap();
-        if map.len() >= self.cap && !map.contains_key(&key) {
+        if map.len() >= self.cap.load(Ordering::Relaxed)
+            && !map.contains_key(&key)
+        {
             return Ok(session);
         }
         Ok(Arc::clone(map.entry(key).or_insert(session)))
+    }
+
+    /// Current retention target.
+    pub fn cap(&self) -> usize {
+        self.cap.load(Ordering::Relaxed)
+    }
+
+    /// Retarget the retention cap, evicting arbitrary entries down to
+    /// the new bound.  Eviction only drops the pool's `Arc`; sessions
+    /// mid-run stay alive until their machines finish.  The serving
+    /// autoscaler calls this alongside every executor resize so the
+    /// session working set tracks the worker count.
+    pub fn set_cap(&self, n: usize) {
+        let n = n.max(1);
+        self.cap.store(n, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        while map.len() > n {
+            let key = map.keys().next().unwrap().clone();
+            map.remove(&key);
+        }
     }
 
     /// Sessions currently pooled.
@@ -498,6 +552,100 @@ impl SessionPool {
     }
 }
 
+/// Whole-model execution contexts, capped.  A [`ModelSession`] is a
+/// vector of stage `Arc<Session>`s plus stage plumbing; the stages
+/// themselves come from (and are retained by) the [`SessionPool`], so
+/// this pool's marginal memory per entry is small — but assembling one
+/// still walks every stage and revalidates the pipeline, and on the
+/// serving path that cost landed on *every* model request.  One entry
+/// per (model, mode, config) makes repeat model evaluations as cheap as
+/// kernel ones.  `ModelSession::run` takes `&self`, so concurrent
+/// requests share an entry safely.
+pub struct ModelSessionPool {
+    map: Mutex<HashMap<String, Arc<ModelSession>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    cap: usize,
+}
+
+/// Model-pool entry cap: the model catalogue is tiny (a handful of
+/// [`ModelId`]s), so this bounds hostile config churn, not normal use.
+pub const MODEL_SESSION_POOL_CAP: usize = 128;
+
+impl Default for ModelSessionPool {
+    fn default() -> ModelSessionPool {
+        ModelSessionPool {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            cap: MODEL_SESSION_POOL_CAP,
+        }
+    }
+}
+
+impl ModelSessionPool {
+    /// Fetch the assembled model session for one design point, building
+    /// (and — below the cap — retaining) it on a miss.  Stage sessions
+    /// route through the shared [`SessionPool`], so a model-pool miss
+    /// still reuses warm stages.
+    pub fn session(
+        &self,
+        programs: &ProgramCache,
+        sessions: &SessionPool,
+        model: ModelId,
+        mode: Mode,
+        config: ArrowConfig,
+    ) -> Result<Arc<ModelSession>, String> {
+        let key = model_session_key(model, mode, &config);
+        if let Some(ms) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            metrics::MODEL_SESSION_POOL_HITS.inc();
+            return Ok(Arc::clone(ms));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        metrics::MODEL_SESSION_POOL_MISSES.inc();
+        // Build outside the lock; a racing builder at worst assembles
+        // the same deterministic pipeline and the first insert wins.
+        let ms = Arc::new(ModelSession::build(
+            model, mode, config, programs, sessions,
+        )?);
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= self.cap && !map.contains_key(&key) {
+            return Ok(ms);
+        }
+        Ok(Arc::clone(map.entry(key).or_insert(ms)))
+    }
+
+    /// Model sessions currently pooled.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered by a pooled model session.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to assemble the stages.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// The `{"pooled", "hits", "misses"}` object the server's `stats`
+    /// and `warm` commands report for the model path.
+    pub fn stats_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("pooled", (self.len() as u64).into()),
+            ("hits", self.hits().into()),
+            ("misses", self.misses().into()),
+        ])
+    }
+}
+
 /// The tiered point evaluator: shared program cache + optional
 /// persistent result store.  Analytic routing is per-call policy (see
 /// [`Evaluator::evaluate`]) so one evaluator can serve callers with
@@ -506,6 +654,7 @@ impl SessionPool {
 pub struct Evaluator {
     programs: ProgramCache,
     sessions: SessionPool,
+    model_sessions: ModelSessionPool,
     store: Option<ResultStore>,
     /// Result-store appends that failed (disk full, permissions…).
     /// Evaluation succeeds anyway, but callers surface the count so a
@@ -542,6 +691,10 @@ impl Evaluator {
         &self.sessions
     }
 
+    pub fn model_sessions(&self) -> &ModelSessionPool {
+        &self.model_sessions
+    }
+
     /// Pre-warm the session pool for one design point: build (and
     /// retain) its sealed session — every stage's, for a model —
     /// without running anything, so the first real request skips the
@@ -560,14 +713,16 @@ impl Evaluator {
                     point.config,
                 )
                 .map(|_| ()),
-            WorkloadKind::Model(m) => ModelSession::build(
-                m,
-                point.mode,
-                point.config,
-                &self.programs,
-                &self.sessions,
-            )
-            .map(|_| ()),
+            WorkloadKind::Model(m) => self
+                .model_sessions
+                .session(
+                    &self.programs,
+                    &self.sessions,
+                    m,
+                    point.mode,
+                    point.config,
+                )
+                .map(|_| ()),
         }
     }
 
@@ -952,20 +1107,21 @@ impl Evaluator {
         })
     }
 
-    /// Model simulation: build (or fetch — every stage session goes
-    /// through the shared pool) the model session and run end-to-end.
+    /// Model simulation: fetch (or assemble — through the shared model
+    /// pool, with stage sessions through the shared session pool) the
+    /// model session and run end-to-end.
     fn simulate_model(
         &self,
         model: ModelId,
         point: &EvalPoint,
         seed: u64,
     ) -> Result<EvalOutcome, String> {
-        let ms = ModelSession::build(
+        let ms = self.model_sessions.session(
+            &self.programs,
+            &self.sessions,
             model,
             point.mode,
             point.config,
-            &self.programs,
-            &self.sessions,
         )?;
         let run = ms.run(seed, DEFAULT_BUDGET).map_err(|e| e.to_string())?;
         metrics::EVAL_SIMULATED.inc();
@@ -1421,12 +1577,66 @@ mod tests {
         let evaluator = Evaluator::new();
         let point = model_point(ModelId::TinyCnn, Mode::Vector, 2);
         evaluator.warm_point(&point).unwrap();
-        // Four stages, four distinct (kernel, mode, size) sessions.
+        // Four stages, four distinct (kernel, mode, size) sessions —
+        // and the assembled model session is retained too.
         assert_eq!(evaluator.sessions().len(), 4);
         assert_eq!(evaluator.sessions().misses(), 4);
-        // The real evaluation reuses all of them.
+        assert_eq!(evaluator.model_sessions().len(), 1);
+        assert_eq!(evaluator.model_sessions().misses(), 1);
+        assert_eq!(evaluator.model_sessions().hits(), 0);
+        // The real evaluation is a model-pool hit: the assembled
+        // pipeline answers directly, no per-stage lookups at all.
         evaluator.evaluate(&point, 1, None).unwrap();
-        assert_eq!(evaluator.sessions().hits(), 4);
+        assert_eq!(evaluator.model_sessions().hits(), 1);
+        assert_eq!(evaluator.model_sessions().misses(), 1);
+        assert_eq!(evaluator.sessions().hits(), 0);
         assert_eq!(evaluator.sessions().misses(), 4);
+    }
+
+    #[test]
+    fn model_session_pool_reuses_assembled_pipelines() {
+        let evaluator = Evaluator::new();
+        let point = model_point(ModelId::VecChain, Mode::Vector, 2);
+        let first = evaluator.evaluate(&point, 1, None).unwrap();
+        assert_eq!(evaluator.model_sessions().len(), 1);
+        assert_eq!(evaluator.model_sessions().misses(), 1);
+        // Different seed, same pipeline — and results stay
+        // byte-identical to a fresh evaluator that builds per call.
+        let second = evaluator.evaluate(&point, 2, None).unwrap();
+        assert_eq!(evaluator.model_sessions().hits(), 1);
+        let fresh = Evaluator::new();
+        assert_eq!(fresh.evaluate(&point, 1, None).unwrap(), first);
+        assert_eq!(fresh.evaluate(&point, 2, None).unwrap(), second);
+        // A different lane count is a different model session.
+        let other = model_point(ModelId::VecChain, Mode::Vector, 4);
+        evaluator.evaluate(&other, 1, None).unwrap();
+        assert_eq!(evaluator.model_sessions().len(), 2);
+    }
+
+    #[test]
+    fn session_pool_cap_retargets_and_evicts() {
+        let evaluator = Evaluator::new();
+        for lanes in [1, 2, 4] {
+            let point = test_point(Benchmark::VAdd, Mode::Vector, lanes);
+            evaluator.evaluate(&point, 1, None).unwrap();
+        }
+        assert_eq!(evaluator.sessions().len(), 3);
+        assert_eq!(evaluator.sessions().cap(), SESSION_POOL_CAP);
+        // Shrinking evicts down to the new bound; entries above it are
+        // rebuilt per call (a miss that does not grow the pool).
+        evaluator.sessions().set_cap(1);
+        assert_eq!(evaluator.sessions().len(), 1);
+        assert_eq!(evaluator.sessions().cap(), 1);
+        let point = test_point(Benchmark::VDot, Mode::Vector, 2);
+        evaluator.evaluate(&point, 1, None).unwrap();
+        assert_eq!(evaluator.sessions().len(), 1);
+        // Growing the cap lets new points pool again, and a zero
+        // request clamps to one retained session.
+        evaluator.sessions().set_cap(8);
+        evaluator.evaluate(&point, 2, None).unwrap();
+        assert_eq!(evaluator.sessions().len(), 2);
+        evaluator.sessions().set_cap(0);
+        assert_eq!(evaluator.sessions().cap(), 1);
+        assert_eq!(evaluator.sessions().len(), 1);
     }
 }

@@ -63,8 +63,19 @@ pub const MAX_MEMBER_FAILURES: u32 = 8;
 /// member is *saturated*: the coordinator stops claiming it for new
 /// dispatch threads until a later heartbeat reports the queue drained.
 /// Well below the server's default admission bound, so the coordinator
-/// backs off before the worker starts shedding load.
+/// backs off before the worker starts shedding load.  This is the
+/// queue-depth-only anchor of the weight formula below: a member whose
+/// *sole* load signal is `queue_depth == 32` lands exactly on
+/// [`MIN_DISPATCH_WEIGHT`] and is skipped.
 pub const SATURATION_QUEUE_DEPTH: u64 = 32;
+
+/// Dispatch weight at (or below) which a member is passed over by
+/// [`Membership::claim_dispatchable`].  Chosen so the old binary rule
+/// is a special case: `1 / (1 + SATURATION_QUEUE_DEPTH / 8) = 0.2`,
+/// i.e. queue depth alone saturates at exactly the depth it always
+/// did, while in-flight requests and fresh admission-control
+/// rejections now drag a member toward the cutoff earlier.
+pub const MIN_DISPATCH_WEIGHT: f64 = 0.2;
 
 /// Poison-recovering lock (same rationale as the cluster module: the
 /// table only holds plain data, so a panicked holder leaves it sound).
@@ -114,6 +125,12 @@ pub struct Member {
     pub queue_depth: u64,
     /// Admission-control rejections the worker reported so far.
     pub rejected: u64,
+    /// Rejections added *between the last two heartbeats* — the
+    /// load-weighting signal.  Cumulative `rejected` only ever grows,
+    /// so a worker that shed load an hour ago would look permanently
+    /// overloaded; the per-heartbeat delta decays to zero one interval
+    /// after the pressure stops.
+    pub rejected_delta: u64,
     pub state: MemberState,
     /// Pre-listed `--workers` member: never expires, never re-registers.
     pub is_static: bool,
@@ -125,6 +142,30 @@ pub struct Member {
     /// instead of serving the same worker twice.
     pub generation: u64,
     last_seen: Instant,
+}
+
+impl Member {
+    /// How much work this member should be offered right now, in
+    /// `(0, 1]`, derived from its last heartbeat:
+    ///
+    /// ```text
+    /// weight = 1 / (1 + queue_depth/8 + in_flight/4 + rejected_delta/4)
+    /// ```
+    ///
+    /// An unloaded member weighs `1.0`.  Queued work is the softest
+    /// signal (it divides by 8 — a deep queue is how a healthy worker
+    /// looks mid-batch); requests already executing and fresh
+    /// admission-control rejections count double (divide by 4) because
+    /// they mean the worker is shedding or about to shed.  The dispatch
+    /// loop scales per-batch shard counts by this weight, and
+    /// [`Membership::claim_dispatchable`] skips members at or below
+    /// [`MIN_DISPATCH_WEIGHT`] outright.
+    pub fn dispatch_weight(&self) -> f64 {
+        let load = self.queue_depth as f64 / 8.0
+            + self.in_flight as f64 / 4.0
+            + self.rejected_delta as f64 / 4.0;
+        1.0 / (1.0 + load)
+    }
 }
 
 /// What a `{"cmd": "register"}` request carries.
@@ -264,6 +305,7 @@ impl Membership {
                 sweeps_served: 0,
                 queue_depth: 0,
                 rejected: 0,
+                rejected_delta: 0,
                 state: MemberState::Joined,
                 is_static: false,
                 failures: 0,
@@ -276,6 +318,14 @@ impl Membership {
         member.in_flight = reg.in_flight;
         member.sweeps_served = reg.sweeps_served;
         member.queue_depth = reg.queue_depth;
+        // Rejections since the previous heartbeat (zero for a brand-new
+        // member — no baseline yet — and for a restarted worker whose
+        // cumulative counter reset below ours).
+        member.rejected_delta = if newly_inserted {
+            0
+        } else {
+            reg.rejected.saturating_sub(member.rejected)
+        };
         member.rejected = reg.rejected;
         member.last_seen = Instant::now();
         // A failed or expired worker announcing again is re-admitted;
@@ -314,6 +364,7 @@ impl Membership {
                 sweeps_served: 0,
                 queue_depth: 0,
                 rejected: 0,
+                rejected_delta: 0,
                 state: MemberState::Joined,
                 is_static: true,
                 failures: 0,
@@ -374,15 +425,16 @@ impl Membership {
     /// dispatch thread.  Members past their failure budget are never
     /// claimed again (a worker with a broken serve port must not
     /// consume threads forever), and members whose last heartbeat
-    /// reported a saturated request queue are passed over *this* round:
-    /// dispatching at them would only earn `busy` rejections, and their
-    /// next heartbeat re-admits them the moment the queue drains.
+    /// weighed in at or below [`MIN_DISPATCH_WEIGHT`] are passed over
+    /// *this* round: dispatching at them would only earn `busy`
+    /// rejections, and their next heartbeat re-admits them the moment
+    /// the load signals clear.
     pub fn claim_dispatchable(&self) -> Vec<Member> {
         let mut claimed = Vec::new();
         for member in lock(&self.members).values_mut() {
             if matches!(member.state, MemberState::Joined | MemberState::Idle)
                 && member.failures < MAX_MEMBER_FAILURES
-                && member.queue_depth < SATURATION_QUEUE_DEPTH
+                && member.dispatch_weight() > MIN_DISPATCH_WEIGHT
             {
                 member.state = MemberState::Active;
                 member.generation = member.generation.wrapping_add(1);
@@ -703,6 +755,65 @@ mod tests {
         let claimed = m.claim_dispatchable();
         assert_eq!(claimed.len(), 1);
         assert_eq!(claimed[0].addr, "10.0.0.6:4");
+    }
+
+    #[test]
+    fn dispatch_weight_tracks_heartbeat_load_signals() {
+        let m = Membership::new(Duration::from_secs(60));
+        let version = env!("CARGO_PKG_VERSION");
+        m.register(&reg("10.0.0.7:1", version)).unwrap();
+        let member = m.members().remove(0);
+        // Unloaded: full weight.
+        assert_eq!(member.dispatch_weight(), 1.0);
+        // Queue depth alone saturates exactly at the legacy threshold:
+        // depth 31 stays claimable, depth 32 lands on the cutoff.
+        let mut hb = reg("10.0.0.7:1", version);
+        hb.queue_depth = SATURATION_QUEUE_DEPTH - 1;
+        m.register(&hb).unwrap();
+        let w = m.members().remove(0).dispatch_weight();
+        assert!(w > MIN_DISPATCH_WEIGHT, "{w}");
+        hb.queue_depth = SATURATION_QUEUE_DEPTH;
+        m.register(&hb).unwrap();
+        let w = m.members().remove(0).dispatch_weight();
+        assert!(w <= MIN_DISPATCH_WEIGHT, "{w}");
+        assert!(m.claim_dispatchable().is_empty());
+        // In-flight load weighs twice as heavy as queued load.
+        let mut inflight = reg("10.0.0.7:1", version);
+        inflight.in_flight = 8;
+        m.register(&inflight).unwrap();
+        let w = m.members().remove(0).dispatch_weight();
+        assert!((w - 1.0 / 3.0).abs() < 1e-9, "{w}");
+        assert_eq!(m.claim_dispatchable().len(), 1);
+    }
+
+    #[test]
+    fn rejected_delta_decays_between_heartbeats() {
+        let m = Membership::new(Duration::from_secs(60));
+        let version = env!("CARGO_PKG_VERSION");
+        // First sight of a member never counts its cumulative history.
+        let mut hb = reg("10.0.0.8:2", version);
+        hb.rejected = 100;
+        m.register(&hb).unwrap();
+        assert_eq!(m.members().remove(0).rejected_delta, 0);
+        // Shedding 16 requests in one interval drops the weight to the
+        // cutoff: 1 / (1 + 16/4) = 0.2 — skipped this round.
+        hb.rejected = 116;
+        m.register(&hb).unwrap();
+        let member = m.members().remove(0);
+        assert_eq!(member.rejected_delta, 16);
+        assert!(member.dispatch_weight() <= MIN_DISPATCH_WEIGHT);
+        assert!(m.claim_dispatchable().is_empty());
+        // A quiet heartbeat (same cumulative total) clears the signal.
+        m.register(&hb).unwrap();
+        let member = m.members().remove(0);
+        assert_eq!(member.rejected_delta, 0);
+        assert_eq!(member.dispatch_weight(), 1.0);
+        assert_eq!(m.claim_dispatchable().len(), 1);
+        // A restarted worker (counter reset) is not punished.
+        hb.rejected = 3;
+        m.mark_idle("10.0.0.8:2");
+        m.register(&hb).unwrap();
+        assert_eq!(m.members().remove(0).rejected_delta, 0);
     }
 
     #[test]

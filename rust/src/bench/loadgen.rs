@@ -53,6 +53,12 @@ pub struct LoadgenSpec {
     pub ramp_s: f64,
     /// Pipelined connections the schedule round-robins across.
     pub connections: usize,
+    /// Extra connections opened and held *silent* for the whole run —
+    /// they never send a request.  Exercises the server's multiplexer
+    /// at connection counts far above the active stream count (a mostly
+    /// idle fleet is the realistic shape; with thread-per-connection it
+    /// was also the expensive one).
+    pub idle_connections: usize,
     /// Every Nth request is a `bench` instead of a `ping` (0 = never):
     /// a cheap way to mix real simulator work into the stream.
     pub bench_every: usize,
@@ -75,6 +81,7 @@ impl Default for LoadgenSpec {
             duration_s: 10.0,
             ramp_s: 2.0,
             connections: 4,
+            idle_connections: 0,
             bench_every: 0,
             benchmark: "vector_addition".into(),
             profile: "test".into(),
@@ -150,8 +157,8 @@ fn fetch_stats(addr: &str) -> Option<Json> {
 /// `spec.out` when set.  Fields: `offered_qps`, `achieved_qps` (ok
 /// responses over wall time), `sent` / `received` / `ok` / `busy` /
 /// `errors`, `duration_s` (wall, including drain), `connections`,
-/// `client_latency_us` (histogram summary), and `server` (the
-/// post-run `stats` response, or null).
+/// `idle_connections`, `client_latency_us` (histogram summary), and
+/// `server` (the post-run `stats` response, or null).
 pub fn run(spec: &LoadgenSpec) -> Result<Json, String> {
     if !(spec.qps > 0.0) {
         return Err("loadgen: --qps must be > 0".into());
@@ -215,6 +222,16 @@ pub fn run(spec: &LoadgenSpec) -> Result<Json, String> {
             }
         })
     };
+
+    // Idle connections: opened up front, held silent until the run
+    // ends.  The Vec keeps the sockets alive; dropping it at the end
+    // closes them all.
+    let mut idle = Vec::with_capacity(spec.idle_connections);
+    for _ in 0..spec.idle_connections {
+        let stream = TcpStream::connect(&spec.addr)
+            .map_err(|e| format!("loadgen: connect {}: {e}", spec.addr))?;
+        idle.push(stream);
+    }
 
     let mut senders = Vec::with_capacity(spec.connections);
     let mut readers = Vec::with_capacity(spec.connections);
@@ -329,6 +346,7 @@ pub fn run(spec: &LoadgenSpec) -> Result<Json, String> {
     let _ = monitor.join();
     let achieved_qps =
         if wall_s > 0.0 { totals.ok as f64 / wall_s } else { 0.0 };
+    drop(idle);
     let server = fetch_stats(&spec.addr).unwrap_or(Json::Null);
 
     let report = Json::obj(vec![
@@ -341,6 +359,7 @@ pub fn run(spec: &LoadgenSpec) -> Result<Json, String> {
         ("errors", totals.errors.into()),
         ("duration_s", wall_s.into()),
         ("connections", (spec.connections as u64).into()),
+        ("idle_connections", (spec.idle_connections as u64).into()),
         ("client_latency_us", hist.summary_json()),
         ("server", server),
     ]);

@@ -81,10 +81,12 @@ COMMANDS:
   validate
   serve [--addr HOST:PORT] [--cache-dir DIR]
         [--join HOST:PORT [--advertise HOST:PORT]]
-        [--workers N] [--queue-depth N] [--trace-out FILE]
+        [--workers N] [--queue-depth N]
+        [--workers-min N --workers-max N] [--trace-out FILE]
   loadgen [--addr HOST:PORT] [--qps N] [--duration SECS] [--ramp SECS]
-          [--connections N] [--bench-every N] [--benchmark NAME]
-          [--profile NAME] [--sleep-ms N] [--out FILE | --no-out]
+          [--connections N] [--idle-connections N] [--bench-every N]
+          [--benchmark NAME] [--profile NAME] [--sleep-ms N]
+          [--out FILE | --no-out]
   cluster --workers N [--cache-dir DIR] [--base-port PORT]
           [--max-restarts N] [--trace-out FILE]
   cache compact --cache-dir DIR [--dry-run]
@@ -99,13 +101,18 @@ tinycnn` sweeps models across the same design grid as kernels
 (model-only when `--benchmarks` is not given explicitly).
 
 Serving: `arrow serve` answers newline-delimited JSON requests over a
-bounded worker pool — N pipelined requests per connection run
-concurrently, `{\"cmd\": \"stats\"}` reports p50/p99/p999 latency per
-command plus queue depth and rejection counters, `{\"cmd\": \"warm\"}`
-pre-builds sessions for a sweep cohort, and `{\"cmd\": \"shutdown\"}`
-(loopback-only, or SIGTERM) drains in-flight work before exit.
-`arrow loadgen` drives a server open-loop at a target QPS and writes
-BENCH_serve_latency.json with client and server percentiles.
+bounded worker pool — one readiness-polled thread multiplexes every
+connection, so pipelined requests run concurrently while the OS
+thread count stays fixed.  `{\"cmd\": \"stats\"}` reports p50/p99/p999
+latency per command plus queue depth, rejection, poller, and worker
+counters, `{\"cmd\": \"warm\"}` pre-builds sessions (including whole
+model pipelines) for a sweep cohort, and `{\"cmd\": \"shutdown\"}`
+(loopback-only, or SIGTERM) drains in-flight work before exit.  With
+`--workers-min N --workers-max N` an autoscaler resizes the worker
+pool from drained queue-wait latency windows.  `arrow loadgen` drives
+a server open-loop at a target QPS (optionally holding extra idle
+connections open) and writes BENCH_serve_latency.json with client and
+server percentiles.
 
 Distributed sweeps: `arrow sweep --workers a:1,b:2` shards the grid
 across running `arrow serve` workers and merges one report (dead
@@ -204,6 +211,7 @@ fn worker_summary(w: &cluster::WorkerStats) -> String {
     if let Some((grid, batch)) = w.caps {
         let _ = write!(line, ", caps {grid} pts / {batch} per batch");
     }
+    let _ = write!(line, ", weight {:.2}", w.weight);
     if let Some(l) = &w.ledger {
         let _ = write!(
             line,
@@ -761,6 +769,26 @@ fn main() -> Result<()> {
             if let Some(d) = args.opt("--queue-depth") {
                 exec.queue_depth = d.parse()?;
             }
+            let workers_min = args.opt("--workers-min");
+            let workers_max = args.opt("--workers-max");
+            let autoscale = match (workers_min, workers_max) {
+                (None, None) => None,
+                (min, max) => {
+                    let min: usize =
+                        min.map(|v| v.parse()).transpose()?.unwrap_or(1);
+                    let max: usize = max
+                        .map(|v| v.parse())
+                        .transpose()?
+                        .unwrap_or_else(|| exec.workers.max(min));
+                    if min > max {
+                        return fail(format!(
+                            "serve: --workers-min {min} exceeds \
+                             --workers-max {max}"
+                        ));
+                    }
+                    Some(server::AutoscaleSpec::new(min, max))
+                }
+            };
             let join = match args.opt("--join") {
                 Some(coordinator) => {
                     let mut join = server::JoinSpec::new(coordinator);
@@ -774,11 +802,12 @@ fn main() -> Result<()> {
                     None
                 }
             };
-            server::serve_opts(
+            server::serve_scaled(
                 &addr,
                 cache_dir.as_deref().map(std::path::Path::new),
                 join.as_ref(),
                 exec,
+                autoscale,
             )?;
         }
         "loadgen" => {
@@ -797,6 +826,9 @@ fn main() -> Result<()> {
             }
             if let Some(c) = args.opt("--connections") {
                 spec.connections = c.parse()?;
+            }
+            if let Some(c) = args.opt("--idle-connections") {
+                spec.idle_connections = c.parse()?;
             }
             if let Some(n) = args.opt("--bench-every") {
                 spec.bench_every = n.parse()?;
@@ -817,9 +849,10 @@ fn main() -> Result<()> {
                 spec.out = None;
             }
             eprintln!(
-                "loadgen: {} at {} req/s for {}s (+{}s ramp) over {} connection(s)",
+                "loadgen: {} at {} req/s for {}s (+{}s ramp) over {} \
+                 connection(s) (+{} idle)",
                 spec.addr, spec.qps, spec.duration_s, spec.ramp_s,
-                spec.connections
+                spec.connections, spec.idle_connections
             );
             let report = loadgen::run(&spec).map_err(|e| e.to_string())?;
             if let Some(out) = &spec.out {

@@ -94,6 +94,16 @@ pub static SHARDS_FALLBACK: Counter = Counter::new(
     "arrow_cluster_shards_fallback_total",
     "Shards evaluated by the coordinator's local fallback",
 );
+// Model-session pool (whole-model execution contexts; the per-stage
+// sessions underneath count against the session pool above).
+pub static MODEL_SESSION_POOL_HITS: Counter = Counter::new(
+    "arrow_model_session_pool_hits_total",
+    "Model-session lookups answered by a pooled model session",
+);
+pub static MODEL_SESSION_POOL_MISSES: Counter = Counter::new(
+    "arrow_model_session_pool_misses_total",
+    "Model-session lookups that had to assemble the stages",
+);
 // Fleet membership.
 pub static FLEET_JOINS: Counter = Counter::new(
     "arrow_fleet_joins_total",
@@ -107,14 +117,33 @@ pub static FLEET_FAILED: Counter = Counter::new(
     "arrow_fleet_failed_total",
     "Worker failures recorded by the coordinator",
 );
+// Serving: connection multiplexer + pool autoscaler.
+pub static CONN_ACCEPTED: Counter = Counter::new(
+    "arrow_connections_accepted_total",
+    "Connections accepted by the serving poller",
+);
+pub static CONN_WRITE_SHED: Counter = Counter::new(
+    "arrow_conn_write_shed_total",
+    "Requests answered busy because the connection write queue was full",
+);
+pub static AUTOSCALE_GROW: Counter = Counter::new(
+    "arrow_autoscale_grow_total",
+    "Autoscaler resizes that grew the executor pool",
+);
+pub static AUTOSCALE_SHRINK: Counter = Counter::new(
+    "arrow_autoscale_shrink_total",
+    "Autoscaler resizes that shrank the executor pool",
+);
 
 /// Every registered counter, in exposition order.
-pub static COUNTERS: [&Counter; 13] = [
+pub static COUNTERS: [&Counter; 19] = [
     &EVAL_STORE_HITS,
     &EVAL_ANALYTIC,
     &EVAL_SIMULATED,
     &SESSION_POOL_HITS,
     &SESSION_POOL_MISSES,
+    &MODEL_SESSION_POOL_HITS,
+    &MODEL_SESSION_POOL_MISSES,
     &SHARDS_CARVED,
     &SHARDS_DISPATCHED,
     &SHARDS_MERGED,
@@ -123,6 +152,10 @@ pub static COUNTERS: [&Counter; 13] = [
     &FLEET_JOINS,
     &FLEET_EXPIRED,
     &FLEET_FAILED,
+    &CONN_ACCEPTED,
+    &CONN_WRITE_SHED,
+    &AUTOSCALE_GROW,
+    &AUTOSCALE_SHRINK,
 ];
 
 // --- Prometheus text rendering ---------------------------------------------

@@ -85,6 +85,11 @@ struct State {
     open: bool,
     /// Jobs currently executing on workers.
     running: usize,
+    /// Live worker threads (including ones mid-job).
+    threads: usize,
+    /// Desired worker threads ([`Executor::resize`]).  A worker that
+    /// finds the queue empty while `threads > target` retires.
+    target: usize,
 }
 
 struct Shared {
@@ -108,7 +113,6 @@ fn lock(shared: &Shared) -> MutexGuard<'_, State> {
 /// The bounded worker pool.
 pub struct Executor {
     shared: Arc<Shared>,
-    workers: usize,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -120,6 +124,8 @@ impl Executor {
                 jobs: VecDeque::new(),
                 open: true,
                 running: 0,
+                threads: workers,
+                target: workers,
             }),
             work: Condvar::new(),
             drained: Condvar::new(),
@@ -134,7 +140,7 @@ impl Executor {
                 std::thread::spawn(move || worker_loop(&shared))
             })
             .collect();
-        Executor { shared, workers, handles: Mutex::new(handles) }
+        Executor { shared, handles: Mutex::new(handles) }
     }
 
     /// Admit one job, or refuse immediately.  Never blocks.
@@ -218,8 +224,47 @@ impl Executor {
         self.shared.panicked.load(Ordering::Relaxed)
     }
 
+    /// Live worker threads right now (the autoscaler moves this).
     pub fn worker_count(&self) -> usize {
-        self.workers
+        lock(&self.shared).threads
+    }
+
+    /// The worker count [`Executor::resize`] is steering towards.
+    /// Equal to [`Executor::worker_count`] once growth has spawned and
+    /// shrink retirement has caught up.
+    pub fn target_workers(&self) -> usize {
+        lock(&self.shared).target
+    }
+
+    /// Steer the pool to `target` workers (clamped to ≥ 1).  Growth
+    /// spawns threads immediately; shrink is cooperative — a surplus
+    /// worker retires the next time it finds the queue empty, so
+    /// in-flight jobs are never interrupted.  Returns the applied
+    /// target.  A draining executor refuses to resize (its workers are
+    /// exiting anyway).
+    pub fn resize(&self, target: usize) -> usize {
+        let target = target.max(1);
+        let to_spawn = {
+            let mut state = lock(&self.shared);
+            if !state.open {
+                return state.target;
+            }
+            state.target = target;
+            let n = target.saturating_sub(state.threads);
+            // Reserve the slots under the lock so concurrent resizes
+            // (or a racing retirement check) never overspawn.
+            state.threads += n;
+            n
+        };
+        for _ in 0..to_spawn {
+            let shared = Arc::clone(&self.shared);
+            lock_handles(&self.handles)
+                .push(std::thread::spawn(move || worker_loop(&shared)));
+        }
+        // Shrinking: wake idle workers so they observe the new target
+        // and retire.
+        self.shared.work.notify_all();
+        target
     }
 
     /// Close admission, wait up to `grace` for queued + in-flight jobs
@@ -286,6 +331,14 @@ fn worker_loop(shared: &Shared) {
                     break job;
                 }
                 if !state.open {
+                    state.threads -= 1;
+                    return;
+                }
+                // Cooperative shrink: surplus workers retire only once
+                // the queue is empty, so a resize-down never abandons
+                // admitted work.
+                if state.threads > state.target {
+                    state.threads -= 1;
                     return;
                 }
                 state = shared
@@ -430,6 +483,49 @@ mod tests {
         .unwrap();
         assert!(!e.shutdown(Duration::from_millis(50)));
         drop(tx);
+    }
+
+    #[test]
+    fn resize_grows_and_shrinks_live_worker_count() {
+        let e = exec(2, 16);
+        assert_eq!(e.worker_count(), 2);
+        assert_eq!(e.target_workers(), 2);
+        // Growth is immediate: the new threads are reserved (and
+        // spawned) before resize returns.
+        assert_eq!(e.resize(4), 4);
+        assert_eq!(e.worker_count(), 4);
+        // Shrink is cooperative: idle workers retire once woken.
+        assert_eq!(e.resize(1), 1);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while e.worker_count() > 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(e.worker_count(), 1);
+        // The surviving worker still serves.
+        let (tx, rx) = mpsc::channel();
+        e.submit(move || tx.send(()).unwrap()).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // Targets clamp to at least one worker.
+        assert_eq!(e.resize(0), 1);
+        assert!(e.shutdown(Duration::from_secs(5)));
+    }
+
+    #[test]
+    fn resize_down_never_abandons_admitted_work() {
+        let e = exec(4, 64);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let counter = Arc::clone(&counter);
+            e.submit(move || {
+                std::thread::sleep(Duration::from_millis(5));
+                counter.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        // Shrink mid-burst: retirement waits for an empty queue.
+        e.resize(1);
+        assert!(e.shutdown(Duration::from_secs(10)));
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
     }
 
     #[test]

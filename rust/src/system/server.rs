@@ -20,17 +20,31 @@
 //!
 //! Responses are single-line JSON with `"ok": true/false`.
 //!
-//! **Execution model** (the high-throughput serving path): connections
-//! are cheap reader/writer pairs; every request is admitted to one
+//! **Execution model** (the high-throughput serving path): one poller
+//! thread owns every accepted socket — non-blocking, readiness-polled
+//! via the thin [`crate::util::poll`] `poll(2)` wrapper — so the
+//! OS-thread count is independent of the connection count.  The poller
+//! parses complete JSON lines and admits each request to one
 //! process-wide bounded [`Executor`] pool, so N requests pipelined on
 //! one connection execute *concurrently* across the pool.  When the
 //! bounded queue is full the request is refused immediately with a
 //! structured `{"ok": false, "busy": true}` error — backpressure, not
-//! unbounded buffering.  Responses to requests that carry an `"id"`
-//! field are written the moment they complete with the id echoed
-//! (out-of-order completion allowed); responses to id-less requests are
-//! delivered strictly in request order, byte-identical to the old
-//! serial server.
+//! unbounded buffering.  Responses are routed back through capped
+//! per-connection write queues the poller flushes on writability; a
+//! client that stops reading gets the same structured `busy` once its
+//! queue cap is hit ([`WRITE_QUEUE_CAP`]), never a stalled poller.
+//! Responses to requests that carry an `"id"` field are queued the
+//! moment they complete with the id echoed (out-of-order completion
+//! allowed); responses to id-less requests are delivered strictly in
+//! request order, byte-identical to the old serial server.
+//!
+//! **Autoscaling**: with an [`AutoscaleSpec`] (`arrow serve
+//! --workers-min/--workers-max`) a control loop drains the queue-wait
+//! histogram window every interval and resizes the executor pool —
+//! growing on sustained queue-wait p90, shrinking towards the floor on
+//! idle windows — and retargets the session pool alongside.  Every
+//! resize is a trace instant plus a Prometheus counter, and the
+//! current/target worker counts are gauges.
 //!
 //! Every evaluation (`bench`, `sweep`, and both inside `batch`) goes
 //! through one process-wide [`Evaluator`] shared across all
@@ -59,8 +73,8 @@
 //! lives.
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{
     AtomicBool, AtomicU64, AtomicUsize, Ordering,
@@ -78,6 +92,7 @@ use crate::bench::sweep::{self, SweepSpec};
 use crate::bench::{EvalPoint, Evaluator, Profile, WorkloadKind};
 use crate::util::histogram::Histogram;
 use crate::util::json::{self, Json};
+use crate::util::poll::{self, PollFd, Pollable, POLLIN, POLLOUT};
 use crate::vector::ArrowConfig;
 
 use super::describe;
@@ -101,8 +116,15 @@ pub const MAX_SLEEP_MS: u64 = 5_000;
 /// before giving up and exiting anyway.
 pub const SHUTDOWN_GRACE: Duration = Duration::from_secs(20);
 
-/// Accept-loop poll interval while watching for the drain flag.
-const ACCEPT_POLL: Duration = Duration::from_millis(20);
+/// Poller readiness timeout: an idle tick re-checks the drain flags,
+/// so shutdown/SIGTERM responsiveness matches the old accept loop.
+const POLL_TICK: Duration = Duration::from_millis(25);
+
+/// Cap on rendered-but-unwritten response bytes per connection.  A
+/// client that pipelines requests without reading responses hits this
+/// and gets structured `busy` answers instead of stalling the poller
+/// (or growing the heap unboundedly).
+pub const WRITE_QUEUE_CAP: usize = 256 * 1024;
 
 /// Command kinds tracked by the per-command latency histograms.  The
 /// last entry is the catch-all for unknown commands.
@@ -135,6 +157,15 @@ pub struct ServerStats {
     pub rejected: AtomicU64,
     /// Executor queue depth, mirrored at each admission/completion.
     pub queue_depth: AtomicUsize,
+    /// Sockets the poller currently owns (accepted connections).
+    pub poller_fds: AtomicUsize,
+    /// Rendered-but-unwritten response bytes across all connections,
+    /// refreshed by the poller each tick.
+    pub write_queue_bytes: AtomicUsize,
+    /// Live executor worker count, mirrored by the poller/autoscaler.
+    pub workers_current: AtomicUsize,
+    /// Worker count the autoscaler is steering towards.
+    pub workers_target: AtomicUsize,
     /// Aggregate latency across every command.
     latency_all: Histogram,
     /// Per-command latency, indexed by [`kind_of`].
@@ -143,6 +174,10 @@ pub struct ServerStats {
     /// request, so pollers see per-window latency instead of only
     /// since-startup aggregates.
     latency_window: Histogram,
+    /// Queue-wait (admission → worker pickup) interval window, drained
+    /// by the autoscaler each control tick: sustained high p90 here
+    /// means the pool is undersized.
+    queue_wait_window: Histogram,
 }
 
 impl ServerStats {
@@ -154,6 +189,17 @@ impl ServerStats {
         self.latency_all.record(elapsed);
         self.latency_window.record(elapsed);
         self.latency[kind.min(KIND_NAMES.len() - 1)].record(elapsed);
+    }
+
+    /// Record one request's queue wait (admission → worker pickup)
+    /// into the autoscaler's interval window.
+    pub fn record_queue_wait(&self, waited: Duration) {
+        self.queue_wait_window.record(waited);
+    }
+
+    /// Drain the queue-wait window (autoscaler control tick).
+    pub fn drain_queue_wait_window(&self) -> Histogram {
+        self.queue_wait_window.snapshot_reset()
     }
 
     /// The load object both the handshake and the registration payload
@@ -227,6 +273,30 @@ fn metrics_text(evaluator: &Evaluator, stats: &ServerStats) -> String {
         "arrow_executor_queue_depth",
         "Jobs waiting in the bounded executor queue",
         stats.queue_depth.load(Ordering::Relaxed) as u64,
+    );
+    metrics::render_gauge(
+        &mut out,
+        "arrow_poller_fds",
+        "Accepted connections the poller currently owns",
+        stats.poller_fds.load(Ordering::Relaxed) as u64,
+    );
+    metrics::render_gauge(
+        &mut out,
+        "arrow_conn_write_queue_bytes",
+        "Rendered-but-unwritten response bytes across all connections",
+        stats.write_queue_bytes.load(Ordering::Relaxed) as u64,
+    );
+    metrics::render_gauge(
+        &mut out,
+        "arrow_executor_workers",
+        "Live executor worker threads",
+        stats.workers_current.load(Ordering::Relaxed) as u64,
+    );
+    metrics::render_gauge(
+        &mut out,
+        "arrow_executor_workers_target",
+        "Worker count the autoscaler is steering towards",
+        stats.workers_target.load(Ordering::Relaxed) as u64,
     );
     metrics::render_gauge(
         &mut out,
@@ -558,7 +628,53 @@ pub fn handle_request_with(
                 "latency_window_us",
                 stats.latency_window.snapshot_reset().summary_json(),
             ),
+            // Connection-multiplexer health: sockets owned by the
+            // poller and response bytes queued behind slow readers.
+            (
+                "poller",
+                Json::obj(vec![
+                    (
+                        "fds",
+                        (stats.poller_fds.load(Ordering::Relaxed) as u64)
+                            .into(),
+                    ),
+                    (
+                        "write_queue_bytes",
+                        (stats.write_queue_bytes.load(Ordering::Relaxed)
+                            as u64)
+                            .into(),
+                    ),
+                ]),
+            ),
+            // Pool sizing: live vs target worker count plus how often
+            // the autoscaler has moved it.
+            (
+                "workers",
+                Json::obj(vec![
+                    (
+                        "current",
+                        (stats.workers_current.load(Ordering::Relaxed)
+                            as u64)
+                            .into(),
+                    ),
+                    (
+                        "target",
+                        (stats.workers_target.load(Ordering::Relaxed)
+                            as u64)
+                            .into(),
+                    ),
+                    (
+                        "grown",
+                        crate::obs::metrics::AUTOSCALE_GROW.get().into(),
+                    ),
+                    (
+                        "shrunk",
+                        crate::obs::metrics::AUTOSCALE_SHRINK.get().into(),
+                    ),
+                ]),
+            ),
             ("sessions", evaluator.sessions().stats_json()),
+            ("model_sessions", evaluator.model_sessions().stats_json()),
             ("programs", (evaluator.programs().len() as u64).into()),
         ]),
         // Prometheus text exposition: the static obs registry plus this
@@ -589,6 +705,10 @@ pub fn handle_request_with(
                     ("warmed", warmed.into()),
                     ("errors", errors.into()),
                     ("sessions", evaluator.sessions().stats_json()),
+                    (
+                        "model_sessions",
+                        evaluator.model_sessions().stats_json(),
+                    ),
                 ])
             }
             Err(e) => err_response(e),
@@ -793,38 +913,118 @@ impl ServerCore {
     }
 }
 
-/// Where a response goes: tagged requests (an `"id"` field) are written
-/// the moment they complete; untagged requests hold a sequence number
-/// and are delivered strictly in request order through the reorder
-/// buffer.
+/// Where a response goes: tagged requests (an `"id"` field) are queued
+/// for write the moment they complete; untagged requests hold a
+/// sequence number and are delivered strictly in request order through
+/// the reorder buffer.
 #[derive(Debug, Clone, Copy)]
 enum Slot {
     Ordered(u64),
     Tagged,
 }
 
-/// Per-connection writer state: the stream plus the reorder buffer for
-/// in-order (untagged) responses.  Pool workers completing out of order
-/// park their rendered response in `pending`; whoever completes the
-/// next expected sequence flushes the run.
+/// Wakes the poller from pool workers: a self-connected loopback TCP
+/// pair, so no extra FFI surface is needed.  A completed job writes one
+/// byte to `tx`; the poller — parked in `poll(2)` — sees `rx` readable,
+/// drains it, and flushes the write queues the job appended to.
+struct Waker {
+    tx: TcpStream,
+    rx: TcpStream,
+}
+
+impl Waker {
+    fn new() -> std::io::Result<Waker> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let tx = TcpStream::connect(listener.local_addr()?)?;
+        let (rx, _) = listener.accept()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok(Waker { tx, rx })
+    }
+
+    /// Nudge the poller.  A full pipe (or any write error) is fine:
+    /// wake bytes are level-triggered hints, and a full pipe means the
+    /// poller has wakes pending already.
+    fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
+
+    /// Swallow queued wake bytes (poller side).
+    fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+/// Per-connection writer state: the reorder buffer for in-order
+/// (untagged) responses plus the bounded write queue the poller flushes
+/// on writability.  Pool workers completing out of order park their
+/// rendered response in `pending`; whoever completes the next expected
+/// sequence moves the run into `wbuf`.
 struct ConnOut {
-    stream: TcpStream,
+    /// Rendered-but-unwritten response bytes (newline-terminated).
+    wbuf: Vec<u8>,
     next_seq: u64,
     pending: BTreeMap<u64, String>,
+    /// The peer's write side failed; deliveries are dropped.
+    dead: bool,
+}
+
+/// Connection state shared between the poller and pool workers.
+struct ConnShared {
+    out: Mutex<ConnOut>,
+    /// Admitted-but-undelivered executor jobs for this connection; the
+    /// poller keeps the socket alive while this is non-zero.
+    jobs: AtomicUsize,
+    waker: Arc<Waker>,
+}
+
+impl ConnShared {
+    fn new(waker: Arc<Waker>) -> ConnShared {
+        ConnShared {
+            out: Mutex::new(ConnOut {
+                wbuf: Vec::new(),
+                next_seq: 0,
+                pending: BTreeMap::new(),
+                dead: false,
+            }),
+            jobs: AtomicUsize::new(0),
+            waker,
+        }
+    }
+}
+
+/// Balances the per-connection job counter by drop, so a panicking
+/// request handler cannot pin its connection in the poller forever.
+/// The final wake makes the poller re-check the connection even when
+/// the delivery itself was skipped (dead peer).
+struct JobGuard(Arc<ConnShared>);
+
+impl Drop for JobGuard {
+    fn drop(&mut self) {
+        self.0.jobs.fetch_sub(1, Ordering::AcqRel);
+        self.0.waker.wake();
+    }
 }
 
 fn lock_out(out: &Mutex<ConnOut>) -> std::sync::MutexGuard<'_, ConnOut> {
     out.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-/// Deliver one response into its slot.  Write errors are swallowed: the
-/// client is gone, and the reader side of the connection will see EOF
-/// and wind down on its own.
-fn deliver(out: &Mutex<ConnOut>, slot: Slot, resp: &Json) {
-    let mut o = lock_out(out);
+/// Deliver one response into its slot: render into the connection's
+/// write queue (reorder-buffer semantics preserved) and wake the poller
+/// to flush it.
+fn deliver(shared: &ConnShared, slot: Slot, resp: &Json) {
+    let mut o = lock_out(&shared.out);
+    if o.dead {
+        return;
+    }
     match slot {
         Slot::Tagged => {
-            let _ = writeln!(o.stream, "{resp}");
+            let line = resp.to_string();
+            o.wbuf.reserve(line.len() + 1);
+            o.wbuf.extend_from_slice(line.as_bytes());
+            o.wbuf.push(b'\n');
         }
         Slot::Ordered(seq) => {
             o.pending.insert(seq, resp.to_string());
@@ -832,10 +1032,14 @@ fn deliver(out: &Mutex<ConnOut>, slot: Slot, resp: &Json) {
                 let next = o.next_seq;
                 let Some(line) = o.pending.remove(&next) else { break };
                 o.next_seq += 1;
-                let _ = writeln!(o.stream, "{line}");
+                o.wbuf.reserve(line.len() + 1);
+                o.wbuf.extend_from_slice(line.as_bytes());
+                o.wbuf.push(b'\n');
             }
         }
     }
+    drop(o);
+    shared.waker.wake();
 }
 
 /// Echo the request's `"id"` into the response, so a pipelining client
@@ -861,116 +1065,394 @@ fn busy_response(reject: &Reject) -> Json {
     ])
 }
 
-/// One connection: read lines, admit each request to the shared pool,
-/// deliver responses per [`Slot`] semantics.  The reader never executes
-/// requests itself (except `stats`/`shutdown`, which must stay
-/// responsive under saturation), so a slow request cannot stall
-/// admission of the ones pipelined behind it.
-fn handle_conn(stream: TcpStream, core: &Arc<ServerCore>) {
-    let peer = stream.peer_addr().ok();
-    let writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let out = Arc::new(Mutex::new(ConnOut {
-        stream: writer,
-        next_seq: 0,
-        pending: BTreeMap::new(),
-    }));
-    let reader = BufReader::new(stream);
-    let mut seq = 0u64;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let req = match json::parse(&line) {
-            Ok(r) => r,
-            Err(e) => {
-                deliver(
-                    &out,
-                    Slot::Ordered(seq),
-                    &err_response(format!("bad json: {e}")),
-                );
-                seq += 1;
-                continue;
-            }
-        };
-        let id = req.get("id").cloned();
-        let slot = if id.is_some() {
-            Slot::Tagged
-        } else {
-            let s = Slot::Ordered(seq);
-            seq += 1;
-            s
-        };
-        let cmd = req.get("cmd").and_then(Json::as_str);
-        match cmd {
-            // Admin: flip the server-wide drain flag.  Loopback peers
-            // only — a worker's serve port is reachable from the whole
-            // fleet, and any remote being able to stop it would turn a
-            // typo into an outage.
-            Some("shutdown") => {
-                let resp = if peer.is_some_and(|p| p.ip().is_loopback()) {
-                    core.shutdown.store(true, Ordering::Release);
-                    Json::obj(vec![
-                        ("ok", true.into()),
-                        ("draining", true.into()),
-                    ])
-                } else {
-                    err_response(
-                        "shutdown is admin-only (loopback connections)",
-                    )
-                };
-                deliver(&out, slot, &attach_id(resp, id));
-                continue;
-            }
-            // Observability must not queue behind the load it is
-            // measuring: answer on the connection thread.
-            Some("stats") | Some("metrics") => {
-                let started = Instant::now();
-                let resp =
-                    handle_request_with(&req, &core.evaluator, &core.stats);
-                core.stats.record(kind_of(cmd), started.elapsed());
-                deliver(&out, slot, &attach_id(resp, id));
-                continue;
-            }
-            _ => {}
-        }
-        let kind = kind_of(cmd);
-        let core_job = Arc::clone(core);
-        let out_job = Arc::clone(&out);
-        let id_job = id.clone();
-        let admitted = Instant::now();
-        let submitted = core.executor.submit(move || {
-            let _guard = InFlightGuard::new(&core_job.stats);
-            core_job
-                .stats
-                .queue_depth
-                .store(core_job.executor.queue_len(), Ordering::Relaxed);
-            let resp = handle_request_with(
-                &req,
-                &core_job.evaluator,
-                &core_job.stats,
+/// The structured rejection for a connection whose write queue exceeds
+/// [`WRITE_QUEUE_CAP`]: the same `busy: true` contract as executor
+/// admission control, different bottleneck — the client is pipelining
+/// requests faster than it reads responses.
+fn overflow_response(queued: usize) -> Json {
+    Json::obj(vec![
+        ("ok", false.into()),
+        ("busy", true.into()),
+        (
+            "error",
+            Json::Str(format!(
+                "server busy: connection write queue full \
+                 ({queued} bytes unread)"
+            )),
+        ),
+    ])
+}
+
+/// One multiplexed connection as the poller sees it.
+struct Conn {
+    stream: TcpStream,
+    peer: Option<SocketAddr>,
+    /// Partial-line accumulator between readiness events.
+    rbuf: Vec<u8>,
+    /// Next untagged sequence number to assign.
+    seq: u64,
+    shared: Arc<ConnShared>,
+    /// EOF observed; the socket closes once admitted work drains.
+    closed_read: bool,
+}
+
+/// Handle one complete request line: parse, assign its [`Slot`], answer
+/// admin/observability inline on the poller thread, and admit the rest
+/// to the shared pool — the same routing the per-connection reader
+/// threads used to do, minus the threads.
+fn process_line(core: &Arc<ServerCore>, conn: &mut Conn, line: &str) {
+    if line.trim().is_empty() {
+        return;
+    }
+    let req = match json::parse(line) {
+        Ok(r) => r,
+        Err(e) => {
+            let slot = Slot::Ordered(conn.seq);
+            conn.seq += 1;
+            deliver(
+                &conn.shared,
+                slot,
+                &err_response(format!("bad json: {e}")),
             );
-            core_job.stats.record(kind, admitted.elapsed());
-            deliver(&out_job, slot, &attach_id(resp, id_job));
-        });
-        match submitted {
-            Ok(()) => {
-                core.stats
-                    .queue_depth
-                    .store(core.executor.queue_len(), Ordering::Relaxed);
+            return;
+        }
+    };
+    let id = req.get("id").cloned();
+    let slot = if id.is_some() {
+        Slot::Tagged
+    } else {
+        let s = Slot::Ordered(conn.seq);
+        conn.seq += 1;
+        s
+    };
+    let cmd = req.get("cmd").and_then(Json::as_str);
+    // Admin: flip the server-wide drain flag.  Loopback peers only — a
+    // worker's serve port is reachable from the whole fleet, and any
+    // remote being able to stop it would turn a typo into an outage.
+    if cmd == Some("shutdown") {
+        let resp = if conn.peer.is_some_and(|p| p.ip().is_loopback()) {
+            core.shutdown.store(true, Ordering::Release);
+            Json::obj(vec![("ok", true.into()), ("draining", true.into())])
+        } else {
+            err_response("shutdown is admin-only (loopback connections)")
+        };
+        deliver(&conn.shared, slot, &attach_id(resp, id));
+        return;
+    }
+    // Slow-reader backpressure: past the write-queue cap every further
+    // request answers a small constant-size `busy` line instead of
+    // queueing a real response body behind a peer that isn't reading.
+    let queued = lock_out(&conn.shared.out).wbuf.len();
+    if queued > WRITE_QUEUE_CAP {
+        crate::obs::metrics::CONN_WRITE_SHED.inc();
+        core.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        deliver(
+            &conn.shared,
+            slot,
+            &attach_id(overflow_response(queued), id),
+        );
+        return;
+    }
+    // Observability must not queue behind the load it is measuring:
+    // answer on the poller thread.
+    if matches!(cmd, Some("stats") | Some("metrics")) {
+        let started = Instant::now();
+        let resp = handle_request_with(&req, &core.evaluator, &core.stats);
+        core.stats.record(kind_of(cmd), started.elapsed());
+        deliver(&conn.shared, slot, &attach_id(resp, id));
+        return;
+    }
+    let kind = kind_of(cmd);
+    let core_job = Arc::clone(core);
+    let shared_job = Arc::clone(&conn.shared);
+    let id_job = id.clone();
+    let admitted = Instant::now();
+    conn.shared.jobs.fetch_add(1, Ordering::AcqRel);
+    let submitted = core.executor.submit(move || {
+        let _job_guard = JobGuard(Arc::clone(&shared_job));
+        core_job.stats.record_queue_wait(admitted.elapsed());
+        let _guard = InFlightGuard::new(&core_job.stats);
+        core_job
+            .stats
+            .queue_depth
+            .store(core_job.executor.queue_len(), Ordering::Relaxed);
+        let resp =
+            handle_request_with(&req, &core_job.evaluator, &core_job.stats);
+        core_job.stats.record(kind, admitted.elapsed());
+        deliver(&shared_job, slot, &attach_id(resp, id_job));
+    });
+    match submitted {
+        Ok(()) => {
+            core.stats
+                .queue_depth
+                .store(core.executor.queue_len(), Ordering::Relaxed);
+        }
+        Err(reject) => {
+            conn.shared.jobs.fetch_sub(1, Ordering::AcqRel);
+            core.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            deliver(
+                &conn.shared,
+                slot,
+                &attach_id(busy_response(&reject), id),
+            );
+        }
+    }
+}
+
+/// Drain readable bytes from one connection and process every complete
+/// line.  Partial tails stay buffered for the next readiness event; EOF
+/// and hard errors mark the read side closed.
+fn read_conn(core: &Arc<ServerCore>, conn: &mut Conn) {
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match (&conn.stream).read(&mut buf) {
+            Ok(0) => {
+                conn.closed_read = true;
+                break;
             }
-            Err(reject) => {
-                core.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                deliver(&out, slot, &attach_id(busy_response(&reject), id));
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&buf[..n]);
+                let mut start = 0usize;
+                loop {
+                    let Some(rel) =
+                        conn.rbuf[start..].iter().position(|&b| b == b'\n')
+                    else {
+                        break;
+                    };
+                    let mut end = start + rel;
+                    // Tolerate CRLF like the old BufRead::lines reader.
+                    if end > start && conn.rbuf[end - 1] == b'\r' {
+                        end -= 1;
+                    }
+                    let line =
+                        String::from_utf8_lossy(&conn.rbuf[start..end])
+                            .into_owned();
+                    start += rel + 1;
+                    process_line(core, conn, &line);
+                }
+                conn.rbuf.drain(..start);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.closed_read = true;
+                lock_out(&conn.shared.out).dead = true;
+                break;
             }
         }
     }
-    if let Some(peer) = peer {
-        crate::obs_info!("server", "connection from {peer} closed");
+}
+
+/// Flush as much queued output as the socket accepts right now.  A
+/// write error marks the connection dead and drops its queue — the
+/// peer is gone.
+fn flush_conn(conn: &Conn) {
+    let mut o = lock_out(&conn.shared.out);
+    while !o.wbuf.is_empty() {
+        match (&conn.stream).write(&o.wbuf) {
+            Ok(0) => {
+                o.dead = true;
+                o.wbuf.clear();
+                break;
+            }
+            Ok(n) => {
+                o.wbuf.drain(..n);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                o.dead = true;
+                o.wbuf.clear();
+                break;
+            }
+        }
     }
+}
+
+/// Whether the poller can drop this socket.  Reads the job counter
+/// *first*: observing zero (Acquire) means every delivery that will
+/// ever happen is already visible in the write queue, so the
+/// empty-queue check that follows cannot race a late completion.
+fn conn_finished(conn: &Conn) -> bool {
+    if conn.shared.jobs.load(Ordering::Acquire) != 0 {
+        return false;
+    }
+    let o = lock_out(&conn.shared.out);
+    if o.dead {
+        return true;
+    }
+    conn.closed_read && o.wbuf.is_empty() && o.pending.is_empty()
+}
+
+/// The readiness-polled multiplexer: one thread owns the listener, the
+/// waker, and every accepted socket.  Replaces the
+/// one-reader-thread-per-connection model — the OS-thread count is now
+/// the poller plus the (autoscaled) executor pool, independent of how
+/// many clients are connected.  Returns after a shutdown request or
+/// SIGTERM has been observed, the executor has drained (bounded by
+/// [`SHUTDOWN_GRACE`]), and pending responses are flushed.
+fn run_poller(
+    listener: TcpListener,
+    core: &Arc<ServerCore>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let waker = Arc::new(Waker::new()?);
+    let mut conns: Vec<Conn> = Vec::new();
+    // The executor drain runs on a helper thread so the poller keeps
+    // flushing write queues while in-flight jobs finish.
+    let mut drain: Option<(std::thread::JoinHandle<()>, Arc<AtomicBool>)> =
+        None;
+    loop {
+        let draining =
+            core.shutdown.load(Ordering::Acquire) || sigterm_pending();
+        if draining && drain.is_none() {
+            crate::obs_info!(
+                "server",
+                "draining: waiting up to {}s for in-flight requests",
+                SHUTDOWN_GRACE.as_secs()
+            );
+            let done = Arc::new(AtomicBool::new(false));
+            let exec_core = Arc::clone(core);
+            let exec_done = Arc::clone(&done);
+            let exec_waker = Arc::clone(&waker);
+            let handle = std::thread::spawn(move || {
+                if exec_core.executor.shutdown(SHUTDOWN_GRACE) {
+                    crate::obs_info!("server", "drained cleanly; exiting");
+                } else {
+                    crate::obs_warn!(
+                        "server",
+                        "drain grace expired with requests still running"
+                    );
+                }
+                exec_done.store(true, Ordering::Release);
+                exec_waker.wake();
+            });
+            drain = Some((handle, done));
+        }
+        if let Some((_, done)) = &drain {
+            if done.load(Ordering::Acquire) {
+                // Final flush: give the queued responses a bounded
+                // window to reach their sockets, then exit.
+                let deadline = Instant::now() + Duration::from_secs(2);
+                loop {
+                    let mut queued = 0usize;
+                    for conn in &conns {
+                        flush_conn(conn);
+                        queued += lock_out(&conn.shared.out).wbuf.len();
+                    }
+                    if queued == 0 || Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                break;
+            }
+        }
+        // Build the descriptor set: listener (accept interest until
+        // draining), waker, then one entry per connection.
+        let mut fds = Vec::with_capacity(conns.len() + 2);
+        fds.push(PollFd::new(
+            listener.raw_fd(),
+            if draining { 0 } else { POLLIN },
+        ));
+        fds.push(PollFd::new(waker.rx.raw_fd(), POLLIN));
+        for conn in &conns {
+            let mut events = 0i16;
+            if !conn.closed_read {
+                events |= POLLIN;
+            }
+            if !lock_out(&conn.shared.out).wbuf.is_empty() {
+                events |= POLLOUT;
+            }
+            fds.push(PollFd::new(conn.stream.raw_fd(), events));
+        }
+        poll::poll(&mut fds, POLL_TICK)?;
+        if fds[1].readable() {
+            waker.drain();
+        }
+        if fds[0].readable() && !draining {
+            loop {
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        crate::obs::metrics::CONN_ACCEPTED.inc();
+                        conns.push(Conn {
+                            stream,
+                            peer: Some(peer),
+                            rbuf: Vec::new(),
+                            seq: 0,
+                            shared: Arc::new(ConnShared::new(Arc::clone(
+                                &waker,
+                            ))),
+                            closed_read: false,
+                        });
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        break
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::Interrupted =>
+                    {
+                        break
+                    }
+                    Err(e) => {
+                        crate::obs_error!("server", "accept: {e}");
+                        break;
+                    }
+                }
+            }
+        }
+        // Per-connection events; `fds[2..]` is index-aligned with
+        // `conns` (connections accepted above were not polled yet, so
+        // they are past the end of this slice and wait one tick).
+        for (i, fd) in fds.iter().skip(2).enumerate() {
+            let conn = &mut conns[i];
+            if fd.readable() && !conn.closed_read {
+                read_conn(core, conn);
+            }
+            // Flush opportunistically: POLLOUT readiness, or fresh
+            // output appended after the interest set was built.
+            flush_conn(conn);
+        }
+        // Retire finished connections and refresh the poller gauges.
+        let mut write_queued = 0usize;
+        conns.retain(|conn| {
+            if conn_finished(conn) {
+                if let Some(peer) = conn.peer {
+                    crate::obs_info!(
+                        "server",
+                        "connection from {peer} closed"
+                    );
+                }
+                false
+            } else {
+                write_queued += lock_out(&conn.shared.out).wbuf.len();
+                true
+            }
+        });
+        core.stats.poller_fds.store(conns.len(), Ordering::Relaxed);
+        core.stats
+            .write_queue_bytes
+            .store(write_queued, Ordering::Relaxed);
+        core.stats
+            .workers_current
+            .store(core.executor.worker_count(), Ordering::Relaxed);
+        core.stats
+            .workers_target
+            .store(core.executor.target_workers(), Ordering::Relaxed);
+    }
+    if let Some((handle, _)) = drain {
+        let _ = handle.join();
+    }
+    core.stats.poller_fds.store(0, Ordering::Relaxed);
+    Ok(())
 }
 
 /// Process-wide SIGTERM flag (one per process, like the signal itself);
@@ -1005,6 +1487,119 @@ fn install_sigterm() {
 #[cfg(not(unix))]
 fn install_sigterm() {}
 
+/// Session-pool headroom per executor worker: the autoscaler retargets
+/// the pool cap to `workers * SESSIONS_PER_WORKER` (bounded by the
+/// static [`crate::bench::eval::SESSION_POOL_CAP`]).
+pub const SESSIONS_PER_WORKER: usize = 64;
+
+/// Autoscaler policy (`arrow serve --workers-min/--workers-max`): a
+/// control loop drains the queue-wait histogram window every
+/// `interval` and resizes the executor pool inside
+/// `[min_workers, max_workers]`.
+#[derive(Debug, Clone)]
+pub struct AutoscaleSpec {
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Control-loop tick (and therefore the histogram window width).
+    pub interval: Duration,
+    /// Queue-wait p90 (µs) above which a window counts as
+    /// under-provisioned.
+    pub grow_p90_us: u64,
+}
+
+impl AutoscaleSpec {
+    pub fn new(min_workers: usize, max_workers: usize) -> AutoscaleSpec {
+        let min_workers = min_workers.max(1);
+        AutoscaleSpec {
+            min_workers,
+            max_workers: max_workers.max(min_workers),
+            interval: Duration::from_millis(500),
+            grow_p90_us: 5_000,
+        }
+    }
+}
+
+/// The autoscaler control loop, one tick per `spec.interval` until the
+/// server drains.  Grow (by half the current pool, at least one) after
+/// two consecutive windows whose queue-wait p90 exceeds the threshold
+/// — one hot window is a burst, two is a trend; shrink one worker
+/// after two consecutive fully-idle windows.  Every resize retargets
+/// the session pool alongside and emits a trace instant plus the
+/// grow/shrink counters.
+fn autoscale_loop(core: &Arc<ServerCore>, spec: &AutoscaleSpec) {
+    use crate::obs::{metrics, trace};
+    // Pin the pool inside the configured band up front.
+    let current = core.executor.worker_count();
+    let clamped = current.clamp(spec.min_workers, spec.max_workers);
+    if clamped != current {
+        core.executor.resize(clamped);
+    }
+    let mut hot = 0u32;
+    let mut idle = 0u32;
+    while !(core.shutdown.load(Ordering::Acquire) || sigterm_pending()) {
+        std::thread::sleep(spec.interval);
+        let window = core.stats.drain_queue_wait_window();
+        let current = core.executor.worker_count();
+        let p90 = window.quantile_us(0.90);
+        let busy = window.count() > 0
+            || core.executor.queue_len() > 0
+            || core.stats.in_flight.load(Ordering::Relaxed) > 0;
+        if window.count() > 0 && p90 > spec.grow_p90_us {
+            hot += 1;
+            idle = 0;
+        } else if !busy {
+            idle += 1;
+            hot = 0;
+        } else {
+            hot = 0;
+            idle = 0;
+        }
+        let mut target = current;
+        if hot >= 2 {
+            target = (current + (current / 2).max(1)).min(spec.max_workers);
+            hot = 0;
+        } else if idle >= 2 {
+            target = current.saturating_sub(1).max(spec.min_workers);
+            idle = 0;
+        }
+        if target == current {
+            continue;
+        }
+        let applied = core.executor.resize(target);
+        if applied > current {
+            metrics::AUTOSCALE_GROW.inc();
+        } else {
+            metrics::AUTOSCALE_SHRINK.inc();
+        }
+        // The session pool scales with the workers that fill it: each
+        // worker gets headroom for its own working set.
+        core.evaluator.sessions().set_cap(
+            (applied * SESSIONS_PER_WORKER)
+                .clamp(SESSIONS_PER_WORKER, crate::bench::eval::SESSION_POOL_CAP),
+        );
+        core.stats.workers_target.store(applied, Ordering::Relaxed);
+        core.stats
+            .workers_current
+            .store(core.executor.worker_count(), Ordering::Relaxed);
+        trace::instant(
+            "server",
+            "autoscale",
+            &[
+                ("from", trace::Arg::U64(current as u64)),
+                ("to", trace::Arg::U64(applied as u64)),
+                ("queue_wait_p90_us", trace::Arg::U64(p90)),
+                ("window_count", trace::Arg::U64(window.count())),
+            ],
+        );
+        crate::obs_info!(
+            "server",
+            "autoscale: {current} -> {applied} workers \
+             (queue-wait p90 {p90}µs over {} samples)",
+            window.count()
+        );
+    }
+}
+
 /// Serve on `addr` (e.g. `127.0.0.1:7676`) with the default executor
 /// sizing.  All connections share one [`Evaluator`]; passing a
 /// `cache_dir` additionally backs it with the persistent result store
@@ -1029,9 +1624,21 @@ pub fn serve_opts(
     join: Option<&JoinSpec>,
     exec: ExecutorOptions,
 ) -> std::io::Result<()> {
+    serve_scaled(addr, cache_dir, join, exec, None)
+}
+
+/// [`serve_opts`] plus the histogram-driven autoscaler (`arrow serve
+/// --workers-min N --workers-max M`).
+pub fn serve_scaled(
+    addr: &str,
+    cache_dir: Option<&Path>,
+    join: Option<&JoinSpec>,
+    exec: ExecutorOptions,
+    autoscale: Option<AutoscaleSpec>,
+) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     crate::obs_info!("server", "arrow simulator serving on {addr}");
-    serve_listener_opts(listener, cache_dir, join, exec)
+    serve_listener_scaled(listener, cache_dir, join, exec, autoscale)
 }
 
 /// [`serve`] on an already-bound listener.  The in-process worker
@@ -1066,6 +1673,17 @@ pub fn serve_listener_opts(
     cache_dir: Option<&Path>,
     join: Option<&JoinSpec>,
     exec: ExecutorOptions,
+) -> std::io::Result<()> {
+    serve_listener_scaled(listener, cache_dir, join, exec, None)
+}
+
+/// [`serve_listener_opts`] plus the optional autoscaler loop.
+pub fn serve_listener_scaled(
+    listener: TcpListener,
+    cache_dir: Option<&Path>,
+    join: Option<&JoinSpec>,
+    exec: ExecutorOptions,
+    autoscale: Option<AutoscaleSpec>,
 ) -> std::io::Result<()> {
     let mut evaluator = Evaluator::new();
     if let Some(dir) = cache_dir {
@@ -1117,39 +1735,31 @@ pub fn serve_listener_opts(
         );
     }
     install_sigterm();
-    // Non-blocking accept so the loop can watch the drain flags; the
-    // streams themselves are flipped back to blocking.
-    listener.set_nonblocking(true)?;
-    loop {
-        if core.shutdown.load(Ordering::Acquire) || sigterm_pending() {
-            break;
-        }
-        match listener.accept() {
-            Ok((s, _)) => {
-                let _ = s.set_nonblocking(false);
-                let core = Arc::clone(&core);
-                std::thread::spawn(move || handle_conn(s, &core));
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(ACCEPT_POLL);
-            }
-            Err(e) => crate::obs_error!("server", "accept: {e}"),
-        }
-    }
-    crate::obs_info!(
-        "server",
-        "draining: waiting up to {}s for in-flight requests",
-        SHUTDOWN_GRACE.as_secs()
-    );
-    if core.executor.shutdown(SHUTDOWN_GRACE) {
-        crate::obs_info!("server", "drained cleanly; exiting");
-    } else {
-        crate::obs_warn!(
+    core.stats
+        .workers_current
+        .store(core.executor.worker_count(), Ordering::Relaxed);
+    core.stats
+        .workers_target
+        .store(core.executor.target_workers(), Ordering::Relaxed);
+    let scaler = autoscale.map(|spec| {
+        crate::obs_info!(
             "server",
-            "drain grace expired with requests still running"
+            "autoscaler: {}..{} workers, {}ms window",
+            spec.min_workers,
+            spec.max_workers,
+            spec.interval.as_millis()
         );
+        let scaler_core = Arc::clone(&core);
+        std::thread::spawn(move || autoscale_loop(&scaler_core, &spec))
+    });
+    let result = run_poller(listener, &core);
+    // Stop the autoscaler even when the poller exited on an error
+    // rather than the drain flag.
+    core.shutdown.store(true, Ordering::Release);
+    if let Some(handle) = scaler {
+        let _ = handle.join();
     }
-    Ok(())
+    result
 }
 
 /// The `{"cmd": "register"}` body one heartbeat carries: identity,
@@ -1691,17 +2301,16 @@ mod tests {
 
     #[test]
     fn end_to_end_over_tcp() {
+        use std::io::{BufRead, BufReader};
         let core = Arc::new(ServerCore::new(
             Evaluator::new(),
             ExecutorOptions { workers: 2, queue_depth: 8 },
         ));
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let conn_core = Arc::clone(&core);
-        std::thread::spawn(move || {
-            let (s, _) = listener.accept().unwrap();
-            handle_conn(s, &conn_core);
-        });
+        let poller_core = Arc::clone(&core);
+        let poller =
+            std::thread::spawn(move || run_poller(listener, &poller_core));
         let mut client = TcpStream::connect(addr).unwrap();
         writeln!(client, r#"{{"cmd": "ping"}}"#).unwrap();
         let mut line = String::new();
@@ -1710,8 +2319,58 @@ mod tests {
             .unwrap();
         let resp = json::parse(line.trim()).unwrap();
         assert_eq!(resp.get("pong"), Some(&Json::Bool(true)));
-        assert!(core.executor.shutdown(Duration::from_secs(5)));
+        // Graceful stop: the drain flag winds the poller down, the
+        // executor drains, and the poller thread returns.
+        core.shutdown.store(true, Ordering::Release);
+        poller.join().unwrap().unwrap();
         assert_eq!(core.stats.served.load(Ordering::Relaxed), 1);
+        assert_eq!(core.stats.poller_fds.load(Ordering::Relaxed), 0);
+    }
+
+    /// The write-queue overflow path: a connection whose queued output
+    /// exceeds [`WRITE_QUEUE_CAP`] answers structured `busy` for
+    /// further requests instead of buffering more response bytes.
+    #[test]
+    fn write_queue_overflow_answers_busy() {
+        let core = Arc::new(ServerCore::new(
+            Evaluator::new(),
+            ExecutorOptions { workers: 1, queue_depth: 8 },
+        ));
+        let waker = Arc::new(Waker::new().unwrap());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap())
+            .unwrap();
+        let (stream, peer) = listener.accept().unwrap();
+        stream.set_nonblocking(true).unwrap();
+        let mut conn = Conn {
+            stream,
+            peer: Some(peer),
+            rbuf: Vec::new(),
+            seq: 0,
+            shared: Arc::new(ConnShared::new(waker)),
+            closed_read: false,
+        };
+        // Pre-fill the write queue past the cap, as a slow reader
+        // would.
+        lock_out(&conn.shared.out).wbuf = vec![b'x'; WRITE_QUEUE_CAP + 1];
+        process_line(&core, &mut conn, r#"{"cmd": "ping", "id": 3}"#);
+        let o = lock_out(&conn.shared.out);
+        let tail =
+            String::from_utf8_lossy(&o.wbuf[WRITE_QUEUE_CAP + 1..])
+                .into_owned();
+        drop(o);
+        let resp = json::parse(tail.trim()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("busy"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("id").unwrap().as_u64(), Some(3));
+        assert!(resp
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("write queue"));
+        assert_eq!(core.stats.rejected.load(Ordering::Relaxed), 1);
+        drop(client);
     }
 
     #[test]

@@ -8,10 +8,13 @@
 //!   bench` targets (warm-up, repeated timing, mean/σ reporting);
 //! * [`histogram`] — a fixed log-bucket concurrent latency histogram
 //!   (the serving path's p50/p99/p999 source);
+//! * [`poll`] — a thin `poll(2)` FFI wrapper (the connection
+//!   multiplexer's readiness primitive);
 //! * [`rng`] — a seeded SplitMix64 generator powering the in-tree
 //!   property tests and workload generation.
 
 pub mod bencher;
 pub mod histogram;
 pub mod json;
+pub mod poll;
 pub mod rng;

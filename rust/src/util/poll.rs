@@ -1,0 +1,220 @@
+//! Thin no-dep wrapper over `poll(2)` — the readiness primitive behind
+//! the serving path's connection multiplexer.
+//!
+//! The build is dependency-free, so like the SIGTERM handler in
+//! [`crate::system::server`] this goes straight to the libc symbol via
+//! a one-line `extern "C"` declaration instead of pulling in a crate.
+//! The surface is deliberately tiny: a `#[repr(C)]` [`PollFd`] matching
+//! `struct pollfd`, the event bits the poller actually uses, and one
+//! [`poll`] call that hides the two libc sharp edges:
+//!
+//! * **EINTR**: glibc's `signal()` installs handlers with `SA_RESTART`,
+//!   but per `signal(7)` a parked `poll(2)` is *never* restarted — it
+//!   fails with `EINTR` instead.  That is not an error for an event
+//!   loop; it is "go re-check your shutdown flags".  The wrapper maps
+//!   it to `Ok(0)`, indistinguishable from a timeout.
+//! * **portability**: on non-unix targets there is no `poll(2)`.  The
+//!   fallback sleeps a bounded slice and reports every descriptor as
+//!   ready — spurious readiness is safe because every socket the
+//!   multiplexer owns is non-blocking (a not-actually-ready socket just
+//!   answers `WouldBlock`), so the single event-loop code path works
+//!   everywhere, merely degraded to polling cadence.
+
+use std::io;
+use std::time::Duration;
+
+/// Data may be read without blocking.
+pub const POLLIN: i16 = 0x001;
+/// Data may be written without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (always polled, even when not requested).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (always polled, even when not requested).
+pub const POLLHUP: i16 = 0x010;
+/// Invalid descriptor (always polled, even when not requested).
+pub const POLLNVAL: i16 = 0x020;
+
+/// One entry of the descriptor set: ABI-compatible with libc's
+/// `struct pollfd` (fd, requested events, returned events).
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: i32, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// A read attempt would make progress: data, hangup (EOF), or an
+    /// error to collect — all of which a non-blocking `read` surfaces.
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR) != 0
+    }
+
+    /// A write attempt would make progress (or surface the error).
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLERR | POLLHUP) != 0
+    }
+
+    /// The descriptor is in an error state (or was never valid).
+    pub fn failed(&self) -> bool {
+        self.revents & (POLLERR | POLLNVAL) != 0
+    }
+}
+
+/// Raw descriptors for the socket types the multiplexer watches.  On
+/// non-unix targets there is no fd to extract; `-1` pairs with the
+/// fallback [`poll`], which never dereferences it.
+pub trait Pollable {
+    fn raw_fd(&self) -> i32;
+}
+
+#[cfg(unix)]
+mod imp {
+    use std::os::unix::io::AsRawFd;
+
+    impl super::Pollable for std::net::TcpStream {
+        fn raw_fd(&self) -> i32 {
+            self.as_raw_fd()
+        }
+    }
+
+    impl super::Pollable for std::net::TcpListener {
+        fn raw_fd(&self) -> i32 {
+            self.as_raw_fd()
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    impl super::Pollable for std::net::TcpStream {
+        fn raw_fd(&self) -> i32 {
+            -1
+        }
+    }
+
+    impl super::Pollable for std::net::TcpListener {
+        fn raw_fd(&self) -> i32 {
+            -1
+        }
+    }
+}
+
+/// Wait until at least one descriptor is ready or `timeout` elapses.
+/// Returns the number of ready descriptors (their `revents` are
+/// filled in); `Ok(0)` means timeout *or* signal interruption — either
+/// way the caller re-checks its flags and polls again.
+#[cfg(unix)]
+pub fn poll(fds: &mut [PollFd], timeout: Duration) -> io::Result<usize> {
+    use std::os::raw::{c_int, c_ulong};
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+    let ms = timeout.as_millis().min(c_int::MAX as u128) as c_int;
+    let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, ms) };
+    if n < 0 {
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            return Ok(0);
+        }
+        return Err(err);
+    }
+    Ok(n as usize)
+}
+
+#[cfg(not(unix))]
+pub fn poll(fds: &mut [PollFd], timeout: Duration) -> io::Result<usize> {
+    // Degraded fallback: bounded sleep, then claim everything is ready.
+    // Non-blocking sockets turn the spurious wakes into `WouldBlock`.
+    std::thread::sleep(timeout.min(Duration::from_millis(10)));
+    for fd in fds.iter_mut() {
+        fd.revents = fd.events;
+    }
+    Ok(fds.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    /// A connected loopback pair, both ends non-blocking.
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn idle_socket_times_out_writable_socket_does_not() {
+        let (a, _b) = pair();
+        // Nothing to read: POLLIN alone times out with zero ready.
+        let mut fds = [PollFd::new(a.raw_fd(), POLLIN)];
+        let n = poll(&mut fds, Duration::from_millis(20)).unwrap();
+        #[cfg(unix)]
+        {
+            assert_eq!(n, 0);
+            assert!(!fds[0].readable());
+        }
+        let _ = n;
+        // A fresh connection's send buffer is empty: POLLOUT is
+        // immediate.
+        let mut fds = [PollFd::new(a.raw_fd(), POLLOUT)];
+        let n = poll(&mut fds, Duration::from_millis(1000)).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].writable());
+    }
+
+    #[test]
+    fn written_byte_flips_peer_readable() {
+        let (a, b) = pair();
+        (&a).write_all(&[7u8]).unwrap();
+        let mut fds = [PollFd::new(b.raw_fd(), POLLIN)];
+        let n = poll(&mut fds, Duration::from_millis(1000)).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+        let mut buf = [0u8; 4];
+        assert_eq!((&b).read(&mut buf).unwrap(), 1);
+        assert_eq!(buf[0], 7);
+    }
+
+    #[test]
+    fn hangup_reports_readable_for_eof_delivery() {
+        let (a, b) = pair();
+        drop(a);
+        let mut fds = [PollFd::new(b.raw_fd(), POLLIN)];
+        let n = poll(&mut fds, Duration::from_millis(1000)).unwrap();
+        assert_eq!(n, 1);
+        // POLLIN or POLLHUP depending on the kernel — either way the
+        // readable() accessor says "go read", and the read returns EOF.
+        assert!(fds[0].readable());
+        let mut buf = [0u8; 4];
+        assert_eq!((&b).read(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn multi_fd_sets_mark_only_ready_entries() {
+        let (a, b) = pair();
+        let (c, d) = pair();
+        (&a).write_all(b"x").unwrap();
+        let mut fds = [
+            PollFd::new(b.raw_fd(), POLLIN),
+            PollFd::new(d.raw_fd(), POLLIN),
+        ];
+        let n = poll(&mut fds, Duration::from_millis(1000)).unwrap();
+        assert!(n >= 1);
+        assert!(fds[0].readable());
+        #[cfg(unix)]
+        assert!(!fds[1].readable());
+        let _ = (c, d);
+    }
+}

@@ -198,6 +198,156 @@ fn shutdown_drains_in_flight_work_then_serve_returns() {
     handle.join().unwrap();
 }
 
+/// Count of OS threads in this process, from `/proc/self/status`.
+/// `None` on platforms without procfs, where the fan-in test still
+/// checks byte parity but skips the thread-count assertion.
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+/// 128 concurrent connections — a few hot, the rest idle — served by
+/// the readiness-polled multiplexer: every hot connection sees exactly
+/// the bytes a serial connection gets (error responses and malformed
+/// lines included), and the process's OS-thread count does not grow
+/// with the connection count, because the poller owns every socket.
+#[test]
+fn fan_in_many_connections_byte_parity_with_bounded_threads() {
+    let (addr, handle) =
+        spawn_server(ExecutorOptions { workers: 4, queue_depth: 64 });
+    let requests = [
+        r#"{"cmd": "ping"}"#,
+        r#"{"cmd": "list"}"#,
+        r#"{"cmd": "no_such_command"}"#,
+        "not json at all",
+        r#"{"cmd": "ping"}"#,
+    ];
+
+    // Serial baseline: one request on the wire at a time.
+    let (mut stream, mut reader) = connect(&addr);
+    let mut serial = Vec::new();
+    for req in &requests {
+        writeln!(stream, "{req}").unwrap();
+        serial.push(read_response(&mut reader));
+    }
+    drop((stream, reader));
+
+    let baseline_threads = thread_count();
+
+    // 120 mostly-idle connections: one ping each, then they sit open
+    // in the poll set for the rest of the test.
+    let mut idle = Vec::new();
+    for _ in 0..120 {
+        let (mut stream, mut reader) = connect(&addr);
+        writeln!(stream, r#"{{"cmd": "ping"}}"#).unwrap();
+        let resp =
+            json::parse(read_response(&mut reader).trim()).unwrap();
+        assert_eq!(resp.get("pong"), Some(&Json::Bool(true)), "{resp}");
+        idle.push((stream, reader));
+    }
+
+    // 8 hot connections, each pipelining the whole burst at once.
+    let burst: String =
+        requests.iter().map(|r| format!("{r}\n")).collect();
+    let mut hot = Vec::new();
+    for _ in 0..8 {
+        let (mut stream, reader) = connect(&addr);
+        stream.write_all(burst.as_bytes()).unwrap();
+        hot.push((stream, reader));
+    }
+
+    // All 128 sockets are open and being served, yet the thread count
+    // is what it was before any of them connected: a connection no
+    // longer owns a thread.
+    if let (Some(before), Some(now)) = (baseline_threads, thread_count())
+    {
+        assert!(
+            now <= before + 4,
+            "thread count grew with connections: {before} -> {now}"
+        );
+    }
+
+    for (_, reader) in &mut hot {
+        let got: Vec<String> = (0..requests.len())
+            .map(|_| read_response(reader))
+            .collect();
+        assert_eq!(got, serial, "hot connection diverged from serial");
+    }
+
+    drop(hot);
+    drop(idle);
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+/// A connection that pipelines megabytes of responses without reading
+/// them cannot stall the poller: past the write-queue cap further
+/// requests answer a constant-size structured `busy` line, other
+/// connections stay responsive throughout, and when the slow writer
+/// finally reads, every id it sent has exactly one answer.
+#[test]
+fn slow_writer_is_shed_and_cannot_stall_other_connections() {
+    let (addr, handle) =
+        spawn_server(ExecutorOptions { workers: 2, queue_depth: 16 });
+    const HOG_REQUESTS: u64 = 10_000;
+
+    let (mut hog, hog_reader) = connect(&addr);
+    // Thousands of metrics bodies are megabytes of response — far more
+    // than the kernel socket buffers plus the server's write-queue cap
+    // can absorb — so the overflow path must engage while this client
+    // deliberately does not read.
+    for id in 0..HOG_REQUESTS {
+        writeln!(hog, r#"{{"cmd": "metrics", "id": {id}}}"#).unwrap();
+    }
+
+    // The poller is not stalled: a fresh connection's ping answers
+    // promptly while the hog's responses sit queued unread.
+    let started = Instant::now();
+    let (mut probe, mut probe_reader) = connect(&addr);
+    writeln!(probe, r#"{{"cmd": "ping"}}"#).unwrap();
+    let resp =
+        json::parse(read_response(&mut probe_reader).trim()).unwrap();
+    assert_eq!(resp.get("pong"), Some(&Json::Bool(true)), "{resp}");
+    assert!(
+        started.elapsed() < Duration::from_secs(2),
+        "poller stalled behind a slow writer for {:?}",
+        started.elapsed()
+    );
+    drop((probe, probe_reader));
+
+    // Now read everything back: every id answered exactly once, some
+    // as full metrics bodies, the shed tail as structured `busy`.
+    let mut reader = hog_reader;
+    let mut seen = vec![false; HOG_REQUESTS as usize];
+    let mut shed = 0u64;
+    for _ in 0..HOG_REQUESTS {
+        let resp =
+            json::parse(read_response(&mut reader).trim()).unwrap();
+        let id =
+            resp.get("id").and_then(Json::as_u64).unwrap() as usize;
+        assert!(!seen[id], "id {id} answered twice");
+        seen[id] = true;
+        if resp.get("busy").and_then(Json::as_bool) == Some(true) {
+            assert_eq!(
+                resp.get("ok"),
+                Some(&Json::Bool(false)),
+                "{resp}"
+            );
+            shed += 1;
+        } else {
+            assert!(resp.get("body").is_some(), "{resp}");
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "some requests never answered");
+    assert!(shed > 0, "write-queue cap never engaged");
+    drop(hog);
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
 /// The open-loop generator against a live server: every scheduled
 /// request is sent, answered ok, measured client-side, and the report
 /// embeds the server's own matching counters.

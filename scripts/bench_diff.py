@@ -1,0 +1,187 @@
+#!/usr/bin/env python3
+"""Diff freshly generated BENCH_*.json reports against committed snapshots.
+
+Usage:
+    python3 scripts/bench_diff.py --fresh rust --snapshots bench/snapshots
+    python3 scripts/bench_diff.py --fresh rust --snapshots bench/snapshots \
+        --update
+
+Snapshots are committed baselines of the benchmark reports the CI run
+regenerates (`BENCH_serve_latency.json`, `BENCH_model_sweep.json`, ...).
+They must ONLY ever be produced by an actual benchmark run in the CI /
+driver environment — copy a fresh report with `--update` and commit the
+result; never hand-edit or fabricate one.  Until a snapshot is
+committed, the diff for that report is skipped with a notice and the
+step still passes, so shipping the tooling never requires inventing
+numbers.
+
+Comparison policy (field classification by key name, applied
+recursively; arrays align by index, or by their `key` field when the
+elements carry one):
+
+* latency-like fields (`*_us`, `*_ms`, `p50`/`p90`/`p99`, `*latency*`,
+  `*wait*`): lower is better; FAIL if fresh > THRESHOLD x snapshot.
+  CI-runner latencies are noisy, so the default threshold is a
+  generous 3x.
+* throughput-like fields (`*qps*`, `*throughput*`, `*per_s*`): higher
+  is better; FAIL if fresh < snapshot / THRESHOLD.
+* deterministic simulator fields (`cycles`, `*energy*`, `instret`,
+  `grid`, `unique_simulated`): the simulator is seeded and cycle-exact,
+  so FAIL on relative drift beyond 1%.
+* everything else numeric: reported informationally, never failing —
+  counts of sent/ok requests vary with wall-clock scheduling.
+"""
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+THRESHOLD = 3.0  # generous ratio bound for noisy latency/throughput
+EXACT_TOL = 0.01  # 1% relative drift allowed on deterministic fields
+
+LATENCY_MARKERS = ("latency", "wait", "p50", "p90", "p99", "p999")
+THROUGHPUT_MARKERS = ("qps", "throughput", "per_s")
+EXACT_KEYS = ("cycles", "energy", "instret", "grid", "unique_simulated")
+
+
+def classify(path):
+    """Return 'latency' | 'throughput' | 'exact' | 'info' for a dotted
+    field path; the last path component decides."""
+    leaf = path.rsplit(".", 1)[-1].lower()
+    if any(k in leaf for k in EXACT_KEYS):
+        return "exact"
+    if any(m in leaf for m in THROUGHPUT_MARKERS):
+        return "throughput"
+    if (
+        leaf.endswith("_us")
+        or leaf.endswith("_ms")
+        or any(m in leaf for m in LATENCY_MARKERS)
+    ):
+        return "latency"
+    return "info"
+
+
+def walk(snapshot, fresh, path, out):
+    """Collect (path, snapshot_value, fresh_value) for every numeric
+    leaf present in both documents."""
+    if isinstance(snapshot, dict) and isinstance(fresh, dict):
+        for key in snapshot:
+            if key in fresh:
+                walk(snapshot[key], fresh[key], f"{path}.{key}", out)
+    elif isinstance(snapshot, list) and isinstance(fresh, list):
+        # Sweep reports list points that each carry a unique store
+        # `key`; align on it so reordering is not drift.
+        def by_key(items):
+            keyed = {}
+            for item in items:
+                if not (isinstance(item, dict) and "key" in item):
+                    return None
+                keyed[item["key"]] = item
+            return keyed
+
+        snap_keyed, fresh_keyed = by_key(snapshot), by_key(fresh)
+        if snap_keyed is not None and fresh_keyed is not None:
+            for key, item in snap_keyed.items():
+                if key in fresh_keyed:
+                    walk(item, fresh_keyed[key], f"{path}[{key}]", out)
+            return
+        for i, (s, f) in enumerate(zip(snapshot, fresh)):
+            walk(s, f, f"{path}[{i}]", out)
+    elif isinstance(snapshot, (int, float)) and isinstance(
+        fresh, (int, float)
+    ) and not isinstance(snapshot, bool) and not isinstance(fresh, bool):
+        out.append((path, float(snapshot), float(fresh)))
+
+
+def diff_report(name, snapshot, fresh):
+    """Compare one report; return a list of failure strings."""
+    leaves = []
+    walk(snapshot, fresh, name, leaves)
+    failures = []
+    checked = 0
+    for path, snap, new in leaves:
+        kind = classify(path)
+        if kind == "info":
+            continue
+        checked += 1
+        if kind == "latency" and new > snap * THRESHOLD and new - snap > 1:
+            failures.append(
+                f"{path}: {new:g} regressed past {THRESHOLD}x "
+                f"snapshot {snap:g}"
+            )
+        elif kind == "throughput" and new < snap / THRESHOLD:
+            failures.append(
+                f"{path}: {new:g} fell below snapshot {snap:g} / "
+                f"{THRESHOLD}"
+            )
+        elif kind == "exact":
+            ref = max(abs(snap), 1e-12)
+            if abs(new - snap) / ref > EXACT_TOL:
+                failures.append(
+                    f"{path}: deterministic field drifted "
+                    f"{snap:g} -> {new:g}"
+                )
+    print(f"  {name}: {checked} gated fields, {len(failures)} regressions")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--fresh",
+        type=Path,
+        required=True,
+        help="directory holding freshly generated BENCH_*.json",
+    )
+    ap.add_argument(
+        "--snapshots",
+        type=Path,
+        required=True,
+        help="directory of committed snapshot BENCH_*.json (may not exist)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="copy fresh reports over the snapshots (run in CI/driver "
+        "env only — snapshots must come from a real run)",
+    )
+    args = ap.parse_args()
+
+    fresh_files = sorted(args.fresh.glob("BENCH_*.json"))
+    if not fresh_files:
+        print(f"no fresh BENCH_*.json under {args.fresh}", file=sys.stderr)
+        return 1
+
+    if args.update:
+        args.snapshots.mkdir(parents=True, exist_ok=True)
+        for f in fresh_files:
+            shutil.copy2(f, args.snapshots / f.name)
+            print(f"snapshot updated: {args.snapshots / f.name}")
+        return 0
+
+    failures = []
+    for f in fresh_files:
+        snap_path = args.snapshots / f.name
+        if not snap_path.exists():
+            print(
+                f"  {f.name}: no committed snapshot — skipped "
+                "(commit one with --update from a real CI run)"
+            )
+            continue
+        snapshot = json.loads(snap_path.read_text())
+        fresh = json.loads(f.read_text())
+        failures += diff_report(f.name, snapshot, fresh)
+
+    if failures:
+        print("\nbench regressions:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print("bench diff OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
